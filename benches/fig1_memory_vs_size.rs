@@ -1,0 +1,13 @@
+//! Regenerates the paper's Figure 1: peak training memory vs spatial image
+//! size, invertible (InvertibleNetworks.jl) vs stored (PyTorch/normflows),
+//! GLOW with 3 input channels, batch 8, under a 40 GB budget.
+//!
+//!     cargo bench --bench fig1_memory_vs_size
+
+use std::path::PathBuf;
+
+fn main() {
+    let rt = invertnet::Runtime::new(&PathBuf::from("artifacts"))
+        .expect("run `make artifacts` first");
+    invertnet::bench_figs::fig1(&rt, 40.0).unwrap();
+}

@@ -1,0 +1,13 @@
+//! Regenerates the paper's Figure 2: peak training memory vs network
+//! depth — constant for the invertible executor, linear for the
+//! autodiff-style stored executor.
+//!
+//!     cargo bench --bench fig2_memory_vs_depth
+
+use std::path::PathBuf;
+
+fn main() {
+    let rt = invertnet::Runtime::new(&PathBuf::from("artifacts"))
+        .expect("run `make artifacts` first");
+    invertnet::bench_figs::fig2(&rt, 40.0).unwrap();
+}

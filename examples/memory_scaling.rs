@@ -1,0 +1,17 @@
+//! Interactive tour of the paper's memory result: runs a trimmed Fig. 1 +
+//! Fig. 2 sweep and prints the invertible-vs-stored peak-memory tables.
+//!
+//!     cargo run --release --example memory_scaling
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use invertnet::{bench_figs, Runtime};
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(&PathBuf::from("artifacts"))?;
+    bench_figs::fig2(&rt, 40.0)?;
+    println!();
+    bench_figs::fig1(&rt, 40.0)?;
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Quickstart + end-to-end driver: train a multiscale GLOW on synthetic
+//! images with the memory-frugal invertible executor, log the bits/dim
+//! curve, check invertibility, and draw samples.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This is the EXPERIMENTS.md §E2E run: all three layers compose (Pallas
+//! kernels -> JAX layer programs -> rust coordinator) on a real training
+//! workload.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use invertnet::coordinator::{ExecMode, FlowSession};
+use invertnet::data::synth_images;
+use invertnet::flow::ParamStore;
+use invertnet::train::loop_::tail_mean;
+use invertnet::train::{train, Adam, GradClip, TrainConfig};
+use invertnet::util::bench::fmt_bytes;
+use invertnet::util::rng::Pcg64;
+use invertnet::{MemoryLedger, Runtime};
+
+const LN2: f32 = std::f32::consts::LN_2;
+
+fn main() -> Result<()> {
+    let artifacts = PathBuf::from(
+        std::env::var("INVERTNET_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()));
+    let steps: usize = std::env::var("QUICKSTART_STEPS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let rt = Runtime::new(&artifacts)?;
+    let ledger = MemoryLedger::new();
+    let session = FlowSession::new(&rt, "glow16", ledger.clone())?;
+    let mut params = ParamStore::init(&session.def, &rt.manifest, 42)?;
+    let dims = session.def.dims_per_sample() as f32;
+    println!(
+        "glow16: {} params, depth {}, input {:?}, latents {:?}",
+        params.param_count(), session.def.depth(),
+        session.def.in_shape, session.def.latent_shapes
+    );
+
+    // pre-training invertibility check (the library's CI guarantee)
+    let mut rng = Pcg64::new(7);
+    let s = &session.def.in_shape;
+    let x0 = synth_images(s[0], s[1], s[2], s[3], &mut rng);
+    let rt_err = session.roundtrip_error(&x0, None, &params)?;
+    println!("roundtrip |x - inv(fwd(x))|_inf = {rt_err:.2e}");
+    assert!(rt_err < 2e-3);
+
+    let mut opt = Adam::new(1e-3);
+    let cfg = TrainConfig {
+        steps,
+        mode: ExecMode::Invertible,
+        clip: Some(GradClip { max_norm: 200.0 }),
+        log_every: 20,
+        out_dir: Some(PathBuf::from("runs/quickstart")),
+        quiet: false,
+    };
+    let mut data_rng = Pcg64::new(1234);
+    let in_shape = session.def.in_shape.clone();
+    let report = train(&session, &mut params, &mut opt, &cfg, move |_| {
+        Ok((synth_images(in_shape[0], in_shape[1], in_shape[2], in_shape[3],
+                         &mut data_rng), None))
+    })?;
+
+    // NLL in bits/dim (the standard flow metric)
+    let bpd = |loss: f32| loss / dims / LN2;
+    println!(
+        "loss: {:.1} -> {:.1}  ({:.3} -> {:.3} bits/dim)",
+        report.losses[0], report.final_loss,
+        bpd(report.losses[0]), bpd(report.final_loss)
+    );
+    println!(
+        "peak scheduling memory {}  ({:.1} steps/s, mode={})",
+        fmt_bytes(report.peak_sched_bytes as u64),
+        report.steps_per_sec, cfg.mode.name()
+    );
+    assert!(
+        tail_mean(&report.losses, 20) < report.losses[0],
+        "training must reduce NLL"
+    );
+
+    // draw a batch of samples from the trained model
+    let samples = session.sample(&params, None, &mut rng)?;
+    invertnet::tensor::npy::save(
+        &PathBuf::from("runs/quickstart/samples.npy"), &samples)?;
+    println!("samples -> runs/quickstart/samples.npy  {:?}", samples.shape);
+    println!("metrics -> runs/quickstart/metrics.csv");
+    Ok(())
+}

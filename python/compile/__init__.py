@@ -1,0 +1,5 @@
+"""Build-time compile package: L1 Pallas kernels, L2 JAX layers, AOT lowering.
+
+Never imported at runtime — `make artifacts` runs this once to emit HLO
+text artifacts + manifest.json consumed by the rust coordinator.
+"""

@@ -1,0 +1,203 @@
+"""AOT lowering: every (layer, entry) and head to HLO *text* artifacts.
+
+HLO text — not `.serialize()` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the `xla` rust crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--nets all] [--force]
+
+Idempotent: existing .hlo.txt files are kept unless --force; manifest.json
+is always rewritten in full.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.backend import backend_name
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_entry(fn, arg_shapes, path, force):
+    """Lower fn at the given f32 arg shapes; return result shapes."""
+    specs = [_spec(s) for s in arg_shapes]
+    out = jax.eval_shape(fn, *specs)
+    out_shapes = [list(o.shape) for o in jax.tree_util.tree_leaves(out)]
+    if force or not os.path.exists(path):
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+        sys.stderr.write(f"  lowered {os.path.basename(path)}\n")
+    return out_shapes
+
+
+def _operand_names(entry, cond, param_names):
+    if entry == "forward":
+        base = ["x"] + (["cond"] if cond else [])
+    elif entry == "inverse":
+        base = ["y"] + (["cond"] if cond else [])
+    elif entry == "backward":
+        base = ["dy", "dlogdet", "y"] + (["cond"] if cond else [])
+    elif entry == "backward_stored":
+        base = ["dy", "dlogdet", "x"] + (["cond"] if cond else [])
+    else:
+        raise ValueError(entry)
+    return base + list(param_names)
+
+
+def _result_names(entry, cond, param_names):
+    d = [f"d{p}" for p in param_names]
+    if entry == "forward":
+        return ["y", "logdet"]
+    if entry == "inverse":
+        return ["x"]
+    if entry == "backward":
+        return ["dx"] + (["dcond"] if cond else []) + d + ["x"]
+    if entry == "backward_stored":
+        return ["dx"] + (["dcond"] if cond else []) + d
+    raise ValueError(entry)
+
+
+def build(out_dir, net_filter, force):
+    os.makedirs(out_dir, exist_ok=True)
+    nets = model.default_networks()
+    if net_filter != "all":
+        keep = set(net_filter.split(","))
+        nets = [n for n in nets if n.name in keep]
+        if not nets:
+            raise SystemExit(f"no networks match {net_filter!r}")
+
+    manifest = {
+        "version": 1,
+        "backend": backend_name(),
+        "layers": {},
+        "heads": {},
+        "networks": {},
+        "monoliths": {},
+    }
+
+    insts = model.collect_layer_instances(nets)
+    for sig, inst in sorted(insts.items()):
+        param_names = [nm for nm, _ in inst.param_specs()]
+        param_shapes = [sh for _, sh in inst.param_specs()]
+        ent_manifest = {}
+        for entry, (fn, operand_shapes) in inst.entries().items():
+            arg_shapes = list(operand_shapes) + list(param_shapes)
+            fname = f"{sig}.{entry}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            out_shapes = lower_entry(fn, arg_shapes, path, force)
+            names_in = _operand_names(entry, inst.cond_shape is not None,
+                                      param_names)
+            names_out = _result_names(entry, inst.cond_shape is not None,
+                                      param_names)
+            assert len(names_in) == len(arg_shapes), (sig, entry)
+            assert len(names_out) == len(out_shapes), \
+                (sig, entry, names_out, out_shapes)
+            ent_manifest[entry] = {
+                "file": fname,
+                "operands": [{"name": n, "shape": list(s)}
+                             for n, s in zip(names_in, arg_shapes)],
+                "results": [{"name": n, "shape": s}
+                            for n, s in zip(names_out, out_shapes)],
+            }
+        m = inst.manifest_entry()
+        m["entries"] = ent_manifest
+        manifest["layers"][sig] = m
+
+    # loss heads, one pair per unique latent shape
+    for shape in model.head_shapes(nets):
+        tag = "x".join(map(str, shape))
+        ent_manifest = {}
+        for entry, fn in model.HEAD_ENTRIES.items():
+            fname = f"head_{tag}.{entry}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            out_shapes = lower_entry(fn, [shape], path, force)
+            names_out = (["logp"] if entry == "gaussian_logp"
+                         else ["dz", "dld"])
+            ent_manifest[entry] = {
+                "file": fname,
+                "operands": [{"name": "z", "shape": list(shape)}],
+                "results": [{"name": n, "shape": s}
+                            for n, s in zip(names_out, out_shapes)],
+            }
+        manifest["heads"][tag] = {"shape": list(shape), "entries": ent_manifest}
+
+    # monolithic full-AD ablation programs (ref backend: AD cannot trace
+    # interpret-mode pallas, and an AD framework differentiates plain ops)
+    from .kernels import backend as kbackend
+    for net in nets:
+        if net.name not in model.MONOLITH_NETS:
+            continue
+        prev_backend = kbackend._current
+        kbackend.set_backend("ref")
+        try:
+            step_fn, _ = model.full_vjp_fn(net)
+            param_shapes = []
+            for inst in net.layers:
+                if inst.kind != "split":
+                    param_shapes.extend(sh for _, sh in inst.param_specs())
+            fname = f"monolith_{net.name}.full_vjp.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            out_shapes = lower_entry(step_fn,
+                                     [list(net.in_shape)] + param_shapes, path,
+                                     force)
+            manifest.setdefault("monoliths", {})[net.name] = {
+                "file": fname,
+                "operands": [{"name": "x", "shape": list(net.in_shape)}]
+                + [{"name": f"p{i}", "shape": list(sh)}
+                   for i, sh in enumerate(param_shapes)],
+                "results": [{"name": "loss", "shape": out_shapes[0]}]
+                + [{"name": f"dp{i}", "shape": sh}
+                   for i, sh in enumerate(out_shapes[1:])],
+            }
+        finally:
+            kbackend.set_backend(prev_backend)
+
+    for net in nets:
+        manifest["networks"][net.name] = net.manifest_entry()
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath + ".tmp", "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    os.replace(mpath + ".tmp", mpath)
+    n_art = sum(len(m["entries"]) for m in manifest["layers"].values())
+    n_art += sum(len(m["entries"]) for m in manifest["heads"].values())
+    print(f"manifest: {len(manifest['layers'])} layers, "
+          f"{len(manifest['heads'])} heads, {len(manifest['networks'])} "
+          f"networks, {n_art} artifacts -> {mpath}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--nets", default="all",
+                    help="comma-separated network names, or 'all'")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact file exists")
+    args = ap.parse_args()
+    build(args.out, args.nets, args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Pallas kernel: fused affine-coupling core.
+
+Computes, in one VMEM-resident pass over the transformed half x2:
+    s    = 2*sigmoid(raw)            ("Sigmoid2" stabilized scale)
+    y2   = s * x2 + t
+    logs = log(s)                    (summed outside for the logdet)
+
+TPU mapping: the CUDA version would fuse this into the conditioner's
+epilogue per threadblock; on TPU we tile an (N, H) grid so each program's
+(1, Hb, W, C2) block of x2/raw/t lives in VMEM and the sigmoid/mul/add chain
+is a single VPU pass (no HBM round-trips between the ops). interpret=True
+on CPU; structure identical to the Mosaic path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(x2_ref, raw_ref, t_ref, y2_ref, logs_ref):
+    s = 2.0 / (1.0 + jnp.exp(-raw_ref[...]))
+    y2_ref[...] = s * x2_ref[...] + t_ref[...]
+    logs_ref[...] = jnp.log(s)
+
+
+def _inv_kernel(y2_ref, raw_ref, t_ref, x2_ref):
+    s = 2.0 / (1.0 + jnp.exp(-raw_ref[...]))
+    x2_ref[...] = (y2_ref[...] - t_ref[...]) / s
+
+
+def _specs(shape):
+    _, h, w, c = shape
+    hb = _row_block(h, w, c, n_bufs=5)
+    blk = pl.BlockSpec((1, hb, w, c), lambda i, j: (i, j, 0, 0))
+    return blk, hb
+
+
+@functools.partial(jax.jit, static_argnames=())
+def affine_core_forward(x2, raw, t):
+    """(y2, logdet): y2 = 2*sigmoid(raw)*x2 + t, logdet = sum log s."""
+    n, h, w, c = x2.shape
+    blk, hb = _specs(x2.shape)
+    y2, logs = pl.pallas_call(
+        _fwd_kernel,
+        grid=(n, h // hb),
+        in_specs=[blk, blk, blk],
+        out_specs=[blk, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+            jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        ],
+        interpret=True,
+    )(x2, raw, t)
+    logdet = jnp.sum(logs, axis=(1, 2, 3))
+    return y2, logdet
+
+
+@functools.partial(jax.jit, static_argnames=())
+def affine_core_inverse(y2, raw, t):
+    n, h, w, c = y2.shape
+    blk, hb = _specs(y2.shape)
+    return pl.pallas_call(
+        _inv_kernel,
+        grid=(n, h // hb),
+        in_specs=[blk, blk, blk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct(y2.shape, y2.dtype),
+        interpret=True,
+    )(y2, raw, t)
+
+
+def _row_block(h, w, c, budget_bytes=2 << 20, n_bufs=3):
+    """Largest divisor Hb of H such that n_bufs blocks of (Hb, W, C) f32
+    fit in the VMEM budget — fewer grid steps, same VMEM discipline."""
+    per_row = w * c * 4 * n_bufs
+    max_rows = max(1, budget_bytes // max(per_row, 1))
+    hb = 1
+    for d in range(1, h + 1):
+        if h % d == 0 and d <= max_rows:
+            hb = d
+    return hb

@@ -1,0 +1,96 @@
+"""Kernel backend dispatch (call-time switchable).
+
+Default backend: L1 Pallas kernels (interpret=True on CPU). The pure-jnp
+reference backend is selected with INVERTNET_PALLAS=0 or `set_backend("ref")`
+— used (a) by python/tests/test_layers.py, because reverse-mode AD cannot
+trace through interpret-mode pallas_call (the layers' hand-written backward
+entries never need to: they only *call* kernels, never differentiate them),
+and (b) by the perf ablation measuring interpret-mode grid-loop overhead.
+
+test_kernels.py pins the two backends to identical semantics.
+"""
+
+import os
+
+import jax.numpy as jnp
+
+from . import actnorm as _pa
+from . import affine_core as _pf
+from . import conv1x1 as _pc
+from . import dense_core as _pd
+from . import haar as _ph
+from . import hyperbolic as _py
+from . import ref as _r
+
+
+def _ref_conv1x1_apply(x, w):
+    return jnp.einsum("...j,ij->...i", x, w)
+
+
+def _ref_conv1x1_unapply(y, w):
+    return jnp.einsum("...i,ij->...j", y, w)
+
+
+_IMPL = {
+    "pallas": {
+        "actnorm_forward": _pa.actnorm_forward,
+        "actnorm_inverse": _pa.actnorm_inverse,
+        "affine_core_forward": _pf.affine_core_forward,
+        "affine_core_inverse": _pf.affine_core_inverse,
+        "conv1x1_apply": _pc.conv1x1_apply,
+        "conv1x1_unapply": _pc.conv1x1_unapply,
+        "dense_core_forward": _pd.dense_core_forward,
+        "dense_core_inverse": _pd.dense_core_inverse,
+        "haar_forward": _ph.haar_forward,
+        "haar_inverse": _ph.haar_inverse,
+        "hyperbolic_core_forward": _py.hyperbolic_core_forward,
+        "hyperbolic_core_inverse": _py.hyperbolic_core_inverse,
+    },
+    "ref": {
+        "actnorm_forward": _r.actnorm_forward,
+        "actnorm_inverse": _r.actnorm_inverse,
+        "affine_core_forward": _r.affine_core_forward,
+        "affine_core_inverse": _r.affine_core_inverse,
+        "conv1x1_apply": _ref_conv1x1_apply,
+        "conv1x1_unapply": _ref_conv1x1_unapply,
+        "dense_core_forward": _r.affine_core_forward,
+        "dense_core_inverse": _r.affine_core_inverse,
+        "haar_forward": _r.haar_forward,
+        "haar_inverse": _r.haar_inverse,
+        "hyperbolic_core_forward": _r.hyperbolic_core_forward,
+        "hyperbolic_core_inverse": _r.hyperbolic_core_inverse,
+    },
+}
+
+_current = "pallas" if os.environ.get("INVERTNET_PALLAS", "1") != "0" else "ref"
+
+
+def set_backend(name):
+    global _current
+    assert name in _IMPL, name
+    _current = name
+
+
+def backend_name():
+    return "pallas-interpret" if _current == "pallas" else "jnp-ref"
+
+
+def _dispatch(fname):
+    def fn(*args, **kwargs):
+        return _IMPL[_current][fname](*args, **kwargs)
+    fn.__name__ = fname
+    return fn
+
+
+actnorm_forward = _dispatch("actnorm_forward")
+actnorm_inverse = _dispatch("actnorm_inverse")
+affine_core_forward = _dispatch("affine_core_forward")
+affine_core_inverse = _dispatch("affine_core_inverse")
+conv1x1_apply = _dispatch("conv1x1_apply")
+conv1x1_unapply = _dispatch("conv1x1_unapply")
+dense_core_forward = _dispatch("dense_core_forward")
+dense_core_inverse = _dispatch("dense_core_inverse")
+haar_forward = _dispatch("haar_forward")
+haar_inverse = _dispatch("haar_inverse")
+hyperbolic_core_forward = _dispatch("hyperbolic_core_forward")
+hyperbolic_core_inverse = _dispatch("hyperbolic_core_inverse")

@@ -1,0 +1,65 @@
+"""Pallas kernel: GLOW 1x1 invertible convolution as a pixel matmul.
+
+The CUDA implementations treat this as a grouped conv; the TPU-native view
+is a plain (P, C) x (C, C) matmul with P = N*H*W flattened pixels, which
+feeds the MXU directly. We tile P into TILE_P-row blocks (sized so a block + weight stay in a ~2 MiB VMEM budget at C<=128) (the weight is
+tiny and stays VMEM-resident across the whole grid) — the same schedule a
+Mosaic lowering would emit. interpret=True for CPU execution.
+
+The weight passed in is the dense W built from Householder vectors at L2;
+forward multiplies by W^T (y_p = W x_p), inverse multiplies by W (W is
+orthogonal, so W^{-1} = W^T).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_P = 4096
+
+
+def _matmul_kernel(x_ref, w_ref, y_ref):
+    # x: (TILE_P, C), w: (C, C); y = x @ w
+    y_ref[...] = jnp.dot(x_ref[...], w_ref[...])
+
+
+def _pixel_matmul(x_flat, w):
+    p, c = x_flat.shape
+    tile = min(TILE_P, p)
+    # pad P to a multiple of the tile so the grid is rectangular
+    pad = (-p) % tile
+    if pad:
+        x_flat = jnp.pad(x_flat, ((0, pad), (0, 0)))
+    grid = (x_flat.shape[0] // tile,)
+    y = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x_flat.shape[0], c), x_flat.dtype),
+        interpret=True,
+    )(x_flat, w)
+    return y[:p] if pad else y
+
+
+@functools.partial(jax.jit, static_argnames=())
+def conv1x1_apply(x, w):
+    """y[n,h,w,:] = W @ x[n,h,w,:]  (pass w = W.T to this matmul form)."""
+    shape = x.shape
+    x_flat = x.reshape(-1, shape[-1])
+    y = _pixel_matmul(x_flat, w.T)
+    return y.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def conv1x1_unapply(y, w):
+    """x = W^T y — the inverse for orthogonal W."""
+    shape = y.shape
+    y_flat = y.reshape(-1, shape[-1])
+    x = _pixel_matmul(y_flat, w)
+    return x.reshape(shape)

@@ -1,0 +1,160 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel.
+
+These are the ground truth used by pytest (`python/tests/`): each Pallas
+kernel in this package must `assert_allclose` against the function of the
+same name here, across a hypothesis sweep of shapes/batches.
+
+All image tensors are NHWC float32; dense tensors are (N, D) float32.
+`logdet` is always a per-sample vector of shape (N,).
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# ActNorm: per-channel affine y = x * exp(log_s) + b
+# ---------------------------------------------------------------------------
+
+
+def actnorm_forward(x, log_s, b):
+    """y = x * exp(log_s) + b, logdet = (H*W) * sum(log_s) per sample."""
+    s = jnp.exp(log_s)
+    y = x * s + b
+    spatial = 1
+    for d in x.shape[1:-1]:
+        spatial *= d
+    logdet = jnp.full((x.shape[0],), spatial * jnp.sum(log_s), dtype=x.dtype)
+    return y, logdet
+
+
+def actnorm_inverse(y, log_s, b):
+    return (y - b) * jnp.exp(-log_s)
+
+
+# ---------------------------------------------------------------------------
+# Orthogonal (Householder) 1x1 convolution -- GLOW-style channel mixing.
+# W = H(v1) @ H(v2) @ H(v3),  H(v) = I - 2 v v^T / (v^T v).
+# Orthogonal => inverse is W^T and log|det| = 0.
+# (InvertibleNetworks.jl parameterizes Conv1x1 the same way.)
+# ---------------------------------------------------------------------------
+
+
+def householder_matrix(vs):
+    """Product of Householder reflections, one per v in vs."""
+    c = vs[0].shape[0]
+    w = jnp.eye(c, dtype=vs[0].dtype)
+    for v in vs:
+        hv = jnp.eye(c, dtype=v.dtype) - 2.0 * jnp.outer(v, v) / jnp.dot(v, v)
+        w = w @ hv
+    return w
+
+
+def conv1x1_forward(x, v1, v2, v3):
+    """y[..., :] = W x[..., :]; logdet = 0 (orthogonal W)."""
+    w = householder_matrix([v1, v2, v3])
+    y = jnp.einsum("...j,ij->...i", x, w)
+    return y, jnp.zeros((x.shape[0],), dtype=x.dtype)
+
+
+def conv1x1_inverse(y, v1, v2, v3):
+    w = householder_matrix([v1, v2, v3])
+    return jnp.einsum("...i,ij->...j", y, w)  # x = W^T y
+
+
+# ---------------------------------------------------------------------------
+# Affine coupling core: given the conditioner outputs (raw, t) acting on x2.
+# s = 2*sigmoid(raw) ("Sigmoid2", InvertibleNetworks.jl).
+# ---------------------------------------------------------------------------
+
+
+def coupling_scale(raw):
+    """GLOW-stabilized coupling scale: s = 2*sigmoid(raw), range (0, 2).
+
+    InvertibleNetworks.jl's "Sigmoid2": identity (s=1) at raw=0 so
+    zero-initialized conditioners start as the identity map, and the flow
+    can both contract (s<1) and expand (s>1)."""
+    return 2.0 / (1.0 + jnp.exp(-raw))
+
+
+def affine_core_forward(x2, raw, t):
+    """y2 = s * x2 + t with s = 2*sigmoid(raw); logdet = sum log s."""
+    s = coupling_scale(raw)
+    y2 = s * x2 + t
+    axes = tuple(range(1, x2.ndim))
+    logdet = jnp.sum(jnp.log(s), axis=axes)
+    return y2, logdet
+
+
+def affine_core_inverse(y2, raw, t):
+    s = coupling_scale(raw)
+    return (y2 - t) / s
+
+
+# ---------------------------------------------------------------------------
+# Haar wavelet squeeze: (N, H, W, C) -> (N, H/2, W/2, 4C), orthonormal.
+# Channel order of the output: [LL, LH, HL, HH], each C wide.
+# ---------------------------------------------------------------------------
+
+
+def haar_forward(x):
+    n, h, w, c = x.shape
+    xb = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    a = xb[:, :, 0, :, 0, :]
+    b = xb[:, :, 0, :, 1, :]
+    cc = xb[:, :, 1, :, 0, :]
+    d = xb[:, :, 1, :, 1, :]
+    ll = (a + b + cc + d) * 0.5
+    lh = (a - b + cc - d) * 0.5
+    hl = (a + b - cc - d) * 0.5
+    hh = (a - b - cc + d) * 0.5
+    y = jnp.concatenate([ll, lh, hl, hh], axis=-1)
+    logdet = jnp.zeros((n,), dtype=x.dtype)
+    return y, logdet
+
+
+def haar_inverse(y):
+    n, h2, w2, c4 = y.shape
+    c = c4 // 4
+    ll, lh, hl, hh = (y[..., i * c:(i + 1) * c] for i in range(4))
+    a = (ll + lh + hl + hh) * 0.5
+    b = (ll - lh + hl - hh) * 0.5
+    cc = (ll + lh - hl - hh) * 0.5
+    d = (ll - lh - hl + hh) * 0.5
+    x = jnp.stack([jnp.stack([a, b], axis=3), jnp.stack([cc, d], axis=3)], axis=2)
+    # x: (N, H/2, 2, W/2, 2, C)
+    return x.reshape(n, h2 * 2, w2 * 2, c)
+
+
+# ---------------------------------------------------------------------------
+# Hyperbolic (leapfrog) residual step on a channel-paired state.
+# State (N, H, W, 2C) = [x_prev | x_curr];
+#   y_prev = x_curr
+#   y_curr = 2 x_curr - x_prev + act(x_curr)
+# where act is supplied by the caller (alpha * K^T sigma(K x)).
+# Volume preserving: log|det J| = 0.
+# ---------------------------------------------------------------------------
+
+
+def hyperbolic_core_forward(x_prev, x_curr, act):
+    y_prev = x_curr
+    y_curr = 2.0 * x_curr - x_prev + act
+    return y_prev, y_curr
+
+
+def hyperbolic_core_inverse(y_prev, y_curr, act):
+    """act must be evaluated at x_curr == y_prev."""
+    x_curr = y_prev
+    x_prev = 2.0 * x_curr - y_curr + act
+    return x_prev, x_curr
+
+
+# ---------------------------------------------------------------------------
+# Gaussian NLL head: standard-normal log-density per sample.
+# ---------------------------------------------------------------------------
+
+
+def gaussian_logp(z):
+    axes = tuple(range(1, z.ndim))
+    dim = 1
+    for d in z.shape[1:]:
+        dim *= d
+    return -0.5 * jnp.sum(z * z, axis=axes) - 0.5 * dim * jnp.log(2.0 * jnp.pi)

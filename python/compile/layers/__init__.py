@@ -1,0 +1,11 @@
+"""L2 layer definitions: forward / inverse / backward / backward_stored.
+
+Every layer module exposes:
+  param_specs(cfg) -> [(name, shape), ...]
+  forward(x, *params)            -> (y, logdet)
+  inverse(y, *params)            -> (x,)
+  backward(dy, dld, y, *params)  -> (dx, *dparams, x)    # recomputes x
+  backward_stored(dy, dld, x, *params) -> (dx, *dparams) # AD-baseline tape
+plus conditional variants where applicable (extra `cond` operand right
+after the activation, and a `dcond` result right after `dx`).
+"""

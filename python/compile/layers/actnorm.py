@@ -1,0 +1,48 @@
+"""ActNorm layer (image, NHWC): y = x * exp(log_s) + b.
+
+Hand-written gradients (paper §3):
+    dx      = dy * s
+    dlog_s  = sum_{n,h,w} dy * (y - b)          [since x*s = y - b]
+              + (sum_n dld) * H*W               [logdet = H*W*sum(log_s)]
+    db      = sum_{n,h,w} dy
+backward recomputes x from y via the inverse; backward_stored takes the
+taped x instead (the AD-baseline path).
+"""
+
+import jax.numpy as jnp
+
+from ..kernels import backend as k
+from ..kernels import ref
+
+
+def param_specs(cfg):
+    return [("log_s", (cfg["c"],)), ("b", (cfg["c"],))]
+
+
+def forward(x, log_s, b):
+    return k.actnorm_forward(x, log_s, b)
+
+
+def inverse(y, log_s, b):
+    return (k.actnorm_inverse(y, log_s, b),)
+
+
+def _grads(dy, dld, x, y, log_s, b):
+    s = jnp.exp(log_s)
+    dx = dy * s
+    spatial = x.shape[1] * x.shape[2]
+    dlog_s = jnp.sum(dy * (y - b), axis=(0, 1, 2)) + jnp.sum(dld) * spatial
+    db = jnp.sum(dy, axis=(0, 1, 2))
+    return dx, dlog_s, db
+
+
+def backward(dy, dld, y, log_s, b):
+    x = k.actnorm_inverse(y, log_s, b)
+    dx, dlog_s, db = _grads(dy, dld, x, y, log_s, b)
+    return dx, dlog_s, db, x
+
+
+def backward_stored(dy, dld, x, log_s, b):
+    y = x * jnp.exp(log_s) + b
+    dx, dlog_s, db = _grads(dy, dld, x, y, log_s, b)
+    return dx, dlog_s, db

@@ -1,0 +1,72 @@
+"""Conditioner networks used inside coupling layers.
+
+These are the "arbitrary neural networks that need not be invertible"
+(paper §1): a 3-layer CNN for image couplings (GLOW's conv3x3 -> relu ->
+conv1x1 -> relu -> conv3x3, zero-initialized final layer) and a 3-layer MLP
+for dense couplings. They are differentiated with jax.vjp *inside* the
+hand-written layer backward — the analogue of the paper's ChainRules/Zygote
+integration where only the flow-level graph is manual.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# CNN conditioner (image couplings)
+# ---------------------------------------------------------------------------
+
+
+def cnn_param_specs(c_in, hidden, c_out):
+    return [
+        ("w1", (3, 3, c_in, hidden)),
+        ("b1", (hidden,)),
+        ("w2", (1, 1, hidden, hidden)),
+        ("b2", (hidden,)),
+        ("w3", (3, 3, hidden, c_out)),
+        ("b3", (c_out,)),
+    ]
+
+
+def _conv(x, w):
+    return lax.conv_general_dilated(
+        x, w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def cnn_apply(x, w1, b1, w2, b2, w3, b3):
+    h = jax.nn.relu(_conv(x, w1) + b1)
+    h = jax.nn.relu(_conv(h, w2) + b2)
+    return _conv(h, w3) + b3
+
+
+# ---------------------------------------------------------------------------
+# MLP conditioner (dense couplings)
+# ---------------------------------------------------------------------------
+
+
+def mlp_param_specs(d_in, hidden, d_out):
+    return [
+        ("w1", (d_in, hidden)),
+        ("b1", (hidden,)),
+        ("w2", (hidden, hidden)),
+        ("b2", (hidden,)),
+        ("w3", (hidden, d_out)),
+        ("b3", (d_out,)),
+    ]
+
+
+def mlp_apply(x, w1, b1, w2, b2, w3, b3):
+    h = jax.nn.relu(x @ w1 + b1)
+    h = jax.nn.relu(h @ w2 + b2)
+    return h @ w3 + b3
+
+
+def split_raw_t(out):
+    """Split conditioner output channels into (raw_scale, shift)."""
+    c2 = out.shape[-1] // 2
+    return out[..., :c2], out[..., c2:]

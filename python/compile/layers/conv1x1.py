@@ -1,0 +1,60 @@
+"""GLOW 1x1 invertible convolution, Householder-orthogonal parameterization.
+
+W = H(v1) H(v2) H(v3) with H(v) = I - 2 v v^T / v^T v; orthogonal, so the
+inverse is W^T and log|det| = 0 (InvertibleNetworks.jl's Conv1x1).
+
+Hand-written flow-level gradients:
+    y_p = W x_p   =>   dx_p = W^T dy_p,   dW = sum_p dy_p x_p^T
+dW is pulled back onto (v1, v2, v3) with jax.vjp over the tiny W-builder
+(the "inner function by AD" pattern — W construction is O(C^2), not a
+memory concern).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import backend as k
+from ..kernels.ref import householder_matrix
+
+
+def param_specs(cfg):
+    c = cfg["c"]
+    return [("v1", (c,)), ("v2", (c,)), ("v3", (c,))]
+
+
+def _w(v1, v2, v3):
+    return householder_matrix([v1, v2, v3])
+
+
+def forward(x, v1, v2, v3):
+    w = _w(v1, v2, v3)
+    y = k.conv1x1_apply(x, w)
+    return y, jnp.zeros((x.shape[0],), dtype=x.dtype)
+
+
+def inverse(y, v1, v2, v3):
+    w = _w(v1, v2, v3)
+    return (k.conv1x1_unapply(y, w),)
+
+
+def _grads(dy, x, v1, v2, v3):
+    w, w_vjp = jax.vjp(_w, v1, v2, v3)
+    dx = k.conv1x1_unapply(dy, w)  # W^T dy
+    # dW_{ij} = sum_p dy_{pi} x_{pj}
+    dw = jnp.einsum("...i,...j->ij", dy, x)
+    dv1, dv2, dv3 = w_vjp(dw)
+    return dx, dv1, dv2, dv3, w
+
+
+def backward(dy, dld, y, v1, v2, v3):
+    del dld  # logdet == 0 identically
+    w = _w(v1, v2, v3)
+    x = k.conv1x1_unapply(y, w)
+    dx, dv1, dv2, dv3, _ = _grads(dy, x, v1, v2, v3)
+    return dx, dv1, dv2, dv3, x
+
+
+def backward_stored(dy, dld, x, v1, v2, v3):
+    del dld
+    dx, dv1, dv2, dv3, _ = _grads(dy, x, v1, v2, v3)
+    return dx, dv1, dv2, dv3

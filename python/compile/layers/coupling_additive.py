@@ -1,0 +1,61 @@
+"""Additive (NICE) coupling layer (image, NHWC).
+
+    y = concat(x1, x2 + CNN(x1)),  logdet = 0.
+
+Backward: dx2 = dy2; dx1 = dy1 + vjp_CNN(dy2); x2 = y2 - CNN(y1).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .conditioner import cnn_apply, cnn_param_specs
+from .coupling_glow import split_channels
+
+
+def param_specs(cfg):
+    c = cfg["c"]
+    c1 = c // 2
+    c2 = c - c1
+    return cnn_param_specs(c1, cfg["hidden"], c2)
+
+
+def forward(x, *theta):
+    c1 = x.shape[-1] // 2
+    x1, x2 = split_channels(x, c1)
+    y2 = x2 + cnn_apply(x1, *theta)
+    logdet = jnp.zeros((x.shape[0],), dtype=x.dtype)
+    return jnp.concatenate([x1, y2], axis=-1), logdet
+
+
+def inverse(y, *theta):
+    c1 = y.shape[-1] // 2
+    y1, y2 = split_channels(y, c1)
+    x2 = y2 - cnn_apply(y1, *theta)
+    return (jnp.concatenate([y1, x2], axis=-1),)
+
+
+def _grads(dy, x1, theta):
+    c1 = x1.shape[-1]
+    dy1, dy2 = split_channels(dy, c1)
+    nn_out, cnn_vjp = jax.vjp(lambda x1_, *th: cnn_apply(x1_, *th), x1, *theta)
+    pulled = cnn_vjp(dy2)
+    dx1 = dy1 + pulled[0]
+    dx = jnp.concatenate([dx1, dy2], axis=-1)
+    return dx, pulled[1:], nn_out
+
+
+def backward(dy, dld, y, *theta):
+    del dld
+    c1 = y.shape[-1] // 2
+    y1, y2 = split_channels(y, c1)
+    dx, dtheta, nn_out = _grads(dy, y1, theta)
+    x = jnp.concatenate([y1, y2 - nn_out], axis=-1)
+    return (dx,) + tuple(dtheta) + (x,)
+
+
+def backward_stored(dy, dld, x, *theta):
+    del dld
+    c1 = x.shape[-1] // 2
+    x1, _ = split_channels(x, c1)
+    dx, dtheta, _ = _grads(dy, x1, theta)
+    return (dx,) + tuple(dtheta)

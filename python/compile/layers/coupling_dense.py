@@ -1,0 +1,133 @@
+"""Dense affine coupling (RealNVP on flat (N, D) vectors) and its
+conditional variant for amortized inference.
+
+Unconditional:
+    x1, x2 = split(x);  raw, t = MLP(x1);  y2 = 2*sigmoid(raw)*x2 + t
+Conditional (cond is a per-sample context vector, e.g. an observation or a
+summary-network embedding):
+    raw, t = MLP(concat(x1, cond))
+and backward additionally returns dcond so an upstream summary network can
+be trained through the flow (paper §4, BayesFlow pattern).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import backend as k
+from ..kernels.ref import coupling_scale
+from .conditioner import mlp_apply, mlp_param_specs, split_raw_t
+
+
+def _split(x, d1):
+    return x[:, :d1], x[:, d1:]
+
+
+# ---------------------------------------------------------------------------
+# Unconditional
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg):
+    d = cfg["d"]
+    d1 = d // 2
+    d2 = d - d1
+    return mlp_param_specs(d1, cfg["hidden"], 2 * d2)
+
+
+def forward(x, *theta):
+    d1 = x.shape[-1] // 2
+    x1, x2 = _split(x, d1)
+    raw, t = split_raw_t(mlp_apply(x1, *theta))
+    y2, logdet = k.dense_core_forward(x2, raw, t)
+    return jnp.concatenate([x1, y2], axis=-1), logdet
+
+
+def inverse(y, *theta):
+    d1 = y.shape[-1] // 2
+    y1, y2 = _split(y, d1)
+    raw, t = split_raw_t(mlp_apply(y1, *theta))
+    x2 = k.dense_core_inverse(y2, raw, t)
+    return (jnp.concatenate([y1, x2], axis=-1),)
+
+
+def _grads(dy, dld, x1, y2_or_x2, theta, stored, cond=None):
+    d1 = x1.shape[-1]
+    dy1, dy2 = _split(dy, d1)
+    if cond is None:
+        out, mlp_vjp = jax.vjp(lambda a, *th: mlp_apply(a, *th), x1, *theta)
+    else:
+        out, mlp_vjp = jax.vjp(
+            lambda a, c, *th: mlp_apply(jnp.concatenate([a, c], axis=-1), *th),
+            x1, cond, *theta)
+    raw, t = split_raw_t(out)
+    s = coupling_scale(raw)
+    x2 = y2_or_x2 if stored else (y2_or_x2 - t) / s
+    dx2 = dy2 * s
+    ds = dy2 * x2 + dld[:, None] / s
+    draw = ds * s * (1.0 - 0.5 * s)
+    dout = jnp.concatenate([draw, dy2], axis=-1)
+    pulled = mlp_vjp(dout)
+    dx1 = dy1 + pulled[0]
+    if cond is None:
+        dcond, dtheta = None, pulled[1:]
+    else:
+        dcond, dtheta = pulled[1], pulled[2:]
+    dx = jnp.concatenate([dx1, dx2], axis=-1)
+    return dx, dcond, dtheta, x2
+
+
+def backward(dy, dld, y, *theta):
+    d1 = y.shape[-1] // 2
+    y1, y2 = _split(y, d1)
+    dx, _, dtheta, x2 = _grads(dy, dld, y1, y2, theta, stored=False)
+    return (dx,) + tuple(dtheta) + (jnp.concatenate([y1, x2], axis=-1),)
+
+
+def backward_stored(dy, dld, x, *theta):
+    d1 = x.shape[-1] // 2
+    x1, x2 = _split(x, d1)
+    dx, _, dtheta, _ = _grads(dy, dld, x1, x2, theta, stored=True)
+    return (dx,) + tuple(dtheta)
+
+
+# ---------------------------------------------------------------------------
+# Conditional
+# ---------------------------------------------------------------------------
+
+
+def cond_param_specs(cfg):
+    d = cfg["d"]
+    d1 = d // 2
+    d2 = d - d1
+    return mlp_param_specs(d1 + cfg["dcond"], cfg["hidden"], 2 * d2)
+
+
+def cond_forward(x, cond, *theta):
+    d1 = x.shape[-1] // 2
+    x1, x2 = _split(x, d1)
+    raw, t = split_raw_t(mlp_apply(jnp.concatenate([x1, cond], axis=-1), *theta))
+    y2, logdet = k.dense_core_forward(x2, raw, t)
+    return jnp.concatenate([x1, y2], axis=-1), logdet
+
+
+def cond_inverse(y, cond, *theta):
+    d1 = y.shape[-1] // 2
+    y1, y2 = _split(y, d1)
+    raw, t = split_raw_t(mlp_apply(jnp.concatenate([y1, cond], axis=-1), *theta))
+    x2 = k.dense_core_inverse(y2, raw, t)
+    return (jnp.concatenate([y1, x2], axis=-1),)
+
+
+def cond_backward(dy, dld, y, cond, *theta):
+    d1 = y.shape[-1] // 2
+    y1, y2 = _split(y, d1)
+    dx, dcond, dtheta, x2 = _grads(dy, dld, y1, y2, theta, stored=False, cond=cond)
+    x = jnp.concatenate([y1, x2], axis=-1)
+    return (dx, dcond) + tuple(dtheta) + (x,)
+
+
+def cond_backward_stored(dy, dld, x, cond, *theta):
+    d1 = x.shape[-1] // 2
+    x1, x2 = _split(x, d1)
+    dx, dcond, dtheta, _ = _grads(dy, dld, x1, x2, theta, stored=True, cond=cond)
+    return (dx, dcond) + tuple(dtheta)

@@ -1,0 +1,95 @@
+"""GLOW-style affine coupling layer (image, NHWC).
+
+    x1, x2 = split_channels(x)           # C1 = C//2, C2 = C - C1
+    raw, t = CNN(x1)                     # conditioner, 2*C2 output channels
+    s      = 2*sigmoid(raw)            ("Sigmoid2")
+    y      = concat(x1, s * x2 + t)
+    logdet = sum_{h,w,c2} log s          # per sample
+
+Hand-written backward (the paper's core contribution — the flow-level
+graph never hits an AD tape):
+    x1 = y1;   x2 = (y2 - t) / s                       (recomputed, O(1) mem)
+    dx2   = dy2 * s
+    ds    = dy2 * x2 + dld / s                         (logdet pullback)
+    draw  = ds * s * (1 - s/2)                         (d(2*sigmoid)/draw)
+    dt    = dy2
+    dx1   = dy1 + vjp_CNN(concat(draw, dt))            (inner net by AD)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import backend as k
+from ..kernels.ref import coupling_scale
+from .conditioner import cnn_apply, cnn_param_specs, split_raw_t
+
+
+def split_channels(x, c1):
+    return x[..., :c1], x[..., c1:]
+
+
+def param_specs(cfg):
+    c = cfg["c"]
+    c1 = c // 2
+    c2 = c - c1
+    return cnn_param_specs(c1, cfg["hidden"], 2 * c2)
+
+
+def forward(x, *theta):
+    c1 = x.shape[-1] // 2
+    x1, x2 = split_channels(x, c1)
+    raw, t = split_raw_t(cnn_apply(x1, *theta))
+    y2, logdet = k.affine_core_forward(x2, raw, t)
+    return jnp.concatenate([x1, y2], axis=-1), logdet
+
+
+def inverse(y, *theta):
+    c1 = y.shape[-1] // 2
+    y1, y2 = split_channels(y, c1)
+    raw, t = split_raw_t(cnn_apply(y1, *theta))
+    x2 = k.affine_core_inverse(y2, raw, t)
+    return (jnp.concatenate([y1, x2], axis=-1),)
+
+
+def _grads(dy, dld, x1, y2_or_x2, theta, stored):
+    """Shared manual-gradient core.
+
+    stored=False: y2_or_x2 is y2 and x2 is recomputed via the inverse.
+    stored=True:  y2_or_x2 is x2 (taped by the AD-baseline executor).
+    """
+    c1 = x1.shape[-1]
+    dy1, dy2 = split_channels(dy, c1)
+    out, cnn_vjp = jax.vjp(lambda x1_, *th: cnn_apply(x1_, *th), x1, *theta)
+    raw, t = split_raw_t(out)
+    s = coupling_scale(raw)
+    if stored:
+        x2 = y2_or_x2
+    else:
+        x2 = (y2_or_x2 - t) / s
+    dld_b = dld.reshape((-1,) + (1,) * (dy.ndim - 1))
+    dx2 = dy2 * s
+    ds = dy2 * x2 + dld_b / s
+    draw = ds * s * (1.0 - 0.5 * s)
+    dt = dy2
+    dout = jnp.concatenate([draw, dt], axis=-1)
+    pulled = cnn_vjp(dout)
+    dx1 = dy1 + pulled[0]
+    dtheta = pulled[1:]
+    dx = jnp.concatenate([dx1, dx2], axis=-1)
+    return dx, dtheta, x2
+
+
+def backward(dy, dld, y, *theta):
+    c1 = y.shape[-1] // 2
+    y1, y2 = split_channels(y, c1)
+    x1 = y1
+    dx, dtheta, x2 = _grads(dy, dld, x1, y2, theta, stored=False)
+    x = jnp.concatenate([x1, x2], axis=-1)
+    return (dx,) + tuple(dtheta) + (x,)
+
+
+def backward_stored(dy, dld, x, *theta):
+    c1 = x.shape[-1] // 2
+    x1, x2 = split_channels(x, c1)
+    dx, dtheta, _ = _grads(dy, dld, x1, x2, theta, stored=True)
+    return (dx,) + tuple(dtheta)

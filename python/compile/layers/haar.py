@@ -1,0 +1,31 @@
+"""Haar wavelet squeeze layer (paper §1's multiscale transform).
+
+Orthonormal linear map, parameter-free, logdet = 0; the gradient is the
+transpose, which for an orthonormal map *is* the inverse transform.
+"""
+
+from ..kernels import backend as k
+
+
+def param_specs(cfg):
+    return []
+
+
+def forward(x):
+    return k.haar_forward(x)
+
+
+def inverse(y):
+    return (k.haar_inverse(y),)
+
+
+def backward(dy, dld, y):
+    del dld
+    dx = k.haar_inverse(dy)
+    x = k.haar_inverse(y)
+    return dx, x
+
+
+def backward_stored(dy, dld, x):
+    del dld, x
+    return (k.haar_inverse(dy),)

@@ -1,0 +1,24 @@
+"""Loss heads lowered as standalone artifacts.
+
+gaussian_logp:  z -> (logp,)          per-sample standard-normal log-density
+nll_seed:       z -> (dz, dld)        gradient seeds for the NLL objective
+                                      L = -mean_n(logp_n + logdet_n):
+                                      dz = z/N, dld = -1/N.
+The scalar loss itself is assembled on the rust side from logp + the
+accumulated per-layer logdets (tiny (N,) vectors).
+"""
+
+import jax.numpy as jnp
+
+from ..kernels.ref import gaussian_logp as _logp
+
+
+def gaussian_logp(z):
+    return (_logp(z),)
+
+
+def nll_seed(z):
+    n = z.shape[0]
+    dz = z / n
+    dld = jnp.full((n,), -1.0 / n, dtype=z.dtype)
+    return dz, dld

@@ -1,0 +1,148 @@
+"""HINT: Hierarchical Invertible Neural Transport (Kruse et al., AAAI'21).
+
+A recursive coupling on dense (N, D) inputs:
+
+    H(x, depth):
+        x1, x2 = split(x)
+        y1 = H(x1, depth-1)                       # recurse on the pass-half
+        raw, t = MLP_node(x1)                     # conditioned on the INPUT half
+        y2a = 2*sigmoid(raw) * x2 + t
+        y2 = H(y2a, depth-1)                      # recurse on the transformed half
+        return concat(y1, y2)
+
+Leaves (depth 0 or D < 4) are identities. The full Jacobian is triangular
+down to the leaf granularity, giving HINT its dense-triangular transport.
+
+Parameters: one conditioner MLP per internal node, flattened in preorder
+(node path "r", "rl", "rr", ...). The hand-written backward recurses the
+same tree, reusing the affine-coupling pullback at every node, so the
+memory behaviour matches the flat couplings (x recomputed from y).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ref import coupling_scale
+from .conditioner import mlp_apply, mlp_param_specs, split_raw_t
+
+MIN_D = 4
+
+
+def _split_dims(d):
+    d1 = d // 2
+    return d1, d - d1
+
+
+def _nodes(d, depth, path="r"):
+    """Preorder list of (path, d1, d2) for every internal node."""
+    if depth == 0 or d < MIN_D:
+        return []
+    d1, d2 = _split_dims(d)
+    out = [(path, d1, d2)]
+    out += _nodes(d1, depth - 1, path + "l")
+    out += _nodes(d2, depth - 1, path + "t")
+    return out
+
+
+def param_specs(cfg):
+    specs = []
+    for path, d1, d2 in _nodes(cfg["d"], cfg["depth"]):
+        for name, shape in mlp_param_specs(d1, cfg["hidden"], 2 * d2):
+            specs.append((f"{path}_{name}", shape))
+    return specs
+
+
+def _theta_tree(cfg, theta):
+    """Map flat theta tuple back to {path: (6 params)}."""
+    tree = {}
+    i = 0
+    for path, _, _ in _nodes(cfg["d"], cfg["depth"]):
+        tree[path] = tuple(theta[i:i + 6])
+        i += 6
+    assert i == len(theta)
+    return tree
+
+
+def _fwd(x, depth, path, tree):
+    d = x.shape[-1]
+    if depth == 0 or d < MIN_D:
+        return x, jnp.zeros((x.shape[0],), dtype=x.dtype)
+    d1, _ = _split_dims(d)
+    x1, x2 = x[:, :d1], x[:, d1:]
+    y1, ld1 = _fwd(x1, depth - 1, path + "l", tree)
+    raw, t = split_raw_t(mlp_apply(x1, *tree[path]))
+    s = coupling_scale(raw)
+    y2a = s * x2 + t
+    ld_aff = jnp.sum(jnp.log(s), axis=1)
+    y2, ld2 = _fwd(y2a, depth - 1, path + "t", tree)
+    return jnp.concatenate([y1, y2], axis=-1), ld1 + ld_aff + ld2
+
+
+def _inv(y, depth, path, tree):
+    d = y.shape[-1]
+    if depth == 0 or d < MIN_D:
+        return y
+    d1, _ = _split_dims(d)
+    y1, y2 = y[:, :d1], y[:, d1:]
+    x1 = _inv(y1, depth - 1, path + "l", tree)
+    y2a = _inv(y2, depth - 1, path + "t", tree)
+    raw, t = split_raw_t(mlp_apply(x1, *tree[path]))
+    x2 = (y2a - t) / coupling_scale(raw)
+    return jnp.concatenate([x1, x2], axis=-1)
+
+
+def _bwd(dy, dld, y, depth, path, tree, grads):
+    """Returns (dx, x); accumulates dtheta into grads[path]."""
+    d = y.shape[-1]
+    if depth == 0 or d < MIN_D:
+        return dy, y
+    d1, _ = _split_dims(d)
+    dy1, dy2 = dy[:, :d1], dy[:, d1:]
+    y1, y2 = y[:, :d1], y[:, d1:]
+    dx1a, x1 = _bwd(dy1, dld, y1, depth - 1, path + "l", tree, grads)
+    dy2a, y2a = _bwd(dy2, dld, y2, depth - 1, path + "t", tree, grads)
+    out, mlp_vjp = jax.vjp(lambda a, *th: mlp_apply(a, *th), x1, *tree[path])
+    raw, t = split_raw_t(out)
+    s = coupling_scale(raw)
+    x2 = (y2a - t) / s
+    dx2 = dy2a * s
+    ds = dy2a * x2 + dld[:, None] / s
+    draw = ds * s * (1.0 - 0.5 * s)
+    pulled = mlp_vjp(jnp.concatenate([draw, dy2a], axis=-1))
+    dx1 = dx1a + pulled[0]
+    grads[path] = tuple(pulled[1:])
+    return (jnp.concatenate([dx1, dx2], axis=-1),
+            jnp.concatenate([x1, x2], axis=-1))
+
+
+def make(cfg):
+    """Build (forward, inverse, backward, backward_stored) closures."""
+    depth = cfg["depth"]
+
+    def forward(x, *theta):
+        return _fwd(x, depth, "r", _theta_tree(cfg, theta))
+
+    def inverse(y, *theta):
+        return (_inv(y, depth, "r", _theta_tree(cfg, theta)),)
+
+    def backward(dy, dld, y, *theta):
+        tree = _theta_tree(cfg, theta)
+        grads = {}
+        dx, x = _bwd(dy, dld, y, depth, "r", tree, grads)
+        flat = []
+        for p, _, _ in _nodes(cfg["d"], depth):
+            flat.extend(grads[p])
+        return (dx,) + tuple(flat) + (x,)
+
+    def backward_stored(dy, dld, x, *theta):
+        # identical math; recover y cheaply from x then run the same pullback
+        tree = _theta_tree(cfg, theta)
+        y, _ = _fwd(x, depth, "r", tree)
+        grads = {}
+        dx, _ = _bwd(dy, dld, y, depth, "r", tree, grads)
+        flat = []
+        for p, _, _ in _nodes(cfg["d"], depth):
+            flat.extend(grads[p])
+        return (dx,) + tuple(flat)
+
+    return forward, inverse, backward, backward_stored

@@ -1,0 +1,83 @@
+"""Hyperbolic (fully hyperbolic CNN, Lensink/Peters/Haber) layer.
+
+State (N, H, W, 2C) = [x_prev | x_curr]; one leapfrog step
+    y_prev = x_curr
+    y_curr = 2 x_curr - x_prev + g(x_curr),   g(x) = alpha K^T sigma(K x)
+with K a 3x3 conv (C -> hidden) and K^T its adjoint. Volume preserving
+(logdet = 0) and invertible by construction.
+
+Hand-written backward:
+    dx_curr = dy_prev + 2 dy_curr + Jg(x_curr)^T dy_curr
+    dx_prev = -dy_curr
+dK via jax.vjp over g (inner-net-by-AD, like the coupling conditioners).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import backend as k
+
+ALPHA = 0.2
+
+
+def param_specs(cfg):
+    c = cfg["c"] // 2  # per-half channels
+    return [("kw", (3, 3, c, cfg["hidden"]))]
+
+
+def _conv(x, w):
+    return lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv_t(y, w):
+    # adjoint of stride-1 SAME conv3x3: spatially flipped, IO-swapped kernel
+    return _conv(y, jnp.flip(w, (0, 1)).swapaxes(2, 3))
+
+
+def _g(x, kw):
+    return ALPHA * _conv_t(jnp.tanh(_conv(x, kw)), kw)
+
+
+def _split(x):
+    c = x.shape[-1] // 2
+    return x[..., :c], x[..., c:]
+
+
+def forward(x, kw):
+    x_prev, x_curr = _split(x)
+    y_prev, y_curr = k.hyperbolic_core_forward(x_prev, x_curr, _g(x_curr, kw))
+    return (jnp.concatenate([y_prev, y_curr], axis=-1),
+            jnp.zeros((x.shape[0],), dtype=x.dtype))
+
+
+def inverse(y, kw):
+    y_prev, y_curr = _split(y)
+    x_prev, x_curr = k.hyperbolic_core_inverse(y_prev, y_curr, _g(y_prev, kw))
+    return (jnp.concatenate([x_prev, x_curr], axis=-1),)
+
+
+def _grads(dy, x_curr, kw):
+    dy_prev, dy_curr = _split(dy)
+    _, g_vjp = jax.vjp(lambda xc, w: _g(xc, w), x_curr, kw)
+    gx, dkw = g_vjp(dy_curr)
+    dx_curr = dy_prev + 2.0 * dy_curr + gx
+    dx_prev = -dy_curr
+    return jnp.concatenate([dx_prev, dx_curr], axis=-1), dkw
+
+
+def backward(dy, dld, y, kw):
+    del dld
+    y_prev, y_curr = _split(y)
+    x_curr = y_prev
+    x_prev = 2.0 * x_curr - y_curr + _g(x_curr, kw)
+    dx, dkw = _grads(dy, x_curr, kw)
+    return dx, dkw, jnp.concatenate([x_prev, x_curr], axis=-1)
+
+
+def backward_stored(dy, dld, x, kw):
+    del dld
+    _, x_curr = _split(x)
+    dx, dkw = _grads(dy, x_curr, kw)
+    return dx, dkw

@@ -1,0 +1,32 @@
+"""Channel-reverse permutation (RealNVP's alternating mask), logdet 0.
+
+Self-inverse orthogonal map; gradient = inverse = reverse.
+"""
+
+import jax.numpy as jnp
+
+
+def param_specs(cfg):
+    return []
+
+
+def _rev(x):
+    return x[..., ::-1]
+
+
+def forward(x):
+    return _rev(x), jnp.zeros((x.shape[0],), dtype=x.dtype)
+
+
+def inverse(y):
+    return (_rev(y),)
+
+
+def backward(dy, dld, y):
+    del dld
+    return _rev(dy), _rev(y)
+
+
+def backward_stored(dy, dld, x):
+    del dld, x
+    return (_rev(dy),)

@@ -1,0 +1,365 @@
+"""L2 model registry: layer instances, their AOT entries, and the named
+network configurations the rust coordinator composes at runtime.
+
+A *layer instance* is (kind, cfg) with a deterministic signature string;
+`entries()` maps it to the four (five with cond) jittable entry functions
+plus example-argument shapes for lowering. A *network* is an ordered list
+of layer instances plus input/latent shape metadata; the coordinator
+replays it from manifest.json.
+
+Split (multiscale factor-out) is a coordinator-native layer: it is pure
+memory movement, so it appears in network layer lists with kind "split"
+but has no artifacts.
+"""
+
+import math
+
+from .layers import (actnorm, conv1x1, coupling_additive, coupling_dense,
+                     coupling_glow, haar, heads, hint, hyperbolic, permute)
+
+
+def _shape_tag(shape):
+    return "x".join(str(s) for s in shape)
+
+
+class LayerInstance:
+    """One concrete (kind, cfg) layer with fixed activation shape."""
+
+    def __init__(self, kind, cfg, in_shape, out_shape=None, cond_shape=None):
+        self.kind = kind
+        self.cfg = cfg
+        self.in_shape = tuple(in_shape)
+        self.out_shape = tuple(out_shape or in_shape)
+        self.cond_shape = tuple(cond_shape) if cond_shape else None
+
+    @property
+    def sig(self):
+        parts = [self.kind, _shape_tag(self.in_shape)]
+        if "hidden" in self.cfg:
+            parts.append(f"hd{self.cfg['hidden']}")
+        if "depth" in self.cfg:
+            parts.append(f"dep{self.cfg['depth']}")
+        if self.cond_shape:
+            parts.append(f"cond{_shape_tag(self.cond_shape)}")
+        return "__".join(parts)
+
+    # -- parameter specs ----------------------------------------------------
+    def param_specs(self):
+        mod = _MODULES[self.kind]
+        if self.kind == "condcpl":
+            return coupling_dense.cond_param_specs(self.cfg)
+        return mod.param_specs(self.cfg)
+
+    # -- entry functions ----------------------------------------------------
+    def entries(self):
+        """{entry_name: (fn, [operand shapes])}; params appended last."""
+        n = self.in_shape[0]
+        x, y = self.in_shape, self.out_shape
+        ld = (n,)
+        if self.kind == "hint":
+            fwd, inv, bwd, bwds = hint.make(self.cfg)
+        elif self.kind == "condcpl":
+            fwd = coupling_dense.cond_forward
+            inv = coupling_dense.cond_inverse
+            bwd = coupling_dense.cond_backward
+            bwds = coupling_dense.cond_backward_stored
+        else:
+            mod = _MODULES[self.kind]
+            fwd, inv, bwd, bwds = (mod.forward, mod.inverse, mod.backward,
+                                   mod.backward_stored)
+        if self.cond_shape:
+            c = self.cond_shape
+            return {
+                "forward": (fwd, [x, c]),
+                "inverse": (inv, [y, c]),
+                "backward": (bwd, [y, ld, y, c]),
+                "backward_stored": (bwds, [y, ld, x, c]),
+            }
+        return {
+            "forward": (fwd, [x]),
+            "inverse": (inv, [y]),
+            "backward": (bwd, [y, ld, y]),
+            "backward_stored": (bwds, [y, ld, x]),
+        }
+
+    def manifest_entry(self):
+        return {
+            "sig": self.sig,
+            "kind": self.kind,
+            "in_shape": list(self.in_shape),
+            "out_shape": list(self.out_shape),
+            "cond_shape": list(self.cond_shape) if self.cond_shape else None,
+            "params": [{"name": nm, "shape": list(sh)}
+                       for nm, sh in self.param_specs()],
+            "cfg": self.cfg,
+        }
+
+
+_MODULES = {
+    "actnorm": actnorm,
+    "conv1x1": conv1x1,
+    "glowcpl": coupling_glow,
+    "addcpl": coupling_additive,
+    "densecpl": coupling_dense,
+    "condcpl": coupling_dense,
+    "haar": haar,
+    "permute": permute,
+    "hyper": hyperbolic,
+    "hint": hint,
+}
+
+
+# ---------------------------------------------------------------------------
+# Layer-instance constructors
+# ---------------------------------------------------------------------------
+
+
+def L_actnorm(n, h, w, c):
+    return LayerInstance("actnorm", {"c": c}, (n, h, w, c))
+
+
+def L_conv1x1(n, h, w, c):
+    return LayerInstance("conv1x1", {"c": c}, (n, h, w, c))
+
+
+def L_glowcpl(n, h, w, c, hidden):
+    return LayerInstance("glowcpl", {"c": c, "hidden": hidden}, (n, h, w, c))
+
+
+def L_addcpl(n, h, w, c, hidden):
+    return LayerInstance("addcpl", {"c": c, "hidden": hidden}, (n, h, w, c))
+
+
+def L_haar(n, h, w, c):
+    return LayerInstance("haar", {"c": c}, (n, h, w, c),
+                         out_shape=(n, h // 2, w // 2, 4 * c))
+
+
+def L_permute(shape):
+    return LayerInstance("permute", {}, shape)
+
+
+def L_densecpl(n, d, hidden):
+    return LayerInstance("densecpl", {"d": d, "hidden": hidden}, (n, d))
+
+
+def L_condcpl(n, d, dcond, hidden):
+    return LayerInstance("condcpl", {"d": d, "dcond": dcond, "hidden": hidden},
+                         (n, d), cond_shape=(n, dcond))
+
+
+def L_hyper(n, h, w, c, hidden):
+    return LayerInstance("hyper", {"c": c, "hidden": hidden}, (n, h, w, c))
+
+
+def L_hint(n, d, hidden, depth):
+    return LayerInstance("hint", {"d": d, "hidden": hidden, "depth": depth},
+                         (n, d))
+
+
+def L_split(n, h, w, c):
+    """Coordinator-native factor-out: first c//2 channels exit as latent."""
+    zc = c // 2
+    inst = LayerInstance("split", {"zc": zc}, (n, h, w, c),
+                         out_shape=(n, h, w, c - zc))
+    return inst
+
+
+# ---------------------------------------------------------------------------
+# Networks
+# ---------------------------------------------------------------------------
+
+
+class Network:
+    def __init__(self, name, layers, in_shape, cond_shape=None):
+        self.name = name
+        self.layers = layers
+        self.in_shape = tuple(in_shape)
+        self.cond_shape = tuple(cond_shape) if cond_shape else None
+
+    def latent_shapes(self):
+        """Shapes entering the Gaussian head: split z's + final output."""
+        shapes = []
+        for inst in self.layers:
+            if inst.kind == "split":
+                n, h, w, c = inst.in_shape
+                shapes.append((n, h, w, inst.cfg["zc"]))
+        shapes.append(self.layers[-1].out_shape)
+        return shapes
+
+    def manifest_entry(self):
+        return {
+            "name": self.name,
+            "in_shape": list(self.in_shape),
+            "cond_shape": list(self.cond_shape) if self.cond_shape else None,
+            "layers": [inst.sig if inst.kind != "split"
+                       else f"split_zc{inst.cfg['zc']}__{_shape_tag(inst.in_shape)}"
+                       for inst in self.layers],
+            "latent_shapes": [list(s) for s in self.latent_shapes()],
+        }
+
+
+def glow_flat(name, n, h, w, c_in, k, hidden):
+    """Haar squeeze then K x (ActNorm -> Conv1x1 -> AffineCoupling)."""
+    layers = [L_haar(n, h, w, c_in)]
+    c = 4 * c_in
+    h2, w2 = h // 2, w // 2
+    for _ in range(k):
+        layers += [L_actnorm(n, h2, w2, c), L_conv1x1(n, h2, w2, c),
+                   L_glowcpl(n, h2, w2, c, hidden)]
+    return Network(name, layers, (n, h, w, c_in))
+
+
+def glow_multiscale(name, n, h, w, c_in, scales, k, hidden):
+    """GLOW with Haar squeeze + factor-out between scales (paper §1)."""
+    layers = []
+    ch, hh, ww = c_in, h, w
+    for s in range(scales):
+        layers.append(L_haar(n, hh, ww, ch))
+        ch, hh, ww = 4 * ch, hh // 2, ww // 2
+        for _ in range(k):
+            layers += [L_actnorm(n, hh, ww, ch), L_conv1x1(n, hh, ww, ch),
+                       L_glowcpl(n, hh, ww, ch, hidden)]
+        if s != scales - 1:
+            layers.append(L_split(n, hh, ww, ch))
+            ch = ch - ch // 2
+    return Network(name, layers, (n, h, w, c_in))
+
+
+def realnvp_dense(name, n, d, k, hidden):
+    layers = []
+    for _ in range(k):
+        layers += [L_densecpl(n, d, hidden), L_permute((n, d))]
+    return Network(name, layers, (n, d))
+
+
+def cond_realnvp_dense(name, n, d, dcond, k, hidden):
+    layers = []
+    for _ in range(k):
+        layers += [L_condcpl(n, d, dcond, hidden), L_permute((n, d))]
+    return Network(name, layers, (n, d), cond_shape=(n, dcond))
+
+
+def hint_dense(name, n, d, k, hidden, depth):
+    layers = []
+    for _ in range(k):
+        layers += [L_hint(n, d, hidden, depth), L_permute((n, d))]
+    return Network(name, layers, (n, d))
+
+
+def hyperbolic_net(name, n, h, w, c_in, k, hidden):
+    """Haar squeeze to 4*c_in channels, then K leapfrog steps on the
+    (prev|curr) paired state."""
+    layers = [L_haar(n, h, w, c_in)]
+    c = 4 * c_in
+    for _ in range(k):
+        layers.append(L_hyper(n, h // 2, w // 2, c, hidden))
+    return Network(name, layers, (n, h, w, c_in))
+
+
+# ---------------------------------------------------------------------------
+# The default network catalog: examples + every figure's sweep.
+# ---------------------------------------------------------------------------
+
+
+def default_networks():
+    nets = []
+    # e2e examples
+    nets.append(realnvp_dense("realnvp2d", n=256, d=2, k=8, hidden=64))
+    nets.append(cond_realnvp_dense("cond_realnvp2d", n=256, d=2, dcond=2,
+                                   k=8, hidden=64))
+    nets.append(hint_dense("hint8d", n=256, d=8, k=4, hidden=64, depth=2))
+    nets.append(glow_multiscale("glow16", n=16, h=16, w=16, c_in=3,
+                                scales=2, k=4, hidden=32))
+    nets.append(hyperbolic_net("hyper16", n=16, h=16, w=16, c_in=3,
+                               k=6, hidden=12))
+    # fig1: spatial-size sweep, GLOW, 3 input channels, batch 8 (paper setup)
+    for hw in (16, 32, 64, 128, 256):
+        nets.append(glow_flat(f"glow_fig1_{hw}", n=8, h=hw, w=hw, c_in=3,
+                              k=16, hidden=32))
+    # fig2: depth sweep at 64x64 — all depths share the 64x64 artifacts
+    for k in (2, 4, 8, 16, 32, 48):
+        nets.append(glow_flat(f"glow_fig2_d{k}", n=8, h=64, w=64, c_in=3,
+                              k=k, hidden=32))
+    # throughput / ablation nets
+    nets.append(glow_flat("glow_bench32", n=8, h=32, w=32, c_in=3,
+                          k=8, hidden=32))
+    return nets
+
+
+def collect_layer_instances(nets):
+    """Dedupe layer instances by signature across all networks."""
+    seen = {}
+    for net in nets:
+        for inst in net.layers:
+            if inst.kind == "split":
+                continue
+            seen.setdefault(inst.sig, inst)
+    return seen
+
+
+def head_shapes(nets):
+    """Unique latent shapes needing gaussian_logp / nll_seed artifacts."""
+    shapes = set()
+    for net in nets:
+        for s in net.latent_shapes():
+            shapes.add(tuple(s))
+    return sorted(shapes)
+
+
+HEAD_ENTRIES = {
+    "gaussian_logp": heads.gaussian_logp,
+    "nll_seed": heads.nll_seed,
+}
+
+
+# ---------------------------------------------------------------------------
+# Monolithic full-AD ablation ("what normflows does"): the entire network
+# forward + NLL loss differentiated by jax in ONE program. Used to check
+# the per-layer hand-written gradients end-to-end and as the XLA-fused
+# wall-clock reference in the throughput bench. Lowered with the ref
+# backend (reverse-mode AD cannot trace interpret-mode pallas_call — and
+# an AD framework would be differentiating standard ops anyway).
+# ---------------------------------------------------------------------------
+
+
+def full_vjp_fn(net):
+    """(x, *flat_params) -> (loss, *dparams) for an unconditional net."""
+    import jax
+    import jax.numpy as jnp
+
+    from .kernels.ref import gaussian_logp
+
+    insts = [inst for inst in net.layers]
+    param_counts = [0 if inst.kind == "split" else len(inst.param_specs())
+                    for inst in insts]
+
+    def loss_fn(x, *flat):
+        latents = []
+        ld_total = 0.0
+        cur = x
+        off = 0
+        for inst, npar in zip(insts, param_counts):
+            if inst.kind == "split":
+                zc = inst.cfg["zc"]
+                latents.append(cur[..., :zc])
+                cur = cur[..., zc:]
+                continue
+            theta = flat[off:off + npar]
+            off += npar
+            fwd = inst.entries()["forward"][0]
+            cur, ld = fwd(cur, *theta)
+            ld_total = ld_total + ld
+        latents.append(cur)
+        logp = sum(gaussian_logp(z) for z in latents)
+        return -jnp.mean(logp + ld_total)
+
+    def step(x, *flat):
+        loss, grads = jax.value_and_grad(
+            loss_fn, argnums=tuple(range(1, 1 + sum(param_counts))))(x, *flat)
+        return (loss,) + tuple(grads)
+
+    return step, param_counts
+
+
+MONOLITH_NETS = ["realnvp2d", "glow_bench32", "glow_fig2_d8"]

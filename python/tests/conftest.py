@@ -1,0 +1,25 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _ref_backend_for_layer_algebra():
+    """test_layers differentiates through layer forwards with jax.vjp, which
+    cannot trace interpret-mode pallas_call. Kernel<->ref equivalence is
+    pinned by test_kernels (which imports the pallas modules directly), so
+    layer-algebra tests run on the ref backend."""
+    from compile.kernels import backend
+    prev = backend._current
+    backend.set_backend("ref")
+    yield
+    backend.set_backend(prev)

@@ -1,0 +1,79 @@
+"""Model registry + network builder contracts: signatures are stable and
+collision-free, shapes chain correctly, manifests are self-consistent."""
+
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def test_default_networks_chain_shapes():
+    for net in model.default_networks():
+        cur = net.in_shape
+        for inst in net.layers:
+            assert inst.in_shape == cur, \
+                f"{net.name}: {inst.sig} expects {inst.in_shape}, at {cur}"
+            cur = inst.out_shape
+        # final shape is the last latent
+        assert tuple(net.latent_shapes()[-1]) == cur
+
+
+def test_signatures_unique_per_distinct_config():
+    a = model.L_glowcpl(8, 16, 16, 12, hidden=32)
+    b = model.L_glowcpl(8, 16, 16, 12, hidden=64)
+    c = model.L_glowcpl(8, 32, 32, 12, hidden=32)
+    assert len({a.sig, b.sig, c.sig}) == 3
+
+
+def test_shared_signatures_dedupe():
+    nets = [n for n in model.default_networks()
+            if n.name.startswith("glow_fig2")]
+    insts = model.collect_layer_instances(nets)
+    # all fig2 depths share the same 64x64 layer artifacts (+1 haar)
+    assert len(insts) == 4, sorted(insts)
+
+
+def test_multiscale_split_bookkeeping():
+    net = next(n for n in model.default_networks() if n.name == "glow16")
+    splits = [l for l in net.layers if l.kind == "split"]
+    assert len(splits) == 1
+    latents = net.latent_shapes()
+    assert len(latents) == 2
+    # total latent elements == input elements (bijectivity requirement)
+    total = sum(int(np.prod(s[1:])) for s in latents)
+    assert total == int(np.prod(net.in_shape[1:]))
+
+
+def test_every_network_conserves_dimension():
+    """Change of variables requires latent dim == input dim."""
+    for net in model.default_networks():
+        total = sum(int(np.prod(s[1:])) for s in net.latent_shapes())
+        assert total == int(np.prod(net.in_shape[1:])), net.name
+
+
+def test_param_specs_have_positive_shapes():
+    for net in model.default_networks():
+        for inst in net.layers:
+            if inst.kind == "split":
+                continue
+            for name, shape in inst.param_specs():
+                assert all(d > 0 for d in shape), (net.name, inst.sig, name)
+
+
+def test_entries_cover_all_four():
+    inst = model.L_glowcpl(2, 4, 4, 6, hidden=8)
+    ents = inst.entries()
+    assert set(ents) == {"forward", "inverse", "backward", "backward_stored"}
+
+
+def test_hint_param_count_matches_tree():
+    inst = model.L_hint(4, 8, hidden=16, depth=2)
+    # d=8: root(4|4), left on 4 (2|2 -> d<4 leaf? d=4 >= MIN_D so node),
+    # right likewise => 3 nodes x 6 params
+    assert len(inst.param_specs()) == 3 * 6
+
+
+def test_monolith_nets_exist():
+    names = {n.name for n in model.default_networks()}
+    for m in model.MONOLITH_NETS:
+        assert m in names

@@ -1,0 +1,258 @@
+//! Exact byte accounting of every live activation/gradient/latent buffer.
+//!
+//! This is the measurement substrate behind the paper's Figures 1 & 2: the
+//! two executors run identical compute; what differs is *which buffers stay
+//! alive*, and this ledger observes exactly that. A configurable budget
+//! reproduces the 40 GB A100 wall — an allocation pushing the live total
+//! past the budget fails with a simulated OOM, which is how the bench finds
+//! each executor's out-of-memory crossover (normflows died at 480x480;
+//! InvertibleNetworks.jl did not, paper Fig. 1).
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// What a tracked buffer is, for per-class reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemClass {
+    /// Flow activations (the tape in stored mode, the single live pair in
+    /// invertible mode).
+    Activation = 0,
+    /// Activation-shaped gradients flowing backward.
+    Gradient = 1,
+    /// Factored-out / final latent codes (alive in both modes).
+    Latent = 2,
+    /// Parameters + parameter gradients + optimizer state (identical in
+    /// both modes; reported separately).
+    Param = 3,
+}
+
+pub const N_CLASSES: usize = 4;
+
+const CLASS_NAMES: [&str; N_CLASSES] = ["activation", "gradient", "latent", "param"];
+
+/// Thread-safe live/peak byte ledger with an optional budget.
+#[derive(Debug, Default)]
+pub struct MemoryLedger {
+    live: [AtomicI64; N_CLASSES],
+    live_total: AtomicI64,
+    peak_total: AtomicI64,
+    peak_sched: AtomicI64,
+    budget: AtomicI64, // <=0: unlimited
+    allocs: AtomicU64,
+    ooms: AtomicU64,
+}
+
+impl MemoryLedger {
+    pub fn new() -> Arc<MemoryLedger> {
+        Arc::new(MemoryLedger::default())
+    }
+
+    pub fn with_budget(bytes: u64) -> Arc<MemoryLedger> {
+        let l = MemoryLedger::default();
+        l.budget.store(bytes as i64, Ordering::Relaxed);
+        Arc::new(l)
+    }
+
+    pub fn set_budget(&self, bytes: Option<u64>) {
+        self.budget.store(bytes.map_or(0, |b| b as i64), Ordering::Relaxed);
+    }
+
+    /// Register an allocation; fails (simulated OOM) if it would exceed the
+    /// budget, in which case nothing is recorded.
+    pub fn alloc(&self, class: MemClass, bytes: usize) -> Result<()> {
+        let b = bytes as i64;
+        let budget = self.budget.load(Ordering::Relaxed);
+        let new_total = self.live_total.fetch_add(b, Ordering::Relaxed) + b;
+        if budget > 0 && new_total > budget {
+            self.live_total.fetch_sub(b, Ordering::Relaxed);
+            self.ooms.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "simulated OOM: allocating {bytes} B of {} puts live total at \
+                 {new_total} B > budget {budget} B",
+                CLASS_NAMES[class as usize]
+            );
+        }
+        self.live[class as usize].fetch_add(b, Ordering::Relaxed);
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        self.peak_total.fetch_max(new_total, Ordering::Relaxed);
+        // scheduling memory: everything except params
+        if class != MemClass::Param {
+            let sched = new_total - self.live[MemClass::Param as usize]
+                .load(Ordering::Relaxed);
+            self.peak_sched.fetch_max(sched, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    pub fn free(&self, class: MemClass, bytes: usize) {
+        let b = bytes as i64;
+        self.live[class as usize].fetch_sub(b, Ordering::Relaxed);
+        self.live_total.fetch_sub(b, Ordering::Relaxed);
+    }
+
+    pub fn live_total(&self) -> i64 {
+        self.live_total.load(Ordering::Relaxed)
+    }
+
+    pub fn live_of(&self, class: MemClass) -> i64 {
+        self.live[class as usize].load(Ordering::Relaxed)
+    }
+
+    /// Peak of the total (all classes).
+    pub fn peak_total(&self) -> i64 {
+        self.peak_total.load(Ordering::Relaxed)
+    }
+
+    /// Peak of activation+gradient+latent — the scheduling memory the
+    /// paper's figures plot (params are identical across executors).
+    pub fn peak_scheduling(&self) -> i64 {
+        self.peak_sched.load(Ordering::Relaxed)
+    }
+
+    pub fn alloc_count(&self) -> u64 {
+        self.allocs.load(Ordering::Relaxed)
+    }
+
+    pub fn oom_count(&self) -> u64 {
+        self.ooms.load(Ordering::Relaxed)
+    }
+
+    /// Reset peaks (start of a measured region); live counts are kept.
+    pub fn reset_peaks(&self) {
+        let live = self.live_total();
+        self.peak_total.store(live, Ordering::Relaxed);
+        let sched = live - self.live_of(MemClass::Param);
+        self.peak_sched.store(sched, Ordering::Relaxed);
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (i, name) in CLASS_NAMES.iter().enumerate() {
+            s.push_str(&format!(
+                "{name}: {} B live; ",
+                self.live[i].load(Ordering::Relaxed)
+            ));
+        }
+        s.push_str(&format!(
+            "total {} B live, peak {} B, sched-peak {} B",
+            self.live_total(),
+            self.peak_total(),
+            self.peak_scheduling()
+        ));
+        s
+    }
+}
+
+/// A host tensor whose bytes are charged to a [`MemoryLedger`] for its
+/// lifetime (RAII: dropping frees).
+#[derive(Debug)]
+pub struct Tracked {
+    t: Option<Tensor>,
+    class: MemClass,
+    bytes: usize,
+    ledger: Arc<MemoryLedger>,
+}
+
+impl Tracked {
+    pub fn new(t: Tensor, class: MemClass, ledger: &Arc<MemoryLedger>) -> Result<Tracked> {
+        let bytes = t.size_bytes();
+        ledger.alloc(class, bytes)?;
+        Ok(Tracked { t: Some(t), class, bytes, ledger: ledger.clone() })
+    }
+
+    pub fn tensor(&self) -> &Tensor {
+        self.t.as_ref().expect("tracked tensor already taken")
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.tensor().shape
+    }
+
+    /// Unwrap, releasing the ledger charge.
+    pub fn into_inner(mut self) -> Tensor {
+        let t = self.t.take().unwrap();
+        self.ledger.free(self.class, self.bytes);
+        self.bytes = 0;
+        t
+    }
+}
+
+impl Drop for Tracked {
+    fn drop(&mut self) {
+        if self.t.is_some() {
+            self.ledger.free(self.class, self.bytes);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(n: usize) -> Tensor {
+        Tensor::zeros(&[n])
+    }
+
+    #[test]
+    fn alloc_free_balance() {
+        let l = MemoryLedger::new();
+        {
+            let _a = Tracked::new(t(100), MemClass::Activation, &l).unwrap();
+            let _b = Tracked::new(t(50), MemClass::Gradient, &l).unwrap();
+            assert_eq!(l.live_total(), 600);
+            assert_eq!(l.live_of(MemClass::Activation), 400);
+        }
+        assert_eq!(l.live_total(), 0);
+        assert_eq!(l.peak_total(), 600);
+    }
+
+    #[test]
+    fn into_inner_releases() {
+        let l = MemoryLedger::new();
+        let a = Tracked::new(t(10), MemClass::Latent, &l).unwrap();
+        let inner = a.into_inner();
+        assert_eq!(inner.len(), 10);
+        assert_eq!(l.live_total(), 0);
+    }
+
+    #[test]
+    fn budget_ooms_and_rolls_back() {
+        let l = MemoryLedger::with_budget(1000);
+        let _a = Tracked::new(t(200), MemClass::Activation, &l).unwrap(); // 800 B
+        let err = Tracked::new(t(100), MemClass::Activation, &l); // +400 > 1000
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("simulated OOM"));
+        assert_eq!(l.live_total(), 800, "failed alloc must not leak");
+        assert_eq!(l.oom_count(), 1);
+        // small one still fits
+        let _c = Tracked::new(t(25), MemClass::Gradient, &l).unwrap();
+        assert_eq!(l.live_total(), 900);
+    }
+
+    #[test]
+    fn scheduling_peak_excludes_params() {
+        let l = MemoryLedger::new();
+        let _p = Tracked::new(t(1000), MemClass::Param, &l).unwrap();
+        let _a = Tracked::new(t(100), MemClass::Activation, &l).unwrap();
+        assert_eq!(l.peak_scheduling(), 400);
+        assert_eq!(l.peak_total(), 4400);
+    }
+
+    #[test]
+    fn reset_peaks_keeps_live() {
+        let l = MemoryLedger::new();
+        let a = Tracked::new(t(100), MemClass::Activation, &l).unwrap();
+        {
+            let _b = Tracked::new(t(100), MemClass::Activation, &l).unwrap();
+        }
+        assert_eq!(l.peak_total(), 800);
+        l.reset_peaks();
+        assert_eq!(l.peak_total(), 400);
+        drop(a);
+        assert_eq!(l.live_total(), 0);
+    }
+}

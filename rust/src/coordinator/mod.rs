@@ -1,0 +1,13 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * [`executor`]: the invertible (recompute-from-inverse) and stored
+//!   (autodiff-tape baseline) training-step schedulers.
+//! * [`memory`]: the live/peak byte ledger + budgeted (OOM-simulating)
+//!   allocation both schedulers run under.
+
+pub mod executor;
+pub mod memory;
+pub mod planner;
+
+pub use executor::{ExecMode, FlowSession, StepResult};
+pub use memory::{MemClass, MemoryLedger, Tracked};

@@ -1,0 +1,253 @@
+//! Synthetic workloads (DESIGN.md §7 substitutions).
+//!
+//! * 2-D toy densities (two-moons, 8-gaussians, checkerboard, spiral) — the
+//!   standard normalizing-flow density-estimation benchmarks.
+//! * A textured-blob image sampler standing in for RGB image corpora: the
+//!   paper's memory figures depend only on image *shape*, and the training
+//!   examples need inputs with multi-scale spatial correlation, which
+//!   gaussian blobs + sinusoidal texture provide.
+//! * A linear-Gaussian inverse problem with a closed-form posterior for
+//!   validating amortized (conditional) inference.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Named 2-D densities: sample `n` points, shape (n, 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Density2d {
+    TwoMoons,
+    EightGaussians,
+    Checkerboard,
+    Spiral,
+}
+
+impl Density2d {
+    pub fn parse(name: &str) -> Result<Density2d> {
+        Ok(match name {
+            "two-moons" | "moons" => Density2d::TwoMoons,
+            "eight-gaussians" | "8g" => Density2d::EightGaussians,
+            "checkerboard" => Density2d::Checkerboard,
+            "spiral" => Density2d::Spiral,
+            other => bail!("unknown 2d density {other:?} \
+                            (two-moons|eight-gaussians|checkerboard|spiral)"),
+        })
+    }
+
+    pub fn sample(self, n: usize, rng: &mut Pcg64) -> Tensor {
+        let mut data = Vec::with_capacity(n * 2);
+        for _ in 0..n {
+            let (x, y) = match self {
+                Density2d::TwoMoons => {
+                    let a = rng.uniform() * std::f64::consts::PI;
+                    let (sx, sy, off) = if rng.uniform() < 0.5 {
+                        (a.cos(), a.sin(), -0.5)
+                    } else {
+                        (1.0 - a.cos(), 0.5 - a.sin(), -0.0)
+                    };
+                    (sx + rng.normal() * 0.08 - 0.5,
+                     sy + off + rng.normal() * 0.08)
+                }
+                Density2d::EightGaussians => {
+                    let k = rng.below(8) as f64;
+                    let th = k * std::f64::consts::PI / 4.0;
+                    (2.0 * th.cos() + rng.normal() * 0.15,
+                     2.0 * th.sin() + rng.normal() * 0.15)
+                }
+                Density2d::Checkerboard => loop {
+                    let x = rng.uniform_in(-2.0, 2.0);
+                    let y = rng.uniform_in(-2.0, 2.0);
+                    let cx = (x.floor() as i64).rem_euclid(2);
+                    let cy = (y.floor() as i64).rem_euclid(2);
+                    if cx == cy {
+                        break (x, y);
+                    }
+                },
+                Density2d::Spiral => {
+                    let t = 3.0 * std::f64::consts::PI * rng.uniform().sqrt();
+                    let r = t / (3.0 * std::f64::consts::PI) * 2.0;
+                    let sgn = if rng.uniform() < 0.5 { 1.0 } else { -1.0 };
+                    (sgn * r * t.cos() + rng.normal() * 0.05,
+                     sgn * r * t.sin() + rng.normal() * 0.05)
+                }
+            };
+            data.push(x as f32);
+            data.push(y as f32);
+        }
+        Tensor { shape: vec![n, 2], data }
+    }
+}
+
+/// Textured-blob images, NHWC in [-1, 1]: a random mixture of gaussian
+/// bumps plus oriented sinusoidal texture per channel.
+pub fn synth_images(n: usize, h: usize, w: usize, c: usize, rng: &mut Pcg64) -> Tensor {
+    let mut data = vec![0.0f32; n * h * w * c];
+    for img in 0..n {
+        // 2-4 random blobs shared across channels + per-channel texture
+        let n_blobs = 2 + rng.below(3);
+        let blobs: Vec<(f64, f64, f64, f64)> = (0..n_blobs)
+            .map(|_| (rng.uniform() * h as f64,
+                      rng.uniform() * w as f64,
+                      (0.1 + rng.uniform() * 0.2) * h as f64,
+                      rng.uniform_in(0.5, 1.5)))
+            .collect();
+        for ch in 0..c {
+            let fx = rng.uniform_in(0.02, 0.2);
+            let fy = rng.uniform_in(0.02, 0.2);
+            let phase = rng.uniform() * std::f64::consts::TAU;
+            let amp = rng.uniform_in(0.05, 0.25);
+            for i in 0..h {
+                for j in 0..w {
+                    let mut v = 0.0f64;
+                    for (bi, bj, bs, ba) in &blobs {
+                        let d2 = (i as f64 - bi).powi(2) + (j as f64 - bj).powi(2);
+                        v += ba * (-d2 / (2.0 * bs * bs)).exp();
+                    }
+                    v += amp
+                        * (fx * i as f64 * std::f64::consts::TAU
+                            + fy * j as f64 * std::f64::consts::TAU
+                            + phase)
+                            .sin();
+                    v += rng.normal() * 0.02;
+                    let idx = ((img * h + i) * w + j) * c + ch;
+                    data[idx] = (v.clamp(-1.5, 1.5) - 0.5) as f32;
+                }
+            }
+        }
+    }
+    Tensor { shape: vec![n, h, w, c], data }
+}
+
+/// Linear-Gaussian inverse problem y = A theta + eps, theta ~ N(0, I),
+/// eps ~ N(0, sigma^2 I). The posterior p(theta | y) is Gaussian with
+///   Sigma_post = (A^T A / sigma^2 + I)^{-1},
+///   mu_post    = Sigma_post A^T y / sigma^2,
+/// giving the amortized-inference example an analytic ground truth.
+pub struct LinearGaussian {
+    pub a: [[f64; 2]; 2],
+    pub sigma: f64,
+}
+
+impl LinearGaussian {
+    pub fn default_problem() -> LinearGaussian {
+        LinearGaussian { a: [[1.0, 0.6], [0.0, 0.8]], sigma: 0.5 }
+    }
+
+    /// Sample (theta, y) pairs; returns ((n,2) thetas, (n,2) ys).
+    pub fn sample(&self, n: usize, rng: &mut Pcg64) -> (Tensor, Tensor) {
+        let mut th = Vec::with_capacity(n * 2);
+        let mut ys = Vec::with_capacity(n * 2);
+        for _ in 0..n {
+            let t0 = rng.normal();
+            let t1 = rng.normal();
+            let y0 = self.a[0][0] * t0 + self.a[0][1] * t1 + rng.normal() * self.sigma;
+            let y1 = self.a[1][0] * t0 + self.a[1][1] * t1 + rng.normal() * self.sigma;
+            th.push(t0 as f32);
+            th.push(t1 as f32);
+            ys.push(y0 as f32);
+            ys.push(y1 as f32);
+        }
+        (Tensor { shape: vec![n, 2], data: th },
+         Tensor { shape: vec![n, 2], data: ys })
+    }
+
+    /// Analytic posterior (mu, Sigma) for one observation y.
+    pub fn posterior(&self, y: [f64; 2]) -> ([f64; 2], [[f64; 2]; 2]) {
+        let a = self.a;
+        let s2 = self.sigma * self.sigma;
+        // P = A^T A / s2 + I  (precision)
+        let mut p = [[0.0; 2]; 2];
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..2 {
+                    p[i][j] += a[k][i] * a[k][j] / s2;
+                }
+            }
+            p[i][i] += 1.0;
+        }
+        // Sigma = P^{-1} (2x2 inverse)
+        let det = p[0][0] * p[1][1] - p[0][1] * p[1][0];
+        let cov = [
+            [p[1][1] / det, -p[0][1] / det],
+            [-p[1][0] / det, p[0][0] / det],
+        ];
+        // mu = Sigma A^T y / s2
+        let aty = [
+            (a[0][0] * y[0] + a[1][0] * y[1]) / s2,
+            (a[0][1] * y[0] + a[1][1] * y[1]) / s2,
+        ];
+        let mu = [
+            cov[0][0] * aty[0] + cov[0][1] * aty[1],
+            cov[1][0] * aty[0] + cov[1][1] * aty[1],
+        ];
+        (mu, cov)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densities_have_right_shape_and_spread() {
+        let mut rng = Pcg64::new(5);
+        for d in [Density2d::TwoMoons, Density2d::EightGaussians,
+                  Density2d::Checkerboard, Density2d::Spiral] {
+            let t = d.sample(500, &mut rng);
+            assert_eq!(t.shape, vec![500, 2]);
+            assert!(t.linf() < 6.0, "{d:?} blew up: {}", t.linf());
+            assert!(t.l2() > 1.0, "{d:?} collapsed");
+        }
+    }
+
+    #[test]
+    fn checkerboard_occupies_right_cells() {
+        let mut rng = Pcg64::new(6);
+        let t = Density2d::Checkerboard.sample(200, &mut rng);
+        for p in t.data.chunks(2) {
+            let cx = (p[0].floor() as i64).rem_euclid(2);
+            let cy = (p[1].floor() as i64).rem_euclid(2);
+            assert_eq!(cx, cy, "point {p:?} in a forbidden cell");
+        }
+    }
+
+    #[test]
+    fn images_bounded() {
+        let mut rng = Pcg64::new(7);
+        let t = synth_images(2, 8, 8, 3, &mut rng);
+        assert_eq!(t.shape, vec![2, 8, 8, 3]);
+        assert!(t.linf() <= 2.0);
+        // different images differ
+        let a = &t.data[..192];
+        let b = &t.data[192..];
+        assert!(a.iter().zip(b).any(|(x, y)| (x - y).abs() > 1e-3));
+    }
+
+    #[test]
+    fn linear_gaussian_posterior_matches_monte_carlo() {
+        // importance-free check: posterior mean should roughly equal the
+        // empirical mean of thetas whose simulated y lands near y_obs
+        let prob = LinearGaussian::default_problem();
+        let mut rng = Pcg64::new(8);
+        let (th, ys) = prob.sample(200_000, &mut rng);
+        let y_obs = [0.7, -0.4];
+        let (mu, cov) = prob.posterior(y_obs);
+        let mut acc = [0.0f64; 2];
+        let mut count = 0.0;
+        for i in 0..200_000 {
+            let dy0 = ys.data[2 * i] as f64 - y_obs[0];
+            let dy1 = ys.data[2 * i + 1] as f64 - y_obs[1];
+            if dy0 * dy0 + dy1 * dy1 < 0.02 {
+                acc[0] += th.data[2 * i] as f64;
+                acc[1] += th.data[2 * i + 1] as f64;
+                count += 1.0;
+            }
+        }
+        assert!(count > 100.0, "not enough ABC hits");
+        let emp = [acc[0] / count, acc[1] / count];
+        assert!((emp[0] - mu[0]).abs() < 0.15, "{emp:?} vs {mu:?}");
+        assert!((emp[1] - mu[1]).abs() < 0.15, "{emp:?} vs {mu:?}");
+        assert!(cov[0][0] > 0.0 && cov[1][1] > 0.0);
+    }
+}

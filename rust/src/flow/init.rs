@@ -1,0 +1,97 @@
+//! Parameter initialization rules, keyed by parameter name (matching
+//! InvertibleNetworks.jl / GLOW conventions):
+//!
+//! * `w1`, `w2`, `kw` (+ hint node prefixes): Glorot-normal weights
+//! * `w3`, `b3`: zeros — the coupling conditioner's final layer is
+//!   zero-initialized so every coupling starts near the identity (GLOW)
+//! * other `b*`: zeros
+//! * `log_s`: zeros (ActNorm starts as identity)
+//! * `v1`/`v2`/`v3`: unit-normal Householder vectors (random orthogonal W)
+
+use crate::runtime::TensorSpec;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Base name after any hint-node prefix (`rlt_w1` -> `w1`).
+fn base_name(name: &str) -> &str {
+    match name.rsplit_once('_') {
+        Some((_, tail)) if matches!(
+            tail, "w1" | "w2" | "w3" | "b1" | "b2" | "b3") => tail,
+        _ => name,
+    }
+}
+
+fn glorot(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+    // conv HWIO: fan_in = prod(all but last), fan_out = last
+    let fan_out = *shape.last().unwrap_or(&1);
+    let fan_in: usize = shape.iter().rev().skip(1).product::<usize>().max(1);
+    let std = (2.0 / (fan_in + fan_out) as f64).sqrt();
+    let data = (0..shape.iter().product::<usize>())
+        .map(|_| (rng.normal() * std) as f32)
+        .collect();
+    Tensor { shape: shape.to_vec(), data }
+}
+
+/// Initialize one parameter tensor by naming convention.
+pub fn init_param(spec: &TensorSpec, rng: &mut Pcg64) -> Tensor {
+    let name = spec.name.as_str();
+    let base = base_name(name);
+    match base {
+        "w1" | "w2" | "kw" => glorot(&spec.shape, rng),
+        "w3" | "b3" => Tensor::zeros(&spec.shape),
+        "log_s" => Tensor::zeros(&spec.shape),
+        "b" | "b1" | "b2" => Tensor::zeros(&spec.shape),
+        "v1" | "v2" | "v3" => {
+            let data = (0..spec.shape.iter().product::<usize>())
+                .map(|_| rng.normal_f32())
+                .collect();
+            Tensor { shape: spec.shape.clone(), data }
+        }
+        _ => glorot(&spec.shape, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize]) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec() }
+    }
+
+    #[test]
+    fn zero_init_final_conv() {
+        let mut rng = Pcg64::new(0);
+        let t = init_param(&spec("w3", &[3, 3, 8, 12]), &mut rng);
+        assert!(t.linf() == 0.0);
+        let t = init_param(&spec("rlt_w3", &[4, 6]), &mut rng); // hint node
+        assert!(t.linf() == 0.0);
+        let t = init_param(&spec("b3", &[12]), &mut rng);
+        assert!(t.linf() == 0.0);
+    }
+
+    #[test]
+    fn glorot_scale_reasonable() {
+        let mut rng = Pcg64::new(1);
+        let t = init_param(&spec("w1", &[3, 3, 16, 32]), &mut rng);
+        let std = (t.data.iter().map(|x| x * x).sum::<f32>()
+            / t.len() as f32).sqrt();
+        let want = (2.0f32 / (3.0 * 3.0 * 16.0 + 32.0)).sqrt();
+        assert!((std - want).abs() / want < 0.2, "std={std} want={want}");
+    }
+
+    #[test]
+    fn householder_vectors_random() {
+        let mut rng = Pcg64::new(2);
+        let t = init_param(&spec("v1", &[8]), &mut rng);
+        assert!(t.l2() > 0.5);
+    }
+
+    #[test]
+    fn hint_prefixes_resolve() {
+        assert_eq!(base_name("rlt_w1"), "w1");
+        assert_eq!(base_name("r_b2"), "b2");
+        assert_eq!(base_name("log_s"), "log_s");
+        assert_eq!(base_name("kw"), "kw");
+    }
+}

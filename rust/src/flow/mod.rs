@@ -1,0 +1,9 @@
+//! Flow graphs: network definitions resolved from the manifest, parameter
+//! stores and initialization.
+
+pub mod init;
+pub mod params;
+pub mod spec;
+
+pub use params::ParamStore;
+pub use spec::{NetworkDef, Step, StepKind};

@@ -1,0 +1,141 @@
+//! Per-step parameter store.
+//!
+//! Layer signatures repeat within a network (e.g. 48 GLOW steps share one
+//! set of artifacts), but every step owns its own parameters, so the store
+//! is indexed by step position. Literal conversions are cached and
+//! invalidated on update (one upload per step per optimizer step).
+
+use std::cell::RefCell;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Manifest;
+use crate::tensor::{npy, Tensor};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+use super::init::init_param;
+use super::spec::{NetworkDef, StepKind};
+
+pub struct ParamStore {
+    /// `tensors[step_idx][param_idx]`; empty vec for split / param-free steps.
+    pub tensors: Vec<Vec<Tensor>>,
+    /// Parameter names aligned with `tensors` (for checkpoints/debug).
+    pub names: Vec<Vec<String>>,
+    pub(crate) lits: RefCell<Vec<Option<Vec<xla::Literal>>>>,
+}
+
+impl ParamStore {
+    /// Random-initialize parameters for `def` (see `flow::init` rules).
+    pub fn init(def: &NetworkDef, manifest: &Manifest, seed: u64) -> Result<ParamStore> {
+        let mut rng = Pcg64::new(seed);
+        let mut tensors = Vec::with_capacity(def.steps.len());
+        let mut names = Vec::with_capacity(def.steps.len());
+        for step in &def.steps {
+            if step.kind != StepKind::Layer {
+                tensors.push(Vec::new());
+                names.push(Vec::new());
+                continue;
+            }
+            let meta = manifest.layer(&step.sig)?;
+            let mut ts = Vec::with_capacity(meta.params.len());
+            let mut ns = Vec::with_capacity(meta.params.len());
+            for spec in &meta.params {
+                ts.push(init_param(spec, &mut rng));
+                ns.push(spec.name.clone());
+            }
+            tensors.push(ts);
+            names.push(ns);
+        }
+        let lits = RefCell::new(vec![None; tensors.len()]);
+        Ok(ParamStore { tensors, names, lits })
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().flatten().map(|t| t.len()).sum()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.tensors.iter().flatten().map(|t| t.size_bytes()).sum()
+    }
+
+    /// Run `f` with literal refs for the step's params (cached across calls
+    /// until `mark_dirty(step)`).
+    pub fn with_literals<R>(
+        &self,
+        step: usize,
+        f: impl FnOnce(&[xla::Literal]) -> Result<R>,
+    ) -> Result<R> {
+        {
+            let mut cache = self.lits.borrow_mut();
+            if cache[step].is_none() {
+                let ls: Result<Vec<_>> =
+                    self.tensors[step].iter().map(|t| t.to_literal()).collect();
+                cache[step] = Some(ls?);
+            }
+        }
+        let cache = self.lits.borrow();
+        f(cache[step].as_ref().unwrap())
+    }
+
+    /// Invalidate the literal cache after an optimizer update.
+    pub fn mark_dirty(&self, step: usize) {
+        self.lits.borrow_mut()[step] = None;
+    }
+
+    // ---- checkpointing -----------------------------------------------------
+
+    /// Save as a directory of .npy files + index.json.
+    pub fn save(&self, dir: &Path, net_name: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut index = Vec::new();
+        for (si, (ts, ns)) in self.tensors.iter().zip(&self.names).enumerate() {
+            for (t, n) in ts.iter().zip(ns) {
+                let fname = format!("s{si:03}_{n}.npy");
+                npy::save(&dir.join(&fname), t)?;
+                index.push(Json::obj(vec![
+                    ("step", Json::Num(si as f64)),
+                    ("name", Json::Str(n.clone())),
+                    ("file", Json::Str(fname)),
+                    ("shape", Json::arr_usize(&t.shape)),
+                ]));
+            }
+        }
+        let meta = Json::obj(vec![
+            ("network", Json::Str(net_name.to_string())),
+            ("params", Json::Arr(index)),
+        ]);
+        std::fs::write(dir.join("index.json"), meta.to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Load a checkpoint saved by [`save`]; shapes are validated against
+    /// the current store layout.
+    pub fn load(&mut self, dir: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(dir.join("index.json"))
+            .with_context(|| format!("reading checkpoint {dir:?}"))?;
+        let meta = Json::parse(&text)?;
+        for p in meta.req("params")?.as_arr()? {
+            let si = p.req("step")?.as_usize()?;
+            let name = p.req("name")?.as_str()?;
+            let file = p.req("file")?.as_str()?;
+            let t = npy::load(&dir.join(file))?;
+            let Some(pi) = self.names.get(si).and_then(
+                |ns| ns.iter().position(|n| n == name)) else {
+                bail!("checkpoint has unknown param step={si} name={name}");
+            };
+            if self.tensors[si][pi].shape != t.shape {
+                bail!("checkpoint shape mismatch for s{si}/{name}: \
+                       {:?} vs {:?}", self.tensors[si][pi].shape, t.shape);
+            }
+            self.tensors[si][pi] = t;
+            self.mark_dirty(si);
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,147 @@
+//! Resolved network definition: the ordered steps the coordinator replays.
+//!
+//! A step is either an AOT artifact layer (executed via the runtime) or a
+//! coordinator-native `split` (multiscale factor-out — pure host memory
+//! movement, see `tensor::ops`).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{LayerMeta, Manifest, NetworkMeta};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepKind {
+    /// AOT-compiled layer with the given manifest signature.
+    Layer,
+    /// Factor-out: first `zc` channels leave as a latent, rest continues.
+    Split { zc: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub kind: StepKind,
+    /// Manifest signature (layers) or the split marker string.
+    pub sig: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+/// A network resolved against the manifest.
+#[derive(Debug, Clone)]
+pub struct NetworkDef {
+    pub name: String,
+    pub in_shape: Vec<usize>,
+    pub cond_shape: Option<Vec<usize>>,
+    pub steps: Vec<Step>,
+    pub latent_shapes: Vec<Vec<usize>>,
+}
+
+/// Parse `split_zc<k>__<HxWx...>` markers emitted by model.py.
+fn parse_split(s: &str) -> Option<(usize, Vec<usize>)> {
+    let rest = s.strip_prefix("split_zc")?;
+    let (zc, shape) = rest.split_once("__")?;
+    let zc = zc.parse().ok()?;
+    let dims = shape.split('x').map(|d| d.parse().ok()).collect::<Option<Vec<_>>>()?;
+    Some((zc, dims))
+}
+
+impl NetworkDef {
+    pub fn resolve(manifest: &Manifest, name: &str) -> Result<NetworkDef> {
+        let net: &NetworkMeta = manifest.network(name)?;
+        let mut steps = Vec::with_capacity(net.layers.len());
+        let mut cur = net.in_shape.clone();
+        for sig in &net.layers {
+            if let Some((zc, in_shape)) = parse_split(sig) {
+                if in_shape != cur {
+                    bail!("{name}: split expects {in_shape:?}, flow is at {cur:?}");
+                }
+                let mut out = cur.clone();
+                let c = *out.last().unwrap();
+                if zc == 0 || zc >= c {
+                    bail!("{name}: bad split zc={zc} for {c} channels");
+                }
+                *out.last_mut().unwrap() = c - zc;
+                steps.push(Step {
+                    kind: StepKind::Split { zc },
+                    sig: sig.clone(),
+                    in_shape: cur.clone(),
+                    out_shape: out.clone(),
+                });
+                cur = out;
+            } else {
+                let meta: &LayerMeta = manifest.layer(sig)?;
+                if meta.in_shape != cur {
+                    bail!("{name}: layer {sig} expects {:?}, flow is at {cur:?}",
+                          meta.in_shape);
+                }
+                steps.push(Step {
+                    kind: StepKind::Layer,
+                    sig: sig.clone(),
+                    in_shape: meta.in_shape.clone(),
+                    out_shape: meta.out_shape.clone(),
+                });
+                cur = meta.out_shape.clone();
+            }
+        }
+        // sanity: latent shapes = splits' z shapes + final shape
+        let mut want_latents: Vec<Vec<usize>> = steps.iter()
+            .filter_map(|s| match s.kind {
+                StepKind::Split { zc } => {
+                    let mut z = s.in_shape.clone();
+                    *z.last_mut().unwrap() = zc;
+                    Some(z)
+                }
+                _ => None,
+            })
+            .collect();
+        want_latents.push(cur.clone());
+        if want_latents != net.latent_shapes {
+            bail!("{name}: manifest latents {:?} != derived {:?}",
+                  net.latent_shapes, want_latents);
+        }
+        Ok(NetworkDef {
+            name: net.name.clone(),
+            in_shape: net.in_shape.clone(),
+            cond_shape: net.cond_shape.clone(),
+            steps,
+            latent_shapes: net.latent_shapes.clone(),
+        })
+    }
+
+    /// Total number of scalar parameters across all steps.
+    pub fn param_count(&self, manifest: &Manifest) -> Result<usize> {
+        let mut total = 0;
+        for s in &self.steps {
+            if s.kind == StepKind::Layer {
+                total += manifest.layer(&s.sig)?.param_count();
+            }
+        }
+        Ok(total)
+    }
+
+    /// Input elements per sample (bits/dim denominators etc.).
+    pub fn dims_per_sample(&self) -> usize {
+        self.in_shape.iter().skip(1).product()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.steps.iter().filter(|s| s.kind == StepKind::Layer).count()
+    }
+
+    pub fn find_latent_for(&self, split_idx: usize) -> Option<&Vec<usize>> {
+        self.latent_shapes.get(split_idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_marker_parses() {
+        let (zc, dims) = parse_split("split_zc6__16x8x8x12").unwrap();
+        assert_eq!(zc, 6);
+        assert_eq!(dims, vec![16, 8, 8, 12]);
+        assert!(parse_split("actnorm__2x2").is_none());
+        assert!(parse_split("split_zcX__2").is_none());
+    }
+}

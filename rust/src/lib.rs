@@ -1,0 +1,36 @@
+//! # invertnet
+//!
+//! Memory-frugal normalizing flows: a rust coordinator over AOT-compiled
+//! JAX/Pallas compute — a reproduction of *"InvertibleNetworks.jl: A Julia
+//! package for scalable normalizing flows"* (Orozco et al., 2023).
+//!
+//! The paper's contribution is that invertible networks let you **recompute
+//! activations from layer inverses during backprop** instead of taping them,
+//! making peak training memory O(1) in network depth — something generic
+//! autodiff frameworks do not exploit. Here that contribution lives in
+//! [`coordinator`]: the invertible executor holds only the current
+//! activation while walking hand-written per-layer backward programs, while
+//! the stored executor reproduces the PyTorch/normflows baseline by taping
+//! every activation. Both run the *same* XLA executables; the only
+//! difference is buffer lifetime, which the
+//! [`coordinator::memory::MemoryLedger`] measures exactly.
+//!
+//! Layers of the stack:
+//!  * L1 — Pallas kernels (`python/compile/kernels/`), compile-time only.
+//!  * L2 — JAX layer entries with hand-written gradients
+//!    (`python/compile/layers/`), lowered to HLO text by `make artifacts`.
+//!  * L3 — this crate: PJRT runtime, flow graphs, executors, trainer, CLI.
+
+pub mod bench_figs;
+pub mod coordinator;
+pub mod data;
+pub mod flow;
+pub mod profile;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use coordinator::memory::{MemClass, MemoryLedger};
+pub use runtime::Runtime;
+pub use tensor::Tensor;

@@ -1,0 +1,73 @@
+//! Per-entry profiler: times every (layer, entry) executable of a network
+//! individually — the L3 profiling tool for the performance pass
+//! (EXPERIMENTS.md §Perf). `invertnet profile --net NAME`.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::FlowSession;
+use crate::flow::{ParamStore, StepKind};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use crate::MemoryLedger;
+
+fn rand_t(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+    Tensor { shape: shape.to_vec(), data: rng.normal_vec(shape.iter().product()) }
+}
+
+/// Time every distinct (sig, entry) of `net`, `iters` times each, and print
+/// a table sorted by total cost contribution (count x mean).
+pub fn profile_network(rt: &Runtime, net: &str, iters: usize) -> Result<()> {
+    let session = FlowSession::new(rt, net, MemoryLedger::new())?;
+    let _params = ParamStore::init(&session.def, &rt.manifest, 7)?;
+    let mut rng = Pcg64::new(123);
+
+    // count occurrences of each signature + remember one step index
+    let mut sig_count: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for (i, step) in session.def.steps.iter().enumerate() {
+        if step.kind == StepKind::Layer {
+            let e = sig_count.entry(step.sig.clone()).or_insert((0, i));
+            e.0 += 1;
+        }
+    }
+
+    println!("# per-entry mean latency, network {net} ({} steps, x{} iters)",
+             session.def.steps.len(), iters);
+    println!("{:<44} {:>5} {:>12} {:>12} {:>12} {:>12}",
+             "signature", "count", "forward", "inverse", "backward", "bwd_stored");
+    let mut totals = [0.0f64; 4];
+    for (sig, (count, step_idx)) in &sig_count {
+        let _meta = rt.manifest.layer(sig)?;
+        let mut row = [0.0f64; 4];
+        for (ei, entry) in ["forward", "inverse", "backward", "backward_stored"]
+            .iter().enumerate()
+        {
+            let compiled = rt.layer_entry(sig, entry)?;
+            // build random operands per manifest shapes
+            let ops: Vec<Tensor> = compiled.meta.operands.iter()
+                .map(|o| rand_t(&o.shape, &mut rng))
+                .collect();
+            let lits: Vec<xla::Literal> = ops.iter()
+                .map(|t| t.to_literal()).collect::<Result<_>>()?;
+            let args: Vec<&xla::Literal> = lits.iter().collect();
+            compiled.execute(&args)?; // warmup (compile already done)
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                compiled.execute(&args)?;
+            }
+            row[ei] = t0.elapsed().as_secs_f64() / iters as f64;
+            totals[ei] += row[ei] * *count as f64;
+        }
+        println!("{sig:<44} {count:>5} {:>9.3} ms {:>9.3} ms {:>9.3} ms {:>9.3} ms",
+                 row[0] * 1e3, row[1] * 1e3, row[2] * 1e3, row[3] * 1e3);
+        let _ = step_idx;
+    }
+    println!("{:<44} {:>5} {:>9.3} ms {:>9.3} ms {:>9.3} ms {:>9.3} ms",
+             "TOTAL (weighted by count)", "-",
+             totals[0] * 1e3, totals[1] * 1e3, totals[2] * 1e3, totals[3] * 1e3);
+    println!("# invertible step ~= fwd + bwd totals; stored step ~= fwd + bwd_stored");
+    Ok(())
+}

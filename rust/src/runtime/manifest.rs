@@ -1,0 +1,251 @@
+//! Typed model of `artifacts/manifest.json` produced by `python -m
+//! compile.aot`: every AOT-lowered layer entry (operand/result shapes,
+//! parameter specs) plus the named network compositions.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.as_usize_vec()?,
+        })
+    }
+}
+
+/// One AOT artifact: a compiled-to-HLO (layer, entry) pair.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub file: String,
+    pub operands: Vec<TensorSpec>,
+    pub results: Vec<TensorSpec>,
+}
+
+impl EntryMeta {
+    fn from_json(v: &Json) -> Result<EntryMeta> {
+        Ok(EntryMeta {
+            file: v.req("file")?.as_str()?.to_string(),
+            operands: v.req("operands")?.as_arr()?.iter()
+                .map(TensorSpec::from_json).collect::<Result<_>>()?,
+            results: v.req("results")?.as_arr()?.iter()
+                .map(TensorSpec::from_json).collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// A layer type instantiated at a concrete shape ("signature").
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub sig: String,
+    pub kind: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub cond_shape: Option<Vec<usize>>,
+    pub params: Vec<TensorSpec>,
+    pub entries: BTreeMap<String, EntryMeta>,
+}
+
+impl LayerMeta {
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries.get(name).ok_or_else(
+            || anyhow!("layer {} has no entry {name}", self.sig))
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    fn from_json(v: &Json) -> Result<LayerMeta> {
+        let cond = v.req("cond_shape")?;
+        let mut entries = BTreeMap::new();
+        for (k, e) in v.req("entries")?.as_obj()? {
+            entries.insert(k.clone(), EntryMeta::from_json(e)?);
+        }
+        Ok(LayerMeta {
+            sig: v.req("sig")?.as_str()?.to_string(),
+            kind: v.req("kind")?.as_str()?.to_string(),
+            in_shape: v.req("in_shape")?.as_usize_vec()?,
+            out_shape: v.req("out_shape")?.as_usize_vec()?,
+            cond_shape: if cond.is_null() { None } else { Some(cond.as_usize_vec()?) },
+            params: v.req("params")?.as_arr()?.iter()
+                .map(TensorSpec::from_json).collect::<Result<_>>()?,
+            entries,
+        })
+    }
+}
+
+/// Gaussian loss head for one latent shape.
+#[derive(Debug, Clone)]
+pub struct HeadMeta {
+    pub shape: Vec<usize>,
+    pub entries: BTreeMap<String, EntryMeta>,
+}
+
+/// An ordered composition of layers (what the coordinator replays).
+#[derive(Debug, Clone)]
+pub struct NetworkMeta {
+    pub name: String,
+    pub in_shape: Vec<usize>,
+    pub cond_shape: Option<Vec<usize>>,
+    /// Layer signatures; `split_zc<k>__<shape>` marks coordinator-native
+    /// factor-out steps.
+    pub layers: Vec<String>,
+    pub latent_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub backend: String,
+    pub layers: BTreeMap<String, LayerMeta>,
+    pub heads: BTreeMap<String, HeadMeta>,
+    pub networks: BTreeMap<String, NetworkMeta>,
+    /// Whole-network full-AD ablation programs (loss + all param grads in
+    /// one XLA executable), keyed by network name.
+    pub monoliths: BTreeMap<String, EntryMeta>,
+}
+
+pub fn shape_tag(shape: &[usize]) -> String {
+    shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let mut layers = BTreeMap::new();
+        for (sig, l) in v.req("layers")?.as_obj()? {
+            let meta = LayerMeta::from_json(l)
+                .with_context(|| format!("layer {sig}"))?;
+            if &meta.sig != sig {
+                bail!("manifest key {sig} != sig {}", meta.sig);
+            }
+            layers.insert(sig.clone(), meta);
+        }
+        let mut heads = BTreeMap::new();
+        for (tag, h) in v.req("heads")?.as_obj()? {
+            let mut entries = BTreeMap::new();
+            for (k, e) in h.req("entries")?.as_obj()? {
+                entries.insert(k.clone(), EntryMeta::from_json(e)?);
+            }
+            heads.insert(tag.clone(), HeadMeta {
+                shape: h.req("shape")?.as_usize_vec()?,
+                entries,
+            });
+        }
+        let mut networks = BTreeMap::new();
+        for (name, n) in v.req("networks")?.as_obj()? {
+            let cond = n.req("cond_shape")?;
+            networks.insert(name.clone(), NetworkMeta {
+                name: name.clone(),
+                in_shape: n.req("in_shape")?.as_usize_vec()?,
+                cond_shape: if cond.is_null() { None } else { Some(cond.as_usize_vec()?) },
+                layers: n.req("layers")?.as_arr()?.iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect::<Result<_>>()?,
+                latent_shapes: n.req("latent_shapes")?.as_arr()?.iter()
+                    .map(|s| s.as_usize_vec()).collect::<Result<_>>()?,
+            });
+        }
+        let mut monoliths = BTreeMap::new();
+        if let Some(ms) = v.get("monoliths") {
+            for (name, e) in ms.as_obj()? {
+                monoliths.insert(name.clone(), EntryMeta::from_json(e)?);
+            }
+        }
+        Ok(Manifest {
+            backend: v.req("backend")?.as_str()?.to_string(),
+            layers,
+            heads,
+            networks,
+            monoliths,
+        })
+    }
+
+    pub fn layer(&self, sig: &str) -> Result<&LayerMeta> {
+        self.layers.get(sig).ok_or_else(|| anyhow!("unknown layer sig {sig}"))
+    }
+
+    pub fn head_for(&self, shape: &[usize]) -> Result<&HeadMeta> {
+        let tag = shape_tag(shape);
+        self.heads.get(&tag).ok_or_else(|| anyhow!("no head for shape {tag}"))
+    }
+
+    pub fn network(&self, name: &str) -> Result<&NetworkMeta> {
+        self.networks.get(name).ok_or_else(|| {
+            anyhow!("unknown network {name}; available: {:?}",
+                    self.networks.keys().collect::<Vec<_>>())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "backend": "pallas-interpret",
+      "layers": {
+        "actnorm__2x4x4x3": {
+          "sig": "actnorm__2x4x4x3", "kind": "actnorm",
+          "in_shape": [2,4,4,3], "out_shape": [2,4,4,3],
+          "cond_shape": null, "cfg": {},
+          "params": [{"name": "log_s", "shape": [3]}, {"name": "b", "shape": [3]}],
+          "entries": {
+            "forward": {"file": "a.hlo.txt",
+              "operands": [{"name": "x", "shape": [2,4,4,3]},
+                           {"name": "log_s", "shape": [3]},
+                           {"name": "b", "shape": [3]}],
+              "results": [{"name": "y", "shape": [2,4,4,3]},
+                          {"name": "logdet", "shape": [2]}]}
+          }
+        }
+      },
+      "heads": {
+        "2x4x4x3": {"shape": [2,4,4,3], "entries": {
+          "gaussian_logp": {"file": "h.hlo.txt",
+            "operands": [{"name": "z", "shape": [2,4,4,3]}],
+            "results": [{"name": "logp", "shape": [2]}]}}}
+      },
+      "networks": {
+        "tiny": {"name": "tiny", "in_shape": [2,4,4,3], "cond_shape": null,
+                 "layers": ["actnorm__2x4x4x3"],
+                 "latent_shapes": [[2,4,4,3]]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        let l = m.layer("actnorm__2x4x4x3").unwrap();
+        assert_eq!(l.kind, "actnorm");
+        assert_eq!(l.param_count(), 6);
+        let e = l.entry("forward").unwrap();
+        assert_eq!(e.operands.len(), 3);
+        assert_eq!(e.results[1].shape, vec![2]);
+        assert!(m.head_for(&[2, 4, 4, 3]).is_ok());
+        assert!(m.head_for(&[9]).is_err());
+        assert_eq!(m.network("tiny").unwrap().layers.len(), 1);
+        assert!(m.network("nope").is_err());
+    }
+}

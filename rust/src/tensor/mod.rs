@@ -1,0 +1,138 @@
+//! Host tensor type: row-major f32 arrays with shape, plus the slicing /
+//! concat ops the coordinator performs natively (multiscale factor-out)
+//! and conversion to/from `xla::Literal`.
+
+pub mod npy;
+pub mod ops;
+
+use anyhow::{bail, Result};
+
+/// A row-major f32 host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            bail!("shape {shape:?} wants {want} elems, got {}", data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Leading (batch) dimension.
+    pub fn batch(&self) -> usize {
+        *self.shape.first().unwrap_or(&1)
+    }
+
+    /// Product of all non-leading dims.
+    pub fn inner_len(&self) -> usize {
+        self.shape.iter().skip(1).product()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Max |x|.
+    pub fn linf(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// sqrt(sum x^2).
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Elementwise maximum absolute difference.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    // ---- xla interop -------------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        // single-copy path (vec1 + reshape would copy twice)
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * std::mem::size_of::<f32>(),
+            )
+        };
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32, &self.shape, bytes)
+            .map_err(crate::runtime::xerr)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().map_err(crate::runtime::xerr)?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().map_err(crate::runtime::xerr)?;
+        Tensor::new(dims, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_len() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::new(vec![4], vec![1.0, -2.0, 3.0, -4.0]).unwrap();
+        assert_eq!(t.mean(), -0.5);
+        assert_eq!(t.linf(), 4.0);
+        assert!((t.l2() - (30.0f32).sqrt()).abs() < 1e-6);
+        assert_eq!(t.size_bytes(), 16);
+    }
+
+    #[test]
+    fn batch_and_inner() {
+        let t = Tensor::zeros(&[8, 4, 4, 3]);
+        assert_eq!(t.batch(), 8);
+        assert_eq!(t.inner_len(), 48);
+    }
+}

@@ -1,0 +1,135 @@
+//! Minimal NPY v1.0 writer/reader for f32 tensors (checkpoints, sample
+//! dumps readable by numpy) plus a multi-tensor NPZ-like container
+//! implemented as a directory of .npy files + an index.json.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::Tensor;
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+/// Write `t` as a little-endian f32 .npy file.
+pub fn save(path: &Path, t: &Tensor) -> Result<()> {
+    let shape_str = match t.shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", t.shape[0]),
+        _ => format!(
+            "({})",
+            t.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64
+    let unpadded = MAGIC.len() + 4 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&[1, 0])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    let mut buf = Vec::with_capacity(t.data.len() * 4);
+    for v in &t.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read a little-endian f32 .npy file written by [`save`] or numpy.
+pub fn load(path: &Path) -> Result<Tensor> {
+    let mut f = fs::File::open(path)?;
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)?;
+    if magic != MAGIC {
+        bail!("{path:?}: not an NPY file");
+    }
+    let mut ver = [0u8; 2];
+    f.read_exact(&mut ver)?;
+    let hlen = if ver[0] == 1 {
+        let mut b = [0u8; 2];
+        f.read_exact(&mut b)?;
+        u16::from_le_bytes(b) as usize
+    } else {
+        let mut b = [0u8; 4];
+        f.read_exact(&mut b)?;
+        u32::from_le_bytes(b) as usize
+    };
+    let mut header = vec![0u8; hlen];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header)?;
+    if !header.contains("'<f4'") {
+        bail!("{path:?}: only <f4 supported, header={header}");
+    }
+    if header.contains("'fortran_order': True") {
+        bail!("{path:?}: fortran order unsupported");
+    }
+    let shape = parse_shape(&header)
+        .ok_or_else(|| anyhow!("{path:?}: cannot parse shape from {header}"))?;
+    let count: usize = shape.iter().product();
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    if raw.len() < count * 4 {
+        bail!("{path:?}: truncated payload");
+    }
+    let data: Vec<f32> = raw[..count * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Tensor::new(shape, data)
+}
+
+fn parse_shape(header: &str) -> Option<Vec<usize>> {
+    let start = header.find("'shape':")? + 8;
+    let open = header[start..].find('(')? + start;
+    let close = header[open..].find(')')? + open;
+    let inner = &header[open + 1..close];
+    let mut dims = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        dims.push(p.parse().ok()?);
+    }
+    Some(dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("npy_test_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        for shape in [vec![], vec![5], vec![2, 3], vec![2, 3, 4, 5]] {
+            let n: usize = shape.iter().product();
+            let t = Tensor::new(shape.clone(),
+                                (0..n).map(|i| i as f32 * 0.5 - 1.0).collect())
+                .unwrap();
+            let p = dir.join(format!("t{}.npy", shape.len()));
+            save(&p, &t).unwrap();
+            let back = load(&p).unwrap();
+            assert_eq!(back, t, "shape {shape:?}");
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("garbage_{}.npy", std::process::id()));
+        fs::write(&p, b"not an npy").unwrap();
+        assert!(load(&p).is_err());
+        fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,133 @@
+//! Host tensor ops the coordinator performs natively.
+//!
+//! Multiscale factor-out ("split") is pure memory movement, so it is not
+//! worth an XLA round-trip: these routines split/concat along the LAST axis
+//! (channels for NHWC images, features for dense), which is contiguous in
+//! row-major layout.
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// Split along the last axis: first `k` components -> left, rest -> right.
+pub fn split_last_axis(t: &Tensor, k: usize) -> Result<(Tensor, Tensor)> {
+    let c = *t.shape.last().unwrap_or(&0);
+    if k == 0 || k >= c {
+        bail!("split k={k} out of range for last dim {c}");
+    }
+    let rows = t.len() / c;
+    let (mut a, mut b) = (Vec::with_capacity(rows * k),
+                          Vec::with_capacity(rows * (c - k)));
+    for r in 0..rows {
+        let row = &t.data[r * c..(r + 1) * c];
+        a.extend_from_slice(&row[..k]);
+        b.extend_from_slice(&row[k..]);
+    }
+    let mut sa = t.shape.clone();
+    *sa.last_mut().unwrap() = k;
+    let mut sb = t.shape.clone();
+    *sb.last_mut().unwrap() = c - k;
+    Ok((Tensor::new(sa, a)?, Tensor::new(sb, b)?))
+}
+
+/// Concat along the last axis (inverse of [`split_last_axis`]).
+pub fn concat_last_axis(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape.len() != b.shape.len()
+        || a.shape[..a.shape.len() - 1] != b.shape[..b.shape.len() - 1]
+    {
+        bail!("concat shape mismatch: {:?} vs {:?}", a.shape, b.shape);
+    }
+    let ca = *a.shape.last().unwrap();
+    let cb = *b.shape.last().unwrap();
+    let rows = a.len() / ca;
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    for r in 0..rows {
+        out.extend_from_slice(&a.data[r * ca..(r + 1) * ca]);
+        out.extend_from_slice(&b.data[r * cb..(r + 1) * cb]);
+    }
+    let mut shape = a.shape.clone();
+    *shape.last_mut().unwrap() = ca + cb;
+    Tensor::new(shape, out)
+}
+
+/// out += src (elementwise, shapes must match).
+pub fn add_assign(dst: &mut Tensor, src: &Tensor) -> Result<()> {
+    if dst.shape != src.shape {
+        bail!("add_assign shape mismatch: {:?} vs {:?}", dst.shape, src.shape);
+    }
+    for (d, s) in dst.data.iter_mut().zip(&src.data) {
+        *d += s;
+    }
+    Ok(())
+}
+
+/// Flatten a batch of rows from a bigger tensor: select `idx` rows along
+/// axis 0 (used by the data loader for minibatching).
+pub fn gather_rows(t: &Tensor, idx: &[usize]) -> Result<Tensor> {
+    let inner = t.inner_len();
+    let n = t.batch();
+    let mut out = Vec::with_capacity(idx.len() * inner);
+    for &i in idx {
+        if i >= n {
+            bail!("row {i} out of range {n}");
+        }
+        out.extend_from_slice(&t.data[i * inner..(i + 1) * inner]);
+    }
+    let mut shape = t.shape.clone();
+    shape[0] = idx.len();
+    Tensor::new(shape, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape.to_vec(), (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn split_concat_roundtrip() {
+        let x = t(&[2, 3, 4, 6]);
+        let (a, b) = split_last_axis(&x, 2).unwrap();
+        assert_eq!(a.shape, vec![2, 3, 4, 2]);
+        assert_eq!(b.shape, vec![2, 3, 4, 4]);
+        let back = concat_last_axis(&a, &b).unwrap();
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn split_values_correct() {
+        let x = t(&[1, 4]); // [0,1,2,3]
+        let (a, b) = split_last_axis(&x, 1).unwrap();
+        assert_eq!(a.data, vec![0.0]);
+        assert_eq!(b.data, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn split_rejects_bad_k() {
+        let x = t(&[2, 4]);
+        assert!(split_last_axis(&x, 0).is_err());
+        assert!(split_last_axis(&x, 4).is_err());
+    }
+
+    #[test]
+    fn add_assign_works() {
+        let mut a = t(&[2, 2]);
+        let b = t(&[2, 2]);
+        add_assign(&mut a, &b).unwrap();
+        assert_eq!(a.data, vec![0.0, 2.0, 4.0, 6.0]);
+        let c = t(&[4]);
+        assert!(add_assign(&mut a, &c).is_err());
+    }
+
+    #[test]
+    fn gather() {
+        let x = t(&[4, 2]);
+        let g = gather_rows(&x, &[3, 0]).unwrap();
+        assert_eq!(g.shape, vec![2, 2]);
+        assert_eq!(g.data, vec![6.0, 7.0, 0.0, 1.0]);
+        assert!(gather_rows(&x, &[9]).is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! The minibatch training loop: NLL objective, Adam, grad clipping,
+//! CSV metrics, checkpointing.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{ExecMode, FlowSession};
+use crate::flow::ParamStore;
+use crate::tensor::Tensor;
+use crate::util::bench::fmt_bytes;
+
+use super::optimizer::{GradClip, Optimizer};
+
+pub struct TrainConfig {
+    pub steps: usize,
+    pub mode: ExecMode,
+    pub clip: Option<GradClip>,
+    pub log_every: usize,
+    /// Write metrics.csv + checkpoint here if set.
+    pub out_dir: Option<PathBuf>,
+    pub quiet: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 100,
+            mode: ExecMode::Invertible,
+            clip: Some(GradClip { max_norm: 50.0 }),
+            log_every: 10,
+            out_dir: None,
+            quiet: false,
+        }
+    }
+}
+
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub final_loss: f32,
+    pub peak_sched_bytes: i64,
+    pub steps_per_sec: f64,
+}
+
+/// Run `cfg.steps` optimizer steps, drawing a fresh minibatch from
+/// `next_batch(step) -> (x, cond)` each iteration.
+pub fn train(
+    session: &FlowSession,
+    params: &mut ParamStore,
+    opt: &mut dyn Optimizer,
+    cfg: &TrainConfig,
+    mut next_batch: impl FnMut(usize) -> Result<(Tensor, Option<Tensor>)>,
+) -> Result<TrainReport> {
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let mut peak = 0i64;
+    let mut csv: Option<std::fs::File> = match &cfg.out_dir {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)?;
+            let mut f = std::fs::File::create(dir.join("metrics.csv"))?;
+            writeln!(f, "step,loss,logp_mean,logdet_mean,grad_norm,peak_sched_bytes,ms")?;
+            Some(f)
+        }
+        None => None,
+    };
+
+    let t0 = Instant::now();
+    for step in 0..cfg.steps {
+        let ts = Instant::now();
+        let (x, cond) = next_batch(step)?;
+        let mut result = session
+            .train_step(&x, cond.as_ref(), params, cfg.mode)
+            .with_context(|| format!("train step {step}"))?;
+        let grad_norm = match &cfg.clip {
+            Some(c) => c.apply(&mut result.grads),
+            None => 0.0,
+        };
+        opt.step(params, &result.grads)?;
+        peak = peak.max(result.peak_sched_bytes);
+        losses.push(result.loss);
+
+        let ms = ts.elapsed().as_secs_f64() * 1e3;
+        if let Some(f) = &mut csv {
+            writeln!(
+                f,
+                "{step},{},{},{},{grad_norm},{},{ms:.1}",
+                result.loss, result.logp_mean, result.logdet_mean,
+                result.peak_sched_bytes
+            )?;
+        }
+        if !cfg.quiet && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            eprintln!(
+                "step {step:>5}  loss {:>10.4}  logp {:>10.4}  logdet {:>8.4}  \
+                 |g| {grad_norm:>8.2}  peak {:>10}  {ms:>7.1} ms",
+                result.loss, result.logp_mean, result.logdet_mean,
+                fmt_bytes(result.peak_sched_bytes as u64)
+            );
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    if let Some(dir) = &cfg.out_dir {
+        params.save(&dir.join("checkpoint"), &session.def.name)?;
+    }
+
+    Ok(TrainReport {
+        final_loss: *losses.last().unwrap_or(&f32::NAN),
+        losses,
+        peak_sched_bytes: peak,
+        steps_per_sec: cfg.steps as f64 / elapsed,
+    })
+}
+
+/// Smoothed loss over the last `k` entries (for convergence asserts).
+pub fn tail_mean(losses: &[f32], k: usize) -> f32 {
+    if losses.is_empty() {
+        return f32::NAN;
+    }
+    let k = k.min(losses.len());
+    losses[losses.len() - k..].iter().sum::<f32>() / k as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_mean_works() {
+        assert!((tail_mean(&[1.0, 2.0, 3.0, 4.0], 2) - 3.5).abs() < 1e-6);
+        assert!((tail_mean(&[1.0], 5) - 1.0).abs() < 1e-6);
+        assert!(tail_mean(&[], 3).is_nan());
+    }
+}

@@ -1,0 +1,7 @@
+//! Training: optimizers, schedules, the minibatch loop, metrics.
+
+pub mod loop_;
+pub mod optimizer;
+
+pub use loop_::{train, TrainConfig, TrainReport};
+pub use optimizer::{Adam, GradClip, Optimizer, Sgd};

@@ -1,0 +1,266 @@
+//! Host-side optimizers over the per-step parameter store.
+//!
+//! Parameters are small relative to activations (the paper's whole point),
+//! so the update runs on host f32 slices; the literal upload cache is
+//! invalidated per updated step.
+
+use anyhow::{bail, Result};
+
+use crate::flow::ParamStore;
+use crate::tensor::Tensor;
+
+/// Gradient-clipping config (global L2 norm).
+#[derive(Debug, Clone, Copy)]
+pub struct GradClip {
+    pub max_norm: f32,
+}
+
+impl GradClip {
+    /// Scale all grads in-place so the global norm is <= max_norm.
+    /// Returns the pre-clip norm.
+    pub fn apply(&self, grads: &mut [Vec<Tensor>]) -> f32 {
+        let mut sq = 0.0f64;
+        for g in grads.iter().flatten() {
+            sq += g.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+        }
+        let norm = sq.sqrt() as f32;
+        if norm > self.max_norm && norm > 0.0 {
+            let scale = self.max_norm / norm;
+            for g in grads.iter_mut().flatten() {
+                for v in &mut g.data {
+                    *v *= scale;
+                }
+            }
+        }
+        norm
+    }
+}
+
+pub trait Optimizer {
+    /// Apply one update. `grads` is aligned with the store layout
+    /// (per step, per param).
+    fn step(&mut self, params: &mut ParamStore, grads: &[Vec<Tensor>]) -> Result<()>;
+
+    fn lr(&self) -> f32;
+    fn set_lr(&mut self, lr: f32);
+
+    /// Bytes of optimizer state (for the memory report).
+    fn state_bytes(&self) -> usize;
+}
+
+/// Plain SGD (optionally with momentum).
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: Option<Vec<Vec<Tensor>>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Sgd {
+        Sgd { lr, momentum, velocity: None }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut ParamStore, grads: &[Vec<Tensor>]) -> Result<()> {
+        if grads.len() != params.tensors.len() {
+            bail!("grad layout mismatch");
+        }
+        if self.momentum > 0.0 && self.velocity.is_none() {
+            self.velocity = Some(
+                params.tensors.iter()
+                    .map(|ts| ts.iter().map(|t| Tensor::zeros(&t.shape)).collect())
+                    .collect());
+        }
+        let mut dirty = Vec::new();
+        for (si, (ts, gs)) in params.tensors.iter_mut().zip(grads).enumerate() {
+            if gs.is_empty() {
+                continue;
+            }
+            if gs.len() != ts.len() {
+                bail!("step {si}: {} grads for {} params", gs.len(), ts.len());
+            }
+            dirty.push(si);
+            for (pi, (t, g)) in ts.iter_mut().zip(gs).enumerate() {
+                match &mut self.velocity {
+                    Some(vel) => {
+                        let v = &mut vel[si][pi];
+                        for ((vv, gv), tv) in
+                            v.data.iter_mut().zip(&g.data).zip(&mut t.data)
+                        {
+                            *vv = self.momentum * *vv + gv;
+                            *tv -= self.lr * *vv;
+                        }
+                    }
+                    None => {
+                        for (tv, gv) in t.data.iter_mut().zip(&g.data) {
+                            *tv -= self.lr * gv;
+                        }
+                    }
+                }
+            }
+        }
+        for si in dirty {
+            params.mark_dirty(si);
+        }
+        Ok(())
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.velocity.as_ref().map_or(0, |v| {
+            v.iter().flatten().map(|t| t.size_bytes()).sum()
+        })
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    m: Option<Vec<Vec<Tensor>>>,
+    v: Option<Vec<Vec<Tensor>>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: None, v: None }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut ParamStore, grads: &[Vec<Tensor>]) -> Result<()> {
+        if grads.len() != params.tensors.len() {
+            bail!("grad layout mismatch");
+        }
+        if self.m.is_none() {
+            let zeros: Vec<Vec<Tensor>> = params.tensors.iter()
+                .map(|ts| ts.iter().map(|t| Tensor::zeros(&t.shape)).collect())
+                .collect();
+            self.m = Some(zeros.clone());
+            self.v = Some(zeros);
+        }
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let m = self.m.as_mut().unwrap();
+        let v = self.v.as_mut().unwrap();
+        let mut dirty = Vec::new();
+        for (si, (ts, gs)) in params.tensors.iter_mut().zip(grads).enumerate() {
+            if gs.is_empty() {
+                continue;
+            }
+            if gs.len() != ts.len() {
+                bail!("step {si}: {} grads for {} params", gs.len(), ts.len());
+            }
+            dirty.push(si);
+            for (pi, (t, g)) in ts.iter_mut().zip(gs).enumerate() {
+                let (mi, vi) = (&mut m[si][pi], &mut v[si][pi]);
+                for k in 0..t.data.len() {
+                    let gk = g.data[k];
+                    mi.data[k] = self.beta1 * mi.data[k] + (1.0 - self.beta1) * gk;
+                    vi.data[k] = self.beta2 * vi.data[k] + (1.0 - self.beta2) * gk * gk;
+                    let mhat = mi.data[k] / b1t;
+                    let vhat = vi.data[k] / b2t;
+                    t.data[k] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+                }
+            }
+        }
+        for si in dirty {
+            params.mark_dirty(si);
+        }
+        Ok(())
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn state_bytes(&self) -> usize {
+        let per = self.m.as_ref().map_or(0, |m| {
+            m.iter().flatten().map(|t| t.size_bytes()).sum()
+        });
+        per * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+
+    fn store(vals: &[f32]) -> ParamStore {
+        ParamStore {
+            tensors: vec![vec![Tensor::new(vec![vals.len()], vals.to_vec()).unwrap()]],
+            names: vec![vec!["w1".into()]],
+            lits: RefCell::new(vec![None]),
+        }
+    }
+
+    // ParamStore fields are pub(crate)-visible through the module tree;
+    // use a tiny quadratic f(w) = 0.5*||w||^2, grad = w.
+    fn grad_of(p: &ParamStore) -> Vec<Vec<Tensor>> {
+        vec![vec![p.tensors[0][0].clone()]]
+    }
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        let mut p = store(&[1.0, -2.0, 3.0]);
+        let mut opt = Sgd::new(0.1, 0.0);
+        for _ in 0..100 {
+            let g = grad_of(&p);
+            opt.step(&mut p, &g).unwrap();
+        }
+        assert!(p.tensors[0][0].linf() < 1e-3);
+    }
+
+    #[test]
+    fn adam_descends_quadratic() {
+        let mut p = store(&[1.0, -2.0, 3.0]);
+        let mut opt = Adam::new(0.05);
+        for _ in 0..400 {
+            let g = grad_of(&p);
+            opt.step(&mut p, &g).unwrap();
+        }
+        assert!(p.tensors[0][0].linf() < 1e-2, "{:?}", p.tensors[0][0]);
+    }
+
+    #[test]
+    fn momentum_allocates_state() {
+        let mut p = store(&[1.0; 8]);
+        let mut opt = Sgd::new(0.01, 0.9);
+        let g = grad_of(&p);
+        opt.step(&mut p, &g).unwrap();
+        assert_eq!(opt.state_bytes(), 32);
+    }
+
+    #[test]
+    fn clip_bounds_norm() {
+        let mut g = vec![vec![Tensor::new(vec![2], vec![30.0, 40.0]).unwrap()]];
+        let pre = GradClip { max_norm: 5.0 }.apply(&mut g);
+        assert!((pre - 50.0).abs() < 1e-4);
+        let post = (g[0][0].data[0].powi(2) + g[0][0].data[1].powi(2)).sqrt();
+        assert!((post - 5.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn layout_mismatch_rejected() {
+        let mut p = store(&[1.0]);
+        let mut opt = Adam::new(0.1);
+        assert!(opt.step(&mut p, &[]).is_err());
+    }
+}

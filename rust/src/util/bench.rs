@@ -1,0 +1,95 @@
+//! Micro-bench harness (criterion is not in the offline vendor set).
+//!
+//! Warmup + timed iterations with mean / stddev / min, printed in a
+//! criterion-like one-liner. Used by the `benches/` binaries.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Run `f` for `warmup` untimed + `iters` timed iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    stats_of(&samples)
+}
+
+pub fn stats_of(samples: &[f64]) -> Stats {
+    let n = samples.len().max(1) as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    Stats {
+        iters: samples.len(),
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().copied().fold(0.0, f64::max),
+    }
+}
+
+/// criterion-style report line.
+pub fn report(name: &str, s: &Stats) {
+    println!(
+        "{name:<48} time: [{:>9.3} ms  ±{:>7.3} ms]  min {:>9.3} ms  ({} iters)",
+        s.mean_s * 1e3,
+        s.std_s * 1e3,
+        s.min_s * 1e3,
+        s.iters
+    );
+}
+
+/// Human-readable byte count (GiB/MiB/KiB).
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let bf = b as f64;
+    if bf >= K * K * K {
+        format!("{:.2} GiB", bf / (K * K * K))
+    } else if bf >= K * K {
+        format!("{:.2} MiB", bf / (K * K))
+    } else if bf >= K {
+        format!("{:.1} KiB", bf / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let s = bench(1, 5, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(s.mean_s >= 0.001);
+        assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn bytes_fmt() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert!(fmt_bytes(3 * 1024 * 1024).starts_with("3.00 MiB"));
+        assert!(fmt_bytes(40 * 1024 * 1024 * 1024).starts_with("40.00 GiB"));
+    }
+}

@@ -1,0 +1,117 @@
+//! Tiny CLI argument parser: `--key value` / `--flag` pairs after a
+//! subcommand, with typed accessors and defaults. (clap is not available in
+//! the offline vendor set.)
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse: positional words first (the subcommand path), then
+    /// `--key value` pairs; `--key` followed by another `--...` or end of
+    /// argv is a boolean flag.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let word = &argv[i];
+            if let Some(key) = word.strip_prefix("--") {
+                let next = argv.get(i + 1);
+                match next {
+                    Some(v) if !v.starts_with("--") => {
+                        a.opts.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        a.flags.push(key.to_string());
+                        i += 1;
+                    }
+                }
+            } else {
+                if !a.opts.is_empty() || !a.flags.is_empty() {
+                    bail!("positional arg {word:?} after options");
+                }
+                a.subcommand.push(word.clone());
+                i += 1;
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(words: &[&str]) -> Vec<String> {
+        words.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(&argv(&[
+            "bench", "fig1", "--steps", "10", "--verbose", "--lr", "0.001",
+        ]))
+        .unwrap();
+        assert_eq!(a.subcommand, vec!["bench", "fig1"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 10);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.001);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn rejects_positional_after_options() {
+        assert!(Args::parse(&argv(&["x", "--a", "1", "y"])).is_err());
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = Args::parse(&argv(&["train"])).unwrap();
+        assert!(a.req("net").is_err());
+    }
+}

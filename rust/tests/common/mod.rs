@@ -1,0 +1,50 @@
+//! Shared helpers for integration tests: runtime bootstrap + batch makers.
+
+use std::path::PathBuf;
+
+use invertnet::coordinator::FlowSession;
+use invertnet::data::{synth_images, Density2d, LinearGaussian};
+use invertnet::util::rng::Pcg64;
+use invertnet::{Runtime, Tensor};
+
+pub fn artifacts_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts/manifest.json missing — run `make artifacts` first"
+    );
+    dir
+}
+
+pub fn runtime() -> Runtime {
+    Runtime::new(&artifacts_dir()).expect("runtime boot")
+}
+
+/// A deterministic input batch matching the network's shape (and cond if
+/// conditional).
+pub fn batch_for(session: &FlowSession, seed: u64) -> (Tensor, Option<Tensor>) {
+    let mut rng = Pcg64::new(seed);
+    let s = &session.def.in_shape;
+    if session.def.cond_shape.is_some() {
+        let prob = LinearGaussian::default_problem();
+        let (theta, y) = prob.sample(s[0], &mut rng);
+        (theta, Some(y))
+    } else if s.len() == 2 && s[1] == 2 {
+        (Density2d::TwoMoons.sample(s[0], &mut rng), None)
+    } else if s.len() == 2 {
+        (Tensor { shape: s.clone(), data: rng.normal_vec(s.iter().product()) },
+         None)
+    } else {
+        (synth_images(s[0], s[1], s[2], s[3], &mut rng), None)
+    }
+}
+
+pub fn assert_close(a: &Tensor, b: &Tensor, tol: f32, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}: shape mismatch");
+    let d = a.max_abs_diff(b);
+    let scale = a.linf().max(b.linf()).max(1.0);
+    assert!(
+        d <= tol * scale,
+        "{what}: max|diff| {d} > {tol} * scale {scale}"
+    );
+}

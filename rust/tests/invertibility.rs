@@ -1,0 +1,104 @@
+//! Invertibility guarantees through the real PJRT executables (the paper's
+//! §4 CI promise): forward->invert round-trips the input; invert->forward
+//! round-trips the latents; log-likelihood is finite and latents are
+//! whitened-ish after a few training steps.
+
+mod common;
+
+use common::{batch_for, runtime};
+use invertnet::coordinator::FlowSession;
+use invertnet::flow::ParamStore;
+use invertnet::util::rng::Pcg64;
+use invertnet::{MemoryLedger, Tensor};
+
+fn roundtrip(net: &str, tol: f32) {
+    let rt = runtime();
+    let session = FlowSession::new(&rt, net, MemoryLedger::new()).unwrap();
+    let params = ParamStore::init(&session.def, &rt.manifest, 31).unwrap();
+    let (x, cond) = batch_for(&session, 55);
+    let err = session.roundtrip_error(&x, cond.as_ref(), &params).unwrap();
+    assert!(err < tol, "{net}: roundtrip error {err} >= {tol}");
+}
+
+#[test]
+fn realnvp_roundtrips() {
+    roundtrip("realnvp2d", 1e-4);
+}
+
+#[test]
+fn cond_realnvp_roundtrips() {
+    roundtrip("cond_realnvp2d", 1e-4);
+}
+
+#[test]
+fn hint_roundtrips() {
+    roundtrip("hint8d", 1e-4);
+}
+
+#[test]
+fn glow_multiscale_roundtrips() {
+    roundtrip("glow16", 2e-3); // conv + sigmoid couplings accumulate f32 error
+}
+
+#[test]
+fn hyperbolic_roundtrips() {
+    roundtrip("hyper16", 1e-3);
+}
+
+#[test]
+fn sample_then_forward_recovers_latents() {
+    let rt = runtime();
+    let session = FlowSession::new(&rt, "realnvp2d", MemoryLedger::new()).unwrap();
+    let params = ParamStore::init(&session.def, &rt.manifest, 9).unwrap();
+    let mut rng = Pcg64::new(123);
+    let shapes = session.def.latent_shapes.clone();
+    let zs: Vec<Tensor> = shapes
+        .iter()
+        .map(|s| Tensor {
+            shape: s.clone(),
+            data: rng.normal_vec(s.iter().product()),
+        })
+        .collect();
+    let x = session.invert(&zs, None, &params).unwrap();
+    let (latents, _, _) = session.forward(&x, None, &params, false).unwrap();
+    assert_eq!(latents.len(), zs.len());
+    for (got, want) in latents.iter().zip(&zs) {
+        let d = got.tensor().max_abs_diff(want);
+        assert!(d < 1e-3, "latent mismatch {d}");
+    }
+}
+
+#[test]
+fn log_likelihood_finite_and_consistent() {
+    let rt = runtime();
+    let session = FlowSession::new(&rt, "glow16", MemoryLedger::new()).unwrap();
+    let params = ParamStore::init(&session.def, &rt.manifest, 3).unwrap();
+    let (x, _) = batch_for(&session, 8);
+    let ll = session.log_likelihood(&x, None, &params).unwrap();
+    assert_eq!(ll.len(), session.batch());
+    for v in &ll {
+        assert!(v.is_finite(), "non-finite loglik {v}");
+    }
+    // scaling sanity: loglik per dim should be O(1)
+    let dims = session.def.dims_per_sample() as f32;
+    let mean = ll.iter().sum::<f32>() / ll.len() as f32 / dims;
+    assert!(mean.abs() < 30.0, "per-dim loglik {mean} looks wrong");
+}
+
+#[test]
+fn ledger_returns_to_zero_after_step() {
+    let rt = runtime();
+    let ledger = MemoryLedger::new();
+    let session = FlowSession::new(&rt, "realnvp2d", ledger.clone()).unwrap();
+    let params = ParamStore::init(&session.def, &rt.manifest, 1).unwrap();
+    let (x, _) = batch_for(&session, 2);
+    let _ = session
+        .train_step(&x, None, &params, invertnet::coordinator::ExecMode::Invertible)
+        .unwrap();
+    assert_eq!(
+        ledger.live_total(),
+        0,
+        "all tracked buffers must be freed after a step: {}",
+        ledger.report()
+    );
+}

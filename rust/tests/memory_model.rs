@@ -1,0 +1,96 @@
+//! Pins the shape-only planner to the real ledger measurements
+//! byte-for-byte, and verifies the paper's two memory claims on measured
+//! data: invertible peak is depth-independent (Fig. 2) and stored peak
+//! grows linearly; under a budget the stored executor OOMs first (Fig. 1).
+
+mod common;
+
+use common::{batch_for, runtime};
+use invertnet::coordinator::planner::predict_peak_sched;
+use invertnet::coordinator::{ExecMode, FlowSession};
+use invertnet::flow::ParamStore;
+use invertnet::MemoryLedger;
+
+fn measured_peak(net: &str, mode: ExecMode) -> i64 {
+    let rt = runtime();
+    let ledger = MemoryLedger::new();
+    let session = FlowSession::new(&rt, net, ledger).unwrap();
+    let params = ParamStore::init(&session.def, &rt.manifest, 5).unwrap();
+    let (x, cond) = batch_for(&session, 6);
+    session
+        .train_step(&x, cond.as_ref(), &params, mode)
+        .unwrap()
+        .peak_sched_bytes
+}
+
+fn predicted_peak(net: &str, mode: ExecMode) -> i64 {
+    let rt = runtime();
+    let session = FlowSession::new(&rt, net, MemoryLedger::new()).unwrap();
+    predict_peak_sched(&session.def, mode)
+}
+
+#[test]
+fn planner_matches_ledger_exactly() {
+    for net in ["glow_fig2_d2", "glow_fig2_d8", "glow16", "realnvp2d", "hyper16"] {
+        for mode in [ExecMode::Invertible, ExecMode::Stored] {
+            let measured = measured_peak(net, mode);
+            let predicted = predicted_peak(net, mode);
+            assert_eq!(
+                measured, predicted,
+                "{net}/{}: measured {measured} != planner {predicted}",
+                mode.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn invertible_peak_is_depth_independent() {
+    let p2 = measured_peak("glow_fig2_d2", ExecMode::Invertible);
+    let p8 = measured_peak("glow_fig2_d8", ExecMode::Invertible);
+    let p16 = measured_peak("glow_fig2_d16", ExecMode::Invertible);
+    assert_eq!(p2, p8, "Fig. 2 claim violated");
+    assert_eq!(p8, p16, "Fig. 2 claim violated");
+}
+
+#[test]
+fn stored_peak_grows_linearly_with_depth() {
+    let p2 = measured_peak("glow_fig2_d2", ExecMode::Stored);
+    let p4 = measured_peak("glow_fig2_d4", ExecMode::Stored);
+    let p8 = measured_peak("glow_fig2_d8", ExecMode::Stored);
+    assert!(p4 > p2 && p8 > p4);
+    // equal increments per unit depth: p8-p4 == 2*(p4-p2)
+    assert_eq!(p8 - p4, 2 * (p4 - p2), "not linear: {p2} {p4} {p8}");
+}
+
+#[test]
+fn budget_kills_stored_first() {
+    // pick a budget between the two executors' needs at depth 16
+    let inv = measured_peak("glow_fig2_d16", ExecMode::Invertible);
+    let sto = measured_peak("glow_fig2_d16", ExecMode::Stored);
+    assert!(sto > 2 * inv);
+    let budget = (inv + sto) as u64 / 2;
+
+    let rt = runtime();
+    let run = |mode| {
+        let ledger = MemoryLedger::with_budget(budget);
+        let session = FlowSession::new(&rt, "glow_fig2_d16", ledger).unwrap();
+        let params = ParamStore::init(&session.def, &rt.manifest, 5).unwrap();
+        let (x, _) = batch_for(&session, 6);
+        session.train_step(&x, None, &params, mode)
+    };
+    assert!(run(ExecMode::Invertible).is_ok(),
+            "invertible must fit under the budget");
+    let err = match run(ExecMode::Stored) {
+        Ok(_) => panic!("stored must OOM under this budget"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("OOM"), "{err:#}");
+}
+
+#[test]
+fn spatial_size_scales_quadratically() {
+    let p16 = measured_peak("glow_fig1_16", ExecMode::Invertible);
+    let p32 = measured_peak("glow_fig1_32", ExecMode::Invertible);
+    assert_eq!(p32, 4 * p16, "Fig. 1 x-axis scaling");
+}

@@ -1,0 +1,127 @@
+//! Randomized property tests on coordinator invariants (a proptest-lite
+//! built on the project's PCG64, since proptest is not in the offline
+//! vendor set). Each property runs across a seed sweep.
+//!
+//! Properties:
+//!  P1 planner: invertible peak is depth-invariant for random GLOW configs.
+//!  P2 planner: stored peak is strictly monotonic in depth.
+//!  P3 planner: stored >= invertible for every random config.
+//!  P4 ledger: random alloc/free interleavings conserve bytes and never
+//!     let live exceed peak or a budget.
+//!  P5 split/concat: round-trips random tensors for random split points.
+
+use invertnet::coordinator::planner::{glow_flat_shape_def, predict_peak_sched};
+use invertnet::coordinator::{ExecMode, MemClass, MemoryLedger, Tracked};
+use invertnet::tensor::ops::{concat_last_axis, split_last_axis};
+use invertnet::util::rng::Pcg64;
+use invertnet::Tensor;
+
+const CASES: usize = 40;
+
+fn rand_cfg(rng: &mut Pcg64) -> (usize, usize, usize, usize) {
+    let n = 1 + rng.below(8);
+    let hw = [8usize, 16, 32, 64, 128][rng.below(5)];
+    let c = 1 + rng.below(4);
+    let k = 1 + rng.below(40);
+    (n, hw, c, k)
+}
+
+#[test]
+fn p1_invertible_peak_depth_invariant() {
+    let mut rng = Pcg64::new(101);
+    for _ in 0..CASES {
+        let (n, hw, c, k) = rand_cfg(&mut rng);
+        let a = predict_peak_sched(&glow_flat_shape_def(n, hw, hw, c, k),
+                                   ExecMode::Invertible);
+        let b = predict_peak_sched(&glow_flat_shape_def(n, hw, hw, c, k + 7),
+                                   ExecMode::Invertible);
+        assert_eq!(a, b, "cfg n={n} hw={hw} c={c} k={k}");
+    }
+}
+
+#[test]
+fn p2_stored_peak_monotone_in_depth() {
+    let mut rng = Pcg64::new(102);
+    for _ in 0..CASES {
+        let (n, hw, c, k) = rand_cfg(&mut rng);
+        let a = predict_peak_sched(&glow_flat_shape_def(n, hw, hw, c, k),
+                                   ExecMode::Stored);
+        let b = predict_peak_sched(&glow_flat_shape_def(n, hw, hw, c, k + 1),
+                                   ExecMode::Stored);
+        assert!(b > a, "cfg n={n} hw={hw} c={c} k={k}: {a} !< {b}");
+    }
+}
+
+#[test]
+fn p3_stored_never_below_invertible() {
+    let mut rng = Pcg64::new(103);
+    for _ in 0..CASES {
+        let (n, hw, c, k) = rand_cfg(&mut rng);
+        let def = glow_flat_shape_def(n, hw, hw, c, k);
+        let inv = predict_peak_sched(&def, ExecMode::Invertible);
+        let sto = predict_peak_sched(&def, ExecMode::Stored);
+        assert!(sto >= inv, "cfg n={n} hw={hw} c={c} k={k}: {sto} < {inv}");
+    }
+}
+
+#[test]
+fn p4_ledger_conserves_bytes_randomly() {
+    let mut rng = Pcg64::new(104);
+    for case in 0..CASES {
+        let budget = 10_000 + rng.below(100_000) as u64;
+        let ledger = MemoryLedger::with_budget(budget);
+        let mut live: Vec<Tracked> = Vec::new();
+        let mut expected: i64 = 0;
+        for _ in 0..200 {
+            if rng.uniform() < 0.6 {
+                let n = 1 + rng.below(2000);
+                let class = match rng.below(4) {
+                    0 => MemClass::Activation,
+                    1 => MemClass::Gradient,
+                    2 => MemClass::Latent,
+                    _ => MemClass::Param,
+                };
+                match Tracked::new(Tensor::zeros(&[n]), class, &ledger) {
+                    Ok(t) => {
+                        expected += (n * 4) as i64;
+                        live.push(t);
+                    }
+                    Err(e) => {
+                        // OOM must only happen when it genuinely would not fit
+                        assert!(expected + (n * 4) as i64 > budget as i64,
+                                "case {case}: spurious OOM: {e}");
+                    }
+                }
+            } else if !live.is_empty() {
+                let idx = rng.below(live.len());
+                let t = live.swap_remove(idx);
+                expected -= t.tensor().size_bytes() as i64;
+                drop(t);
+            }
+            assert_eq!(ledger.live_total(), expected, "case {case}");
+            assert!(ledger.live_total() <= ledger.peak_total());
+            assert!(ledger.live_total() <= budget as i64);
+        }
+        drop(live);
+        assert_eq!(ledger.live_total(), 0, "case {case}: leak");
+    }
+}
+
+#[test]
+fn p5_split_concat_roundtrips_random() {
+    let mut rng = Pcg64::new(105);
+    for _ in 0..CASES {
+        let ndim = 2 + rng.below(3);
+        let mut shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(6)).collect();
+        if *shape.last().unwrap() < 2 {
+            *shape.last_mut().unwrap() = 2 + rng.below(5);
+        }
+        let numel: usize = shape.iter().product();
+        let t = Tensor::new(shape.clone(), rng.normal_vec(numel)).unwrap();
+        let c = *shape.last().unwrap();
+        let k = 1 + rng.below(c - 1);
+        let (a, b) = split_last_axis(&t, k).unwrap();
+        let back = concat_last_axis(&a, &b).unwrap();
+        assert_eq!(back, t, "shape {shape:?} k={k}");
+    }
+}

@@ -1,0 +1,161 @@
+//! End-to-end training behaviour: loss decreases, checkpoints round-trip,
+//! both executors train to the same place.
+
+mod common;
+
+use common::{batch_for, runtime};
+use invertnet::coordinator::{ExecMode, FlowSession};
+use invertnet::data::Density2d;
+use invertnet::flow::ParamStore;
+use invertnet::train::loop_::tail_mean;
+use invertnet::train::{train, Adam, GradClip, Optimizer, TrainConfig};
+use invertnet::util::rng::Pcg64;
+use invertnet::MemoryLedger;
+
+fn quick_cfg(steps: usize, mode: ExecMode) -> TrainConfig {
+    TrainConfig {
+        steps,
+        mode,
+        clip: Some(GradClip { max_norm: 100.0 }),
+        log_every: usize::MAX,
+        out_dir: None,
+        quiet: true,
+    }
+}
+
+#[test]
+fn loss_decreases_on_two_moons() {
+    let rt = runtime();
+    let session = FlowSession::new(&rt, "realnvp2d", MemoryLedger::new()).unwrap();
+    let mut params = ParamStore::init(&session.def, &rt.manifest, 11).unwrap();
+    let mut opt = Adam::new(2e-3);
+    let mut rng = Pcg64::new(70);
+    let report = train(
+        &session,
+        &mut params,
+        &mut opt,
+        &quick_cfg(120, ExecMode::Invertible),
+        |_| Ok((Density2d::TwoMoons.sample(256, &mut rng), None)),
+    )
+    .unwrap();
+    let head = tail_mean(&report.losses[..10], 10);
+    let tail = tail_mean(&report.losses, 10);
+    assert!(
+        tail < head - 0.3,
+        "no learning: first10 {head:.3} -> last10 {tail:.3}"
+    );
+}
+
+#[test]
+fn both_modes_train_identically() {
+    // identical seeds + data order => identical loss trajectories
+    let rt = runtime();
+    let run = |mode| {
+        let session = FlowSession::new(&rt, "realnvp2d", MemoryLedger::new()).unwrap();
+        let mut params = ParamStore::init(&session.def, &rt.manifest, 21).unwrap();
+        let mut opt = Adam::new(1e-3);
+        let mut rng = Pcg64::new(33);
+        train(
+            &session,
+            &mut params,
+            &mut opt,
+            &quick_cfg(25, mode),
+            |_| Ok((Density2d::TwoMoons.sample(256, &mut rng), None)),
+        )
+        .unwrap()
+        .losses
+    };
+    let li = run(ExecMode::Invertible);
+    let ls = run(ExecMode::Stored);
+    for (step, (a, b)) in li.iter().zip(&ls).enumerate() {
+        assert!(
+            (a - b).abs() <= 5e-3 * a.abs().max(1.0),
+            "step {step}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_loss() {
+    let rt = runtime();
+    let session = FlowSession::new(&rt, "hint8d", MemoryLedger::new()).unwrap();
+    let mut params = ParamStore::init(&session.def, &rt.manifest, 77).unwrap();
+    // perturb from init so the checkpoint is non-trivial
+    let mut opt = Adam::new(1e-3);
+    let mut rng = Pcg64::new(44);
+    let mk = |rng: &mut Pcg64| invertnet::Tensor {
+        shape: vec![256, 8],
+        data: rng.normal_vec(256 * 8),
+    };
+    for _ in 0..3 {
+        let x = mk(&mut rng);
+        let mut r = session
+            .train_step(&x, None, &params, ExecMode::Invertible)
+            .unwrap();
+        GradClip { max_norm: 100.0 }.apply(&mut r.grads);
+        opt.step(&mut params, &r.grads).unwrap();
+    }
+    let x_eval = mk(&mut rng);
+    let loss_before = session
+        .train_step(&x_eval, None, &params, ExecMode::Invertible)
+        .unwrap()
+        .loss;
+
+    let dir = std::env::temp_dir().join(format!("invertnet_ckpt_{}", std::process::id()));
+    params.save(&dir, "hint8d").unwrap();
+
+    let mut params2 = ParamStore::init(&session.def, &rt.manifest, 999).unwrap();
+    params2.load(&dir).unwrap();
+    let loss_after = session
+        .train_step(&x_eval, None, &params2, ExecMode::Invertible)
+        .unwrap()
+        .loss;
+    std::fs::remove_dir_all(&dir).ok();
+    assert!(
+        (loss_before - loss_after).abs() < 1e-5,
+        "{loss_before} vs {loss_after}"
+    );
+}
+
+#[test]
+fn conditional_training_reduces_loss() {
+    let rt = runtime();
+    let session = FlowSession::new(&rt, "cond_realnvp2d", MemoryLedger::new()).unwrap();
+    let mut params = ParamStore::init(&session.def, &rt.manifest, 10).unwrap();
+    let mut opt = Adam::new(2e-3);
+    let prob = invertnet::data::LinearGaussian::default_problem();
+    let mut rng = Pcg64::new(71);
+    let report = train(
+        &session,
+        &mut params,
+        &mut opt,
+        &quick_cfg(100, ExecMode::Invertible),
+        |_| {
+            let (theta, y) = prob.sample(256, &mut rng);
+            Ok((theta, Some(y)))
+        },
+    )
+    .unwrap();
+    let head = tail_mean(&report.losses[..10], 10);
+    let tail = tail_mean(&report.losses, 10);
+    assert!(tail < head - 0.1, "cond flow not learning: {head} -> {tail}");
+}
+
+#[test]
+fn rejects_wrong_shapes() {
+    let rt = runtime();
+    let session = FlowSession::new(&rt, "realnvp2d", MemoryLedger::new()).unwrap();
+    let params = ParamStore::init(&session.def, &rt.manifest, 1).unwrap();
+    let bad = invertnet::Tensor::zeros(&[8, 2]);
+    assert!(session
+        .train_step(&bad, None, &params, ExecMode::Invertible)
+        .is_err());
+    let (x, _) = batch_for(&session, 1);
+    let cond = invertnet::Tensor::zeros(&[256, 2]);
+    assert!(
+        session
+            .train_step(&x, Some(&cond), &params, ExecMode::Invertible)
+            .is_err(),
+        "unconditional net must reject cond input"
+    );
+}
