@@ -3,11 +3,17 @@
 //! GLOW with 3 input channels, batch 8, under a 40 GB budget.
 //!
 //!     cargo bench --bench fig1_memory_vs_size
+//!
+//! Runs hermetically on the RefBackend; set INVERTNET_ARTIFACTS (with a
+//! `--features xla` build) to measure through PJRT instead.
 
-use std::path::PathBuf;
+use invertnet::Engine;
 
 fn main() {
-    let rt = invertnet::Runtime::new(&PathBuf::from("artifacts"))
-        .expect("run `make artifacts` first");
-    invertnet::bench_figs::fig1(&rt, 40.0).unwrap();
+    let mut builder = Engine::builder();
+    if let Ok(dir) = std::env::var("INVERTNET_ARTIFACTS") {
+        builder = builder.artifacts(dir);
+    }
+    let engine = builder.build().expect("engine boot");
+    invertnet::bench_figs::fig1(&engine, 40.0).unwrap();
 }

@@ -1,13 +1,19 @@
 //! Regenerates the paper's Figure 2: peak training memory vs network
-//! depth — constant for the invertible executor, linear for the
-//! autodiff-style stored executor.
+//! depth — constant for the invertible schedule, linear for the
+//! autodiff-style stored schedule.
 //!
 //!     cargo bench --bench fig2_memory_vs_depth
+//!
+//! Runs hermetically on the RefBackend; set INVERTNET_ARTIFACTS (with a
+//! `--features xla` build) to measure through PJRT instead.
 
-use std::path::PathBuf;
+use invertnet::Engine;
 
 fn main() {
-    let rt = invertnet::Runtime::new(&PathBuf::from("artifacts"))
-        .expect("run `make artifacts` first");
-    invertnet::bench_figs::fig2(&rt, 40.0).unwrap();
+    let mut builder = Engine::builder();
+    if let Ok(dir) = std::env::var("INVERTNET_ARTIFACTS") {
+        builder = builder.artifacts(dir);
+    }
+    let engine = builder.build().expect("engine boot");
+    invertnet::bench_figs::fig2(&engine, 40.0).unwrap();
 }

@@ -2,22 +2,19 @@
 //!
 //! The memory savings of invertible backprop are bought with inverse
 //! recomputation in the backward pass; this bench quantifies that
-//! wall-clock trade on the same executables, plus end-to-end train-step
-//! latency for the example networks.
+//! wall-clock trade on the same layer programs, plus end-to-end train-step
+//! latency for the example networks and the checkpoint-hybrid schedule.
 //!
 //!     cargo bench --bench throughput
 
-use std::path::PathBuf;
-
-use invertnet::coordinator::{ExecMode, FlowSession};
+use invertnet::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
 use invertnet::data::synth_images;
-use invertnet::flow::ParamStore;
 use invertnet::util::bench::{bench, report};
 use invertnet::util::rng::Pcg64;
-use invertnet::{MemoryLedger, Runtime, Tensor};
+use invertnet::{Engine, Flow, Tensor};
 
-fn batch_for(session: &FlowSession, rng: &mut Pcg64) -> Tensor {
-    let s = &session.def.in_shape;
+fn batch_for(flow: &Flow, rng: &mut Pcg64) -> Tensor {
+    let s = &flow.def.in_shape;
     if s.len() == 4 {
         synth_images(s[0], s[1], s[2], s[3], rng)
     } else {
@@ -26,21 +23,30 @@ fn batch_for(session: &FlowSession, rng: &mut Pcg64) -> Tensor {
 }
 
 fn main() {
-    let rt = Runtime::new(&PathBuf::from("artifacts"))
-        .expect("run `make artifacts` first");
-    println!("# train-step latency, invertible vs stored (same executables)");
+    let mut builder = Engine::builder();
+    if let Ok(dir) = std::env::var("INVERTNET_ARTIFACTS") {
+        builder = builder.artifacts(dir);
+    }
+    let engine = builder.build().expect("engine boot");
+    println!("# train-step latency, invertible vs stored (same layer programs, \
+              backend {})", engine.backend_name());
     let mut rng = Pcg64::new(11);
     for net in ["realnvp2d", "hint8d", "glow_bench32", "glow_fig2_d8", "hyper16"] {
-        let session = FlowSession::new(&rt, net, MemoryLedger::new()).unwrap();
-        let params = ParamStore::init(&session.def, &rt.manifest, 3).unwrap();
-        let x = batch_for(&session, &mut rng);
+        let flow = engine.flow(net).unwrap();
+        let params = flow.init_params(3).unwrap();
+        let x = batch_for(&flow, &mut rng);
 
+        let schedules: [(&str, &dyn ActivationSchedule); 3] = [
+            ("invertible", &ExecMode::Invertible),
+            ("stored", &ExecMode::Stored),
+            ("checkpoint:4", &CheckpointEveryK(4)),
+        ];
         let mut stats = Vec::new();
-        for mode in [ExecMode::Invertible, ExecMode::Stored] {
+        for (name, sched) in schedules {
             let s = bench(2, 8, || {
-                session.train_step(&x, None, &params, mode).unwrap();
+                flow.train_step(&x, None, &params, sched).unwrap();
             });
-            report(&format!("{net}/{}", mode.name()), &s);
+            report(&format!("{net}/{name}"), &s);
             stats.push(s);
         }
         println!(
@@ -48,26 +54,11 @@ fn main() {
             (stats[0].mean_s / stats[1].mean_s - 1.0) * 100.0
         );
 
-        // phase split: forward-only vs full step (invertible)
+        // phase split: forward-only vs full step
         let fs = bench(1, 8, || {
-            session.forward(&x, None, &params, false).unwrap();
+            flow.forward(&x, None, &params).unwrap();
         });
         report(&format!("{net}/forward_only"), &fs);
-
-        // whole-network XLA-fused full-AD program (the upper bound a
-        // monolithic AD framework could reach; no per-layer dispatch)
-        if rt.manifest.monoliths.contains_key(net) {
-            let mono = rt.monolith_entry(net).unwrap();
-            let x_lit = x.to_literal().unwrap();
-            let flat: Vec<xla::Literal> = params.tensors.iter().flatten()
-                .map(|t| t.to_literal().unwrap()).collect();
-            let s = bench(2, 8, || {
-                let mut args = vec![&x_lit];
-                args.extend(flat.iter());
-                mono.execute_t(&args).unwrap();
-            });
-            report(&format!("{net}/full_vjp_monolith"), &s);
-        }
-        rt.clear_cache();
+        engine.clear_cache();
     }
 }

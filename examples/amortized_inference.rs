@@ -10,14 +10,14 @@
 //!     cargo run --release --example amortized_inference
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::Result;
-use invertnet::coordinator::{ExecMode, FlowSession};
+use invertnet::coordinator::ExecMode;
 use invertnet::data::LinearGaussian;
-use invertnet::flow::ParamStore;
 use invertnet::train::{train, Adam, GradClip, TrainConfig};
 use invertnet::util::rng::Pcg64;
-use invertnet::{MemoryLedger, Runtime, Tensor};
+use invertnet::{Engine, Tensor};
 
 fn mean_cov(points: &Tensor) -> ([f64; 2], [[f64; 2]; 2]) {
     let n = points.batch();
@@ -48,9 +48,9 @@ fn mean_cov(points: &Tensor) -> ([f64; 2], [[f64; 2]; 2]) {
 fn main() -> Result<()> {
     let steps: usize = std::env::var("AMORTIZED_STEPS")
         .ok().and_then(|s| s.parse().ok()).unwrap_or(800);
-    let rt = Runtime::new(&PathBuf::from("artifacts"))?;
-    let session = FlowSession::new(&rt, "cond_realnvp2d", MemoryLedger::new())?;
-    let mut params = ParamStore::init(&session.def, &rt.manifest, 42)?;
+    let engine = Engine::builder().build()?;
+    let flow = engine.flow("cond_realnvp2d")?;
+    let mut params = flow.init_params(42)?;
     let prob = LinearGaussian::default_problem();
     println!("amortized posterior p(theta|y), y = A theta + eps: \
               {} params", params.param_count());
@@ -58,14 +58,14 @@ fn main() -> Result<()> {
     let mut opt = Adam::new(2e-3);
     let cfg = TrainConfig {
         steps,
-        mode: ExecMode::Invertible,
+        schedule: Arc::new(ExecMode::Invertible),
         clip: Some(GradClip { max_norm: 100.0 }),
         log_every: 100,
         out_dir: Some(PathBuf::from("runs/amortized")),
         quiet: false,
     };
     let mut rng = Pcg64::new(5);
-    let report = train(&session, &mut params, &mut opt, &cfg, |_| {
+    let report = train(&flow, &mut params, &mut opt, &cfg, |_| {
         let (theta, y) = prob.sample(256, &mut rng);
         Ok((theta, Some(y)))
     })?;
@@ -85,7 +85,7 @@ fn main() -> Result<()> {
         let mut all = Vec::new();
         for _ in 0..32 {
             all.extend_from_slice(
-                &session.sample(&params, Some(&cond), &mut smp_rng)?.data);
+                &flow.sample(&params, Some(&cond), &mut smp_rng)?.data);
         }
         let pts = Tensor::new(vec![32 * 256, 2], all)?;
         let (mu, cov) = mean_cov(&pts);

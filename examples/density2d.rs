@@ -3,19 +3,20 @@
 //!
 //!     cargo run --release --example density2d [-- two-moons|eight-gaussians|checkerboard|spiral]
 //!
-//! Trains, reports held-out NLL, and writes model samples + a coarse
-//! density histogram comparison against the target.
+//! Trains (hermetically, on the RefBackend), reports held-out NLL, and
+//! writes model samples + a coarse density histogram comparison against
+//! the target.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::Result;
-use invertnet::coordinator::{ExecMode, FlowSession};
+use invertnet::coordinator::ExecMode;
 use invertnet::data::Density2d;
-use invertnet::flow::ParamStore;
 use invertnet::train::loop_::tail_mean;
 use invertnet::train::{train, Adam, GradClip, TrainConfig};
 use invertnet::util::rng::Pcg64;
-use invertnet::{MemoryLedger, Runtime, Tensor};
+use invertnet::{Engine, Tensor};
 
 /// 2-D histogram over [-3,3]^2 as a flat row-major grid.
 fn hist2d(points: &Tensor, bins: usize) -> Vec<f64> {
@@ -43,23 +44,23 @@ fn main() -> Result<()> {
     let steps: usize = std::env::var("DENSITY2D_STEPS")
         .ok().and_then(|s| s.parse().ok()).unwrap_or(600);
 
-    let rt = Runtime::new(&PathBuf::from("artifacts"))?;
-    let session = FlowSession::new(&rt, "realnvp2d", MemoryLedger::new())?;
-    let mut params = ParamStore::init(&session.def, &rt.manifest, 42)?;
+    let engine = Engine::builder().build()?;
+    let flow = engine.flow("realnvp2d")?;
+    let mut params = flow.init_params(42)?;
     println!("realnvp2d on {which}: {} params, {} coupling blocks",
-             params.param_count(), session.def.depth() / 2);
+             params.param_count(), flow.def.depth() / 2);
 
     let mut opt = Adam::new(2e-3);
     let cfg = TrainConfig {
         steps,
-        mode: ExecMode::Invertible,
+        schedule: Arc::new(ExecMode::Invertible),
         clip: Some(GradClip { max_norm: 100.0 }),
         log_every: 50,
         out_dir: Some(PathBuf::from(format!("runs/density2d_{which}"))),
         quiet: false,
     };
     let mut rng = Pcg64::new(9);
-    let report = train(&session, &mut params, &mut opt, &cfg, |_| {
+    let report = train(&flow, &mut params, &mut opt, &cfg, |_| {
         Ok((density.sample(256, &mut rng), None))
     })?;
     println!("loss {:.4} -> {:.4}", report.losses[0],
@@ -71,7 +72,7 @@ fn main() -> Result<()> {
     let eval_batches = 8;
     for _ in 0..eval_batches {
         let x = density.sample(256, &mut eval_rng);
-        let ll = session.log_likelihood(&x, None, &params)?;
+        let ll = flow.log_likelihood(&x, None, &params)?;
         nll -= ll.iter().sum::<f32>() as f64 / ll.len() as f64;
     }
     nll /= eval_batches as f64;
@@ -82,7 +83,7 @@ fn main() -> Result<()> {
     let mut smp_rng = Pcg64::new(77);
     let mut samples = Vec::new();
     for _ in 0..16 {
-        samples.extend_from_slice(&session.sample(&params, None, &mut smp_rng)?.data);
+        samples.extend_from_slice(&flow.sample(&params, None, &mut smp_rng)?.data);
     }
     let model_pts = Tensor::new(vec![16 * 256, 2], samples)?;
     let target_pts = density.sample(16 * 256, &mut eval_rng);

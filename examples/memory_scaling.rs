@@ -2,16 +2,21 @@
 //! Fig. 2 sweep and prints the invertible-vs-stored peak-memory tables.
 //!
 //!     cargo run --release --example memory_scaling
-
-use std::path::PathBuf;
+//!
+//! Hermetic by default (RefBackend); set INVERTNET_ARTIFACTS with a
+//! `--features xla` build to measure through PJRT.
 
 use anyhow::Result;
-use invertnet::{bench_figs, Runtime};
+use invertnet::{bench_figs, Engine};
 
 fn main() -> Result<()> {
-    let rt = Runtime::new(&PathBuf::from("artifacts"))?;
-    bench_figs::fig2(&rt, 40.0)?;
+    let mut builder = Engine::builder();
+    if let Ok(dir) = std::env::var("INVERTNET_ARTIFACTS") {
+        builder = builder.artifacts(dir);
+    }
+    let engine = builder.build()?;
+    bench_figs::fig2(&engine, 40.0)?;
     println!();
-    bench_figs::fig1(&rt, 40.0)?;
+    bench_figs::fig1(&engine, 40.0)?;
     Ok(())
 }

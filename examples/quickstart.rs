@@ -1,64 +1,65 @@
 //! Quickstart + end-to-end driver: train a multiscale GLOW on synthetic
-//! images with the memory-frugal invertible executor, log the bits/dim
+//! images with the memory-frugal invertible schedule, log the bits/dim
 //! curve, check invertibility, and draw samples.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! This is the EXPERIMENTS.md §E2E run: all three layers compose (Pallas
-//! kernels -> JAX layer programs -> rust coordinator) on a real training
-//! workload.
+//! Hermetic by default (RefBackend + builtin catalog); set
+//! INVERTNET_ARTIFACTS with a `--features xla` build to run the same
+//! workload through PJRT.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::Result;
-use invertnet::coordinator::{ExecMode, FlowSession};
+use invertnet::coordinator::{ActivationSchedule, ExecMode};
 use invertnet::data::synth_images;
-use invertnet::flow::ParamStore;
 use invertnet::train::loop_::tail_mean;
 use invertnet::train::{train, Adam, GradClip, TrainConfig};
 use invertnet::util::bench::fmt_bytes;
 use invertnet::util::rng::Pcg64;
-use invertnet::{MemoryLedger, Runtime};
+use invertnet::Engine;
 
 const LN2: f32 = std::f32::consts::LN_2;
 
 fn main() -> Result<()> {
-    let artifacts = PathBuf::from(
-        std::env::var("INVERTNET_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()));
     let steps: usize = std::env::var("QUICKSTART_STEPS")
         .ok().and_then(|s| s.parse().ok()).unwrap_or(300);
 
-    let rt = Runtime::new(&artifacts)?;
-    let ledger = MemoryLedger::new();
-    let session = FlowSession::new(&rt, "glow16", ledger.clone())?;
-    let mut params = ParamStore::init(&session.def, &rt.manifest, 42)?;
-    let dims = session.def.dims_per_sample() as f32;
+    let mut builder = Engine::builder();
+    if let Ok(dir) = std::env::var("INVERTNET_ARTIFACTS") {
+        builder = builder.artifacts(dir);
+    }
+    let engine = builder.build()?;
+    let flow = engine.flow("glow16")?;
+    let mut params = flow.init_params(42)?;
+    let dims = flow.def.dims_per_sample() as f32;
     println!(
-        "glow16: {} params, depth {}, input {:?}, latents {:?}",
-        params.param_count(), session.def.depth(),
-        session.def.in_shape, session.def.latent_shapes
+        "glow16 ({} backend): {} params, depth {}, input {:?}, latents {:?}",
+        flow.backend_name(), params.param_count(), flow.def.depth(),
+        flow.def.in_shape, flow.def.latent_shapes
     );
 
     // pre-training invertibility check (the library's CI guarantee)
     let mut rng = Pcg64::new(7);
-    let s = &session.def.in_shape;
+    let s = &flow.def.in_shape;
     let x0 = synth_images(s[0], s[1], s[2], s[3], &mut rng);
-    let rt_err = session.roundtrip_error(&x0, None, &params)?;
+    let rt_err = flow.roundtrip_error(&x0, None, &params)?;
     println!("roundtrip |x - inv(fwd(x))|_inf = {rt_err:.2e}");
     assert!(rt_err < 2e-3);
 
     let mut opt = Adam::new(1e-3);
     let cfg = TrainConfig {
         steps,
-        mode: ExecMode::Invertible,
+        schedule: Arc::new(ExecMode::Invertible),
         clip: Some(GradClip { max_norm: 200.0 }),
         log_every: 20,
         out_dir: Some(PathBuf::from("runs/quickstart")),
         quiet: false,
     };
     let mut data_rng = Pcg64::new(1234);
-    let in_shape = session.def.in_shape.clone();
-    let report = train(&session, &mut params, &mut opt, &cfg, move |_| {
+    let in_shape = flow.def.in_shape.clone();
+    let report = train(&flow, &mut params, &mut opt, &cfg, move |_| {
         Ok((synth_images(in_shape[0], in_shape[1], in_shape[2], in_shape[3],
                          &mut data_rng), None))
     })?;
@@ -71,9 +72,9 @@ fn main() -> Result<()> {
         bpd(report.losses[0]), bpd(report.final_loss)
     );
     println!(
-        "peak scheduling memory {}  ({:.1} steps/s, mode={})",
+        "peak scheduling memory {}  ({:.1} steps/s, schedule={})",
         fmt_bytes(report.peak_sched_bytes as u64),
-        report.steps_per_sec, cfg.mode.name()
+        report.steps_per_sec, cfg.schedule.label()
     );
     assert!(
         tail_mean(&report.losses, 20) < report.losses[0],
@@ -81,7 +82,7 @@ fn main() -> Result<()> {
     );
 
     // draw a batch of samples from the trained model
-    let samples = session.sample(&params, None, &mut rng)?;
+    let samples = flow.sample(&params, None, &mut rng)?;
     invertnet::tensor::npy::save(
         &PathBuf::from("runs/quickstart/samples.npy"), &samples)?;
     println!("samples -> runs/quickstart/samples.npy  {:?}", samples.shape);

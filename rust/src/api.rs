@@ -1,0 +1,259 @@
+//! Public facade: [`Engine`] owns a backend + manifest; [`Engine::flow`]
+//! hands out owned, `Send` [`Flow`] handles that train / sample / invert
+//! one network.
+//!
+//! ```text
+//! let engine = Engine::builder().build()?;            // RefBackend, builtin catalog
+//! let flow   = engine.flow("realnvp2d")?;             // owned handle
+//! let params = flow.init_params(42)?;
+//! let step   = flow.train_step(&x, None, &params, &ExecMode::Invertible)?;
+//! ```
+//!
+//! This replaces the old `FlowSession<'rt>`-borrows-`Runtime` pattern: a
+//! `Flow` holds `Arc`s to its backend/manifest, so it has no lifetime tie
+//! to the engine and can move across threads.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::backend::{Backend, RefBackend};
+use crate::coordinator::memory::MemoryLedger;
+use crate::flow::{NetworkDef, ParamStore, StepKind};
+use crate::runtime::{builtin_manifest, Manifest};
+
+/// Backend + manifest pair; cheap to clone flows out of.
+pub struct Engine {
+    backend: Arc<dyn Backend>,
+    manifest: Arc<Manifest>,
+}
+
+/// Builder for [`Engine`].
+///
+/// * no options: builtin catalog + [`RefBackend`] (hermetic default);
+/// * `.artifacts(dir)`: load `dir/manifest.json`; with `--features xla`
+///   and no explicit backend this also selects the XLA backend, otherwise
+///   the RefBackend executes the same networks natively;
+/// * `.backend(b)`: explicit backend override.
+#[derive(Default)]
+pub struct EngineBuilder {
+    artifacts: Option<PathBuf>,
+    backend: Option<Arc<dyn Backend>>,
+}
+
+impl EngineBuilder {
+    /// Use an AOT artifact directory as the manifest source.
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Execute on an explicit backend.
+    pub fn backend(mut self, backend: Arc<dyn Backend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    pub fn build(self) -> Result<Engine> {
+        let manifest: Arc<Manifest> = match &self.artifacts {
+            Some(dir) => Arc::new(Manifest::load(dir)
+                .with_context(|| format!("loading artifacts from {dir:?}"))?),
+            None => Arc::new(builtin_manifest()),
+        };
+        let backend: Arc<dyn Backend> = match self.backend {
+            Some(b) => b,
+            None => default_backend(self.artifacts.as_deref(), &manifest)?,
+        };
+        Ok(Engine { backend, manifest })
+    }
+}
+
+#[cfg(feature = "xla")]
+fn default_backend(artifacts: Option<&Path>, manifest: &Arc<Manifest>)
+                   -> Result<Arc<dyn Backend>> {
+    match artifacts {
+        Some(dir) => Ok(Arc::new(
+            crate::backend::XlaBackend::with_manifest(dir, manifest.clone())?)),
+        None => Ok(Arc::new(RefBackend::new())),
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn default_backend(_artifacts: Option<&Path>, _manifest: &Arc<Manifest>)
+                   -> Result<Arc<dyn Backend>> {
+    Ok(Arc::new(RefBackend::new()))
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Shorthand for the hermetic default: builtin catalog + RefBackend.
+    pub fn native() -> Result<Engine> {
+        Engine::builder().build()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The underlying execution backend (for tooling like the profiler).
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// Drop backend executable caches (bench hygiene between configs).
+    pub fn clear_cache(&self) {
+        self.backend.clear_cache()
+    }
+
+    /// An owned flow handle over `net` with a fresh memory ledger.
+    pub fn flow(&self, net: &str) -> Result<Flow> {
+        self.flow_with_ledger(net, MemoryLedger::new())
+    }
+
+    /// An owned flow handle charging its buffers to `ledger` (shared
+    /// ledgers let callers impose budgets / read peaks).
+    pub fn flow_with_ledger(&self, net: &str, ledger: Arc<MemoryLedger>)
+                            -> Result<Flow> {
+        let def = NetworkDef::resolve(&self.manifest, net)?;
+        Ok(Flow {
+            backend: self.backend.clone(),
+            manifest: self.manifest.clone(),
+            def,
+            ledger,
+        })
+    }
+}
+
+/// An owned, `Send` handle on one network: train / forward / sample /
+/// invert / inspect. The scheduling algorithms live in
+/// `coordinator::executor` (an `impl Flow` block there).
+pub struct Flow {
+    pub(crate) backend: Arc<dyn Backend>,
+    pub(crate) manifest: Arc<Manifest>,
+    pub def: NetworkDef,
+    pub(crate) ledger: Arc<MemoryLedger>,
+}
+
+impl Flow {
+    /// Leading (batch) dimension of the network input.
+    pub fn batch(&self) -> usize {
+        self.def.in_shape[0]
+    }
+
+    /// Random-initialize a parameter store for this network.
+    pub fn init_params(&self, seed: u64) -> Result<ParamStore> {
+        ParamStore::init(&self.def, &self.manifest, seed)
+    }
+
+    pub fn ledger(&self) -> &Arc<MemoryLedger> {
+        &self.ledger
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Human-readable step table (the `invertnet inspect` payload).
+    pub fn inspect(&self) -> Result<String> {
+        use std::fmt::Write as _;
+        let def = &self.def;
+        let mut out = String::new();
+        writeln!(out, "network {}: input {:?}, cond {:?}",
+                 def.name, def.in_shape, def.cond_shape).ok();
+        let mut total_params = 0usize;
+        for (i, s) in def.steps.iter().enumerate() {
+            let (kind, nparams) = match s.kind {
+                StepKind::Split { zc } => (format!("split(zc={zc})"), 0),
+                StepKind::Layer => {
+                    let m = self.manifest.layer(&s.sig)?;
+                    (m.kind.clone(), m.param_count())
+                }
+            };
+            total_params += nparams;
+            writeln!(
+                out,
+                "  [{i:>3}] {kind:<12} {:>18} -> {:<18} {:>9} params   {}",
+                format!("{:?}", s.in_shape),
+                format!("{:?}", s.out_shape),
+                nparams,
+                s.sig
+            ).ok();
+        }
+        writeln!(out, "latents: {:?}", def.latent_shapes).ok();
+        writeln!(out, "total params: {total_params}").ok();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ExecMode;
+    use crate::data::Density2d;
+    use crate::util::rng::Pcg64;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn engine_and_flow_are_send_sync() {
+        assert_send_sync::<Engine>();
+        assert_send_sync::<Flow>();
+    }
+
+    #[test]
+    fn builder_defaults_to_ref_backend_and_builtin_catalog() {
+        let engine = Engine::builder().build().unwrap();
+        assert_eq!(engine.backend_name(), "ref");
+        assert_eq!(engine.manifest().backend, "ref-builtin");
+        assert!(engine.flow("realnvp2d").is_ok());
+        assert!(engine.flow("no_such_net").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_dir_is_a_clear_error() {
+        let err = Engine::builder()
+            .artifacts("/definitely/not/here")
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("artifacts"), "{err:#}");
+    }
+
+    #[test]
+    fn flow_handle_works_across_threads() {
+        let engine = Engine::native().unwrap();
+        let flow = engine.flow("realnvp2d").unwrap();
+        drop(engine); // the handle is self-contained
+        let handle = std::thread::spawn(move || {
+            let params = flow.init_params(7).unwrap();
+            let mut rng = Pcg64::new(5);
+            let x = Density2d::TwoMoons.sample(flow.batch(), &mut rng);
+            flow.train_step(&x, None, &params, &ExecMode::Invertible)
+                .unwrap()
+                .loss
+        });
+        let loss = handle.join().unwrap();
+        assert!(loss.is_finite());
+    }
+
+    #[test]
+    fn inspect_renders_the_step_table() {
+        let engine = Engine::native().unwrap();
+        let flow = engine.flow("glow16").unwrap();
+        let table = flow.inspect().unwrap();
+        assert!(table.contains("glow16"));
+        assert!(table.contains("split(zc=6)"));
+        assert!(table.contains("total params:"));
+    }
+}

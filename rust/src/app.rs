@@ -1,0 +1,337 @@
+//! CLI dispatch for the `invertnet` binary (kept in the library so the
+//! command paths are integration-testable).
+//!
+//! ```text
+//! invertnet train   --net realnvp2d --data two-moons --steps 500
+//!                   [--mode invertible|stored|checkpoint:K]
+//! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
+//! invertnet bench   fig1|fig2   [--budget-gb 40]
+//! invertnet inspect --net glow16
+//! invertnet profile --net glow16 [--iters 5]
+//! invertnet list
+//! ```
+//!
+//! Every subcommand accepts `--backend ref|xla` (default `ref`: the
+//! artifact-free pure-Rust backend over the builtin catalog) and
+//! `--artifacts DIR` (load a manifest produced by `python -m compile.aot`;
+//! required for `--backend xla`).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::api::Engine;
+use crate::backend::RefBackend;
+use crate::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
+use crate::data::{synth_images, Density2d, LinearGaussian};
+use crate::train::{train, Adam, GradClip, TrainConfig};
+use crate::util::bench::fmt_bytes;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use crate::Tensor;
+
+pub const USAGE: &str = "\
+invertnet — memory-frugal normalizing flows (InvertibleNetworks.jl reproduction)
+
+USAGE:
+  invertnet train   --net NAME [--data two-moons|eight-gaussians|checkerboard|spiral|images|linear-gaussian]
+                    [--steps N] [--lr F] [--mode invertible|stored|checkpoint:K] [--seed N]
+                    [--out DIR] [--clip F] [--log-every N] [--quiet]
+  invertnet sample  --net NAME [--ckpt DIR] [--out FILE.npy] [--batches N] [--seed N]
+  invertnet bench   fig1|fig2 [--budget-gb F]
+  invertnet inspect --net NAME
+  invertnet profile --net NAME [--iters N]
+  invertnet list
+
+COMMON OPTIONS:
+  --backend ref|xla   execution backend (default: ref — pure Rust, no artifacts)
+  --artifacts DIR     manifest/artifact directory (required for --backend xla)
+";
+
+/// Parse argv and dispatch. Unknown subcommands are an error; no
+/// subcommand prints the usage text.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("sample") => cmd_sample(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("profile") => {
+            let engine = engine_of(&args)?;
+            crate::profile::profile_network(
+                &engine, args.req("net")?, args.usize_or("iters", 5)?)
+        }
+        Some("list") => cmd_list(&args),
+        Some(other) => {
+            eprintln!("{USAGE}");
+            bail!("unknown subcommand {other:?}")
+        }
+        None => {
+            eprintln!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+/// Build the engine a subcommand asked for (`--backend`, `--artifacts`).
+fn engine_of(args: &Args) -> Result<Engine> {
+    let artifacts = args.get("artifacts").map(PathBuf::from);
+    let mut builder = Engine::builder();
+    if let Some(dir) = &artifacts {
+        builder = builder.artifacts(dir);
+    }
+    match args.str_or("backend", "ref") {
+        "ref" => Ok(builder.backend(Arc::new(RefBackend::new())).build()?),
+        "xla" => {
+            if artifacts.is_none() {
+                bail!("--backend xla requires --artifacts DIR");
+            }
+            // with artifacts set and no explicit backend, build() selects
+            // XlaBackend sharing the loaded manifest (xla feature only)
+            xla_engine(builder)
+        }
+        other => bail!("unknown --backend {other:?} (ref|xla)"),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn xla_engine(builder: crate::api::EngineBuilder) -> Result<Engine> {
+    builder.build()
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_engine(_builder: crate::api::EngineBuilder) -> Result<Engine> {
+    bail!("this build has no xla support; rebuild with --features xla")
+}
+
+/// Parse `--mode` into a schedule: `invertible`, `stored`, `checkpoint:K`.
+fn schedule_of(args: &Args) -> Result<Arc<dyn ActivationSchedule>> {
+    let spec = args.str_or("mode", "invertible");
+    if let Some(k) = spec.strip_prefix("checkpoint:") {
+        let k: usize = k.parse()
+            .map_err(|e| anyhow::anyhow!("--mode checkpoint:K — bad K: {e}"))?;
+        if k == 0 {
+            bail!("--mode checkpoint:K needs K >= 1");
+        }
+        return Ok(Arc::new(CheckpointEveryK(k)));
+    }
+    match spec {
+        "invertible" => Ok(Arc::new(ExecMode::Invertible)),
+        "stored" => Ok(Arc::new(ExecMode::Stored)),
+        other => bail!("unknown --mode {other:?} \
+                        (invertible|stored|checkpoint:K)"),
+    }
+}
+
+/// Pick a sensible default data source for a network's input shape.
+fn default_data(in_shape: &[usize], cond: bool) -> &'static str {
+    if cond {
+        "linear-gaussian"
+    } else if in_shape.len() == 2 {
+        "two-moons"
+    } else {
+        "images"
+    }
+}
+
+/// Build the batch closure for a (network, data source) pair.
+#[allow(clippy::type_complexity)]
+fn batcher(
+    data: &str,
+    in_shape: Vec<usize>,
+    cond: bool,
+    seed: u64,
+) -> Result<Box<dyn FnMut(usize) -> Result<(Tensor, Option<Tensor>)>>> {
+    let mut rng = Pcg64::new(seed ^ 0xda7a);
+    match data {
+        "images" => {
+            if in_shape.len() != 4 {
+                bail!("--data images needs an image network");
+            }
+            Ok(Box::new(move |_| {
+                let (n, h, w, c) = (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+                Ok((synth_images(n, h, w, c, &mut rng), None))
+            }))
+        }
+        "linear-gaussian" => {
+            if !cond {
+                bail!("--data linear-gaussian needs a conditional network");
+            }
+            let prob = LinearGaussian::default_problem();
+            let n = in_shape[0];
+            Ok(Box::new(move |_| {
+                let (theta, y) = prob.sample(n, &mut rng);
+                Ok((theta, Some(y)))
+            }))
+        }
+        name => {
+            let d = Density2d::parse(name)?;
+            if in_shape.len() != 2 || cond {
+                bail!("--data {name} needs an unconditional dense network");
+            }
+            let n = in_shape[0];
+            Ok(Box::new(move |_| Ok((d.sample(n, &mut rng), None))))
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let net = args.req("net")?;
+    let engine = engine_of(args)?;
+    let flow = engine.flow(net)?;
+    let seed = args.u64_or("seed", 42)?;
+    let mut params = flow.init_params(seed)?;
+    let mut opt = Adam::new(args.f64_or("lr", 1e-3)? as f32);
+
+    let cond = flow.def.cond_shape.is_some();
+    let data = args
+        .get("data")
+        .unwrap_or(default_data(&flow.def.in_shape, cond));
+    let next = batcher(data, flow.def.in_shape.clone(), cond, seed)?;
+
+    let cfg = TrainConfig {
+        steps: args.usize_or("steps", 200)?,
+        schedule: schedule_of(args)?,
+        clip: Some(GradClip { max_norm: args.f64_or("clip", 50.0)? as f32 }),
+        log_every: args.usize_or("log-every", 10)?,
+        out_dir: args.get("out").map(PathBuf::from),
+        quiet: args.flag("quiet"),
+    };
+
+    eprintln!(
+        "training {net} ({} params, depth {}, schedule {}, backend {}) on {data}",
+        params.param_count(),
+        flow.def.depth(),
+        cfg.schedule.label(),
+        flow.backend_name(),
+    );
+    let report = train(&flow, &mut params, &mut opt, &cfg, next)?;
+    println!(
+        "final_loss {:.4}  peak_sched {}  {:.2} steps/s",
+        report.final_loss,
+        fmt_bytes(report.peak_sched_bytes as u64),
+        report.steps_per_sec
+    );
+    Ok(())
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let net = args.req("net")?;
+    let engine = engine_of(args)?;
+    let flow = engine.flow(net)?;
+    let mut params = flow.init_params(42)?;
+    if let Some(ckpt) = args.get("ckpt") {
+        params.load(Path::new(ckpt))?;
+    }
+    if flow.def.cond_shape.is_some() {
+        bail!("use the amortized_inference example for conditional sampling");
+    }
+    let mut rng = Pcg64::new(args.u64_or("seed", 7)?);
+    let batches = args.usize_or("batches", 1)?;
+    let mut all: Vec<f32> = Vec::new();
+    let mut shape = flow.def.in_shape.clone();
+    for _ in 0..batches {
+        let x = flow.sample(&params, None, &mut rng)?;
+        all.extend_from_slice(&x.data);
+    }
+    shape[0] *= batches;
+    let out = args.str_or("out", "samples.npy");
+    crate::tensor::npy::save(Path::new(out), &Tensor::new(shape, all)?)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let engine = engine_of(args)?;
+    let flow = engine.flow(args.req("net")?)?;
+    print!("{}", flow.inspect()?);
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let engine = engine_of(args)?;
+    println!("manifest: {}   backend: {}",
+             engine.manifest().backend, engine.backend_name());
+    println!("{:<24} {:>18} {:>7} {:>9}", "network", "input", "depth", "params");
+    let names: Vec<String> = engine.manifest().networks.keys().cloned().collect();
+    for name in names {
+        let flow = engine.flow(&name)?;
+        let params = flow.def.param_count(engine.manifest())?;
+        println!(
+            "{name:<24} {:>18} {:>7} {:>9}",
+            format!("{:?}", flow.def.in_shape),
+            flow.def.depth(),
+            params
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// bench fig1 / fig2 — the paper's two figures, printed as tables.
+// (The harness-less benches in benches/ wrap the same routines; this
+// subcommand is the quick interactive path.)
+// ---------------------------------------------------------------------------
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.subcommand.get(1).map(|s| s.as_str());
+    let budget_gb = args.f64_or("budget-gb", 40.0)?;
+    let engine = engine_of(args)?;
+    match which {
+        Some("fig1") => crate::bench_figs::fig1(&engine, budget_gb),
+        Some("fig2") => crate::bench_figs::fig2(&engine, budget_gb),
+        _ => bail!("usage: invertnet bench fig1|fig2"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(words: &[&str]) -> Vec<String> {
+        words.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn no_subcommand_prints_usage_ok() {
+        assert!(run(&argv(&[])).is_ok());
+    }
+
+    #[test]
+    fn unknown_subcommand_is_an_error() {
+        let err = run(&argv(&["frobnicate"])).unwrap_err();
+        assert!(err.to_string().contains("unknown subcommand"), "{err:#}");
+    }
+
+    #[test]
+    fn schedule_parsing() {
+        let a = Args::parse(&argv(&["train", "--mode", "stored"])).unwrap();
+        assert_eq!(schedule_of(&a).unwrap().label(), "stored");
+        let a = Args::parse(&argv(&["train", "--mode", "checkpoint:4"])).unwrap();
+        assert_eq!(schedule_of(&a).unwrap().label(), "checkpoint_every_4");
+        let a = Args::parse(&argv(&["train"])).unwrap();
+        assert_eq!(schedule_of(&a).unwrap().label(), "invertible");
+        let a = Args::parse(&argv(&["train", "--mode", "sideways"])).unwrap();
+        assert!(schedule_of(&a).is_err());
+        let a = Args::parse(&argv(&["train", "--mode", "checkpoint:0"])).unwrap();
+        assert!(schedule_of(&a).is_err());
+    }
+
+    #[test]
+    fn xla_backend_requires_artifacts_flag() {
+        let a = Args::parse(&argv(&["list", "--backend", "xla"])).unwrap();
+        let err = engine_of(&a).unwrap_err();
+        assert!(err.to_string().contains("--artifacts"), "{err:#}");
+        let a = Args::parse(&argv(&["list", "--backend", "warp"])).unwrap();
+        assert!(engine_of(&a).is_err());
+    }
+
+    #[test]
+    fn list_and_inspect_run_on_the_builtin_catalog() {
+        assert!(run(&argv(&["list"])).is_ok());
+        assert!(run(&argv(&["inspect", "--net", "glow16"])).is_ok());
+        assert!(run(&argv(&["inspect", "--net", "nope"])).is_err());
+    }
+}

@@ -1,0 +1,593 @@
+//! Dense math kernels for the pure-Rust [`super::RefBackend`]: SAME-padded
+//! NHWC convolution with its input/weight VJPs, small matmuls, conditioner
+//! networks (CNN/MLP) with hand-written pullbacks, and the Householder
+//! orthogonal parameterization used by Conv1x1.
+//!
+//! Every routine here was cross-validated against the JAX reference layers
+//! in `python/compile/layers/` before being transcribed (forward, inverse
+//! and gradient paths all agree to f32 precision).
+
+use crate::tensor::Tensor;
+
+fn dims4(t: &Tensor) -> (usize, usize, usize, usize) {
+    assert_eq!(t.shape.len(), 4, "expected rank-4 tensor, got {:?}", t.shape);
+    (t.shape[0], t.shape[1], t.shape[2], t.shape[3])
+}
+
+fn dims2(t: &Tensor) -> (usize, usize) {
+    assert_eq!(t.shape.len(), 2, "expected rank-2 tensor, got {:?}", t.shape);
+    (t.shape[0], t.shape[1])
+}
+
+// ---------------------------------------------------------------------------
+// Convolution (stride 1, SAME, NHWC x HWIO) + VJPs
+// ---------------------------------------------------------------------------
+
+/// y[b,i,j,o] = sum_{di,dj,c} x[b, i+di-ph, j+dj-pw, c] * w[di,dj,c,o]
+/// with zero padding (odd kernels: 1x1 or 3x3 here).
+pub fn conv2d_same(x: &Tensor, w: &Tensor) -> Tensor {
+    let (n, h, wd, ci) = dims4(x);
+    let (kh, kw, wci, co) = dims4(w);
+    assert_eq!(ci, wci, "conv channel mismatch: {ci} vs {wci}");
+    let (ph, pw) = (kh / 2, kw / 2);
+    let mut out = vec![0.0f32; n * h * wd * co];
+    for b in 0..n {
+        for i in 0..h {
+            for j in 0..wd {
+                let orow = &mut out[((b * h + i) * wd + j) * co..][..co];
+                for di in 0..kh {
+                    let si = (i + di).wrapping_sub(ph);
+                    if si >= h {
+                        continue;
+                    }
+                    for dj in 0..kw {
+                        let sj = (j + dj).wrapping_sub(pw);
+                        if sj >= wd {
+                            continue;
+                        }
+                        let xrow = &x.data[((b * h + si) * wd + sj) * ci..][..ci];
+                        let wblk = &w.data[(di * kw + dj) * ci * co..][..ci * co];
+                        for (ii, &xv) in xrow.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = &wblk[ii * co..][..co];
+                            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor { shape: vec![n, h, wd, co], data: out }
+}
+
+/// Spatially flip and swap the I/O axes of an HWIO kernel:
+/// (kh,kw,ci,co) -> (kh,kw,co,ci). `conv2d_same(dy, flip_swap(w))` is the
+/// adjoint of `conv2d_same(., w)` for stride-1 SAME odd kernels.
+pub fn flip_swap(w: &Tensor) -> Tensor {
+    let (kh, kw, ci, co) = dims4(w);
+    let mut out = vec![0.0f32; w.data.len()];
+    for di in 0..kh {
+        for dj in 0..kw {
+            for ii in 0..ci {
+                for oo in 0..co {
+                    let src = ((di * kw + dj) * ci + ii) * co + oo;
+                    let dst = (((kh - 1 - di) * kw + (kw - 1 - dj)) * co + oo)
+                        * ci + ii;
+                    out[dst] = w.data[src];
+                }
+            }
+        }
+    }
+    Tensor { shape: vec![kh, kw, co, ci], data: out }
+}
+
+/// dL/dx of `conv2d_same(x, w)` given dL/dy.
+pub fn conv2d_vjp_x(dy: &Tensor, w: &Tensor) -> Tensor {
+    conv2d_same(dy, &flip_swap(w))
+}
+
+/// dL/dw of `conv2d_same(x, w)` given dL/dy:
+/// dw[di,dj,c,o] = sum_{b,i,j} x[b, i+di-ph, j+dj-pw, c] * dy[b,i,j,o].
+pub fn conv2d_vjp_w(x: &Tensor, dy: &Tensor, kh: usize, kw: usize) -> Tensor {
+    let (n, h, wd, ci) = dims4(x);
+    let (_, _, _, co) = dims4(dy);
+    let (ph, pw) = (kh / 2, kw / 2);
+    let mut dw = vec![0.0f32; kh * kw * ci * co];
+    for b in 0..n {
+        for i in 0..h {
+            for j in 0..wd {
+                let dyrow = &dy.data[((b * h + i) * wd + j) * co..][..co];
+                for di in 0..kh {
+                    let si = (i + di).wrapping_sub(ph);
+                    if si >= h {
+                        continue;
+                    }
+                    for dj in 0..kw {
+                        let sj = (j + dj).wrapping_sub(pw);
+                        if sj >= wd {
+                            continue;
+                        }
+                        let xrow = &x.data[((b * h + si) * wd + sj) * ci..][..ci];
+                        let dwblk = &mut dw[(di * kw + dj) * ci * co..][..ci * co];
+                        for (ii, &xv) in xrow.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let drow = &mut dwblk[ii * co..][..co];
+                            for (d, &g) in drow.iter_mut().zip(dyrow) {
+                                *d += xv * g;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor { shape: vec![kh, kw, ci, co], data: dw }
+}
+
+// ---------------------------------------------------------------------------
+// Small matmuls (row-major)
+// ---------------------------------------------------------------------------
+
+/// (n,k) x (k,m) -> (n,m)
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, k) = dims2(a);
+    let (k2, m) = dims2(b);
+    assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * m..(p + 1) * m];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor { shape: vec![n, m], data: out }
+}
+
+/// aᵀ b: (n,k) x (n,m) -> (k,m)
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, k) = dims2(a);
+    let (n2, m) = dims2(b);
+    assert_eq!(n, n2, "matmul_at outer dim: {n} vs {n2}");
+    let mut out = vec![0.0f32; k * m];
+    for i in 0..n {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let brow = &b.data[i * m..(i + 1) * m];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[p * m..(p + 1) * m];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor { shape: vec![k, m], data: out }
+}
+
+/// a bᵀ: (n,m) x (k,m) -> (n,k)
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, m) = dims2(a);
+    let (k, m2) = dims2(b);
+    assert_eq!(m, m2, "matmul_bt inner dim: {m} vs {m2}");
+    let mut out = vec![0.0f32; n * k];
+    for i in 0..n {
+        let arow = &a.data[i * m..(i + 1) * m];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (p, o) in orow.iter_mut().enumerate() {
+            let brow = &b.data[p * m..(p + 1) * m];
+            *o = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+        }
+    }
+    Tensor { shape: vec![n, k], data: out }
+}
+
+fn mat_t(a: &Tensor) -> Tensor {
+    let (n, m) = dims2(a);
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        for j in 0..m {
+            out[j * n + i] = a.data[i * m + j];
+        }
+    }
+    Tensor { shape: vec![m, n], data: out }
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise / reduction helpers
+// ---------------------------------------------------------------------------
+
+/// t[..., c] += bias[c]  (broadcast over leading axes)
+pub fn add_bias(t: &mut Tensor, bias: &Tensor) {
+    let c = bias.len();
+    assert_eq!(*t.shape.last().unwrap(), c, "bias width mismatch");
+    for row in t.data.chunks_mut(c) {
+        for (v, &b) in row.iter_mut().zip(&bias.data) {
+            *v += b;
+        }
+    }
+}
+
+pub fn relu_inplace(t: &mut Tensor) {
+    for v in &mut t.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// d *= (act > 0), elementwise (ReLU pullback; `act` is the post-ReLU value).
+pub fn relu_mask(d: &mut Tensor, act: &Tensor) {
+    debug_assert_eq!(d.shape, act.shape);
+    for (v, &a) in d.data.iter_mut().zip(&act.data) {
+        if a <= 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Sum over all leading axes -> (c,) where c is the last dim.
+pub fn sum_to_last(t: &Tensor) -> Tensor {
+    let c = *t.shape.last().unwrap();
+    let mut out = vec![0.0f32; c];
+    for row in t.data.chunks(c) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    Tensor { shape: vec![c], data: out }
+}
+
+// ---------------------------------------------------------------------------
+// Conditioner networks: 3-layer MLP and CNN with hand-written pullbacks
+// (python: compile/layers/conditioner.py, differentiated there by jax.vjp)
+// ---------------------------------------------------------------------------
+
+/// Post-ReLU hidden activations saved by the forward pass for the pullback.
+pub struct NetCache {
+    h1: Tensor,
+    h2: Tensor,
+}
+
+/// out = (relu(relu(x w1 + b1) w2 + b2)) w3 + b3 on (N, D) inputs.
+pub fn mlp_apply(x: &Tensor, theta: &[Tensor]) -> (Tensor, NetCache) {
+    let mut h1 = matmul(x, &theta[0]);
+    add_bias(&mut h1, &theta[1]);
+    relu_inplace(&mut h1);
+    let mut h2 = matmul(&h1, &theta[2]);
+    add_bias(&mut h2, &theta[3]);
+    relu_inplace(&mut h2);
+    let mut out = matmul(&h2, &theta[4]);
+    add_bias(&mut out, &theta[5]);
+    (out, NetCache { h1, h2 })
+}
+
+/// Pullback of [`mlp_apply`]: returns (dx, [dw1,db1,dw2,db2,dw3,db3]).
+pub fn mlp_vjp(dout: &Tensor, x: &Tensor, cache: &NetCache,
+               theta: &[Tensor]) -> (Tensor, Vec<Tensor>) {
+    let dw3 = matmul_at(&cache.h2, dout);
+    let db3 = sum_to_last(dout);
+    let mut dh2 = matmul_bt(dout, &theta[4]);
+    relu_mask(&mut dh2, &cache.h2);
+    let dw2 = matmul_at(&cache.h1, &dh2);
+    let db2 = sum_to_last(&dh2);
+    let mut dh1 = matmul_bt(&dh2, &theta[2]);
+    relu_mask(&mut dh1, &cache.h1);
+    let dw1 = matmul_at(x, &dh1);
+    let db1 = sum_to_last(&dh1);
+    let dx = matmul_bt(&dh1, &theta[0]);
+    (dx, vec![dw1, db1, dw2, db2, dw3, db3])
+}
+
+/// GLOW conditioner CNN: conv3x3 -> relu -> conv1x1 -> relu -> conv3x3
+/// on NHWC inputs.
+pub fn cnn_apply(x: &Tensor, theta: &[Tensor]) -> (Tensor, NetCache) {
+    let mut h1 = conv2d_same(x, &theta[0]);
+    add_bias(&mut h1, &theta[1]);
+    relu_inplace(&mut h1);
+    let mut h2 = conv2d_same(&h1, &theta[2]);
+    add_bias(&mut h2, &theta[3]);
+    relu_inplace(&mut h2);
+    let mut out = conv2d_same(&h2, &theta[4]);
+    add_bias(&mut out, &theta[5]);
+    (out, NetCache { h1, h2 })
+}
+
+/// Pullback of [`cnn_apply`]: returns (dx, [dw1,db1,dw2,db2,dw3,db3]).
+pub fn cnn_vjp(dout: &Tensor, x: &Tensor, cache: &NetCache,
+               theta: &[Tensor]) -> (Tensor, Vec<Tensor>) {
+    let dw3 = conv2d_vjp_w(&cache.h2, dout, 3, 3);
+    let db3 = sum_to_last(dout);
+    let mut dh2 = conv2d_vjp_x(dout, &theta[4]);
+    relu_mask(&mut dh2, &cache.h2);
+    let dw2 = conv2d_vjp_w(&cache.h1, &dh2, 1, 1);
+    let db2 = sum_to_last(&dh2);
+    let mut dh1 = conv2d_vjp_x(&dh2, &theta[2]);
+    relu_mask(&mut dh1, &cache.h1);
+    let dw1 = conv2d_vjp_w(x, &dh1, 3, 3);
+    let db1 = sum_to_last(&dh1);
+    let dx = conv2d_vjp_x(&dh1, &theta[0]);
+    (dx, vec![dw1, db1, dw2, db2, dw3, db3])
+}
+
+// ---------------------------------------------------------------------------
+// Householder orthogonal parameterization (Conv1x1)
+// ---------------------------------------------------------------------------
+
+fn eye(c: usize) -> Tensor {
+    let mut data = vec![0.0f32; c * c];
+    for i in 0..c {
+        data[i * c + i] = 1.0;
+    }
+    Tensor { shape: vec![c, c], data }
+}
+
+fn single_householder(v: &Tensor) -> Tensor {
+    let c = v.len();
+    let s: f32 = v.data.iter().map(|x| x * x).sum();
+    let f = 2.0 / s;
+    let mut h = eye(c);
+    for i in 0..c {
+        for j in 0..c {
+            h.data[i * c + j] -= f * v.data[i] * v.data[j];
+        }
+    }
+    h
+}
+
+/// W = H(v1) H(v2) ... H(vk) with H(v) = I - 2 v vᵀ / (vᵀ v); orthogonal.
+pub fn householder(vs: &[&Tensor]) -> Tensor {
+    let c = vs[0].len();
+    let mut w = eye(c);
+    for v in vs {
+        let s: f32 = v.data.iter().map(|x| x * x).sum();
+        let f = 2.0 / s;
+        // w <- w - f * (w v) vᵀ
+        let mut wv = vec![0.0f32; c];
+        for (i, o) in wv.iter_mut().enumerate() {
+            *o = w.data[i * c..(i + 1) * c].iter().zip(&v.data)
+                .map(|(a, b)| a * b).sum();
+        }
+        for i in 0..c {
+            for j in 0..c {
+                w.data[i * c + j] -= f * wv[i] * v.data[j];
+            }
+        }
+    }
+    w
+}
+
+/// Pullback of [`householder`] onto the reflection vectors:
+/// dH_k = A_kᵀ dW B_kᵀ with A_k/B_k the prefix/suffix products, then
+/// dv = -(2/s)(dH v + dHᵀ v) + (4 (vᵀ dH v)/s²) v.
+pub fn householder_vjp(vs: &[&Tensor], dw: &Tensor) -> Vec<Tensor> {
+    let c = vs[0].len();
+    let hs: Vec<Tensor> = vs.iter().map(|v| single_householder(v)).collect();
+    let mut dvs = Vec::with_capacity(vs.len());
+    for (k, v) in vs.iter().enumerate() {
+        let mut a = eye(c);
+        for h in &hs[..k] {
+            a = matmul(&a, h);
+        }
+        let mut b = eye(c);
+        for h in &hs[k + 1..] {
+            b = matmul(&b, h);
+        }
+        let g = matmul(&matmul(&mat_t(&a), dw), &mat_t(&b));
+        let s: f32 = v.data.iter().map(|x| x * x).sum();
+        let gv: Vec<f32> = (0..c).map(|i| {
+            g.data[i * c..(i + 1) * c].iter().zip(&v.data).map(|(x, y)| x * y).sum()
+        }).collect();
+        let gtv: Vec<f32> = (0..c).map(|j| {
+            (0..c).map(|i| g.data[i * c + j] * v.data[i]).sum()
+        }).collect();
+        let vgv: f32 = v.data.iter().zip(&gv).map(|(x, y)| x * y).sum();
+        let data: Vec<f32> = (0..c).map(|j| {
+            -(2.0 / s) * (gv[j] + gtv[j]) + (4.0 * vgv / (s * s)) * v.data[j]
+        }).collect();
+        dvs.push(Tensor { shape: vec![c], data });
+    }
+    dvs
+}
+
+/// y_p = W x_p applied along the last axis (einsum "...j,ij->...i").
+pub fn apply_mat(x: &Tensor, w: &Tensor) -> Tensor {
+    let c = *x.shape.last().unwrap();
+    let rows = x.len() / c;
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x.data[r * c..(r + 1) * c];
+        let or = &mut out[r * c..(r + 1) * c];
+        for (i, o) in or.iter_mut().enumerate() {
+            *o = w.data[i * c..(i + 1) * c].iter().zip(xr)
+                .map(|(a, b)| a * b).sum();
+        }
+    }
+    Tensor { shape: x.shape.clone(), data: out }
+}
+
+/// x_p = Wᵀ y_p along the last axis (einsum "...i,ij->...j").
+pub fn apply_mat_t(y: &Tensor, w: &Tensor) -> Tensor {
+    let c = *y.shape.last().unwrap();
+    let rows = y.len() / c;
+    let mut out = vec![0.0f32; y.len()];
+    for r in 0..rows {
+        let yr = &y.data[r * c..(r + 1) * c];
+        let or = &mut out[r * c..(r + 1) * c];
+        for (i, &yv) in yr.iter().enumerate() {
+            if yv == 0.0 {
+                continue;
+            }
+            let wrow = &w.data[i * c..(i + 1) * c];
+            for (o, &wv) in or.iter_mut().zip(wrow) {
+                *o += yv * wv;
+            }
+        }
+    }
+    Tensor { shape: y.shape.clone(), data: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_t(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(shape.iter().product()) }
+    }
+
+    fn dot(a: &Tensor, b: &Tensor) -> f64 {
+        a.data.iter().zip(&b.data).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 identity kernel leaves x unchanged
+        let mut rng = Pcg64::new(1);
+        let x = rand_t(&[2, 3, 3, 2], &mut rng);
+        let w = Tensor::new(vec![1, 1, 2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let y = conv2d_same(&x, &w);
+        assert!(x.max_abs_diff(&y) < 1e-6);
+    }
+
+    #[test]
+    fn conv_matches_hand_computed() {
+        // single channel 2x2 image, 3x3 kernel of ones: SAME conv = local sums
+        let x = Tensor::new(vec![1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::full(&[3, 3, 1, 1], 1.0);
+        let y = conv2d_same(&x, &w);
+        assert_eq!(y.data, vec![10.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn conv_vjps_are_adjoint() {
+        // <conv(x,w), dy> == <x, vjp_x(dy,w)> == <w, vjp_w(x,dy)>
+        let mut rng = Pcg64::new(2);
+        let x = rand_t(&[2, 4, 5, 3], &mut rng);
+        let w = rand_t(&[3, 3, 3, 4], &mut rng);
+        let dy = rand_t(&[2, 4, 5, 4], &mut rng);
+        let lhs = dot(&conv2d_same(&x, &w), &dy);
+        let via_x = dot(&x, &conv2d_vjp_x(&dy, &w));
+        let via_w = dot(&w, &conv2d_vjp_w(&x, &dy, 3, 3));
+        assert!((lhs - via_x).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} {via_x}");
+        assert!((lhs - via_w).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} {via_w}");
+    }
+
+    #[test]
+    fn matmul_variants_consistent() {
+        let mut rng = Pcg64::new(3);
+        let a = rand_t(&[4, 3], &mut rng);
+        let b = rand_t(&[3, 5], &mut rng);
+        let ab = matmul(&a, &b);
+        assert_eq!(ab.shape, vec![4, 5]);
+        // a (bᵀ)ᵀ == a b
+        let via_bt = matmul_bt(&a, &mat_t(&b));
+        assert!(ab.max_abs_diff(&via_bt) < 1e-4);
+        // matmul_at(a, c) == aᵀ c
+        let lhs = matmul_at(&a, &ab);
+        let rhs = matmul(&mat_t(&a), &ab);
+        assert!(lhs.max_abs_diff(&rhs) < 1e-4);
+    }
+
+    #[test]
+    fn householder_is_orthogonal() {
+        let mut rng = Pcg64::new(4);
+        let v1 = rand_t(&[6], &mut rng);
+        let v2 = rand_t(&[6], &mut rng);
+        let v3 = rand_t(&[6], &mut rng);
+        let w = householder(&[&v1, &v2, &v3]);
+        let wtw = matmul(&mat_t(&w), &w);
+        assert!(wtw.max_abs_diff(&eye(6)) < 1e-5);
+        // apply then apply_t round-trips
+        let x = rand_t(&[3, 4, 6], &mut rng);
+        let y = apply_mat(&x, &w);
+        let back = apply_mat_t(&y, &w);
+        assert!(x.max_abs_diff(&back) < 1e-5);
+    }
+
+    #[test]
+    fn householder_vjp_matches_finite_difference() {
+        let mut rng = Pcg64::new(5);
+        let v1 = rand_t(&[4], &mut rng);
+        let v2 = rand_t(&[4], &mut rng);
+        let v3 = rand_t(&[4], &mut rng);
+        let dw = rand_t(&[4, 4], &mut rng);
+        let dvs = householder_vjp(&[&v1, &v2, &v3], &dw);
+        let loss = |vs: &[&Tensor]| dot(&householder(vs), &dw);
+        let eps = 1e-3f32;
+        for (vi, v) in [&v1, &v2, &v3].iter().enumerate() {
+            for j in 0..4 {
+                let mut vp = (*v).clone();
+                vp.data[j] += eps;
+                let mut vm = (*v).clone();
+                vm.data[j] -= eps;
+                let args_p: Vec<&Tensor> = (0..3).map(|i| {
+                    if i == vi { &vp } else { [&v1, &v2, &v3][i] }
+                }).collect();
+                let args_m: Vec<&Tensor> = (0..3).map(|i| {
+                    if i == vi { &vm } else { [&v1, &v2, &v3][i] }
+                }).collect();
+                let fd = (loss(&args_p) - loss(&args_m)) / (2.0 * eps as f64);
+                let an = dvs[vi].data[j] as f64;
+                assert!((fd - an).abs() < 2e-2 * an.abs().max(1.0),
+                        "v{vi}[{j}]: fd {fd} vs {an}");
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_vjp_matches_finite_difference() {
+        let mut rng = Pcg64::new(6);
+        let x = rand_t(&[3, 4], &mut rng);
+        let theta: Vec<Tensor> = [
+            vec![4usize, 8], vec![8], vec![8, 8], vec![8], vec![8, 5], vec![5],
+        ].iter().map(|s| {
+            let mut t = rand_t(s, &mut rng);
+            for v in &mut t.data {
+                *v *= 0.3;
+            }
+            t
+        }).collect();
+        let dout = rand_t(&[3, 5], &mut rng);
+        let (_, cache) = mlp_apply(&x, &theta);
+        let (dx, dth) = mlp_vjp(&dout, &x, &cache, &theta);
+        let loss = |x_: &Tensor, th: &[Tensor]| {
+            dot(&mlp_apply(x_, th).0, &dout)
+        };
+        let eps = 1e-2f32;
+        // spot-check a few coordinates of dx and each dtheta
+        for j in [0usize, 5, 11] {
+            let mut xp = x.clone();
+            xp.data[j] += eps;
+            let mut xm = x.clone();
+            xm.data[j] -= eps;
+            let fd = (loss(&xp, &theta) - loss(&xm, &theta)) / (2.0 * eps as f64);
+            let an = dx.data[j] as f64;
+            assert!((fd - an).abs() < 2e-2 * an.abs().max(1.0), "dx[{j}]: {fd} {an}");
+        }
+        for (pi, g) in dth.iter().enumerate() {
+            let j = g.len() / 2;
+            let mut thp: Vec<Tensor> = theta.to_vec();
+            thp[pi].data[j] += eps;
+            let mut thm: Vec<Tensor> = theta.to_vec();
+            thm[pi].data[j] -= eps;
+            let fd = (loss(&x, &thp) - loss(&x, &thm)) / (2.0 * eps as f64);
+            let an = g.data[j] as f64;
+            assert!((fd - an).abs() < 2e-2 * an.abs().max(1.0),
+                    "dtheta[{pi}][{j}]: {fd} {an}");
+        }
+    }
+}

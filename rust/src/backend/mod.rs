@@ -1,0 +1,65 @@
+//! Execution backends: the [`Backend`] trait owns *how* layer programs run;
+//! the coordinator owns *when* (activation lifetimes, the paper's actual
+//! contribution). Decoupling the two is what lets the crate build, run and
+//! test hermetically.
+//!
+//! * [`RefBackend`] (default): pure-Rust per-layer math, zero artifacts.
+//! * `XlaBackend` (`--features xla`): the original PJRT runtime over
+//!   AOT-compiled HLO artifacts from `python -m compile.aot`.
+//!
+//! Operand convention (shared with aot.py): activations first, then the
+//! conditioning tensor (if the layer takes one), then the parameters.
+//! Entries and their activation operands / results:
+//!
+//! | entry             | acts            | results                          |
+//! |-------------------|-----------------|----------------------------------|
+//! | `forward`         | `[x]`           | `[y, logdet]`                    |
+//! | `inverse`         | `[y]`           | `[x]`                            |
+//! | `backward`        | `[dy, dld, y]`  | `[dx, (dcond), dθ..., x]`        |
+//! | `backward_stored` | `[dy, dld, x]`  | `[dx, (dcond), dθ...]`           |
+
+pub mod math;
+pub mod reference;
+// module binding named `xla_backend` so in-crate paths never collide with
+// (or grep like) the external `xla` crate — which stays confined to the
+// file itself
+#[cfg(feature = "xla")]
+#[path = "xla.rs"]
+pub mod xla_backend;
+
+use anyhow::Result;
+
+use crate::runtime::LayerMeta;
+use crate::tensor::Tensor;
+
+pub use reference::RefBackend;
+#[cfg(feature = "xla")]
+pub use xla_backend::XlaBackend;
+
+/// A program-execution substrate. `Send + Sync` so owned flow handles can
+/// cross threads.
+pub trait Backend: Send + Sync {
+    /// Short backend identifier ("ref", "xla", ...).
+    fn name(&self) -> &'static str;
+
+    /// Execute one layer entry. `acts` follows the entry's activation
+    /// convention (see module docs); `cond` is present exactly when
+    /// `meta.cond_shape` is; `params` are the step's parameter tensors in
+    /// manifest order.
+    fn execute_layer(
+        &self,
+        meta: &LayerMeta,
+        entry: &str,
+        acts: &[&Tensor],
+        cond: Option<&Tensor>,
+        params: &[Tensor],
+    ) -> Result<Vec<Tensor>>;
+
+    /// Execute a Gaussian-head entry on a latent:
+    /// `"gaussian_logp"` -> `[logp (N,)]`, `"nll_seed"` -> `[dz, dld]`.
+    fn execute_head(&self, entry: &str, z: &Tensor) -> Result<Vec<Tensor>>;
+
+    /// Drop any cached executables (bench hygiene between configs).
+    /// No-op for stateless backends.
+    fn clear_cache(&self) {}
+}

@@ -1,0 +1,977 @@
+//! `RefBackend`: a pure-Rust execution backend implementing every layer
+//! entry (forward / inverse / backward / backward_stored) natively, with
+//! zero external artifacts.
+//!
+//! The math is a transcription of the per-layer programs in
+//! `python/compile/layers/` (themselves specified against
+//! `python/compile/kernels/ref.py`), cross-validated numerically against
+//! jax before porting. Layer kinds: actnorm, conv1x1 (Householder), GLOW
+//! affine coupling, additive coupling, dense/conditional coupling, Haar
+//! squeeze, channel permute, hyperbolic leapfrog, and recursive HINT —
+//! plus the Gaussian loss heads.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::builtin::HINT_MIN_D;
+use crate::runtime::LayerMeta;
+use crate::tensor::ops::{concat_last_axis, split_last_axis};
+use crate::tensor::Tensor;
+
+use super::math::{apply_mat, apply_mat_t, cnn_apply, cnn_vjp, conv2d_same,
+                  conv2d_vjp_w, conv2d_vjp_x, flip_swap, householder,
+                  householder_vjp, matmul_at, mlp_apply, mlp_vjp, sum_to_last};
+use super::Backend;
+
+const HYPER_ALPHA: f32 = 0.2;
+
+/// The default backend: per-layer math executed natively on host f32.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RefBackend;
+
+impl RefBackend {
+    pub fn new() -> RefBackend {
+        RefBackend
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn execute_layer(
+        &self,
+        meta: &LayerMeta,
+        entry: &str,
+        acts: &[&Tensor],
+        cond: Option<&Tensor>,
+        params: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let want_acts = match entry {
+            "forward" | "inverse" => 1,
+            "backward" | "backward_stored" => 3,
+            other => bail!("{}: unknown entry {other:?}", meta.sig),
+        };
+        if acts.len() != want_acts {
+            bail!("{}.{entry}: got {} activations, want {want_acts}",
+                  meta.sig, acts.len());
+        }
+        if meta.cond_shape.is_some() != cond.is_some() {
+            bail!("{}.{entry}: conditioning mismatch (layer takes cond: {})",
+                  meta.sig, meta.cond_shape.is_some());
+        }
+        if params.len() != meta.params.len() {
+            bail!("{}.{entry}: got {} params, want {}",
+                  meta.sig, params.len(), meta.params.len());
+        }
+        match meta.kind.as_str() {
+            "actnorm" => actnorm(entry, acts, params),
+            "conv1x1" => conv1x1(entry, acts, params),
+            "glowcpl" => glowcpl(entry, acts, params),
+            "addcpl" => addcpl(entry, acts, params),
+            "densecpl" => densecpl(entry, acts, params),
+            "condcpl" => condcpl(entry, acts, cond.unwrap(), params),
+            "haar" => haar(entry, acts),
+            "permute" => permute(entry, acts),
+            "hyper" => hyper(entry, acts, params),
+            "hint" => hint(entry, acts, params, meta),
+            other => bail!(
+                "RefBackend does not implement layer kind {other:?} \
+                 (sig {}); use the xla backend with compiled artifacts",
+                meta.sig
+            ),
+        }
+    }
+
+    fn execute_head(&self, entry: &str, z: &Tensor) -> Result<Vec<Tensor>> {
+        let n = z.shape[0];
+        match entry {
+            "gaussian_logp" => {
+                let dim = z.inner_len();
+                let ln2pi = (2.0 * std::f32::consts::PI).ln();
+                let data: Vec<f32> = z.data.chunks(dim).map(|row| {
+                    let ss: f32 = row.iter().map(|v| v * v).sum();
+                    -0.5 * ss - 0.5 * dim as f32 * ln2pi
+                }).collect();
+                Ok(vec![Tensor { shape: vec![n], data }])
+            }
+            "nll_seed" => {
+                let inv_n = 1.0 / n as f32;
+                let dz = Tensor {
+                    shape: z.shape.clone(),
+                    data: z.data.iter().map(|v| v * inv_n).collect(),
+                };
+                Ok(vec![dz, Tensor::full(&[n], -inv_n)])
+            }
+            other => bail!("unknown head entry {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared coupling helpers
+// ---------------------------------------------------------------------------
+
+/// GLOW-stabilized coupling scale s = 2*sigmoid(raw), range (0, 2).
+fn sigmoid2(raw: &Tensor) -> Tensor {
+    Tensor {
+        shape: raw.shape.clone(),
+        data: raw.data.iter().map(|v| 2.0 / (1.0 + (-v).exp())).collect(),
+    }
+}
+
+/// y2 = s * x2 + t
+fn affine_fwd(x2: &Tensor, s: &Tensor, t: &Tensor) -> Tensor {
+    Tensor {
+        shape: x2.shape.clone(),
+        data: x2.data.iter().zip(&s.data).zip(&t.data)
+            .map(|((x, sv), tv)| x * sv + tv).collect(),
+    }
+}
+
+/// x2 = (y2 - t) / s
+fn affine_inv(y2: &Tensor, s: &Tensor, t: &Tensor) -> Tensor {
+    Tensor {
+        shape: y2.shape.clone(),
+        data: y2.data.iter().zip(&s.data).zip(&t.data)
+            .map(|((y, sv), tv)| (y - tv) / sv).collect(),
+    }
+}
+
+/// Per-sample sum of ln(s): the coupling logdet.
+fn log_sum_per_sample(s: &Tensor) -> Tensor {
+    let n = s.shape[0];
+    let inner = s.inner_len();
+    let data: Vec<f32> = s.data.chunks(inner)
+        .map(|row| row.iter().map(|v| v.ln()).sum())
+        .collect();
+    Tensor { shape: vec![n], data }
+}
+
+/// The affine-coupling pullback core shared by glowcpl/densecpl/condcpl/hint:
+///   dx2  = dy2 * s
+///   ds   = dy2 * x2 + dld / s        (per-sample dld broadcast)
+///   draw = ds * s * (1 - s/2)        (d(2*sigmoid)/draw)
+/// Returns (dx2, draw).
+fn coupling_pullback(dy2: &Tensor, x2: &Tensor, s: &Tensor,
+                     dld: &Tensor) -> (Tensor, Tensor) {
+    let n = dy2.shape[0];
+    let inner = dy2.inner_len();
+    let mut dx2 = Vec::with_capacity(dy2.len());
+    let mut draw = Vec::with_capacity(dy2.len());
+    for i in 0..n {
+        let dldv = dld.data[i];
+        for k in 0..inner {
+            let idx = i * inner + k;
+            let sv = s.data[idx];
+            let dy2v = dy2.data[idx];
+            dx2.push(dy2v * sv);
+            let dsv = dy2v * x2.data[idx] + dldv / sv;
+            draw.push(dsv * sv * (1.0 - 0.5 * sv));
+        }
+    }
+    (Tensor { shape: dy2.shape.clone(), data: dx2 },
+     Tensor { shape: dy2.shape.clone(), data: draw })
+}
+
+fn zeros_ld(n: usize) -> Tensor {
+    Tensor::zeros(&[n])
+}
+
+// ---------------------------------------------------------------------------
+// ActNorm: y = x * exp(log_s) + b
+// ---------------------------------------------------------------------------
+
+fn actnorm(entry: &str, acts: &[&Tensor], p: &[Tensor]) -> Result<Vec<Tensor>> {
+    let (log_s, b) = (&p[0], &p[1]);
+    let c = log_s.len();
+    let per_ch = |t: &Tensor, f: &mut dyn FnMut(usize, f32) -> f32| -> Tensor {
+        let mut out = t.clone();
+        for row in out.data.chunks_mut(c) {
+            for (k, v) in row.iter_mut().enumerate() {
+                *v = f(k, *v);
+            }
+        }
+        out
+    };
+    let s: Vec<f32> = log_s.data.iter().map(|v| v.exp()).collect();
+    match entry {
+        "forward" => {
+            let x = acts[0];
+            let n = x.shape[0];
+            let spatial: usize = x.shape[1..x.shape.len() - 1].iter().product();
+            let y = per_ch(x, &mut |k, v| v * s[k] + b.data[k]);
+            let ld = spatial as f32 * log_s.data.iter().sum::<f32>();
+            Ok(vec![y, Tensor::full(&[n], ld)])
+        }
+        "inverse" => {
+            let y = acts[0];
+            Ok(vec![per_ch(y, &mut |k, v| (v - b.data[k]) / s[k])])
+        }
+        "backward" | "backward_stored" => {
+            let (dy, dld, given) = (acts[0], acts[1], acts[2]);
+            let spatial: usize = dy.shape[1..dy.shape.len() - 1].iter().product();
+            // recover x (backward recomputes it from y; stored has it taped)
+            let x = if entry == "backward" {
+                per_ch(given, &mut |k, v| (v - b.data[k]) / s[k])
+            } else {
+                given.clone()
+            };
+            let dx = per_ch(dy, &mut |k, v| v * s[k]);
+            // dlog_s = sum dy * (y - b) + sum(dld) * spatial; y - b = x * s
+            let mut dlog_s = vec![0.0f32; c];
+            for (dyrow, xrow) in dy.data.chunks(c).zip(x.data.chunks(c)) {
+                for k in 0..c {
+                    dlog_s[k] += dyrow[k] * xrow[k] * s[k];
+                }
+            }
+            let dld_sum: f32 = dld.data.iter().sum();
+            for v in &mut dlog_s {
+                *v += dld_sum * spatial as f32;
+            }
+            let db = sum_to_last(dy);
+            let dlog_s = Tensor { shape: vec![c], data: dlog_s };
+            if entry == "backward" {
+                Ok(vec![dx, dlog_s, db, x])
+            } else {
+                Ok(vec![dx, dlog_s, db])
+            }
+        }
+        other => bail!("actnorm: unknown entry {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conv1x1: y = W x per pixel, W = Householder product (orthogonal, logdet 0)
+// ---------------------------------------------------------------------------
+
+/// View a tensor as (rows, c) for channel-wise contractions (copies data).
+fn flat_rows(t: &Tensor) -> Tensor {
+    let c = *t.shape.last().unwrap();
+    Tensor { shape: vec![t.len() / c, c], data: t.data.clone() }
+}
+
+fn conv1x1(entry: &str, acts: &[&Tensor], p: &[Tensor]) -> Result<Vec<Tensor>> {
+    let vs = [&p[0], &p[1], &p[2]];
+    let w = householder(&vs);
+    match entry {
+        "forward" => {
+            let x = acts[0];
+            Ok(vec![apply_mat(x, &w), zeros_ld(x.shape[0])])
+        }
+        "inverse" => Ok(vec![apply_mat_t(acts[0], &w)]),
+        "backward" | "backward_stored" => {
+            let dy = acts[0]; // acts[1] = dld unused: logdet == 0 identically
+            let x = if entry == "backward" {
+                apply_mat_t(acts[2], &w) // recompute x = Wᵀ y
+            } else {
+                acts[2].clone()
+            };
+            let dx = apply_mat_t(dy, &w);
+            // dW_ij = sum_p dy_pi x_pj
+            let dw = matmul_at(&flat_rows(dy), &flat_rows(&x));
+            let mut dvs = householder_vjp(&vs, &dw);
+            let (dv3, dv2, dv1) = (dvs.pop().unwrap(), dvs.pop().unwrap(),
+                                   dvs.pop().unwrap());
+            if entry == "backward" {
+                Ok(vec![dx, dv1, dv2, dv3, x])
+            } else {
+                Ok(vec![dx, dv1, dv2, dv3])
+            }
+        }
+        other => bail!("conv1x1: unknown entry {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GLOW affine coupling (image, CNN conditioner)
+// ---------------------------------------------------------------------------
+
+fn glowcpl(entry: &str, acts: &[&Tensor], theta: &[Tensor]) -> Result<Vec<Tensor>> {
+    let c = *acts.last().unwrap().shape.last().unwrap();
+    let c1 = c / 2;
+    let c2 = c - c1;
+    match entry {
+        "forward" => {
+            let x = acts[0];
+            let (x1, x2) = split_last_axis(x, c1)?;
+            let (out, _) = cnn_apply(&x1, theta);
+            let (raw, t) = split_last_axis(&out, c2)?;
+            let s = sigmoid2(&raw);
+            let y2 = affine_fwd(&x2, &s, &t);
+            Ok(vec![concat_last_axis(&x1, &y2)?, log_sum_per_sample(&s)])
+        }
+        "inverse" => {
+            let y = acts[0];
+            let (y1, y2) = split_last_axis(y, c1)?;
+            let (out, _) = cnn_apply(&y1, theta);
+            let (raw, t) = split_last_axis(&out, c2)?;
+            let s = sigmoid2(&raw);
+            let x2 = affine_inv(&y2, &s, &t);
+            Ok(vec![concat_last_axis(&y1, &x2)?])
+        }
+        "backward" | "backward_stored" => {
+            let (dy, dld, given) = (acts[0], acts[1], acts[2]);
+            let stored = entry == "backward_stored";
+            // x1 == y1 either way (coupling passes the first half through)
+            let (x1, second) = split_last_axis(given, c1)?;
+            let (out, cache) = cnn_apply(&x1, theta);
+            let (raw, t) = split_last_axis(&out, c2)?;
+            let s = sigmoid2(&raw);
+            let x2 = if stored { second } else { affine_inv(&second, &s, &t) };
+            let (dy1, dy2) = split_last_axis(dy, c1)?;
+            let (dx2, draw) = coupling_pullback(&dy2, &x2, &s, dld);
+            let dout = concat_last_axis(&draw, &dy2)?;
+            let (dx1_cnn, dtheta) = cnn_vjp(&dout, &x1, &cache, theta);
+            let mut dx1 = dy1;
+            for (v, g) in dx1.data.iter_mut().zip(&dx1_cnn.data) {
+                *v += g;
+            }
+            let dx = concat_last_axis(&dx1, &dx2)?;
+            let mut results = vec![dx];
+            results.extend(dtheta);
+            if !stored {
+                results.push(concat_last_axis(&x1, &x2)?);
+            }
+            Ok(results)
+        }
+        other => bail!("glowcpl: unknown entry {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Additive (NICE) coupling: y = concat(x1, x2 + CNN(x1)), logdet 0
+// ---------------------------------------------------------------------------
+
+fn addcpl(entry: &str, acts: &[&Tensor], theta: &[Tensor]) -> Result<Vec<Tensor>> {
+    let c = *acts.last().unwrap().shape.last().unwrap();
+    let c1 = c / 2;
+    match entry {
+        "forward" => {
+            let x = acts[0];
+            let (x1, x2) = split_last_axis(x, c1)?;
+            let (nn, _) = cnn_apply(&x1, theta);
+            let mut y2 = x2;
+            for (v, g) in y2.data.iter_mut().zip(&nn.data) {
+                *v += g;
+            }
+            Ok(vec![concat_last_axis(&x1, &y2)?, zeros_ld(x.shape[0])])
+        }
+        "inverse" => {
+            let y = acts[0];
+            let (y1, y2) = split_last_axis(y, c1)?;
+            let (nn, _) = cnn_apply(&y1, theta);
+            let mut x2 = y2;
+            for (v, g) in x2.data.iter_mut().zip(&nn.data) {
+                *v -= g;
+            }
+            Ok(vec![concat_last_axis(&y1, &x2)?])
+        }
+        "backward" | "backward_stored" => {
+            let (dy, _dld, given) = (acts[0], acts[1], acts[2]); // logdet == 0
+            let stored = entry == "backward_stored";
+            let (x1, second) = split_last_axis(given, c1)?;
+            let (nn, cache) = cnn_apply(&x1, theta);
+            let (dy1, dy2) = split_last_axis(dy, c1)?;
+            let (dx1_cnn, dtheta) = cnn_vjp(&dy2, &x1, &cache, theta);
+            let mut dx1 = dy1;
+            for (v, g) in dx1.data.iter_mut().zip(&dx1_cnn.data) {
+                *v += g;
+            }
+            let dx = concat_last_axis(&dx1, &dy2)?;
+            let mut results = vec![dx];
+            results.extend(dtheta);
+            if !stored {
+                // x2 = y2 - CNN(y1)
+                let mut x2 = second;
+                for (v, g) in x2.data.iter_mut().zip(&nn.data) {
+                    *v -= g;
+                }
+                results.push(concat_last_axis(&x1, &x2)?);
+            }
+            Ok(results)
+        }
+        other => bail!("addcpl: unknown entry {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense coupling (RealNVP on (N, D)) + conditional variant
+// ---------------------------------------------------------------------------
+
+fn densecpl(entry: &str, acts: &[&Tensor], theta: &[Tensor]) -> Result<Vec<Tensor>> {
+    dense_core(entry, acts, None, theta)
+}
+
+fn condcpl(entry: &str, acts: &[&Tensor], cond: &Tensor,
+           theta: &[Tensor]) -> Result<Vec<Tensor>> {
+    dense_core(entry, acts, Some(cond), theta)
+}
+
+fn dense_core(entry: &str, acts: &[&Tensor], cond: Option<&Tensor>,
+              theta: &[Tensor]) -> Result<Vec<Tensor>> {
+    let d = *acts.last().unwrap().shape.last().unwrap();
+    let d1 = d / 2;
+    let d2 = d - d1;
+    let mlp_in = |x1: &Tensor| -> Result<Tensor> {
+        match cond {
+            Some(c) => concat_last_axis(x1, c),
+            None => Ok(x1.clone()),
+        }
+    };
+    match entry {
+        "forward" => {
+            let x = acts[0];
+            let (x1, x2) = split_last_axis(x, d1)?;
+            let (out, _) = mlp_apply(&mlp_in(&x1)?, theta);
+            let (raw, t) = split_last_axis(&out, d2)?;
+            let s = sigmoid2(&raw);
+            let y2 = affine_fwd(&x2, &s, &t);
+            Ok(vec![concat_last_axis(&x1, &y2)?, log_sum_per_sample(&s)])
+        }
+        "inverse" => {
+            let y = acts[0];
+            let (y1, y2) = split_last_axis(y, d1)?;
+            let (out, _) = mlp_apply(&mlp_in(&y1)?, theta);
+            let (raw, t) = split_last_axis(&out, d2)?;
+            let s = sigmoid2(&raw);
+            let x2 = affine_inv(&y2, &s, &t);
+            Ok(vec![concat_last_axis(&y1, &x2)?])
+        }
+        "backward" | "backward_stored" => {
+            let (dy, dld, given) = (acts[0], acts[1], acts[2]);
+            let stored = entry == "backward_stored";
+            let (x1, second) = split_last_axis(given, d1)?;
+            let net_in = mlp_in(&x1)?;
+            let (out, cache) = mlp_apply(&net_in, theta);
+            let (raw, t) = split_last_axis(&out, d2)?;
+            let s = sigmoid2(&raw);
+            let x2 = if stored { second } else { affine_inv(&second, &s, &t) };
+            let (dy1, dy2) = split_last_axis(dy, d1)?;
+            let (dx2, draw) = coupling_pullback(&dy2, &x2, &s, dld);
+            let dout = concat_last_axis(&draw, &dy2)?;
+            let (din, dtheta) = mlp_vjp(&dout, &net_in, &cache, theta);
+            // din covers (x1 | cond) jointly for the conditional variant
+            let (dx1_net, dcond) = match cond {
+                Some(_) => {
+                    let (a, b) = split_last_axis(&din, d1)?;
+                    (a, Some(b))
+                }
+                None => (din, None),
+            };
+            let mut dx1 = dy1;
+            for (v, g) in dx1.data.iter_mut().zip(&dx1_net.data) {
+                *v += g;
+            }
+            let dx = concat_last_axis(&dx1, &dx2)?;
+            let mut results = vec![dx];
+            if let Some(dc) = dcond {
+                results.push(dc);
+            }
+            results.extend(dtheta);
+            if !stored {
+                results.push(concat_last_axis(&x1, &x2)?);
+            }
+            Ok(results)
+        }
+        other => bail!("densecpl: unknown entry {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Haar wavelet squeeze: (N,H,W,C) -> (N,H/2,W/2,4C), orthonormal, logdet 0
+// ---------------------------------------------------------------------------
+
+fn haar_fwd(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (h2, w2) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; n * h2 * w2 * 4 * c];
+    let xi = |b: usize, i: usize, j: usize| ((b * h + i) * w + j) * c;
+    for b in 0..n {
+        for i in 0..h2 {
+            for j in 0..w2 {
+                let a = xi(b, 2 * i, 2 * j);
+                let bb = xi(b, 2 * i, 2 * j + 1);
+                let cc = xi(b, 2 * i + 1, 2 * j);
+                let dd = xi(b, 2 * i + 1, 2 * j + 1);
+                let o = ((b * h2 + i) * w2 + j) * 4 * c;
+                for k in 0..c {
+                    let (av, bv, cv, dv) = (x.data[a + k], x.data[bb + k],
+                                            x.data[cc + k], x.data[dd + k]);
+                    out[o + k] = (av + bv + cv + dv) * 0.5;
+                    out[o + c + k] = (av - bv + cv - dv) * 0.5;
+                    out[o + 2 * c + k] = (av + bv - cv - dv) * 0.5;
+                    out[o + 3 * c + k] = (av - bv - cv + dv) * 0.5;
+                }
+            }
+        }
+    }
+    Tensor { shape: vec![n, h2, w2, 4 * c], data: out }
+}
+
+fn haar_inv(y: &Tensor) -> Tensor {
+    let (n, h2, w2, c4) = (y.shape[0], y.shape[1], y.shape[2], y.shape[3]);
+    let c = c4 / 4;
+    let (h, w) = (h2 * 2, w2 * 2);
+    let mut out = vec![0.0f32; n * h * w * c];
+    let oi = |b: usize, i: usize, j: usize| ((b * h + i) * w + j) * c;
+    for b in 0..n {
+        for i in 0..h2 {
+            for j in 0..w2 {
+                let yoff = ((b * h2 + i) * w2 + j) * c4;
+                let a = oi(b, 2 * i, 2 * j);
+                let bb = oi(b, 2 * i, 2 * j + 1);
+                let cc = oi(b, 2 * i + 1, 2 * j);
+                let dd = oi(b, 2 * i + 1, 2 * j + 1);
+                for k in 0..c {
+                    let ll = y.data[yoff + k];
+                    let lh = y.data[yoff + c + k];
+                    let hl = y.data[yoff + 2 * c + k];
+                    let hh = y.data[yoff + 3 * c + k];
+                    out[a + k] = (ll + lh + hl + hh) * 0.5;
+                    out[bb + k] = (ll - lh + hl - hh) * 0.5;
+                    out[cc + k] = (ll + lh - hl - hh) * 0.5;
+                    out[dd + k] = (ll - lh - hl + hh) * 0.5;
+                }
+            }
+        }
+    }
+    Tensor { shape: vec![n, h, w, c], data: out }
+}
+
+fn haar(entry: &str, acts: &[&Tensor]) -> Result<Vec<Tensor>> {
+    match entry {
+        "forward" => {
+            let x = acts[0];
+            Ok(vec![haar_fwd(x), zeros_ld(x.shape[0])])
+        }
+        "inverse" => Ok(vec![haar_inv(acts[0])]),
+        // orthonormal: gradient = transpose = inverse transform
+        "backward" => Ok(vec![haar_inv(acts[0]), haar_inv(acts[2])]),
+        "backward_stored" => Ok(vec![haar_inv(acts[0])]),
+        other => bail!("haar: unknown entry {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Channel-reverse permutation (self-inverse orthogonal map)
+// ---------------------------------------------------------------------------
+
+fn rev_last(t: &Tensor) -> Tensor {
+    let c = *t.shape.last().unwrap();
+    let mut out = t.clone();
+    for row in out.data.chunks_mut(c) {
+        row.reverse();
+    }
+    out
+}
+
+fn permute(entry: &str, acts: &[&Tensor]) -> Result<Vec<Tensor>> {
+    match entry {
+        "forward" => Ok(vec![rev_last(acts[0]), zeros_ld(acts[0].shape[0])]),
+        "inverse" => Ok(vec![rev_last(acts[0])]),
+        "backward" => Ok(vec![rev_last(acts[0]), rev_last(acts[2])]),
+        "backward_stored" => Ok(vec![rev_last(acts[0])]),
+        other => bail!("permute: unknown entry {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hyperbolic leapfrog: state [x_prev | x_curr], g(x) = a K^T tanh(K x)
+// ---------------------------------------------------------------------------
+
+/// v = tanh(conv(x, kw)) — the activations the pullback needs.
+fn hyper_v(x: &Tensor, kw: &Tensor) -> Tensor {
+    let u = conv2d_same(x, kw);
+    Tensor {
+        shape: u.shape.clone(),
+        data: u.data.iter().map(|a| a.tanh()).collect(),
+    }
+}
+
+/// g(x) = ALPHA * conv_t(tanh(conv(x, kw)), kw); also returns v = tanh(u)
+/// for the pullback.
+fn hyper_g(x: &Tensor, kw: &Tensor) -> (Tensor, Tensor) {
+    let v = hyper_v(x, kw);
+    let mut g = conv2d_same(&v, &flip_swap(kw));
+    for a in &mut g.data {
+        *a *= HYPER_ALPHA;
+    }
+    (g, v)
+}
+
+/// Pullback of `hyper_g` w.r.t. (x, kw), evaluated with the saved v.
+fn hyper_g_vjp(dg: &Tensor, x: &Tensor, v: &Tensor, kw: &Tensor) -> (Tensor, Tensor) {
+    // g = ALPHA * conv(v, flip_swap(kw)); adjoint wrt v is conv(dg, kw)
+    let mut dv = conv2d_same(dg, kw);
+    for a in &mut dv.data {
+        *a *= HYPER_ALPHA;
+    }
+    // kernel grad through the conv_t branch (in flip_swap coordinates)
+    let mut dw_t = conv2d_vjp_w(v, dg, 3, 3);
+    for a in &mut dw_t.data {
+        *a *= HYPER_ALPHA;
+    }
+    let dkw2 = flip_swap(&dw_t);
+    // du = dv * (1 - v^2)
+    let du = Tensor {
+        shape: dv.shape.clone(),
+        data: dv.data.iter().zip(&v.data).map(|(d, t)| d * (1.0 - t * t)).collect(),
+    };
+    let dx = conv2d_vjp_x(&du, kw);
+    let mut dkw = conv2d_vjp_w(x, &du, 3, 3);
+    for (a, b) in dkw.data.iter_mut().zip(&dkw2.data) {
+        *a += b;
+    }
+    (dx, dkw)
+}
+
+fn hyper(entry: &str, acts: &[&Tensor], p: &[Tensor]) -> Result<Vec<Tensor>> {
+    let kw = &p[0];
+    let c = *acts.last().unwrap().shape.last().unwrap() / 2;
+    match entry {
+        "forward" => {
+            let x = acts[0];
+            let (x_prev, x_curr) = split_last_axis(x, c)?;
+            let (g, _) = hyper_g(&x_curr, kw);
+            // y_prev = x_curr; y_curr = 2 x_curr - x_prev + g
+            let y_curr = Tensor {
+                shape: x_curr.shape.clone(),
+                data: x_curr.data.iter().zip(&x_prev.data).zip(&g.data)
+                    .map(|((xc, xp), gv)| 2.0 * xc - xp + gv).collect(),
+            };
+            Ok(vec![concat_last_axis(&x_curr, &y_curr)?, zeros_ld(x.shape[0])])
+        }
+        "inverse" => {
+            let y = acts[0];
+            let (y_prev, y_curr) = split_last_axis(y, c)?;
+            // x_curr = y_prev; x_prev = 2 x_curr - y_curr + g(x_curr)
+            let (g, _) = hyper_g(&y_prev, kw);
+            let x_prev = Tensor {
+                shape: y_prev.shape.clone(),
+                data: y_prev.data.iter().zip(&y_curr.data).zip(&g.data)
+                    .map(|((yp, yc), gv)| 2.0 * yp - yc + gv).collect(),
+            };
+            Ok(vec![concat_last_axis(&x_prev, &y_prev)?])
+        }
+        "backward" | "backward_stored" => {
+            let (dy, _dld, given) = (acts[0], acts[1], acts[2]); // logdet == 0
+            let stored = entry == "backward_stored";
+            let (dy_prev, dy_curr) = split_last_axis(dy, c)?;
+            let (x_curr, v, x_prev_opt) = if stored {
+                let (_, x_curr) = split_last_axis(given, c)?;
+                let v = hyper_v(&x_curr, kw); // g itself is not needed
+                (x_curr, v, None)
+            } else {
+                // x_curr = y_prev; its g() both recomputes x_prev and
+                // provides the tanh activations for the pullback
+                let (y_prev, y_curr) = split_last_axis(given, c)?;
+                let (g, v) = hyper_g(&y_prev, kw);
+                let x_prev = Tensor {
+                    shape: y_prev.shape.clone(),
+                    data: y_prev.data.iter().zip(&y_curr.data).zip(&g.data)
+                        .map(|((yp, yc), gv)| 2.0 * yp - yc + gv).collect(),
+                };
+                (y_prev, v, Some(x_prev))
+            };
+            let (gx, dkw) = hyper_g_vjp(&dy_curr, &x_curr, &v, kw);
+            // dx_curr = dy_prev + 2 dy_curr + gx; dx_prev = -dy_curr
+            let dx_curr = Tensor {
+                shape: dy_curr.shape.clone(),
+                data: dy_prev.data.iter().zip(&dy_curr.data).zip(&gx.data)
+                    .map(|((dp, dc), g)| dp + 2.0 * dc + g).collect(),
+            };
+            let dx_prev = Tensor {
+                shape: dy_curr.shape.clone(),
+                data: dy_curr.data.iter().map(|d| -d).collect(),
+            };
+            let dx = concat_last_axis(&dx_prev, &dx_curr)?;
+            if stored {
+                Ok(vec![dx, dkw])
+            } else {
+                let x = concat_last_axis(&x_prev_opt.unwrap(), &x_curr)?;
+                Ok(vec![dx, dkw, x])
+            }
+        }
+        other => bail!("hyper: unknown entry {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HINT: recursive triangular coupling (Kruse et al.). One conditioner MLP
+// per internal node, parameters flattened in preorder ("r", "rl", "rt", ...).
+// ---------------------------------------------------------------------------
+
+struct HintCtx<'a> {
+    theta: &'a [Tensor],
+    next: usize,
+}
+
+impl<'a> HintCtx<'a> {
+    fn take(&mut self) -> &'a [Tensor] {
+        let my = self.next;
+        self.next += 1;
+        &self.theta[my * 6..my * 6 + 6]
+    }
+}
+
+fn hint_fwd(x: &Tensor, depth: usize, ctx: &mut HintCtx) -> (Tensor, Tensor) {
+    let d = *x.shape.last().unwrap();
+    let n = x.shape[0];
+    if depth == 0 || d < HINT_MIN_D {
+        return (x.clone(), zeros_ld(n));
+    }
+    let th = ctx.take();
+    let d1 = d / 2;
+    let d2 = d - d1;
+    let (x1, x2) = split_last_axis(x, d1).expect("hint split");
+    let (y1, ld1) = hint_fwd(&x1, depth - 1, ctx);
+    let (out, _) = mlp_apply(&x1, th);
+    let (raw, t) = split_last_axis(&out, d2).expect("hint raw/t split");
+    let s = sigmoid2(&raw);
+    let y2a = affine_fwd(&x2, &s, &t);
+    let ld_aff = log_sum_per_sample(&s);
+    let (y2, ld2) = hint_fwd(&y2a, depth - 1, ctx);
+    let mut ld = ld1;
+    for ((a, b), c) in ld.data.iter_mut().zip(&ld_aff.data).zip(&ld2.data) {
+        *a += b + c;
+    }
+    (concat_last_axis(&y1, &y2).expect("hint concat"), ld)
+}
+
+fn hint_inv(y: &Tensor, depth: usize, ctx: &mut HintCtx) -> Tensor {
+    let d = *y.shape.last().unwrap();
+    if depth == 0 || d < HINT_MIN_D {
+        return y.clone();
+    }
+    let th = ctx.take();
+    let d1 = d / 2;
+    let d2 = d - d1;
+    let (y1, y2) = split_last_axis(y, d1).expect("hint split");
+    let x1 = hint_inv(&y1, depth - 1, ctx);
+    let y2a = hint_inv(&y2, depth - 1, ctx);
+    let (out, _) = mlp_apply(&x1, th);
+    let (raw, t) = split_last_axis(&out, d2).expect("hint raw/t split");
+    let s = sigmoid2(&raw);
+    let x2 = affine_inv(&y2a, &s, &t);
+    concat_last_axis(&x1, &x2).expect("hint concat")
+}
+
+/// Returns (dx, x); fills `grads[node]` (preorder ids) with the node's
+/// six parameter gradients.
+fn hint_bwd(dy: &Tensor, dld: &Tensor, y: &Tensor, depth: usize,
+            ctx: &mut HintCtx, grads: &mut [Option<Vec<Tensor>>])
+            -> (Tensor, Tensor) {
+    let d = *y.shape.last().unwrap();
+    if depth == 0 || d < HINT_MIN_D {
+        return (dy.clone(), y.clone());
+    }
+    let my = ctx.next;
+    let th = ctx.take();
+    let d1 = d / 2;
+    let d2 = d - d1;
+    let (dy1, dy2) = split_last_axis(dy, d1).expect("hint split");
+    let (y1, y2) = split_last_axis(y, d1).expect("hint split");
+    let (dx1a, x1) = hint_bwd(&dy1, dld, &y1, depth - 1, ctx, grads);
+    let (dy2a, y2a) = hint_bwd(&dy2, dld, &y2, depth - 1, ctx, grads);
+    let (out, cache) = mlp_apply(&x1, th);
+    let (raw, t) = split_last_axis(&out, d2).expect("hint raw/t split");
+    let s = sigmoid2(&raw);
+    let x2 = affine_inv(&y2a, &s, &t);
+    let (dx2, draw) = coupling_pullback(&dy2a, &x2, &s, dld);
+    let dout = concat_last_axis(&draw, &dy2a).expect("hint concat");
+    let (din, dtheta) = mlp_vjp(&dout, &x1, &cache, th);
+    let mut dx1 = dx1a;
+    for (v, g) in dx1.data.iter_mut().zip(&din.data) {
+        *v += g;
+    }
+    grads[my] = Some(dtheta);
+    (concat_last_axis(&dx1, &dx2).expect("hint concat"),
+     concat_last_axis(&x1, &x2).expect("hint concat"))
+}
+
+fn hint(entry: &str, acts: &[&Tensor], theta: &[Tensor],
+        meta: &LayerMeta) -> Result<Vec<Tensor>> {
+    let depth = match meta.cfg_usize("depth") {
+        Some(d) => d,
+        None => bail!("{}: hint layer needs cfg.depth", meta.sig),
+    };
+    let n_nodes = theta.len() / 6;
+    match entry {
+        "forward" => {
+            let mut ctx = HintCtx { theta, next: 0 };
+            let (y, ld) = hint_fwd(acts[0], depth, &mut ctx);
+            Ok(vec![y, ld])
+        }
+        "inverse" => {
+            let mut ctx = HintCtx { theta, next: 0 };
+            Ok(vec![hint_inv(acts[0], depth, &mut ctx)])
+        }
+        "backward" | "backward_stored" => {
+            let (dy, dld, given) = (acts[0], acts[1], acts[2]);
+            let stored = entry == "backward_stored";
+            // stored path recovers y cheaply from the taped x, then runs the
+            // identical pullback (matches the python layer)
+            let y = if stored {
+                let mut ctx = HintCtx { theta, next: 0 };
+                hint_fwd(given, depth, &mut ctx).0
+            } else {
+                given.clone()
+            };
+            let mut grads: Vec<Option<Vec<Tensor>>> = vec![None; n_nodes];
+            let mut ctx = HintCtx { theta, next: 0 };
+            let (dx, x) = hint_bwd(dy, dld, &y, depth, &mut ctx, &mut grads);
+            let mut results = vec![dx];
+            for g in grads {
+                results.extend(g.expect("hint node gradient missing"));
+            }
+            if !stored {
+                results.push(x);
+            }
+            Ok(results)
+        }
+        other => bail!("hint: unknown entry {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{NetworkDef, ParamStore};
+    use crate::runtime::builtin_manifest;
+    use crate::util::rng::Pcg64;
+
+    fn rand_t(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(shape.iter().product()) }
+    }
+
+    /// forward -> inverse must round-trip for every layer kind in the
+    /// builtin catalog, at the layer level (network level is covered by
+    /// integration tests).
+    #[test]
+    fn every_layer_kind_roundtrips() {
+        let m = builtin_manifest();
+        let backend = RefBackend::new();
+        let mut rng = Pcg64::new(11);
+        let mut kinds_seen = std::collections::BTreeSet::new();
+        for net in ["realnvp2d", "cond_realnvp2d", "hint8d", "glow16",
+                    "hyper16", "nice16"] {
+            let def = NetworkDef::resolve(&m, net).unwrap();
+            let params = ParamStore::init(&def, &m, 3).unwrap();
+            for (i, step) in def.steps.iter().enumerate() {
+                if step.kind != crate::flow::StepKind::Layer {
+                    continue;
+                }
+                let meta = m.layer(&step.sig).unwrap();
+                if !kinds_seen.insert(meta.sig.clone()) {
+                    continue;
+                }
+                let x = rand_t(&step.in_shape, &mut rng);
+                let cond_t = meta.cond_shape.as_ref()
+                    .map(|s| rand_t(s, &mut rng));
+                let outs = backend.execute_layer(
+                    meta, "forward", &[&x], cond_t.as_ref(),
+                    &params.tensors[i]).unwrap();
+                assert_eq!(outs.len(), 2, "{}: forward arity", step.sig);
+                let y = &outs[0];
+                assert_eq!(y.shape, step.out_shape, "{}", step.sig);
+                assert_eq!(outs[1].shape, vec![step.in_shape[0]]);
+                let back = backend.execute_layer(
+                    meta, "inverse", &[y], cond_t.as_ref(),
+                    &params.tensors[i]).unwrap();
+                let err = x.max_abs_diff(&back[0]);
+                assert!(err < 1e-3, "{}: roundtrip err {err}", step.sig);
+            }
+        }
+        assert!(kinds_seen.len() >= 8, "covered {kinds_seen:?}");
+    }
+
+    /// backward and backward_stored must agree on dx and parameter grads
+    /// for a single layer (x taped vs recomputed from y).
+    #[test]
+    fn backward_matches_backward_stored_per_layer() {
+        let m = builtin_manifest();
+        let backend = RefBackend::new();
+        let mut rng = Pcg64::new(21);
+        for net in ["realnvp2d", "glow16", "hyper16", "hint8d", "nice16"] {
+            let def = NetworkDef::resolve(&m, net).unwrap();
+            let params = ParamStore::init(&def, &m, 9).unwrap();
+            let mut seen = std::collections::BTreeSet::new();
+            for (i, step) in def.steps.iter().enumerate() {
+                if step.kind != crate::flow::StepKind::Layer
+                    || !seen.insert(step.sig.clone()) {
+                    continue;
+                }
+                let meta = m.layer(&step.sig).unwrap();
+                if meta.cond_shape.is_some() {
+                    continue;
+                }
+                let n = step.in_shape[0];
+                let x = rand_t(&step.in_shape, &mut rng);
+                let y = backend.execute_layer(
+                    meta, "forward", &[&x], None, &params.tensors[i])
+                    .unwrap().remove(0);
+                let dy = rand_t(&step.out_shape, &mut rng);
+                let dld = rand_t(&[n], &mut rng);
+                let bwd = backend.execute_layer(
+                    meta, "backward", &[&dy, &dld, &y], None,
+                    &params.tensors[i]).unwrap();
+                let bwds = backend.execute_layer(
+                    meta, "backward_stored", &[&dy, &dld, &x], None,
+                    &params.tensors[i]).unwrap();
+                assert_eq!(bwd.len(), bwds.len() + 1, "{}", step.sig);
+                for (k, (a, b)) in bwd.iter().zip(&bwds).enumerate() {
+                    let scale = a.linf().max(b.linf()).max(1.0);
+                    let err = a.max_abs_diff(b);
+                    assert!(err <= 2e-3 * scale,
+                            "{} result {k}: {err} (scale {scale})", step.sig);
+                }
+                // last backward result is the recomputed input
+                let x_rec = bwd.last().unwrap();
+                assert!(x.max_abs_diff(x_rec) < 1e-3, "{} x_rec", step.sig);
+            }
+        }
+    }
+
+    #[test]
+    fn heads_match_closed_form() {
+        let backend = RefBackend::new();
+        let mut rng = Pcg64::new(31);
+        let z = rand_t(&[4, 3, 3, 2], &mut rng);
+        let logp = backend.execute_head("gaussian_logp", &z).unwrap();
+        assert_eq!(logp[0].shape, vec![4]);
+        let dim = 18.0f32;
+        for (i, row) in z.data.chunks(18).enumerate() {
+            let ss: f32 = row.iter().map(|v| v * v).sum();
+            let want = -0.5 * ss - 0.5 * dim * (2.0 * std::f32::consts::PI).ln();
+            assert!((logp[0].data[i] - want).abs() < 1e-4);
+        }
+        let seeds = backend.execute_head("nll_seed", &z).unwrap();
+        assert_eq!(seeds.len(), 2);
+        assert!((seeds[0].data[0] - z.data[0] / 4.0).abs() < 1e-6);
+        assert!((seeds[1].data[0] + 0.25).abs() < 1e-6);
+        assert!(backend.execute_head("nope", &z).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_calls() {
+        let m = builtin_manifest();
+        let backend = RefBackend::new();
+        let meta = m.layer("densecpl__256x2__hd64").unwrap();
+        let x = Tensor::zeros(&[256, 2]);
+        // wrong act arity
+        assert!(backend.execute_layer(meta, "backward", &[&x], None, &[])
+                .is_err());
+        // wrong param count
+        assert!(backend.execute_layer(meta, "forward", &[&x], None, &[])
+                .is_err());
+        // unexpected cond
+        let def = NetworkDef::resolve(&m, "realnvp2d").unwrap();
+        let params = ParamStore::init(&def, &m, 1).unwrap();
+        assert!(backend.execute_layer(meta, "forward", &[&x], Some(&x),
+                                      &params.tensors[0]).is_err());
+        // unknown entry
+        assert!(backend.execute_layer(meta, "sideways", &[&x], None,
+                                      &params.tensors[0]).is_err());
+    }
+}

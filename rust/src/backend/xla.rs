@@ -1,0 +1,208 @@
+//! `XlaBackend`: the PJRT runtime over AOT-compiled HLO-text artifacts
+//! (`python -m compile.aot` -> `artifacts/`). Feature-gated behind
+//! `--features xla`; the vendored `xla` crate is a stub documenting the
+//! required API, so real execution needs an actual xla-rs checkout patched
+//! in (see `rust/vendor/xla/src/lib.rs`).
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, which is what makes jax>=0.5 output loadable on
+//! xla_extension 0.5.1 (see DESIGN.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{EntryMeta, LayerMeta, Manifest};
+use crate::tensor::Tensor;
+
+use super::Backend;
+
+/// Convert the xla crate's error type into anyhow.
+pub fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+/// Host tensor -> device literal.
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    // single-copy path (vec1 + reshape would copy twice)
+    let bytes = unsafe {
+        std::slice::from_raw_parts(
+            t.data.as_ptr() as *const u8,
+            t.data.len() * std::mem::size_of::<f32>(),
+        )
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32, &t.shape, bytes)
+        .map_err(xerr)
+}
+
+/// Device literal -> host tensor.
+pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(xerr)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().map_err(xerr)?;
+    Tensor::new(dims, data)
+}
+
+/// A compiled (layer, entry) artifact ready to execute.
+pub struct CompiledEntry {
+    pub key: String,
+    pub meta: EntryMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledEntry {
+    /// Execute with host literals; returns one literal per manifest result
+    /// (the PJRT result tuple is decomposed).
+    pub fn execute(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.meta.operands.len() {
+            bail!("{}: got {} operands, manifest wants {}",
+                  self.key, args.len(), self.meta.operands.len());
+        }
+        let out = self.exe.execute::<&xla::Literal>(args).map_err(xerr)?;
+        let lit = out[0][0].to_literal_sync().map_err(xerr)?;
+        // aot.py lowers with return_tuple=True: always a tuple root.
+        let parts = lit.to_tuple().map_err(xerr)?;
+        if parts.len() != self.meta.results.len() {
+            bail!("{}: got {} results, manifest wants {}",
+                  self.key, parts.len(), self.meta.results.len());
+        }
+        Ok(parts)
+    }
+
+    /// Execute and convert every result to a host [`Tensor`].
+    pub fn execute_t(&self, args: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        self.execute(args)?.iter().map(from_literal).collect()
+    }
+}
+
+/// PJRT client + artifact directory + executable cache.
+///
+/// Compilation is lazy and cached per artifact file: a training loop
+/// compiles each of its network's entries exactly once.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    manifest: Arc<Manifest>,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<CompiledEntry>>>,
+}
+
+impl XlaBackend {
+    /// CPU-backed runtime over an artifact directory (`artifacts/`).
+    pub fn new(artifact_dir: &Path) -> Result<XlaBackend> {
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        Self::with_manifest(artifact_dir, manifest)
+    }
+
+    /// Share an already-loaded manifest (the `Engine` builder path).
+    pub fn with_manifest(artifact_dir: &Path, manifest: Arc<Manifest>)
+                         -> Result<XlaBackend> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(XlaBackend {
+            client,
+            manifest,
+            dir: artifact_dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, meta: &EntryMeta, key: &str) -> Result<Arc<CompiledEntry>> {
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)
+            .map_err(xerr)
+            .with_context(|| format!("loading {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)
+            .with_context(|| format!("compiling {key}"))?;
+        Ok(Arc::new(CompiledEntry {
+            key: key.to_string(),
+            meta: meta.clone(),
+            exe,
+        }))
+    }
+
+    fn cached(&self, key: &str, meta: &EntryMeta) -> Result<Arc<CompiledEntry>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(key) {
+            return Ok(hit.clone());
+        }
+        let compiled = self.compile(meta, key)?;
+        self.cache.lock().unwrap()
+            .insert(key.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Compiled whole-network full-AD ablation program (see
+    /// `python/compile/model.py::full_vjp_fn`). Cached.
+    pub fn monolith_entry(&self, net: &str) -> Result<Arc<CompiledEntry>> {
+        let meta = self.manifest.monoliths.get(net)
+            .ok_or_else(|| anyhow!("no monolith artifact for {net}"))?
+            .clone();
+        self.cached(&format!("monolith_{net}"), &meta)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn execute_layer(
+        &self,
+        meta: &LayerMeta,
+        entry: &str,
+        acts: &[&Tensor],
+        cond: Option<&Tensor>,
+        params: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let emeta = meta.entry(entry)?;
+        let key = format!("{}.{entry}", meta.sig);
+        let compiled = self.cached(&key, emeta)?;
+        // NOTE: parameters are re-uploaded as literals on every call. The
+        // old ParamStore literal cache amortized this to one upload per
+        // optimizer step; restoring that here needs a param-version hook
+        // on ParamStore (worth doing if the xla path becomes hot again).
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(
+            acts.len() + cond.is_some() as usize + params.len());
+        for a in acts {
+            lits.push(to_literal(a)?);
+        }
+        if let Some(c) = cond {
+            lits.push(to_literal(c)?);
+        }
+        for p in params {
+            lits.push(to_literal(p)?);
+        }
+        let args: Vec<&xla::Literal> = lits.iter().collect();
+        compiled.execute_t(&args)
+            .with_context(|| format!("executing {key}"))
+    }
+
+    fn execute_head(&self, entry: &str, z: &Tensor) -> Result<Vec<Tensor>> {
+        let head = self.manifest.head_for(&z.shape)?;
+        let tag = crate::runtime::shape_tag(&z.shape);
+        let emeta = head.entries.get(entry)
+            .ok_or_else(|| anyhow!("head {tag} has no entry {entry}"))?
+            .clone();
+        let compiled = self.cached(&format!("head_{tag}.{entry}"), &emeta)?;
+        let lit = to_literal(z)?;
+        compiled.execute_t(&[&lit])
+    }
+
+    /// Drop all compiled executables (used by benches between configs to
+    /// keep executable memory out of the activation measurements).
+    fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+}

@@ -14,11 +14,10 @@
 
 use anyhow::Result;
 
+use crate::api::Engine;
 use crate::coordinator::planner::{glow_flat_shape_def, predict_peak_sched};
-use crate::coordinator::{ExecMode, FlowSession};
+use crate::coordinator::ExecMode;
 use crate::data::synth_images;
-use crate::flow::ParamStore;
-use crate::runtime::Runtime;
 use crate::util::bench::fmt_bytes;
 use crate::util::rng::Pcg64;
 use crate::MemoryLedger;
@@ -27,18 +26,18 @@ const GB: f64 = 1024.0 * 1024.0 * 1024.0;
 
 /// Measure one real training step's peak scheduling bytes; Err(oom) if the
 /// budget is exceeded.
-pub fn measure_peak(rt: &Runtime, net: &str, mode: ExecMode,
+pub fn measure_peak(engine: &Engine, net: &str, mode: ExecMode,
                     budget: Option<u64>) -> Result<i64> {
     let ledger = match budget {
         Some(b) => MemoryLedger::with_budget(b),
         None => MemoryLedger::new(),
     };
-    let session = FlowSession::new(rt, net, ledger.clone())?;
-    let params = ParamStore::init(&session.def, &rt.manifest, 42)?;
-    let s = &session.def.in_shape;
+    let flow = engine.flow_with_ledger(net, ledger)?;
+    let params = flow.init_params(42)?;
+    let s = &flow.def.in_shape;
     let mut rng = Pcg64::new(99);
     let x = synth_images(s[0], s[1], s[2], s[3], &mut rng);
-    let result = session.train_step(&x, None, &params, mode)?;
+    let result = flow.train_step(&x, None, &params, &mode)?;
     Ok(result.peak_sched_bytes)
 }
 
@@ -51,7 +50,7 @@ fn fmt_cell(r: &Result<i64>) -> String {
 }
 
 /// Fig. 1: memory vs spatial size, GLOW K=16 steps, 3 channels, batch 8.
-pub fn fig1(rt: &Runtime, budget_gb: f64) -> Result<()> {
+pub fn fig1(engine: &Engine, budget_gb: f64) -> Result<()> {
     let budget = (budget_gb * GB) as u64;
     println!("# Fig. 1 — peak training memory vs image size");
     println!("# GLOW (Haar squeeze + 16 x [actnorm, conv1x1, affine coupling]), \
@@ -59,21 +58,29 @@ pub fn fig1(rt: &Runtime, budget_gb: f64) -> Result<()> {
     println!("# budget {budget_gb} GB (paper: 40 GB A100; normflows OOM at 480x480)");
     println!("{:>6} {:>10} {:>14} {:>14} {:>8}",
              "size", "kind", "invertible", "stored(AD)", "ratio");
-    let measured = [16usize, 32, 64, 128, 256];
-    for hw in measured {
+    // the RefBackend executes these on host CPU: keep the measured sweep
+    // to sizes that finish interactively, model the rest
+    let measured: &[usize] = if engine.backend_name() == "ref" {
+        &[16, 32, 64]
+    } else {
+        &[16, 32, 64, 128, 256]
+    };
+    for &hw in measured {
         let net = format!("glow_fig1_{hw}");
-        let inv = measure_peak(rt, &net, ExecMode::Invertible, Some(budget));
-        let sto = measure_peak(rt, &net, ExecMode::Stored, Some(budget));
+        let inv = measure_peak(engine, &net, ExecMode::Invertible, Some(budget));
+        let sto = measure_peak(engine, &net, ExecMode::Stored, Some(budget));
         let ratio = match (&inv, &sto) {
             (Ok(a), Ok(b)) if *a > 0 => format!("{:.1}x", *b as f64 / *a as f64),
             _ => "-".into(),
         };
         println!("{hw:>6} {:>10} {:>14} {:>14} {ratio:>8}",
                  "measured", fmt_cell(&inv), fmt_cell(&sto));
-        rt.clear_cache(); // keep compiled executables out of later configs
+        engine.clear_cache(); // keep compiled executables out of later configs
     }
-    // planner extension to the paper's full range
-    for hw in [384usize, 480, 512, 768, 1024, 1536, 2048, 3072, 4096] {
+    // planner extension to the paper's full range (skipping measured sizes)
+    for hw in [128usize, 256, 384, 480, 512, 768, 1024, 1536, 2048, 3072, 4096]
+        .into_iter().filter(|hw| !measured.contains(hw))
+    {
         let def = glow_flat_shape_def(8, hw, hw, 3, 16);
         let inv = predict_peak_sched(&def, ExecMode::Invertible);
         let sto = predict_peak_sched(&def, ExecMode::Stored);
@@ -94,25 +101,32 @@ pub fn fig1(rt: &Runtime, budget_gb: f64) -> Result<()> {
 }
 
 /// Fig. 2: memory vs network depth at 64x64.
-pub fn fig2(rt: &Runtime, budget_gb: f64) -> Result<()> {
+pub fn fig2(engine: &Engine, budget_gb: f64) -> Result<()> {
     let budget = (budget_gb * GB) as u64;
     println!("# Fig. 2 — peak training memory vs depth (GLOW steps K), 64x64x3, batch 8");
     println!("{:>6} {:>10} {:>14} {:>14} {:>8}",
              "depth", "kind", "invertible", "stored(AD)", "ratio");
-    for k in [2usize, 4, 8, 16, 32, 48] {
+    let measured: &[usize] = if engine.backend_name() == "ref" {
+        &[2, 4, 8, 16]
+    } else {
+        &[2, 4, 8, 16, 32, 48]
+    };
+    for &k in measured {
         let net = format!("glow_fig2_d{k}");
-        let inv = measure_peak(rt, &net, ExecMode::Invertible, Some(budget));
-        let sto = measure_peak(rt, &net, ExecMode::Stored, Some(budget));
+        let inv = measure_peak(engine, &net, ExecMode::Invertible, Some(budget));
+        let sto = measure_peak(engine, &net, ExecMode::Stored, Some(budget));
         let ratio = match (&inv, &sto) {
             (Ok(a), Ok(b)) if *a > 0 => format!("{:.1}x", *b as f64 / *a as f64),
             _ => "-".into(),
         };
         println!("{k:>6} {:>10} {:>14} {:>14} {ratio:>8}",
                  "measured", fmt_cell(&inv), fmt_cell(&sto));
-        rt.clear_cache();
+        engine.clear_cache();
     }
-    // model extension to very deep nets
-    for k in [96usize, 192] {
+    // model extension to very deep nets (skipping measured depths)
+    for k in [32usize, 48, 96, 192].into_iter()
+        .filter(|k| !measured.contains(k))
+    {
         let def = glow_flat_shape_def(8, 64, 64, 3, k);
         let inv = predict_peak_sched(&def, ExecMode::Invertible);
         let sto = predict_peak_sched(&def, ExecMode::Stored);

@@ -1,32 +1,52 @@
-//! The two training-step schedulers — the system this paper is about.
+//! The training-step schedulers — the system this paper is about.
 //!
-//! [`ExecMode::Invertible`] (InvertibleNetworks.jl's contribution): the
-//! forward pass keeps **only the current activation**; the backward pass
-//! calls each layer's hand-written `backward` program, which *recomputes*
-//! the layer input from its output via the inverse. Peak scheduling memory
-//! is O(1) in depth.
+//! Which activations stay alive is decided by an [`ActivationSchedule`]:
 //!
-//! [`ExecMode::Stored`] (the PyTorch/normflows baseline, built here so the
-//! comparison is like-for-like): the forward pass tapes every layer input
-//! and the backward pass calls `backward_stored`. Peak memory is O(depth).
+//! * [`ExecMode::Invertible`] (InvertibleNetworks.jl's contribution): the
+//!   forward pass keeps **only the current activation**; the backward pass
+//!   calls each layer's hand-written `backward` program, which *recomputes*
+//!   the layer input from its output via the inverse. Peak scheduling
+//!   memory is O(1) in depth.
+//! * [`ExecMode::Stored`] (the PyTorch/normflows baseline, built here so
+//!   the comparison is like-for-like): the forward pass tapes every layer
+//!   input and the backward pass calls `backward_stored`. Peak memory is
+//!   O(depth).
+//! * Anything in between plugs in through the trait — e.g.
+//!   [`CheckpointEveryK`] tapes every k-th layer and recomputes the rest.
 //!
-//! Both modes execute the *same* AOT-compiled XLA programs with identical
-//! math (integration-tested to produce equal losses and gradients); the
-//! only difference is buffer lifetime, which the [`MemoryLedger`] records.
-
-use std::sync::Arc;
+//! All schedules execute the *same* backend programs with identical math
+//! (integration-tested to produce equal losses and gradients); the only
+//! difference is buffer lifetime, which the
+//! [`super::memory::MemoryLedger`] records.
+//!
+//! The algorithms are methods on [`crate::api::Flow`] (the owned handle
+//! constructed by `Engine::flow`).
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::flow::{NetworkDef, ParamStore, StepKind};
-use crate::runtime::Runtime;
+use crate::api::Flow;
+use crate::flow::{ParamStore, StepKind};
 use crate::tensor::ops::{add_assign, concat_last_axis, split_last_axis};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
-use super::memory::{MemClass, MemoryLedger, Tracked};
+use super::memory::{MemClass, Tracked};
 
-/// Which activation-lifetime schedule to run.
+/// Decides, per layer step, whether the forward pass retains (tapes) that
+/// step's input for the backward pass. Taped steps run `backward_stored`;
+/// untaped steps run `backward`, which recomputes the input from the
+/// inverse.
+pub trait ActivationSchedule: Send + Sync {
+    /// Human-readable name for logs/CSV.
+    fn label(&self) -> String;
+
+    /// Should the `layer_idx`-th *layer* (0-based ordinal among the
+    /// network's `n_layers` layer steps; coordinator-native splits don't
+    /// count) tape its input?
+    fn tape(&self, layer_idx: usize, n_layers: usize) -> bool;
+}
+
+/// The two canonical schedules from the paper's comparison.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
     /// Recompute activations from inverses (the paper's method).
@@ -44,6 +64,33 @@ impl ExecMode {
     }
 }
 
+impl ActivationSchedule for ExecMode {
+    fn label(&self) -> String {
+        self.name().to_string()
+    }
+
+    fn tape(&self, _layer_idx: usize, _n_layers: usize) -> bool {
+        matches!(self, ExecMode::Stored)
+    }
+}
+
+/// Hybrid schedule: tape every k-th layer input, recompute the rest from
+/// inverses — the classic checkpointing trade dropped into the invertible
+/// walk. `CheckpointEveryK(1)` is `Stored`; `k > depth` tapes only the
+/// first layer.
+#[derive(Debug, Clone, Copy)]
+pub struct CheckpointEveryK(pub usize);
+
+impl ActivationSchedule for CheckpointEveryK {
+    fn label(&self) -> String {
+        format!("checkpoint_every_{}", self.0.max(1))
+    }
+
+    fn tape(&self, layer_idx: usize, _n_layers: usize) -> bool {
+        layer_idx % self.0.max(1) == 0
+    }
+}
+
 /// Result of one training step.
 pub struct StepResult {
     pub loss: f32,
@@ -58,68 +105,42 @@ pub struct StepResult {
     pub peak_total_bytes: i64,
 }
 
-/// A network bound to a runtime + ledger, ready to train/sample/evaluate.
-pub struct FlowSession<'rt> {
-    pub rt: &'rt Runtime,
-    pub def: NetworkDef,
-    pub ledger: Arc<MemoryLedger>,
-}
-
-impl<'rt> FlowSession<'rt> {
-    pub fn new(rt: &'rt Runtime, net: &str, ledger: Arc<MemoryLedger>) -> Result<Self> {
-        let def = NetworkDef::resolve(&rt.manifest, net)?;
-        Ok(FlowSession { rt, def, ledger })
-    }
-
-    pub fn batch(&self) -> usize {
-        self.def.in_shape[0]
-    }
-
+impl Flow {
     fn track(&self, t: Tensor, class: MemClass) -> Result<Tracked> {
         Tracked::new(t, class, &self.ledger)
     }
 
-    /// Execute a layer-step entry: operands are (activations..., cond?,
-    /// params...) per the aot.py convention.
+    /// Execute a layer-step entry through the backend. The conditioning
+    /// tensor is forwarded only if this step's layer takes one.
     fn exec_step(
         &self,
         step_idx: usize,
         entry: &str,
         acts: &[&Tensor],
-        cond_lit: Option<&xla::Literal>,
+        cond: Option<&Tensor>,
         params: &ParamStore,
     ) -> Result<Vec<Tensor>> {
         let sig = &self.def.steps[step_idx].sig;
-        let compiled = self.rt.layer_entry(sig, entry)?;
-        let act_lits: Vec<xla::Literal> = acts
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        params.with_literals(step_idx, |plits| {
-            let mut args: Vec<&xla::Literal> = act_lits.iter().collect();
-            if let Some(c) = cond_lit {
-                args.push(c);
-            }
-            args.extend(plits.iter());
-            compiled
-                .execute_t(&args)
-                .with_context(|| format!("executing {sig}.{entry}"))
-        })
+        let meta = self.manifest.layer(sig)?;
+        let c = if meta.cond_shape.is_some() { cond } else { None };
+        self.backend
+            .execute_layer(meta, entry, acts, c, &params.tensors[step_idx])
+            .with_context(|| format!("executing {sig}.{entry}"))
     }
 
     fn head_t(&self, entry: &str, z: &Tensor) -> Result<Vec<Tensor>> {
-        let compiled = self.rt.head_entry(&z.shape, entry)?;
-        let lit = z.to_literal()?;
-        compiled.execute_t(&[&lit])
+        self.backend
+            .execute_head(entry, z)
+            .with_context(|| format!("head {entry} for {:?}", z.shape))
     }
 
-    fn cond_literal(&self, cond: Option<&Tensor>) -> Result<Option<xla::Literal>> {
+    fn check_cond<'a>(&self, cond: Option<&'a Tensor>) -> Result<Option<&'a Tensor>> {
         match (cond, &self.def.cond_shape) {
             (Some(c), Some(shape)) => {
                 if &c.shape != shape {
                     bail!("cond shape {:?} != network cond {:?}", c.shape, shape);
                 }
-                Ok(Some(c.to_literal()?))
+                Ok(Some(c))
             }
             (None, None) => Ok(None),
             (Some(_), None) => bail!("network {} takes no cond", self.def.name),
@@ -127,41 +148,41 @@ impl<'rt> FlowSession<'rt> {
         }
     }
 
-    /// Whether a given step's artifact takes the conditioning operand.
-    fn step_takes_cond(&self, step_idx: usize) -> bool {
-        let step = &self.def.steps[step_idx];
-        if step.kind != StepKind::Layer {
-            return false;
+    /// After consuming a taped input at step `i`, is an activation still
+    /// needed for an earlier step? True iff the nearest preceding *layer*
+    /// step is untaped (splits only reshape the activation on the way).
+    fn y_needed_before(&self, i: usize, taped: &[bool]) -> bool {
+        for j in (0..i).rev() {
+            match self.def.steps[j].kind {
+                StepKind::Layer => return !taped[j],
+                StepKind::Split { .. } => continue,
+            }
         }
-        self.rt
-            .manifest
-            .layer(&step.sig)
-            .map(|m| m.cond_shape.is_some())
-            .unwrap_or(false)
+        false
     }
 
     // ------------------------------------------------------------------
     // Forward
     // ------------------------------------------------------------------
 
-    /// Forward pass. `tape=true` additionally returns every layer input
-    /// (the Stored/autodiff schedule); `tape=false` holds only the current
-    /// activation (the Invertible schedule).
-    ///
-    /// Returns (latents in push order, per-sample logdet totals, tape).
+    /// Forward pass under a schedule: taped steps additionally retain
+    /// their input. Returns (latents in push order, per-sample logdet
+    /// totals, tape aligned with steps).
     #[allow(clippy::type_complexity)]
-    pub fn forward(
+    fn forward_with(
         &self,
         x: &Tensor,
         cond: Option<&Tensor>,
         params: &ParamStore,
-        tape: bool,
+        schedule: &dyn ActivationSchedule,
     ) -> Result<(Vec<Tracked>, Vec<f32>, Vec<Option<Tracked>>)> {
         if x.shape != self.def.in_shape {
             bail!("input shape {:?} != network {:?}", x.shape, self.def.in_shape);
         }
         let n = self.batch();
-        let cond_lit = self.cond_literal(cond)?;
+        let cond = self.check_cond(cond)?;
+        let n_layers = self.def.depth();
+        let mut layer_ord = 0usize;
         let mut ld_total = vec![0.0f32; n];
         let mut latents: Vec<Tracked> = Vec::new();
         let mut tape_store: Vec<Option<Tracked>> = Vec::new();
@@ -177,13 +198,8 @@ impl<'rt> FlowSession<'rt> {
                     tape_store.push(None);
                 }
                 StepKind::Layer => {
-                    let cl = if self.step_takes_cond(i) {
-                        cond_lit.as_ref()
-                    } else {
-                        None
-                    };
                     let outs = self.exec_step(i, "forward",
-                                              &[cur.tensor()], cl, params)?;
+                                              &[cur.tensor()], cond, params)?;
                     let [y, logdet]: [Tensor; 2] = outs
                         .try_into()
                         .map_err(|_| anyhow!("forward arity"))?;
@@ -191,12 +207,13 @@ impl<'rt> FlowSession<'rt> {
                         *acc += v;
                     }
                     let next = self.track(y, MemClass::Activation)?;
-                    if tape {
+                    if schedule.tape(layer_ord, n_layers) {
                         tape_store.push(Some(cur));
                     } else {
                         tape_store.push(None);
-                        // `cur` dropped: invertible mode keeps nothing
+                        // `cur` dropped: recompute schedules keep nothing
                     }
+                    layer_ord += 1;
                     cur = next;
                 }
             }
@@ -207,6 +224,19 @@ impl<'rt> FlowSession<'rt> {
         Ok((latents, ld_total, tape_store))
     }
 
+    /// Tape-free forward pass (sampling/eval path): returns the latents in
+    /// push order and the per-sample logdet totals.
+    pub fn forward(
+        &self,
+        x: &Tensor,
+        cond: Option<&Tensor>,
+        params: &ParamStore,
+    ) -> Result<(Vec<Tracked>, Vec<f32>)> {
+        let (latents, ld, _) =
+            self.forward_with(x, cond, params, &ExecMode::Invertible)?;
+        Ok((latents, ld))
+    }
+
     /// Per-sample log-likelihood of the inputs under the flow:
     /// log p(x) = sum_latents log N(z) + total logdet.
     pub fn log_likelihood(
@@ -215,7 +245,7 @@ impl<'rt> FlowSession<'rt> {
         cond: Option<&Tensor>,
         params: &ParamStore,
     ) -> Result<Vec<f32>> {
-        let (latents, ld, _) = self.forward(x, cond, params, false)?;
+        let (latents, ld) = self.forward(x, cond, params)?;
         let mut out = ld;
         for z in &latents {
             let lp = &self.head_t("gaussian_logp", z.tensor())?[0];
@@ -230,21 +260,23 @@ impl<'rt> FlowSession<'rt> {
     // Training step
     // ------------------------------------------------------------------
 
-    /// One full NLL training step (forward + loss + backward), returning
-    /// parameter gradients and the memory peaks observed.
+    /// One full NLL training step (forward + loss + backward) under the
+    /// given activation schedule, returning parameter gradients and the
+    /// memory peaks observed.
     pub fn train_step(
         &self,
         x: &Tensor,
         cond: Option<&Tensor>,
         params: &ParamStore,
-        mode: ExecMode,
+        schedule: &dyn ActivationSchedule,
     ) -> Result<StepResult> {
         self.ledger.reset_peaks();
         let n = self.batch();
-        let cond_lit = self.cond_literal(cond)?;
+        let cond = self.check_cond(cond)?;
 
         let (mut latents, ld_total, mut tape) =
-            self.forward(x, cond, params, mode == ExecMode::Stored)?;
+            self.forward_with(x, cond, params, schedule)?;
+        let taped: Vec<bool> = tape.iter().map(|t| t.is_some()).collect();
 
         // ---- loss -----------------------------------------------------
         let mut logp = vec![0.0f32; n];
@@ -267,8 +299,9 @@ impl<'rt> FlowSession<'rt> {
         let dz_final = seeds.into_iter().next().expect("nll_seed returns dz");
         let mut dy = self.track(dz_final, MemClass::Gradient)?;
 
-        // In invertible mode the final latent doubles as the activation we
-        // walk back from; in stored mode the tape provides inputs.
+        // The recompute walk needs the current activation; taped steps
+        // provide inputs directly. The final latent doubles as the
+        // activation we walk back from.
         let mut y: Option<Tracked> = Some(z_final);
 
         let mut grads: Vec<Vec<Tensor>> = vec![Vec::new(); self.def.steps.len()];
@@ -280,7 +313,8 @@ impl<'rt> FlowSession<'rt> {
                     let z = latents.pop().ok_or_else(
                         || anyhow!("latent stack underflow at step {i}"))?;
                     let seeds = self.head_t("nll_seed", z.tensor())?;
-                    let dz = seeds.into_iter().next().unwrap();
+                    let dz = seeds.into_iter().next()
+                        .ok_or_else(|| anyhow!("nll_seed returned nothing"))?;
                     let new_dy = self.track(
                         concat_last_axis(&dz, dy.tensor())?, MemClass::Gradient)?;
                     dy = new_dy;
@@ -291,32 +325,39 @@ impl<'rt> FlowSession<'rt> {
                     // z dropped here (its bytes were Latent class)
                 }
                 StepKind::Layer => {
-                    let meta = self.rt.manifest.layer(&step.sig)?;
+                    let meta = self.manifest.layer(&step.sig)?;
                     let has_cond = meta.cond_shape.is_some();
-                    let cl = if has_cond { cond_lit.as_ref() } else { None };
                     let n_params = meta.params.len();
+                    let recompute = !taped[i];
 
-                    let results = match mode {
-                        ExecMode::Invertible => {
-                            let yt = y.as_ref().ok_or_else(
-                                || anyhow!("missing activation at step {i}"))?;
-                            self.exec_step(
-                                i, "backward",
-                                &[dy.tensor(), &dld, yt.tensor()], cl, params)?
+                    let results = if recompute {
+                        let yt = y.as_ref().ok_or_else(
+                            || anyhow!("missing activation at step {i}"))?;
+                        self.exec_step(
+                            i, "backward",
+                            &[dy.tensor(), &dld, yt.tensor()], cond, params)?
+                    } else {
+                        let xin = tape[i].take().ok_or_else(
+                            || anyhow!("missing tape entry at step {i}"))?;
+                        // the taped input supersedes any activation a later
+                        // recompute step left behind — release it now so
+                        // live bytes reflect what backward_stored needs
+                        y = None;
+                        let results = self.exec_step(
+                            i, "backward_stored",
+                            &[dy.tensor(), &dld, xin.tensor()], cond, params)?;
+                        // Keep the taped input alive as the activation iff
+                        // an earlier untaped layer will need it; drop it
+                        // otherwise (autodiff frees tape entries as
+                        // backward consumes them).
+                        if self.y_needed_before(i, &taped) {
+                            y = Some(xin);
                         }
-                        ExecMode::Stored => {
-                            let xin = tape[i].take().ok_or_else(
-                                || anyhow!("missing tape entry at step {i}"))?;
-                            self.exec_step(
-                                i, "backward_stored",
-                                &[dy.tensor(), &dld, xin.tensor()], cl, params)?
-                            // xin dropped: autodiff frees tape entries as
-                            // backward consumes them
-                        }
+                        results
                     };
 
                     let want = 1 + has_cond as usize + n_params
-                        + (mode == ExecMode::Invertible) as usize;
+                        + recompute as usize;
                     if results.len() != want {
                         bail!("{}.backward arity {} != {want}",
                               step.sig, results.len());
@@ -338,14 +379,9 @@ impl<'rt> FlowSession<'rt> {
 
                     let new_dy = self.track(dx, MemClass::Gradient)?;
                     dy = new_dy;
-                    match mode {
-                        ExecMode::Invertible => {
-                            let x_rec = it.next().unwrap();
-                            y = Some(self.track(x_rec, MemClass::Activation)?);
-                        }
-                        ExecMode::Stored => {
-                            y = None;
-                        }
+                    if recompute {
+                        let x_rec = it.next().unwrap();
+                        y = Some(self.track(x_rec, MemClass::Activation)?);
                     }
                 }
             }
@@ -385,8 +421,8 @@ impl<'rt> FlowSession<'rt> {
         self.invert(&zs, cond, params)
     }
 
-    /// Map latents back to input space (inverse of [`forward`]'s latents,
-    /// in the same push order).
+    /// Map latents back to input space (inverse of [`Flow::forward`]'s
+    /// latents, in the same push order).
     pub fn invert(
         &self,
         latents: &[Tensor],
@@ -397,7 +433,7 @@ impl<'rt> FlowSession<'rt> {
             bail!("expected {} latents, got {}",
                   self.def.latent_shapes.len(), latents.len());
         }
-        let cond_lit = self.cond_literal(cond)?;
+        let cond = self.check_cond(cond)?;
         let mut stack: Vec<&Tensor> = latents.iter().collect();
         let mut cur = stack.pop().unwrap().clone();
         for (i, step) in self.def.steps.iter().enumerate().rev() {
@@ -408,12 +444,7 @@ impl<'rt> FlowSession<'rt> {
                     cur = concat_last_axis(z, &cur)?;
                 }
                 StepKind::Layer => {
-                    let cl = if self.step_takes_cond(i) {
-                        cond_lit.as_ref()
-                    } else {
-                        None
-                    };
-                    let outs = self.exec_step(i, "inverse", &[&cur], cl, params)?;
+                    let outs = self.exec_step(i, "inverse", &[&cur], cond, params)?;
                     cur = outs.into_iter().next().ok_or_else(
                         || anyhow!("inverse returned nothing"))?;
                 }
@@ -430,9 +461,50 @@ impl<'rt> FlowSession<'rt> {
         cond: Option<&Tensor>,
         params: &ParamStore,
     ) -> Result<f32> {
-        let (latents, _, _) = self.forward(x, cond, params, false)?;
+        let (latents, _) = self.forward(x, cond, params)?;
         let zs: Vec<Tensor> = latents.iter().map(|t| t.tensor().clone()).collect();
         let x_rec = self.invert(&zs, cond, params)?;
         Ok(x.max_abs_diff(&x_rec))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_mode_is_a_schedule() {
+        assert!(!ExecMode::Invertible.tape(0, 10));
+        assert!(ExecMode::Stored.tape(0, 10));
+        assert_eq!(ExecMode::Invertible.label(), "invertible");
+        assert_eq!(ExecMode::Stored.name(), "stored");
+    }
+
+    #[test]
+    fn checkpoint_schedule_tapes_every_k() {
+        let s = CheckpointEveryK(3);
+        let taped: Vec<bool> = (0..7).map(|i| s.tape(i, 7)).collect();
+        assert_eq!(taped, vec![true, false, false, true, false, false, true]);
+        assert_eq!(s.label(), "checkpoint_every_3");
+        // k = 0 is clamped rather than dividing by zero
+        assert!(CheckpointEveryK(0).tape(5, 10));
+    }
+
+    fn _schedules_are_object_safe(s: &dyn ActivationSchedule) -> String {
+        s.label()
+    }
+
+    #[test]
+    fn schedules_compose_as_trait_objects() {
+        let all: Vec<Box<dyn ActivationSchedule>> = vec![
+            Box::new(ExecMode::Invertible),
+            Box::new(ExecMode::Stored),
+            Box::new(CheckpointEveryK(2)),
+        ];
+        let labels: Vec<String> = all.iter()
+            .map(|s| _schedules_are_object_safe(s.as_ref()))
+            .collect();
+        assert_eq!(labels,
+                   vec!["invertible", "stored", "checkpoint_every_2"]);
     }
 }

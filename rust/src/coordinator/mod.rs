@@ -1,13 +1,16 @@
 //! L3 coordinator — the paper's system contribution.
 //!
-//! * [`executor`]: the invertible (recompute-from-inverse) and stored
-//!   (autodiff-tape baseline) training-step schedulers.
+//! * [`executor`]: the schedule-driven training-step walk (methods on
+//!   [`crate::api::Flow`]) plus the [`ActivationSchedule`] trait with the
+//!   invertible / stored / checkpoint-hybrid schedules.
 //! * [`memory`]: the live/peak byte ledger + budgeted (OOM-simulating)
-//!   allocation both schedulers run under.
+//!   allocation every schedule runs under.
+//! * [`planner`]: shape-only replay of the two canonical schedules for
+//!   extrapolating the paper's figures beyond executable sizes.
 
 pub mod executor;
 pub mod memory;
 pub mod planner;
 
-pub use executor::{ExecMode, FlowSession, StepResult};
+pub use executor::{ActivationSchedule, CheckpointEveryK, ExecMode, StepResult};
 pub use memory::{MemClass, MemoryLedger, Tracked};

@@ -1,11 +1,11 @@
 //! Per-step parameter store.
 //!
 //! Layer signatures repeat within a network (e.g. 48 GLOW steps share one
-//! set of artifacts), but every step owns its own parameters, so the store
-//! is indexed by step position. Literal conversions are cached and
-//! invalidated on update (one upload per step per optimizer step).
+//! set of layer metadata), but every step owns its own parameters, so the
+//! store is indexed by step position. The store is plain host data — any
+//! backend-specific upload/caching is the backend's concern, which keeps
+//! this type free of execution-substrate types.
 
-use std::cell::RefCell;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -18,12 +18,12 @@ use crate::util::rng::Pcg64;
 use super::init::init_param;
 use super::spec::{NetworkDef, StepKind};
 
+#[derive(Debug, Clone)]
 pub struct ParamStore {
     /// `tensors[step_idx][param_idx]`; empty vec for split / param-free steps.
     pub tensors: Vec<Vec<Tensor>>,
     /// Parameter names aligned with `tensors` (for checkpoints/debug).
     pub names: Vec<Vec<String>>,
-    pub(crate) lits: RefCell<Vec<Option<Vec<xla::Literal>>>>,
 }
 
 impl ParamStore {
@@ -48,8 +48,7 @@ impl ParamStore {
             tensors.push(ts);
             names.push(ns);
         }
-        let lits = RefCell::new(vec![None; tensors.len()]);
-        Ok(ParamStore { tensors, names, lits })
+        Ok(ParamStore { tensors, names })
     }
 
     pub fn num_steps(&self) -> usize {
@@ -64,28 +63,9 @@ impl ParamStore {
         self.tensors.iter().flatten().map(|t| t.size_bytes()).sum()
     }
 
-    /// Run `f` with literal refs for the step's params (cached across calls
-    /// until `mark_dirty(step)`).
-    pub fn with_literals<R>(
-        &self,
-        step: usize,
-        f: impl FnOnce(&[xla::Literal]) -> Result<R>,
-    ) -> Result<R> {
-        {
-            let mut cache = self.lits.borrow_mut();
-            if cache[step].is_none() {
-                let ls: Result<Vec<_>> =
-                    self.tensors[step].iter().map(|t| t.to_literal()).collect();
-                cache[step] = Some(ls?);
-            }
-        }
-        let cache = self.lits.borrow();
-        f(cache[step].as_ref().unwrap())
-    }
-
-    /// Invalidate the literal cache after an optimizer update.
-    pub fn mark_dirty(&self, step: usize) {
-        self.lits.borrow_mut()[step] = None;
+    /// The parameter tensors of one step.
+    pub fn step(&self, step_idx: usize) -> &[Tensor] {
+        &self.tensors[step_idx]
     }
 
     // ---- checkpointing -----------------------------------------------------
@@ -114,8 +94,8 @@ impl ParamStore {
         Ok(())
     }
 
-    /// Load a checkpoint saved by [`save`]; shapes are validated against
-    /// the current store layout.
+    /// Load a checkpoint saved by [`ParamStore::save`]; shapes are validated
+    /// against the current store layout.
     pub fn load(&mut self, dir: &Path) -> Result<()> {
         let text = std::fs::read_to_string(dir.join("index.json"))
             .with_context(|| format!("reading checkpoint {dir:?}"))?;
@@ -134,7 +114,6 @@ impl ParamStore {
                        {:?} vs {:?}", self.tensors[si][pi].shape, t.shape);
             }
             self.tensors[si][pi] = t;
-            self.mark_dirty(si);
         }
         Ok(())
     }

@@ -1,16 +1,17 @@
 //! Resolved network definition: the ordered steps the coordinator replays.
 //!
-//! A step is either an AOT artifact layer (executed via the runtime) or a
-//! coordinator-native `split` (multiscale factor-out — pure host memory
-//! movement, see `tensor::ops`).
+//! A step is either a backend-executed layer or a coordinator-native
+//! `split` (multiscale factor-out — pure host memory movement, see
+//! `tensor::ops`).
 
 use anyhow::{bail, Result};
 
+use crate::runtime::manifest::parse_split;
 use crate::runtime::{LayerMeta, Manifest, NetworkMeta};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum StepKind {
-    /// AOT-compiled layer with the given manifest signature.
+    /// Backend-executed layer with the given manifest signature.
     Layer,
     /// Factor-out: first `zc` channels leave as a latent, rest continues.
     Split { zc: usize },
@@ -32,16 +33,9 @@ pub struct NetworkDef {
     pub in_shape: Vec<usize>,
     pub cond_shape: Option<Vec<usize>>,
     pub steps: Vec<Step>,
+    /// Latent shapes in push order: one per split step, then the final
+    /// activation (which is always a latent but never a split product).
     pub latent_shapes: Vec<Vec<usize>>,
-}
-
-/// Parse `split_zc<k>__<HxWx...>` markers emitted by model.py.
-fn parse_split(s: &str) -> Option<(usize, Vec<usize>)> {
-    let rest = s.strip_prefix("split_zc")?;
-    let (zc, shape) = rest.split_once("__")?;
-    let zc = zc.parse().ok()?;
-    let dims = shape.split('x').map(|d| d.parse().ok()).collect::<Option<Vec<_>>>()?;
-    Some((zc, dims))
 }
 
 impl NetworkDef {
@@ -127,21 +121,72 @@ impl NetworkDef {
         self.steps.iter().filter(|s| s.kind == StepKind::Layer).count()
     }
 
-    pub fn find_latent_for(&self, split_idx: usize) -> Option<&Vec<usize>> {
-        self.latent_shapes.get(split_idx)
+    /// Number of split (factor-out) steps.
+    pub fn num_splits(&self) -> usize {
+        self.latent_shapes.len().saturating_sub(1)
+    }
+
+    /// Latent shape produced by the `split_idx`-th split step.
+    ///
+    /// `latent_shapes` holds one entry per split **plus** the final
+    /// activation as its last element; the final latent is not a split
+    /// product, so indexing `latent_shapes` directly with a split index is
+    /// off-by-one-prone (the old `find_latent_for` did exactly that).
+    /// This accessor is bounds-correct: it returns `None` for
+    /// `split_idx >= num_splits()`, never the final latent.
+    pub fn split_latent(&self, split_idx: usize) -> Option<&Vec<usize>> {
+        if split_idx < self.num_splits() {
+            self.latent_shapes.get(split_idx)
+        } else {
+            None
+        }
+    }
+
+    /// Shape of the final latent (the activation left after all steps).
+    pub fn final_latent(&self) -> &Vec<usize> {
+        self.latent_shapes.last()
+            .expect("a resolved network always has a final latent")
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::builtin_manifest;
+
+    // (split-marker parse/format coverage lives with the parser in
+    // runtime/manifest.rs)
+
+    /// Regression: the final latent is not a split latent. The old
+    /// `find_latent_for` indexed `latent_shapes` directly, so asking for
+    /// the split after the last one silently returned the final latent.
+    #[test]
+    fn split_latent_accessor_is_bounds_correct() {
+        let m = builtin_manifest();
+        // glow16 has exactly one split ([16,8,8,6]) and a final latent
+        // ([16,4,4,24]).
+        let def = NetworkDef::resolve(&m, "glow16").unwrap();
+        assert_eq!(def.num_splits(), 1);
+        assert_eq!(def.split_latent(0), Some(&vec![16, 8, 8, 6]));
+        // index 1 points at the final latent in latent_shapes — a split
+        // accessor must NOT hand it out (the old `find_latent_for` did)
+        assert_eq!(def.split_latent(1), None);
+        assert_eq!(def.split_latent(99), None);
+        assert_eq!(def.final_latent(), &vec![16, 4, 4, 24]);
+
+        // a split-free net: no split latents at all, final latent = input
+        let def = NetworkDef::resolve(&m, "realnvp2d").unwrap();
+        assert_eq!(def.num_splits(), 0);
+        assert_eq!(def.split_latent(0), None);
+        assert_eq!(def.final_latent(), &vec![256, 2]);
+    }
 
     #[test]
-    fn split_marker_parses() {
-        let (zc, dims) = parse_split("split_zc6__16x8x8x12").unwrap();
-        assert_eq!(zc, 6);
-        assert_eq!(dims, vec![16, 8, 8, 12]);
-        assert!(parse_split("actnorm__2x2").is_none());
-        assert!(parse_split("split_zcX__2").is_none());
+    fn depth_counts_layers_not_splits() {
+        let m = builtin_manifest();
+        let def = NetworkDef::resolve(&m, "glow16").unwrap();
+        // 2 scales x (haar + 4x3 glow steps) = 2 + 24 layers; 1 split
+        assert_eq!(def.depth(), 26);
+        assert_eq!(def.steps.len(), 27);
     }
 }

@@ -1,26 +1,74 @@
 //! # invertnet
 //!
-//! Memory-frugal normalizing flows: a rust coordinator over AOT-compiled
-//! JAX/Pallas compute — a reproduction of *"InvertibleNetworks.jl: A Julia
-//! package for scalable normalizing flows"* (Orozco et al., 2023).
+//! Memory-frugal normalizing flows — a reproduction of
+//! *"InvertibleNetworks.jl: A Julia package for scalable normalizing
+//! flows"* (Orozco et al., 2023).
 //!
-//! The paper's contribution is that invertible networks let you **recompute
-//! activations from layer inverses during backprop** instead of taping them,
-//! making peak training memory O(1) in network depth — something generic
-//! autodiff frameworks do not exploit. Here that contribution lives in
-//! [`coordinator`]: the invertible executor holds only the current
-//! activation while walking hand-written per-layer backward programs, while
-//! the stored executor reproduces the PyTorch/normflows baseline by taping
-//! every activation. Both run the *same* XLA executables; the only
-//! difference is buffer lifetime, which the
-//! [`coordinator::memory::MemoryLedger`] measures exactly.
+//! The paper's contribution is that invertible networks let you
+//! **recompute activations from layer inverses during backprop** instead
+//! of taping them, making peak training memory O(1) in network depth —
+//! something generic autodiff frameworks do not exploit. Here that
+//! contribution lives in [`coordinator`]: an
+//! [`coordinator::ActivationSchedule`] decides which layer inputs stay
+//! alive; the invertible schedule holds only the current activation while
+//! walking hand-written per-layer backward programs, the stored schedule
+//! reproduces the PyTorch/normflows tape, and hybrids
+//! ([`coordinator::CheckpointEveryK`]) plug in through the same trait. All
+//! schedules run the *same* layer programs; the only difference is buffer
+//! lifetime, which the [`coordinator::memory::MemoryLedger`] measures
+//! exactly.
 //!
-//! Layers of the stack:
-//!  * L1 — Pallas kernels (`python/compile/kernels/`), compile-time only.
-//!  * L2 — JAX layer entries with hand-written gradients
-//!    (`python/compile/layers/`), lowered to HLO text by `make artifacts`.
-//!  * L3 — this crate: PJRT runtime, flow graphs, executors, trainer, CLI.
+//! ## Layers of the stack
+//!
+//! * [`backend`] — the [`backend::Backend`] trait owns program execution.
+//!   [`backend::RefBackend`] (default) implements every layer's
+//!   forward/inverse/backward natively in Rust, so the crate builds, runs
+//!   and tests with **zero external artifacts**. `XlaBackend`
+//!   (`--features xla`) executes AOT-compiled HLO from
+//!   `python -m compile.aot` over PJRT.
+//! * [`runtime`] — the typed layer/network [`runtime::Manifest`], sourced
+//!   from the builtin catalog ([`runtime::builtin_manifest`]) or from
+//!   `artifacts/manifest.json`.
+//! * [`api`] — the [`api::Engine`] facade: `Engine::builder().build()?`
+//!   then [`api::Engine::flow`] returns an owned, `Send`
+//!   [`api::Flow`] handle exposing `train_step` / `forward` / `sample` /
+//!   `inspect`.
+//! * [`coordinator`] — schedules, the byte-exact memory ledger, and the
+//!   shape-only planner behind the paper's Figs. 1–2.
+//! * [`train`], [`data`], [`profile`], [`bench_figs`] — training loop,
+//!   synthetic workloads, per-entry profiler, figure reproductions.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use invertnet::api::Engine;
+//! use invertnet::coordinator::ExecMode;
+//! use invertnet::data::Density2d;
+//! use invertnet::util::rng::Pcg64;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // Hermetic default: builtin network catalog + pure-Rust RefBackend.
+//! let engine = Engine::builder().build()?;
+//! let flow = engine.flow("realnvp2d")?;
+//! let params = flow.init_params(42)?;
+//!
+//! let mut rng = Pcg64::new(7);
+//! let x = Density2d::TwoMoons.sample(flow.batch(), &mut rng);
+//!
+//! // One NLL training step under the paper's O(1)-memory schedule ...
+//! let inv = flow.train_step(&x, None, &params, &ExecMode::Invertible)?;
+//! // ... and under the autodiff-style tape, for the memory comparison.
+//! let sto = flow.train_step(&x, None, &params, &ExecMode::Stored)?;
+//!
+//! assert!(inv.loss.is_finite());
+//! assert!(inv.peak_sched_bytes < sto.peak_sched_bytes);
+//! # Ok(())
+//! # }
+//! ```
 
+pub mod api;
+pub mod app;
+pub mod backend;
 pub mod bench_figs;
 pub mod coordinator;
 pub mod data;
@@ -31,6 +79,7 @@ pub mod tensor;
 pub mod train;
 pub mod util;
 
+pub use api::{Engine, Flow};
+pub use backend::{Backend, RefBackend};
 pub use coordinator::memory::{MemClass, MemoryLedger};
-pub use runtime::Runtime;
 pub use tensor::Tensor;

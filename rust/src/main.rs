@@ -1,267 +1,24 @@
-//! invertnet CLI — leader entrypoint.
+//! invertnet CLI — thin binary wrapper over [`invertnet::app::run`] (the
+//! dispatch lives in the library so it is integration-testable).
 //!
 //! ```text
-//! invertnet train   --net realnvp2d --data two-moons --steps 500 [--mode invertible|stored]
+//! invertnet train   --net realnvp2d --data two-moons --steps 500
+//!                   [--mode invertible|stored|checkpoint:K]
 //! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
-//! invertnet bench   fig1|fig2   [--budget-gb 40]
+//! invertnet bench   fig1|fig2 [--budget-gb 40]
 //! invertnet inspect --net glow16
+//! invertnet profile --net glow16 [--iters 5]
 //! invertnet list
 //! ```
-
-use std::path::{Path, PathBuf};
-
-use anyhow::{bail, Result};
-
-use invertnet::coordinator::{ExecMode, FlowSession};
-use invertnet::data::{synth_images, Density2d, LinearGaussian};
-use invertnet::flow::{ParamStore, StepKind};
-use invertnet::train::{train, Adam, GradClip, TrainConfig};
-use invertnet::util::bench::fmt_bytes;
-use invertnet::util::cli::Args;
-use invertnet::util::rng::Pcg64;
-use invertnet::{MemoryLedger, Runtime, Tensor};
+//!
+//! All subcommands take `--backend ref|xla` (default `ref`, which needs no
+//! artifacts) and `--artifacts DIR`. See `invertnet` with no arguments for
+//! the full usage text.
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = run(&argv) {
+    if let Err(e) = invertnet::app::run(&argv) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
-    }
-}
-
-fn artifacts_dir(args: &Args) -> PathBuf {
-    PathBuf::from(args.str_or("artifacts", "artifacts"))
-}
-
-fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv)?;
-    match args.subcommand.first().map(|s| s.as_str()) {
-        Some("train") => cmd_train(&args),
-        Some("sample") => cmd_sample(&args),
-        Some("bench") => cmd_bench(&args),
-        Some("inspect") => cmd_inspect(&args),
-        Some("profile") => {
-            let rt = Runtime::new(&artifacts_dir(&args))?;
-            invertnet::profile::profile_network(
-                &rt, args.req("net")?, args.usize_or("iters", 5)?)
-        }
-        Some("list") => cmd_list(&args),
-        _ => {
-            eprintln!("{}", USAGE);
-            Ok(())
-        }
-    }
-}
-
-const USAGE: &str = "\
-invertnet — memory-frugal normalizing flows (InvertibleNetworks.jl reproduction)
-
-USAGE:
-  invertnet train   --net NAME [--data two-moons|eight-gaussians|checkerboard|spiral|images|linear-gaussian]
-                    [--steps N] [--lr F] [--mode invertible|stored] [--seed N]
-                    [--out DIR] [--artifacts DIR] [--clip F]
-  invertnet sample  --net NAME [--ckpt DIR] [--out FILE.npy] [--batches N]
-  invertnet bench   fig1|fig2 [--budget-gb F] [--artifacts DIR]
-  invertnet inspect --net NAME [--artifacts DIR]
-  invertnet profile --net NAME [--iters N]
-  invertnet list    [--artifacts DIR]
-";
-
-fn mode_of(args: &Args) -> Result<ExecMode> {
-    match args.str_or("mode", "invertible") {
-        "invertible" => Ok(ExecMode::Invertible),
-        "stored" => Ok(ExecMode::Stored),
-        other => bail!("unknown --mode {other:?}"),
-    }
-}
-
-/// Pick a sensible default data source for a network's input shape.
-fn default_data(in_shape: &[usize], cond: bool) -> &'static str {
-    if cond {
-        "linear-gaussian"
-    } else if in_shape.len() == 2 {
-        "two-moons"
-    } else {
-        "images"
-    }
-}
-
-/// Build the batch closure for a (network, data source) pair.
-fn batcher(
-    data: &str,
-    in_shape: Vec<usize>,
-    cond: bool,
-    seed: u64,
-) -> Result<Box<dyn FnMut(usize) -> Result<(Tensor, Option<Tensor>)>>> {
-    let mut rng = Pcg64::new(seed ^ 0xda7a);
-    match data {
-        "images" => {
-            if in_shape.len() != 4 {
-                bail!("--data images needs an image network");
-            }
-            Ok(Box::new(move |_| {
-                let (n, h, w, c) = (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
-                Ok((synth_images(n, h, w, c, &mut rng), None))
-            }))
-        }
-        "linear-gaussian" => {
-            if !cond {
-                bail!("--data linear-gaussian needs a conditional network");
-            }
-            let prob = LinearGaussian::default_problem();
-            let n = in_shape[0];
-            Ok(Box::new(move |_| {
-                let (theta, y) = prob.sample(n, &mut rng);
-                Ok((theta, Some(y)))
-            }))
-        }
-        name => {
-            let d = Density2d::parse(name)?;
-            if in_shape.len() != 2 || cond {
-                bail!("--data {name} needs an unconditional dense network");
-            }
-            let n = in_shape[0];
-            Ok(Box::new(move |_| Ok((d.sample(n, &mut rng), None))))
-        }
-    }
-}
-
-fn cmd_train(args: &Args) -> Result<()> {
-    let net = args.req("net")?;
-    let rt = Runtime::new(&artifacts_dir(args))?;
-    let ledger = MemoryLedger::new();
-    let session = FlowSession::new(&rt, net, ledger.clone())?;
-    let seed = args.u64_or("seed", 42)?;
-    let mut params = ParamStore::init(&session.def, &rt.manifest, seed)?;
-    let mut opt = Adam::new(args.f64_or("lr", 1e-3)? as f32);
-
-    let cond = session.def.cond_shape.is_some();
-    let data = args
-        .get("data")
-        .unwrap_or(default_data(&session.def.in_shape, cond));
-    let next = batcher(data, session.def.in_shape.clone(), cond, seed)?;
-
-    let cfg = TrainConfig {
-        steps: args.usize_or("steps", 200)?,
-        mode: mode_of(args)?,
-        clip: Some(GradClip { max_norm: args.f64_or("clip", 50.0)? as f32 }),
-        log_every: args.usize_or("log-every", 10)?,
-        out_dir: args.get("out").map(PathBuf::from),
-        quiet: args.flag("quiet"),
-    };
-
-    eprintln!(
-        "training {net} ({} params, depth {}, mode {}) on {data}",
-        params.param_count(),
-        session.def.depth(),
-        cfg.mode.name()
-    );
-    let report = run_train(&session, &mut params, &mut opt, &cfg, next)?;
-    println!(
-        "final_loss {:.4}  peak_sched {}  {:.2} steps/s",
-        report.final_loss,
-        fmt_bytes(report.peak_sched_bytes as u64),
-        report.steps_per_sec
-    );
-    Ok(())
-}
-
-fn run_train(
-    session: &FlowSession,
-    params: &mut ParamStore,
-    opt: &mut Adam,
-    cfg: &TrainConfig,
-    next: Box<dyn FnMut(usize) -> Result<(Tensor, Option<Tensor>)>>,
-) -> Result<invertnet::train::TrainReport> {
-    train(session, params, opt, cfg, next)
-}
-
-fn cmd_sample(args: &Args) -> Result<()> {
-    let net = args.req("net")?;
-    let rt = Runtime::new(&artifacts_dir(args))?;
-    let ledger = MemoryLedger::new();
-    let session = FlowSession::new(&rt, net, ledger)?;
-    let mut params = ParamStore::init(&session.def, &rt.manifest, 42)?;
-    if let Some(ckpt) = args.get("ckpt") {
-        params.load(Path::new(ckpt))?;
-    }
-    if session.def.cond_shape.is_some() {
-        bail!("use the amortized_inference example for conditional sampling");
-    }
-    let mut rng = Pcg64::new(args.u64_or("seed", 7)?);
-    let batches = args.usize_or("batches", 1)?;
-    let mut all: Vec<f32> = Vec::new();
-    let mut shape = session.def.in_shape.clone();
-    for _ in 0..batches {
-        let x = session.sample(&params, None, &mut rng)?;
-        all.extend_from_slice(&x.data);
-    }
-    shape[0] *= batches;
-    let out = args.str_or("out", "samples.npy");
-    invertnet::tensor::npy::save(Path::new(out), &Tensor::new(shape, all)?)?;
-    println!("wrote {out}");
-    Ok(())
-}
-
-fn cmd_inspect(args: &Args) -> Result<()> {
-    let net = args.req("net")?;
-    let rt = Runtime::new(&artifacts_dir(args))?;
-    let session = FlowSession::new(&rt, net, MemoryLedger::new())?;
-    let def = &session.def;
-    println!("network {net}: input {:?}, cond {:?}", def.in_shape, def.cond_shape);
-    let mut total_params = 0usize;
-    for (i, s) in def.steps.iter().enumerate() {
-        let (kind, nparams) = match s.kind {
-            StepKind::Split { zc } => (format!("split(zc={zc})"), 0),
-            StepKind::Layer => {
-                let m = rt.manifest.layer(&s.sig)?;
-                (m.kind.clone(), m.param_count())
-            }
-        };
-        total_params += nparams;
-        println!(
-            "  [{i:>3}] {kind:<12} {:>18} -> {:<18} {:>9} params   {}",
-            format!("{:?}", s.in_shape),
-            format!("{:?}", s.out_shape),
-            nparams,
-            s.sig
-        );
-    }
-    println!("latents: {:?}", def.latent_shapes);
-    println!("total params: {total_params}");
-    Ok(())
-}
-
-fn cmd_list(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifacts_dir(args))?;
-    println!("backend: {}", rt.manifest.backend);
-    println!("{:<24} {:>18} {:>7} {:>9}", "network", "input", "depth", "params");
-    for name in rt.manifest.networks.keys() {
-        let session = FlowSession::new(&rt, name, MemoryLedger::new())?;
-        let params = session.def.param_count(&rt.manifest)?;
-        println!(
-            "{name:<24} {:>18} {:>7} {:>9}",
-            format!("{:?}", session.def.in_shape),
-            session.def.depth(),
-            params
-        );
-    }
-    Ok(())
-}
-
-// ---------------------------------------------------------------------------
-// bench fig1 / fig2 — the paper's two figures, printed as tables.
-// (The criterion-style benches in benches/ wrap the same routines; this
-// subcommand is the quick interactive path.)
-// ---------------------------------------------------------------------------
-
-fn cmd_bench(args: &Args) -> Result<()> {
-    let which = args.subcommand.get(1).map(|s| s.as_str());
-    let budget_gb = args.f64_or("budget-gb", 40.0)?;
-    let rt = Runtime::new(&artifacts_dir(args))?;
-    match which {
-        Some("fig1") => invertnet::bench_figs::fig1(&rt, budget_gb),
-        Some("fig2") => invertnet::bench_figs::fig2(&rt, budget_gb),
-        _ => bail!("usage: invertnet bench fig1|fig2"),
     }
 }

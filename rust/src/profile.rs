@@ -1,69 +1,81 @@
-//! Per-entry profiler: times every (layer, entry) executable of a network
+//! Per-entry profiler: times every (layer, entry) program of a network
 //! individually — the L3 profiling tool for the performance pass
-//! (EXPERIMENTS.md §Perf). `invertnet profile --net NAME`.
+//! (EXPERIMENTS.md §Perf). `invertnet profile --net NAME [--backend xla]`.
+//!
+//! Backend-agnostic: operands are synthesized from the layer metadata
+//! (entry convention: see `backend` module docs), so the same table works
+//! for the RefBackend and the PJRT runtime.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::FlowSession;
-use crate::flow::{ParamStore, StepKind};
-use crate::runtime::Runtime;
+use crate::api::Engine;
+use crate::flow::StepKind;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
-use crate::MemoryLedger;
 
 fn rand_t(shape: &[usize], rng: &mut Pcg64) -> Tensor {
     Tensor { shape: shape.to_vec(), data: rng.normal_vec(shape.iter().product()) }
 }
 
 /// Time every distinct (sig, entry) of `net`, `iters` times each, and print
-/// a table sorted by total cost contribution (count x mean).
-pub fn profile_network(rt: &Runtime, net: &str, iters: usize) -> Result<()> {
-    let session = FlowSession::new(rt, net, MemoryLedger::new())?;
-    let _params = ParamStore::init(&session.def, &rt.manifest, 7)?;
+/// a table sorted by signature with count-weighted totals.
+pub fn profile_network(engine: &Engine, net: &str, iters: usize) -> Result<()> {
+    let flow = engine.flow(net)?;
+    let params = flow.init_params(7)?;
     let mut rng = Pcg64::new(123);
 
     // count occurrences of each signature + remember one step index
     let mut sig_count: BTreeMap<String, (usize, usize)> = BTreeMap::new();
-    for (i, step) in session.def.steps.iter().enumerate() {
+    for (i, step) in flow.def.steps.iter().enumerate() {
         if step.kind == StepKind::Layer {
             let e = sig_count.entry(step.sig.clone()).or_insert((0, i));
             e.0 += 1;
         }
     }
 
-    println!("# per-entry mean latency, network {net} ({} steps, x{} iters)",
-             session.def.steps.len(), iters);
+    println!("# per-entry mean latency, network {net} ({} steps, x{iters} iters, \
+              backend {})",
+             flow.def.steps.len(), engine.backend_name());
     println!("{:<44} {:>5} {:>12} {:>12} {:>12} {:>12}",
              "signature", "count", "forward", "inverse", "backward", "bwd_stored");
     let mut totals = [0.0f64; 4];
     for (sig, (count, step_idx)) in &sig_count {
-        let _meta = rt.manifest.layer(sig)?;
+        let meta = engine.manifest().layer(sig)?;
+        let n = meta.in_shape[0];
+        let cond = meta.cond_shape.as_ref().map(|s| rand_t(s, &mut rng));
+        let step_params = &params.tensors[*step_idx];
         let mut row = [0.0f64; 4];
         for (ei, entry) in ["forward", "inverse", "backward", "backward_stored"]
             .iter().enumerate()
         {
-            let compiled = rt.layer_entry(sig, entry)?;
-            // build random operands per manifest shapes
-            let ops: Vec<Tensor> = compiled.meta.operands.iter()
-                .map(|o| rand_t(&o.shape, &mut rng))
-                .collect();
-            let lits: Vec<xla::Literal> = ops.iter()
-                .map(|t| t.to_literal()).collect::<Result<_>>()?;
-            let args: Vec<&xla::Literal> = lits.iter().collect();
-            compiled.execute(&args)?; // warmup (compile already done)
+            // operands per the shared entry convention
+            let acts: Vec<Tensor> = match *entry {
+                "forward" => vec![rand_t(&meta.in_shape, &mut rng)],
+                "inverse" => vec![rand_t(&meta.out_shape, &mut rng)],
+                "backward" => vec![rand_t(&meta.out_shape, &mut rng),
+                                   rand_t(&[n], &mut rng),
+                                   rand_t(&meta.out_shape, &mut rng)],
+                _ => vec![rand_t(&meta.out_shape, &mut rng),
+                          rand_t(&[n], &mut rng),
+                          rand_t(&meta.in_shape, &mut rng)],
+            };
+            let act_refs: Vec<&Tensor> = acts.iter().collect();
+            // warmup (compiling backends build their executable here)
+            engine.backend().execute_layer(
+                meta, entry, &act_refs, cond.as_ref(), step_params)?;
             let t0 = Instant::now();
             for _ in 0..iters {
-                compiled.execute(&args)?;
+                engine.backend().execute_layer(
+                    meta, entry, &act_refs, cond.as_ref(), step_params)?;
             }
             row[ei] = t0.elapsed().as_secs_f64() / iters as f64;
             totals[ei] += row[ei] * *count as f64;
         }
         println!("{sig:<44} {count:>5} {:>9.3} ms {:>9.3} ms {:>9.3} ms {:>9.3} ms",
                  row[0] * 1e3, row[1] * 1e3, row[2] * 1e3, row[3] * 1e3);
-        let _ = step_idx;
     }
     println!("{:<44} {:>5} {:>9.3} ms {:>9.3} ms {:>9.3} ms {:>9.3} ms",
              "TOTAL (weighted by count)", "-",

@@ -1,0 +1,472 @@
+//! Builtin, artifact-free network catalog: the Rust port of
+//! `python/compile/model.py::default_networks`.
+//!
+//! The signatures, parameter specs, split markers and latent bookkeeping
+//! are generated with the exact same rules as the python registry, so a
+//! [`Manifest`] from this module and one loaded from
+//! `artifacts/manifest.json` describe the same networks — the only
+//! difference is that builtin layer entries carry no HLO artifact files,
+//! which is fine for the [`crate::backend::RefBackend`] (it executes the
+//! layer math natively) and for shape-only tooling.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::manifest::{format_split, shape_tag, HeadMeta, LayerMeta, Manifest,
+                      NetworkMeta, TensorSpec};
+
+fn ts(name: &str, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape }
+}
+
+fn cfg_of(pairs: &[(&str, usize)]) -> Json {
+    Json::obj(pairs.iter().map(|&(k, v)| (k, Json::Num(v as f64))).collect())
+}
+
+/// Signature string, matching model.py: `kind__<in-shape>[__hd<h>][__dep<d>]
+/// [__cond<shape>]`.
+fn sig_of(
+    kind: &str,
+    in_shape: &[usize],
+    hidden: Option<usize>,
+    depth: Option<usize>,
+    cond: Option<&[usize]>,
+) -> String {
+    let mut parts = vec![kind.to_string(), shape_tag(in_shape)];
+    if let Some(h) = hidden {
+        parts.push(format!("hd{h}"));
+    }
+    if let Some(d) = depth {
+        parts.push(format!("dep{d}"));
+    }
+    if let Some(c) = cond {
+        parts.push(format!("cond{}", shape_tag(c)));
+    }
+    parts.join("__")
+}
+
+// ---------------------------------------------------------------------------
+// Conditioner parameter specs (python: conditioner.py)
+// ---------------------------------------------------------------------------
+
+fn cnn_specs(c_in: usize, hidden: usize, c_out: usize) -> Vec<TensorSpec> {
+    vec![
+        ts("w1", vec![3, 3, c_in, hidden]),
+        ts("b1", vec![hidden]),
+        ts("w2", vec![1, 1, hidden, hidden]),
+        ts("b2", vec![hidden]),
+        ts("w3", vec![3, 3, hidden, c_out]),
+        ts("b3", vec![c_out]),
+    ]
+}
+
+fn mlp_specs(d_in: usize, hidden: usize, d_out: usize) -> Vec<TensorSpec> {
+    vec![
+        ts("w1", vec![d_in, hidden]),
+        ts("b1", vec![hidden]),
+        ts("w2", vec![hidden, hidden]),
+        ts("b2", vec![hidden]),
+        ts("w3", vec![hidden, d_out]),
+        ts("b3", vec![d_out]),
+    ]
+}
+
+/// HINT leaves recurse no further below this feature width (python MIN_D).
+pub const HINT_MIN_D: usize = 4;
+
+/// Preorder list of HINT internal nodes as (path, d1, d2) — one conditioner
+/// MLP each; paths are "r", "rl", "rt", ... like the python registry.
+pub fn hint_nodes(d: usize, depth: usize) -> Vec<(String, usize, usize)> {
+    fn rec(d: usize, depth: usize, path: String, out: &mut Vec<(String, usize, usize)>) {
+        if depth == 0 || d < HINT_MIN_D {
+            return;
+        }
+        let d1 = d / 2;
+        let d2 = d - d1;
+        out.push((path.clone(), d1, d2));
+        rec(d1, depth - 1, format!("{path}l"), out);
+        rec(d2, depth - 1, format!("{path}t"), out);
+    }
+    let mut out = Vec::new();
+    rec(d, depth, "r".to_string(), &mut out);
+    out
+}
+
+fn hint_specs(d: usize, hidden: usize, depth: usize) -> Vec<TensorSpec> {
+    let mut specs = Vec::new();
+    for (path, d1, d2) in hint_nodes(d, depth) {
+        for s in mlp_specs(d1, hidden, 2 * d2) {
+            specs.push(ts(&format!("{path}_{}", s.name), s.shape));
+        }
+    }
+    specs
+}
+
+// ---------------------------------------------------------------------------
+// Layer-instance constructors (python: model.py L_*)
+// ---------------------------------------------------------------------------
+
+/// A network piece: a concrete layer or a coordinator-native split marker.
+enum Piece {
+    Layer(Box<LayerMeta>),
+    Split { zc: usize, in_shape: Vec<usize> },
+}
+
+#[allow(clippy::too_many_arguments)]
+fn layer(
+    kind: &str,
+    in_shape: Vec<usize>,
+    out_shape: Vec<usize>,
+    cond_shape: Option<Vec<usize>>,
+    params: Vec<TensorSpec>,
+    cfg: Json,
+    hidden: Option<usize>,
+    depth: Option<usize>,
+) -> Piece {
+    let sig = sig_of(kind, &in_shape, hidden, depth, cond_shape.as_deref());
+    Piece::Layer(Box::new(LayerMeta {
+        sig,
+        kind: kind.to_string(),
+        in_shape,
+        out_shape,
+        cond_shape,
+        params,
+        entries: BTreeMap::new(),
+        cfg,
+    }))
+}
+
+fn l_actnorm(n: usize, h: usize, w: usize, c: usize) -> Piece {
+    layer("actnorm", vec![n, h, w, c], vec![n, h, w, c], None,
+          vec![ts("log_s", vec![c]), ts("b", vec![c])],
+          cfg_of(&[("c", c)]), None, None)
+}
+
+fn l_conv1x1(n: usize, h: usize, w: usize, c: usize) -> Piece {
+    layer("conv1x1", vec![n, h, w, c], vec![n, h, w, c], None,
+          vec![ts("v1", vec![c]), ts("v2", vec![c]), ts("v3", vec![c])],
+          cfg_of(&[("c", c)]), None, None)
+}
+
+fn l_glowcpl(n: usize, h: usize, w: usize, c: usize, hidden: usize) -> Piece {
+    let c1 = c / 2;
+    let c2 = c - c1;
+    layer("glowcpl", vec![n, h, w, c], vec![n, h, w, c], None,
+          cnn_specs(c1, hidden, 2 * c2),
+          cfg_of(&[("c", c), ("hidden", hidden)]), Some(hidden), None)
+}
+
+fn l_addcpl(n: usize, h: usize, w: usize, c: usize, hidden: usize) -> Piece {
+    let c1 = c / 2;
+    let c2 = c - c1;
+    layer("addcpl", vec![n, h, w, c], vec![n, h, w, c], None,
+          cnn_specs(c1, hidden, c2),
+          cfg_of(&[("c", c), ("hidden", hidden)]), Some(hidden), None)
+}
+
+fn l_haar(n: usize, h: usize, w: usize, c: usize) -> Piece {
+    layer("haar", vec![n, h, w, c], vec![n, h / 2, w / 2, 4 * c], None,
+          Vec::new(), cfg_of(&[("c", c)]), None, None)
+}
+
+fn l_permute(shape: Vec<usize>) -> Piece {
+    layer("permute", shape.clone(), shape, None, Vec::new(),
+          cfg_of(&[]), None, None)
+}
+
+fn l_densecpl(n: usize, d: usize, hidden: usize) -> Piece {
+    let d1 = d / 2;
+    let d2 = d - d1;
+    layer("densecpl", vec![n, d], vec![n, d], None,
+          mlp_specs(d1, hidden, 2 * d2),
+          cfg_of(&[("d", d), ("hidden", hidden)]), Some(hidden), None)
+}
+
+fn l_condcpl(n: usize, d: usize, dcond: usize, hidden: usize) -> Piece {
+    let d1 = d / 2;
+    let d2 = d - d1;
+    layer("condcpl", vec![n, d], vec![n, d], Some(vec![n, dcond]),
+          mlp_specs(d1 + dcond, hidden, 2 * d2),
+          cfg_of(&[("d", d), ("dcond", dcond), ("hidden", hidden)]),
+          Some(hidden), None)
+}
+
+fn l_hyper(n: usize, h: usize, w: usize, c: usize, hidden: usize) -> Piece {
+    layer("hyper", vec![n, h, w, c], vec![n, h, w, c], None,
+          vec![ts("kw", vec![3, 3, c / 2, hidden])],
+          cfg_of(&[("c", c), ("hidden", hidden)]), Some(hidden), None)
+}
+
+fn l_hint(n: usize, d: usize, hidden: usize, depth: usize) -> Piece {
+    layer("hint", vec![n, d], vec![n, d], None,
+          hint_specs(d, hidden, depth),
+          cfg_of(&[("d", d), ("hidden", hidden), ("depth", depth)]),
+          Some(hidden), Some(depth))
+}
+
+fn l_split(n: usize, h: usize, w: usize, c: usize) -> Piece {
+    Piece::Split { zc: c / 2, in_shape: vec![n, h, w, c] }
+}
+
+// ---------------------------------------------------------------------------
+// Network builders (python: model.py network constructors)
+// ---------------------------------------------------------------------------
+
+struct Catalog {
+    layers: BTreeMap<String, LayerMeta>,
+    heads: BTreeMap<String, HeadMeta>,
+    networks: BTreeMap<String, NetworkMeta>,
+}
+
+impl Catalog {
+    fn new() -> Catalog {
+        Catalog {
+            layers: BTreeMap::new(),
+            heads: BTreeMap::new(),
+            networks: BTreeMap::new(),
+        }
+    }
+
+    fn add(&mut self, name: &str, in_shape: Vec<usize>,
+           cond_shape: Option<Vec<usize>>, pieces: Vec<Piece>) {
+        let mut sigs = Vec::with_capacity(pieces.len());
+        let mut latents: Vec<Vec<usize>> = Vec::new();
+        let mut cur = in_shape.clone();
+        for p in pieces {
+            match p {
+                Piece::Split { zc, in_shape } => {
+                    sigs.push(format_split(zc, &in_shape));
+                    let mut z = in_shape.clone();
+                    *z.last_mut().unwrap() = zc;
+                    latents.push(z);
+                    cur = in_shape;
+                    let c = *cur.last().unwrap();
+                    *cur.last_mut().unwrap() = c - zc;
+                }
+                Piece::Layer(meta) => {
+                    sigs.push(meta.sig.clone());
+                    cur = meta.out_shape.clone();
+                    self.layers.entry(meta.sig.clone()).or_insert(*meta);
+                }
+            }
+        }
+        latents.push(cur);
+        for z in &latents {
+            self.heads.entry(shape_tag(z)).or_insert_with(|| HeadMeta {
+                shape: z.clone(),
+                entries: BTreeMap::new(),
+            });
+        }
+        self.networks.insert(name.to_string(), NetworkMeta {
+            name: name.to_string(),
+            in_shape,
+            cond_shape,
+            layers: sigs,
+            latent_shapes: latents,
+        });
+    }
+}
+
+/// Haar squeeze then K x (ActNorm -> Conv1x1 -> AffineCoupling).
+#[allow(clippy::too_many_arguments)]
+fn glow_flat(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
+             c_in: usize, k: usize, hidden: usize) {
+    let mut pieces = vec![l_haar(n, h, w, c_in)];
+    let c = 4 * c_in;
+    let (h2, w2) = (h / 2, w / 2);
+    for _ in 0..k {
+        pieces.push(l_actnorm(n, h2, w2, c));
+        pieces.push(l_conv1x1(n, h2, w2, c));
+        pieces.push(l_glowcpl(n, h2, w2, c, hidden));
+    }
+    cat.add(name, vec![n, h, w, c_in], None, pieces);
+}
+
+/// GLOW with Haar squeeze + factor-out between scales (paper §1).
+#[allow(clippy::too_many_arguments)]
+fn glow_multiscale(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
+                   c_in: usize, scales: usize, k: usize, hidden: usize) {
+    let mut pieces = Vec::new();
+    let (mut ch, mut hh, mut ww) = (c_in, h, w);
+    for s in 0..scales {
+        pieces.push(l_haar(n, hh, ww, ch));
+        ch *= 4;
+        hh /= 2;
+        ww /= 2;
+        for _ in 0..k {
+            pieces.push(l_actnorm(n, hh, ww, ch));
+            pieces.push(l_conv1x1(n, hh, ww, ch));
+            pieces.push(l_glowcpl(n, hh, ww, ch, hidden));
+        }
+        if s != scales - 1 {
+            pieces.push(l_split(n, hh, ww, ch));
+            ch -= ch / 2;
+        }
+    }
+    cat.add(name, vec![n, h, w, c_in], None, pieces);
+}
+
+fn realnvp_dense(cat: &mut Catalog, name: &str, n: usize, d: usize,
+                 k: usize, hidden: usize) {
+    let mut pieces = Vec::new();
+    for _ in 0..k {
+        pieces.push(l_densecpl(n, d, hidden));
+        pieces.push(l_permute(vec![n, d]));
+    }
+    cat.add(name, vec![n, d], None, pieces);
+}
+
+fn cond_realnvp_dense(cat: &mut Catalog, name: &str, n: usize, d: usize,
+                      dcond: usize, k: usize, hidden: usize) {
+    let mut pieces = Vec::new();
+    for _ in 0..k {
+        pieces.push(l_condcpl(n, d, dcond, hidden));
+        pieces.push(l_permute(vec![n, d]));
+    }
+    cat.add(name, vec![n, d], Some(vec![n, dcond]), pieces);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn hint_dense(cat: &mut Catalog, name: &str, n: usize, d: usize, k: usize,
+              hidden: usize, depth: usize) {
+    let mut pieces = Vec::new();
+    for _ in 0..k {
+        pieces.push(l_hint(n, d, hidden, depth));
+        pieces.push(l_permute(vec![n, d]));
+    }
+    cat.add(name, vec![n, d], None, pieces);
+}
+
+/// Haar squeeze to 4*c_in channels, then K leapfrog steps on the
+/// (prev|curr) paired state.
+#[allow(clippy::too_many_arguments)]
+fn hyperbolic_net(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
+                  c_in: usize, k: usize, hidden: usize) {
+    let mut pieces = vec![l_haar(n, h, w, c_in)];
+    let c = 4 * c_in;
+    for _ in 0..k {
+        pieces.push(l_hyper(n, h / 2, w / 2, c, hidden));
+    }
+    cat.add(name, vec![n, h, w, c_in], None, pieces);
+}
+
+/// NICE-style additive image flow (builtin-only: exercises `addcpl`).
+#[allow(clippy::too_many_arguments)]
+fn nice_net(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
+            c_in: usize, k: usize, hidden: usize) {
+    let mut pieces = vec![l_haar(n, h, w, c_in)];
+    let c = 4 * c_in;
+    let (h2, w2) = (h / 2, w / 2);
+    for _ in 0..k {
+        pieces.push(l_addcpl(n, h2, w2, c, hidden));
+        pieces.push(l_permute(vec![n, h2, w2, c]));
+    }
+    cat.add(name, vec![n, h, w, c_in], None, pieces);
+}
+
+/// The default catalog: example nets + every figure sweep, mirroring
+/// `model.py::default_networks` (plus `nice16`, builtin-only).
+pub fn builtin_manifest() -> Manifest {
+    let mut cat = Catalog::new();
+    // e2e examples
+    realnvp_dense(&mut cat, "realnvp2d", 256, 2, 8, 64);
+    cond_realnvp_dense(&mut cat, "cond_realnvp2d", 256, 2, 2, 8, 64);
+    hint_dense(&mut cat, "hint8d", 256, 8, 4, 64, 2);
+    glow_multiscale(&mut cat, "glow16", 16, 16, 16, 3, 2, 4, 32);
+    hyperbolic_net(&mut cat, "hyper16", 16, 16, 16, 3, 6, 12);
+    nice_net(&mut cat, "nice16", 16, 16, 16, 3, 4, 32);
+    // fig1: spatial-size sweep, GLOW, 3 input channels, batch 8
+    for hw in [16usize, 32, 64, 128, 256] {
+        glow_flat(&mut cat, &format!("glow_fig1_{hw}"), 8, hw, hw, 3, 16, 32);
+    }
+    // fig2: depth sweep at 64x64
+    for k in [2usize, 4, 8, 16, 32, 48] {
+        glow_flat(&mut cat, &format!("glow_fig2_d{k}"), 8, 64, 64, 3, k, 32);
+    }
+    // throughput / ablation nets
+    glow_flat(&mut cat, "glow_bench32", 8, 32, 32, 3, 8, 32);
+
+    Manifest {
+        backend: "ref-builtin".to_string(),
+        layers: cat.layers,
+        heads: cat.heads,
+        networks: cat.networks,
+        monoliths: BTreeMap::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::NetworkDef;
+
+    #[test]
+    fn catalog_matches_python_registry_shape() {
+        let m = builtin_manifest();
+        assert!(m.networks.len() >= 17);
+        for name in ["realnvp2d", "cond_realnvp2d", "hint8d", "glow16",
+                     "hyper16", "nice16", "glow_fig1_16", "glow_fig2_d48",
+                     "glow_bench32"] {
+            assert!(m.networks.contains_key(name), "missing {name}");
+        }
+        // spot-check signatures against the python sig convention
+        assert!(m.layers.contains_key("densecpl__256x2__hd64"));
+        assert!(m.layers.contains_key("condcpl__256x2__hd64__cond256x2"));
+        assert!(m.layers.contains_key("hint__256x8__hd64__dep2"));
+        assert!(m.layers.contains_key("haar__16x16x16x3"));
+        assert!(m.layers.contains_key("hyper__16x8x8x12__hd12"));
+        assert!(m.layers.contains_key("glowcpl__8x32x32x12__hd32"));
+    }
+
+    #[test]
+    fn every_network_resolves() {
+        // NetworkDef::resolve re-derives shapes and latent bookkeeping from
+        // the layer metas — it failing would mean the catalog is internally
+        // inconsistent.
+        let m = builtin_manifest();
+        for name in m.networks.keys() {
+            let def = NetworkDef::resolve(&m, name)
+                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(!def.steps.is_empty(), "{name} has no steps");
+            assert!(!def.latent_shapes.is_empty());
+        }
+    }
+
+    #[test]
+    fn glow16_multiscale_structure() {
+        let m = builtin_manifest();
+        let net = m.network("glow16").unwrap();
+        assert_eq!(net.in_shape, vec![16, 16, 16, 3]);
+        assert_eq!(net.latent_shapes,
+                   vec![vec![16, 8, 8, 6], vec![16, 4, 4, 24]]);
+        assert_eq!(net.layers.iter()
+                   .filter(|s| s.starts_with("split_zc")).count(), 1);
+    }
+
+    #[test]
+    fn hint_param_specs_match_python_counts() {
+        // d=8, depth=2: nodes r(4,4), rl(2,2)->leaf? d1=4 -> rl has d=4:
+        // depth 1, d=4 -> node; its children have d=2 < MIN_D -> leaves.
+        let nodes = hint_nodes(8, 2);
+        let paths: Vec<&str> = nodes.iter().map(|(p, _, _)| p.as_str()).collect();
+        assert_eq!(paths, vec!["r", "rl", "rt"]);
+        let specs = hint_specs(8, 64, 2);
+        assert_eq!(specs.len(), 3 * 6);
+        assert_eq!(specs[0].name, "r_w1");
+        assert_eq!(specs[0].shape, vec![4, 64]);
+        assert_eq!(specs[6].name, "rl_w1");
+        assert_eq!(specs[6].shape, vec![2, 64]);
+    }
+
+    #[test]
+    fn head_shapes_cover_all_latents() {
+        let m = builtin_manifest();
+        for net in m.networks.values() {
+            for z in &net.latent_shapes {
+                assert!(m.head_for(z).is_ok(), "{}: missing head {:?}",
+                        net.name, z);
+            }
+        }
+    }
+}

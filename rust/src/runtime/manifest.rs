@@ -1,6 +1,12 @@
-//! Typed model of `artifacts/manifest.json` produced by `python -m
-//! compile.aot`: every AOT-lowered layer entry (operand/result shapes,
-//! parameter specs) plus the named network compositions.
+//! Typed model of the layer/network registry: every layer signature
+//! (shapes, parameter specs, per-entry artifact metadata) plus the named
+//! network compositions.
+//!
+//! Two sources produce a [`Manifest`]:
+//! * `artifacts/manifest.json` written by `python -m compile.aot` (the
+//!   XLA-artifact path, loaded with [`Manifest::load`]);
+//! * the native catalog in [`super::builtin`] (zero artifacts, used by the
+//!   default `RefBackend`).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -58,6 +64,9 @@ pub struct LayerMeta {
     pub cond_shape: Option<Vec<usize>>,
     pub params: Vec<TensorSpec>,
     pub entries: BTreeMap<String, EntryMeta>,
+    /// Layer configuration (`hidden`, `depth`, ...); `Json::Null` when the
+    /// source manifest predates the field.
+    pub cfg: Json,
 }
 
 impl LayerMeta {
@@ -68,6 +77,11 @@ impl LayerMeta {
 
     pub fn param_count(&self) -> usize {
         self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Read an integer layer-config value (e.g. `hidden`, `depth`).
+    pub fn cfg_usize(&self, key: &str) -> Option<usize> {
+        self.cfg.get(key).and_then(|v| v.as_usize().ok())
     }
 
     fn from_json(v: &Json) -> Result<LayerMeta> {
@@ -85,6 +99,7 @@ impl LayerMeta {
             params: v.req("params")?.as_arr()?.iter()
                 .map(TensorSpec::from_json).collect::<Result<_>>()?,
             entries,
+            cfg: v.get("cfg").cloned().unwrap_or(Json::Null),
         })
     }
 }
@@ -121,6 +136,23 @@ pub struct Manifest {
 
 pub fn shape_tag(shape: &[usize]) -> String {
     shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+}
+
+/// Parse a `split_zc<k>__<HxWx...>` marker (coordinator-native multiscale
+/// factor-out steps inside a network's layer list). Returns the factored
+/// channel count and the full input shape of the split.
+pub fn parse_split(s: &str) -> Option<(usize, Vec<usize>)> {
+    let rest = s.strip_prefix("split_zc")?;
+    let (zc, shape) = rest.split_once("__")?;
+    let zc = zc.parse().ok()?;
+    let dims = shape.split('x').map(|d| d.parse().ok()).collect::<Option<Vec<_>>>()?;
+    Some((zc, dims))
+}
+
+/// Inverse of [`parse_split`]: format a split marker for a network layer
+/// list.
+pub fn format_split(zc: usize, in_shape: &[usize]) -> String {
+    format!("split_zc{zc}__{}", shape_tag(in_shape))
 }
 
 impl Manifest {
@@ -247,5 +279,46 @@ mod tests {
         assert!(m.head_for(&[9]).is_err());
         assert_eq!(m.network("tiny").unwrap().layers.len(), 1);
         assert!(m.network("nope").is_err());
+    }
+
+    #[test]
+    fn split_marker_parses_and_formats() {
+        let (zc, dims) = parse_split("split_zc6__16x8x8x12").unwrap();
+        assert_eq!(zc, 6);
+        assert_eq!(dims, vec![16, 8, 8, 12]);
+        assert_eq!(format_split(zc, &dims), "split_zc6__16x8x8x12");
+        assert!(parse_split("actnorm__2x2").is_none());
+        assert!(parse_split("split_zcX__2").is_none());
+        assert!(parse_split("split_zc3").is_none());
+    }
+
+    #[test]
+    fn split_markers_roundtrip_across_builtin_catalog() {
+        // every split marker in the builtin catalog must survive
+        // parse -> format unchanged (the coordinator keys off these strings)
+        let m = crate::runtime::builtin::builtin_manifest();
+        let mut seen = 0;
+        for net in m.networks.values() {
+            for sig in &net.layers {
+                if let Some((zc, dims)) = parse_split(sig) {
+                    assert_eq!(&format_split(zc, &dims), sig, "marker {sig}");
+                    seen += 1;
+                } else {
+                    assert!(m.layer(sig).is_ok(), "unknown non-split sig {sig}");
+                }
+            }
+        }
+        assert!(seen > 0, "catalog should contain split markers");
+    }
+
+    #[test]
+    fn cfg_field_is_optional_and_typed() {
+        let m = Manifest::parse(MINI).unwrap();
+        let l = m.layer("actnorm__2x4x4x3").unwrap();
+        assert_eq!(l.cfg_usize("hidden"), None); // MINI has empty cfg
+        let m2 = crate::runtime::builtin::builtin_manifest();
+        let hint = m2.layer("hint__256x8__hd64__dep2").unwrap();
+        assert_eq!(hint.cfg_usize("depth"), Some(2));
+        assert_eq!(hint.cfg_usize("hidden"), Some(64));
     }
 }

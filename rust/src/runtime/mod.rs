@@ -1,157 +1,13 @@
-//! PJRT runtime: loads HLO-text artifacts, compiles them once, executes
-//! them from the coordinator hot path. Adapted from /opt/xla-example.
+//! Model registry: the typed [`Manifest`] of layers/networks plus the
+//! builtin (artifact-free) catalog.
 //!
-//! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
-//! instruction ids, which is what makes jax>=0.5 output loadable on
-//! xla_extension 0.5.1 (see DESIGN.md).
+//! Program *execution* lives behind the [`crate::backend::Backend`] trait;
+//! the XLA/PJRT runtime that used to live here is now the feature-gated
+//! [`crate::backend::XlaBackend`] (`--features xla`).
 
+pub mod builtin;
 pub mod manifest;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-
-use anyhow::{anyhow, bail, Context, Result};
-
-pub use manifest::{shape_tag, EntryMeta, HeadMeta, LayerMeta, Manifest,
-                   NetworkMeta, TensorSpec};
-
-use crate::tensor::Tensor;
-
-/// Convert the xla crate's error type into anyhow.
-pub fn xerr(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e:?}")
-}
-
-/// A compiled (layer, entry) artifact ready to execute.
-pub struct CompiledEntry {
-    pub key: String,
-    pub meta: EntryMeta,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl CompiledEntry {
-    /// Execute with host literals; returns one literal per manifest result
-    /// (the PJRT result tuple is decomposed).
-    pub fn execute(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        if args.len() != self.meta.operands.len() {
-            bail!("{}: got {} operands, manifest wants {}",
-                  self.key, args.len(), self.meta.operands.len());
-        }
-        let out = self.exe.execute::<&xla::Literal>(args).map_err(xerr)?;
-        let lit = out[0][0].to_literal_sync().map_err(xerr)?;
-        // aot.py lowers with return_tuple=True: always a tuple root.
-        let parts = lit.to_tuple().map_err(xerr)?;
-        if parts.len() != self.meta.results.len() {
-            bail!("{}: got {} results, manifest wants {}",
-                  self.key, parts.len(), self.meta.results.len());
-        }
-        Ok(parts)
-    }
-
-    /// Execute and convert every result to a host [`Tensor`].
-    pub fn execute_t(&self, args: &[&xla::Literal]) -> Result<Vec<Tensor>> {
-        self.execute(args)?.iter().map(Tensor::from_literal).collect()
-    }
-}
-
-/// The PJRT client + artifact directory + executable cache.
-///
-/// Compilation is lazy and cached per artifact file: a training loop
-/// compiles each of its network's entries exactly once.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<CompiledEntry>>>,
-}
-
-impl Runtime {
-    /// CPU-backed runtime over an artifact directory (`artifacts/`).
-    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(xerr)?;
-        Ok(Runtime {
-            client,
-            manifest,
-            dir: artifact_dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn compile(&self, meta: &EntryMeta, key: &str) -> Result<Rc<CompiledEntry>> {
-        let path = self.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)
-            .map_err(xerr)
-            .with_context(|| format!("loading {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(xerr)
-            .with_context(|| format!("compiling {key}"))?;
-        Ok(Rc::new(CompiledEntry {
-            key: key.to_string(),
-            meta: meta.clone(),
-            exe,
-        }))
-    }
-
-    /// Compiled entry for a layer signature, e.g. `("actnorm__8x32x32x12",
-    /// "forward")`. Cached.
-    pub fn layer_entry(&self, sig: &str, entry: &str) -> Result<Rc<CompiledEntry>> {
-        let key = format!("{sig}.{entry}");
-        if let Some(hit) = self.cache.borrow().get(&key) {
-            return Ok(hit.clone());
-        }
-        let meta = self.manifest.layer(sig)?.entry(entry)?.clone();
-        let compiled = self.compile(&meta, &key)?;
-        self.cache.borrow_mut().insert(key, compiled.clone());
-        Ok(compiled)
-    }
-
-    /// Compiled head entry (`gaussian_logp` / `nll_seed`) for a latent shape.
-    pub fn head_entry(&self, shape: &[usize], entry: &str) -> Result<Rc<CompiledEntry>> {
-        let tag = shape_tag(shape);
-        let key = format!("head_{tag}.{entry}");
-        if let Some(hit) = self.cache.borrow().get(&key) {
-            return Ok(hit.clone());
-        }
-        let head = self.manifest.head_for(shape)?;
-        let meta = head.entries.get(entry)
-            .ok_or_else(|| anyhow!("head {tag} has no entry {entry}"))?
-            .clone();
-        let compiled = self.compile(&meta, &key)?;
-        self.cache.borrow_mut().insert(key, compiled.clone());
-        Ok(compiled)
-    }
-
-    /// Compiled whole-network full-AD ablation program (see
-    /// `python/compile/model.py::full_vjp_fn`). Cached.
-    pub fn monolith_entry(&self, net: &str) -> Result<Rc<CompiledEntry>> {
-        let key = format!("monolith_{net}");
-        if let Some(hit) = self.cache.borrow().get(&key) {
-            return Ok(hit.clone());
-        }
-        let meta = self.manifest.monoliths.get(net)
-            .ok_or_else(|| anyhow!("no monolith artifact for {net}"))?
-            .clone();
-        let compiled = self.compile(&meta, &key)?;
-        self.cache.borrow_mut().insert(key, compiled.clone());
-        Ok(compiled)
-    }
-
-    /// Number of compiled executables held in the cache.
-    pub fn cache_len(&self) -> usize {
-        self.cache.borrow().len()
-    }
-
-    /// Drop all compiled executables (used by benches between configs to
-    /// keep executable memory out of the activation measurements).
-    pub fn clear_cache(&self) {
-        self.cache.borrow_mut().clear();
-    }
-}
+pub use builtin::builtin_manifest;
+pub use manifest::{format_split, parse_split, shape_tag, EntryMeta, HeadMeta,
+                   LayerMeta, Manifest, NetworkMeta, TensorSpec};

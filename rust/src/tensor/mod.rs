@@ -1,6 +1,7 @@
 //! Host tensor type: row-major f32 arrays with shape, plus the slicing /
-//! concat ops the coordinator performs natively (multiscale factor-out)
-//! and conversion to/from `xla::Literal`.
+//! concat ops the coordinator performs natively (multiscale factor-out).
+//! Backend-specific conversions (e.g. XLA literals) live with their
+//! backend, keeping this type substrate-free.
 
 pub mod npy;
 pub mod ops;
@@ -85,28 +86,6 @@ impl Tensor {
             .iter()
             .zip(&other.data)
             .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
-    }
-
-    // ---- xla interop -------------------------------------------------------
-
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        // single-copy path (vec1 + reshape would copy twice)
-        let bytes = unsafe {
-            std::slice::from_raw_parts(
-                self.data.as_ptr() as *const u8,
-                self.data.len() * std::mem::size_of::<f32>(),
-            )
-        };
-        xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32, &self.shape, bytes)
-            .map_err(crate::runtime::xerr)
-    }
-
-    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape().map_err(crate::runtime::xerr)?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit.to_vec::<f32>().map_err(crate::runtime::xerr)?;
-        Tensor::new(dims, data)
     }
 }
 

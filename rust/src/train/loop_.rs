@@ -3,11 +3,13 @@
 
 use std::io::Write as _;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{ExecMode, FlowSession};
+use crate::api::Flow;
+use crate::coordinator::{ActivationSchedule, ExecMode};
 use crate::flow::ParamStore;
 use crate::tensor::Tensor;
 use crate::util::bench::fmt_bytes;
@@ -16,7 +18,9 @@ use super::optimizer::{GradClip, Optimizer};
 
 pub struct TrainConfig {
     pub steps: usize,
-    pub mode: ExecMode,
+    /// Activation schedule (invertible / stored / any custom
+    /// [`ActivationSchedule`]).
+    pub schedule: Arc<dyn ActivationSchedule>,
     pub clip: Option<GradClip>,
     pub log_every: usize,
     /// Write metrics.csv + checkpoint here if set.
@@ -28,7 +32,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             steps: 100,
-            mode: ExecMode::Invertible,
+            schedule: Arc::new(ExecMode::Invertible),
             clip: Some(GradClip { max_norm: 50.0 }),
             log_every: 10,
             out_dir: None,
@@ -47,7 +51,7 @@ pub struct TrainReport {
 /// Run `cfg.steps` optimizer steps, drawing a fresh minibatch from
 /// `next_batch(step) -> (x, cond)` each iteration.
 pub fn train(
-    session: &FlowSession,
+    flow: &Flow,
     params: &mut ParamStore,
     opt: &mut dyn Optimizer,
     cfg: &TrainConfig,
@@ -69,8 +73,8 @@ pub fn train(
     for step in 0..cfg.steps {
         let ts = Instant::now();
         let (x, cond) = next_batch(step)?;
-        let mut result = session
-            .train_step(&x, cond.as_ref(), params, cfg.mode)
+        let mut result = flow
+            .train_step(&x, cond.as_ref(), params, cfg.schedule.as_ref())
             .with_context(|| format!("train step {step}"))?;
         let grad_norm = match &cfg.clip {
             Some(c) => c.apply(&mut result.grads),
@@ -101,7 +105,7 @@ pub fn train(
     let elapsed = t0.elapsed().as_secs_f64();
 
     if let Some(dir) = &cfg.out_dir {
-        params.save(&dir.join("checkpoint"), &session.def.name)?;
+        params.save(&dir.join("checkpoint"), &flow.def.name)?;
     }
 
     Ok(TrainReport {
@@ -130,5 +134,12 @@ mod tests {
         assert!((tail_mean(&[1.0, 2.0, 3.0, 4.0], 2) - 3.5).abs() < 1e-6);
         assert!((tail_mean(&[1.0], 5) - 1.0).abs() < 1e-6);
         assert!(tail_mean(&[], 3).is_nan());
+    }
+
+    #[test]
+    fn default_config_uses_invertible_schedule() {
+        let cfg = TrainConfig::default();
+        assert_eq!(cfg.schedule.label(), "invertible");
+        assert_eq!(cfg.steps, 100);
     }
 }

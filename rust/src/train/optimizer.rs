@@ -1,8 +1,7 @@
 //! Host-side optimizers over the per-step parameter store.
 //!
 //! Parameters are small relative to activations (the paper's whole point),
-//! so the update runs on host f32 slices; the literal upload cache is
-//! invalidated per updated step.
+//! so the update runs on host f32 slices.
 
 use anyhow::{bail, Result};
 
@@ -72,7 +71,6 @@ impl Optimizer for Sgd {
                     .map(|ts| ts.iter().map(|t| Tensor::zeros(&t.shape)).collect())
                     .collect());
         }
-        let mut dirty = Vec::new();
         for (si, (ts, gs)) in params.tensors.iter_mut().zip(grads).enumerate() {
             if gs.is_empty() {
                 continue;
@@ -80,7 +78,6 @@ impl Optimizer for Sgd {
             if gs.len() != ts.len() {
                 bail!("step {si}: {} grads for {} params", gs.len(), ts.len());
             }
-            dirty.push(si);
             for (pi, (t, g)) in ts.iter_mut().zip(gs).enumerate() {
                 match &mut self.velocity {
                     Some(vel) => {
@@ -99,9 +96,6 @@ impl Optimizer for Sgd {
                     }
                 }
             }
-        }
-        for si in dirty {
-            params.mark_dirty(si);
         }
         Ok(())
     }
@@ -155,7 +149,6 @@ impl Optimizer for Adam {
         let b2t = 1.0 - self.beta2.powi(self.t as i32);
         let m = self.m.as_mut().unwrap();
         let v = self.v.as_mut().unwrap();
-        let mut dirty = Vec::new();
         for (si, (ts, gs)) in params.tensors.iter_mut().zip(grads).enumerate() {
             if gs.is_empty() {
                 continue;
@@ -163,7 +156,6 @@ impl Optimizer for Adam {
             if gs.len() != ts.len() {
                 bail!("step {si}: {} grads for {} params", gs.len(), ts.len());
             }
-            dirty.push(si);
             for (pi, (t, g)) in ts.iter_mut().zip(gs).enumerate() {
                 let (mi, vi) = (&mut m[si][pi], &mut v[si][pi]);
                 for k in 0..t.data.len() {
@@ -175,9 +167,6 @@ impl Optimizer for Adam {
                     t.data[k] -= self.lr * mhat / (vhat.sqrt() + self.eps);
                 }
             }
-        }
-        for si in dirty {
-            params.mark_dirty(si);
         }
         Ok(())
     }
@@ -201,18 +190,15 @@ impl Optimizer for Adam {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::cell::RefCell;
 
     fn store(vals: &[f32]) -> ParamStore {
         ParamStore {
             tensors: vec![vec![Tensor::new(vec![vals.len()], vals.to_vec()).unwrap()]],
             names: vec![vec!["w1".into()]],
-            lits: RefCell::new(vec![None]),
         }
     }
 
-    // ParamStore fields are pub(crate)-visible through the module tree;
-    // use a tiny quadratic f(w) = 0.5*||w||^2, grad = w.
+    // Use a tiny quadratic f(w) = 0.5*||w||^2, grad = w.
     fn grad_of(p: &ParamStore) -> Vec<Vec<Tensor>> {
         vec![vec![p.tensors[0][0].clone()]]
     }

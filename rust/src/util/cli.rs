@@ -114,4 +114,47 @@ mod tests {
         let a = Args::parse(&argv(&["train"])).unwrap();
         assert!(a.req("net").is_err());
     }
+
+    #[test]
+    fn typed_accessors_fall_back_to_defaults() {
+        let a = Args::parse(&argv(&["train"])).unwrap();
+        assert_eq!(a.usize_or("steps", 200).unwrap(), 200);
+        assert_eq!(a.u64_or("seed", 42).unwrap(), 42);
+        assert!((a.f64_or("lr", 1e-3).unwrap() - 1e-3).abs() < 1e-12);
+        assert_eq!(a.str_or("mode", "invertible"), "invertible");
+        assert_eq!(a.get("mode"), None);
+    }
+
+    #[test]
+    fn typed_accessors_reject_garbage_values() {
+        let a = Args::parse(&argv(&["train", "--steps", "many", "--lr", "fast"]))
+            .unwrap();
+        assert!(a.usize_or("steps", 1).is_err());
+        assert!(a.f64_or("lr", 1.0).is_err());
+        // a numeric-looking value still parses
+        let a = Args::parse(&argv(&["train", "--steps", "12"])).unwrap();
+        assert_eq!(a.usize_or("steps", 1).unwrap(), 12);
+    }
+
+    #[test]
+    fn unknown_subcommand_words_are_captured_positionally() {
+        // dispatch-level rejection is app::run's job; the parser just
+        // records the words so the caller can report them
+        let a = Args::parse(&argv(&["frobnicate", "--x", "1"])).unwrap();
+        assert_eq!(a.subcommand, vec!["frobnicate"]);
+        assert_eq!(a.get("x"), Some("1"));
+    }
+
+    #[test]
+    fn trailing_flag_and_value_forms() {
+        let a = Args::parse(&argv(&["list", "--quiet"])).unwrap();
+        assert!(a.flag("quiet"));
+        let a = Args::parse(&argv(&["list", "--quiet", "--out", "d"])).unwrap();
+        assert!(a.flag("quiet"));
+        assert_eq!(a.get("out"), Some("d"));
+        // negative numbers are values, not flags? the simple rule treats
+        // "--key --..." as a flag, so numbers must not start with "--"
+        let a = Args::parse(&argv(&["train", "--lr", "0.5"])).unwrap();
+        assert!((a.f64_or("lr", 0.0).unwrap() - 0.5).abs() < 1e-12);
+    }
 }

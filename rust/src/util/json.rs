@@ -106,6 +106,7 @@ impl Json {
 
     // ---- serialization -----------------------------------------------------
 
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, false);

@@ -1,8 +1,8 @@
 //! Offline substrates: JSON, RNG, CLI parsing, micro-bench harness.
 //!
-//! The build environment vendors only the `xla` crate's dependency closure,
-//! so serde/clap/criterion/rand are unavailable — these modules implement
-//! the slices of them this project needs (documented in DESIGN.md §7).
+//! The build environment is fully offline (serde/clap/criterion/rand are
+//! unavailable) — these modules implement the slices of them this project
+//! needs (documented in DESIGN.md §7).
 
 pub mod bench;
 pub mod cli;

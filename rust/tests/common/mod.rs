@@ -1,31 +1,30 @@
-//! Shared helpers for integration tests: runtime bootstrap + batch makers.
+//! Shared helpers for integration tests: hermetic engine bootstrap + batch
+//! makers. Everything runs on the RefBackend over the builtin catalog —
+//! no `artifacts/` directory required.
 
-use std::path::PathBuf;
+#![allow(dead_code)] // not every test file uses every helper
 
-use invertnet::coordinator::FlowSession;
+use invertnet::api::{Engine, Flow};
 use invertnet::data::{synth_images, Density2d, LinearGaussian};
 use invertnet::util::rng::Pcg64;
-use invertnet::{Runtime, Tensor};
+use invertnet::Tensor;
 
-pub fn artifacts_dir() -> PathBuf {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts/manifest.json missing — run `make artifacts` first"
-    );
-    dir
+/// Hermetic engine: builtin network catalog + pure-Rust RefBackend.
+pub fn engine() -> Engine {
+    Engine::builder().build().expect("engine boot")
 }
 
-pub fn runtime() -> Runtime {
-    Runtime::new(&artifacts_dir()).expect("runtime boot")
+/// An owned flow handle on the hermetic engine.
+pub fn flow(net: &str) -> Flow {
+    engine().flow(net).expect("flow boot")
 }
 
 /// A deterministic input batch matching the network's shape (and cond if
 /// conditional).
-pub fn batch_for(session: &FlowSession, seed: u64) -> (Tensor, Option<Tensor>) {
+pub fn batch_for(flow: &Flow, seed: u64) -> (Tensor, Option<Tensor>) {
     let mut rng = Pcg64::new(seed);
-    let s = &session.def.in_shape;
-    if session.def.cond_shape.is_some() {
+    let s = &flow.def.in_shape;
+    if flow.def.cond_shape.is_some() {
         let prob = LinearGaussian::default_problem();
         let (theta, y) = prob.sample(s[0], &mut rng);
         (theta, Some(y))

@@ -1,0 +1,88 @@
+//! The ISSUE acceptance path, end-to-end on the RefBackend with zero
+//! artifacts: `invertnet train --net realnvp2d --data two-moons --steps 50`
+//! in both `--mode invertible` and `--mode stored`, with invertible peak
+//! scheduling bytes strictly below stored (the Fig. 1/2 claim).
+
+mod common;
+
+use std::sync::Arc;
+
+use invertnet::coordinator::ExecMode;
+use invertnet::data::Density2d;
+use invertnet::train::loop_::tail_mean;
+use invertnet::train::{train, Adam, GradClip, TrainConfig};
+use invertnet::util::rng::Pcg64;
+
+fn run_50_steps(mode: ExecMode) -> invertnet::train::TrainReport {
+    let flow = common::flow("realnvp2d");
+    let mut params = flow.init_params(42).unwrap();
+    let mut opt = Adam::new(2e-3);
+    let mut rng = Pcg64::new(4242);
+    let cfg = TrainConfig {
+        steps: 50,
+        schedule: Arc::new(mode),
+        clip: Some(GradClip { max_norm: 100.0 }),
+        log_every: usize::MAX,
+        out_dir: None,
+        quiet: true,
+    };
+    train(&flow, &mut params, &mut opt, &cfg, |_| {
+        Ok((Density2d::TwoMoons.sample(256, &mut rng), None))
+    })
+    .unwrap()
+}
+
+#[test]
+fn two_moons_50_steps_invertible_vs_stored() {
+    let inv = run_50_steps(ExecMode::Invertible);
+    let sto = run_50_steps(ExecMode::Stored);
+
+    // both schedules run end-to-end and learn something
+    for (name, r) in [("invertible", &inv), ("stored", &sto)] {
+        assert!(r.final_loss.is_finite(), "{name}: non-finite loss");
+        assert!(
+            tail_mean(&r.losses, 10) < r.losses[0],
+            "{name}: loss did not improve ({} -> {})",
+            r.losses[0],
+            tail_mean(&r.losses, 10)
+        );
+    }
+
+    // the paper's claim, measured: invertible scheduling memory is
+    // STRICTLY below the autodiff-style tape
+    assert!(
+        inv.peak_sched_bytes < sto.peak_sched_bytes,
+        "invertible peak {} must be strictly below stored peak {}",
+        inv.peak_sched_bytes,
+        sto.peak_sched_bytes
+    );
+}
+
+/// Same path through the CLI dispatch (`invertnet train ...`).
+#[test]
+fn cli_train_two_moons_both_modes() {
+    for mode in ["invertible", "stored"] {
+        let argv: Vec<String> = [
+            "train", "--net", "realnvp2d", "--data", "two-moons",
+            "--steps", "5", "--mode", mode, "--quiet",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        invertnet::app::run(&argv)
+            .unwrap_or_else(|e| panic!("cli train --mode {mode}: {e:#}"));
+    }
+}
+
+/// The CLI also exposes the hybrid schedule.
+#[test]
+fn cli_train_checkpoint_hybrid() {
+    let argv: Vec<String> = [
+        "train", "--net", "realnvp2d", "--data", "two-moons",
+        "--steps", "3", "--mode", "checkpoint:4", "--quiet",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    invertnet::app::run(&argv).unwrap();
+}

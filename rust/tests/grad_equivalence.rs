@@ -1,27 +1,23 @@
-//! The paper's §3 claim, verified end-to-end through PJRT: the invertible
-//! (recompute-from-inverse) executor produces the SAME loss and parameter
-//! gradients as the stored (autodiff-tape) executor — memory is the only
-//! difference. Exercised for every network family.
+//! The paper's §3 claim, verified end-to-end through the RefBackend: the
+//! invertible (recompute-from-inverse) schedule produces the SAME loss and
+//! parameter gradients as the stored (autodiff-tape) schedule — memory is
+//! the only difference. Exercised for every network family.
 
 mod common;
 
-use common::{assert_close, batch_for, runtime};
-use invertnet::coordinator::{ExecMode, FlowSession};
-use invertnet::flow::ParamStore;
-use invertnet::MemoryLedger;
+use common::{assert_close, batch_for, flow};
+use invertnet::coordinator::ExecMode;
 
 fn check_net(net: &str, tol: f32) {
-    let rt = runtime();
-    let ledger = MemoryLedger::new();
-    let session = FlowSession::new(&rt, net, ledger).unwrap();
-    let params = ParamStore::init(&session.def, &rt.manifest, 1234).unwrap();
-    let (x, cond) = batch_for(&session, 77);
+    let flow = flow(net);
+    let params = flow.init_params(1234).unwrap();
+    let (x, cond) = batch_for(&flow, 77);
 
-    let inv = session
-        .train_step(&x, cond.as_ref(), &params, ExecMode::Invertible)
+    let inv = flow
+        .train_step(&x, cond.as_ref(), &params, &ExecMode::Invertible)
         .unwrap();
-    let sto = session
-        .train_step(&x, cond.as_ref(), &params, ExecMode::Stored)
+    let sto = flow
+        .train_step(&x, cond.as_ref(), &params, &ExecMode::Stored)
         .unwrap();
 
     assert!(
@@ -74,4 +70,9 @@ fn glow_multiscale() {
 #[test]
 fn hyperbolic() {
     check_net("hyper16", 5e-4);
+}
+
+#[test]
+fn nice_additive() {
+    check_net("nice16", 5e-4);
 }

@@ -1,22 +1,20 @@
-//! Invertibility guarantees through the real PJRT executables (the paper's
-//! §4 CI promise): forward->invert round-trips the input; invert->forward
-//! round-trips the latents; log-likelihood is finite and latents are
-//! whitened-ish after a few training steps.
+//! Invertibility guarantees through the RefBackend (the paper's §4 CI
+//! promise), with zero external artifacts: forward->invert round-trips the
+//! input; invert->forward round-trips the latents; log-likelihood is
+//! finite and sensible.
 
 mod common;
 
-use common::{batch_for, runtime};
-use invertnet::coordinator::FlowSession;
-use invertnet::flow::ParamStore;
+use common::{batch_for, flow};
+use invertnet::coordinator::ExecMode;
 use invertnet::util::rng::Pcg64;
 use invertnet::{MemoryLedger, Tensor};
 
 fn roundtrip(net: &str, tol: f32) {
-    let rt = runtime();
-    let session = FlowSession::new(&rt, net, MemoryLedger::new()).unwrap();
-    let params = ParamStore::init(&session.def, &rt.manifest, 31).unwrap();
-    let (x, cond) = batch_for(&session, 55);
-    let err = session.roundtrip_error(&x, cond.as_ref(), &params).unwrap();
+    let flow = flow(net);
+    let params = flow.init_params(31).unwrap();
+    let (x, cond) = batch_for(&flow, 55);
+    let err = flow.roundtrip_error(&x, cond.as_ref(), &params).unwrap();
     assert!(err < tol, "{net}: roundtrip error {err} >= {tol}");
 }
 
@@ -46,12 +44,16 @@ fn hyperbolic_roundtrips() {
 }
 
 #[test]
+fn nice_additive_roundtrips() {
+    roundtrip("nice16", 1e-3);
+}
+
+#[test]
 fn sample_then_forward_recovers_latents() {
-    let rt = runtime();
-    let session = FlowSession::new(&rt, "realnvp2d", MemoryLedger::new()).unwrap();
-    let params = ParamStore::init(&session.def, &rt.manifest, 9).unwrap();
+    let flow = flow("realnvp2d");
+    let params = flow.init_params(9).unwrap();
     let mut rng = Pcg64::new(123);
-    let shapes = session.def.latent_shapes.clone();
+    let shapes = flow.def.latent_shapes.clone();
     let zs: Vec<Tensor> = shapes
         .iter()
         .map(|s| Tensor {
@@ -59,8 +61,8 @@ fn sample_then_forward_recovers_latents() {
             data: rng.normal_vec(s.iter().product()),
         })
         .collect();
-    let x = session.invert(&zs, None, &params).unwrap();
-    let (latents, _, _) = session.forward(&x, None, &params, false).unwrap();
+    let x = flow.invert(&zs, None, &params).unwrap();
+    let (latents, _) = flow.forward(&x, None, &params).unwrap();
     assert_eq!(latents.len(), zs.len());
     for (got, want) in latents.iter().zip(&zs) {
         let d = got.tensor().max_abs_diff(want);
@@ -70,30 +72,29 @@ fn sample_then_forward_recovers_latents() {
 
 #[test]
 fn log_likelihood_finite_and_consistent() {
-    let rt = runtime();
-    let session = FlowSession::new(&rt, "glow16", MemoryLedger::new()).unwrap();
-    let params = ParamStore::init(&session.def, &rt.manifest, 3).unwrap();
-    let (x, _) = batch_for(&session, 8);
-    let ll = session.log_likelihood(&x, None, &params).unwrap();
-    assert_eq!(ll.len(), session.batch());
+    let flow = flow("glow16");
+    let params = flow.init_params(3).unwrap();
+    let (x, _) = batch_for(&flow, 8);
+    let ll = flow.log_likelihood(&x, None, &params).unwrap();
+    assert_eq!(ll.len(), flow.batch());
     for v in &ll {
         assert!(v.is_finite(), "non-finite loglik {v}");
     }
     // scaling sanity: loglik per dim should be O(1)
-    let dims = session.def.dims_per_sample() as f32;
+    let dims = flow.def.dims_per_sample() as f32;
     let mean = ll.iter().sum::<f32>() / ll.len() as f32 / dims;
     assert!(mean.abs() < 30.0, "per-dim loglik {mean} looks wrong");
 }
 
 #[test]
 fn ledger_returns_to_zero_after_step() {
-    let rt = runtime();
+    let engine = common::engine();
     let ledger = MemoryLedger::new();
-    let session = FlowSession::new(&rt, "realnvp2d", ledger.clone()).unwrap();
-    let params = ParamStore::init(&session.def, &rt.manifest, 1).unwrap();
-    let (x, _) = batch_for(&session, 2);
-    let _ = session
-        .train_step(&x, None, &params, invertnet::coordinator::ExecMode::Invertible)
+    let flow = engine.flow_with_ledger("realnvp2d", ledger.clone()).unwrap();
+    let params = flow.init_params(1).unwrap();
+    let (x, _) = batch_for(&flow, 2);
+    let _ = flow
+        .train_step(&x, None, &params, &ExecMode::Invertible)
         .unwrap();
     assert_eq!(
         ledger.live_total(),

@@ -1,21 +1,21 @@
-//! End-to-end training behaviour: loss decreases, checkpoints round-trip,
-//! both executors train to the same place.
+//! End-to-end training behaviour on the RefBackend: loss decreases,
+//! checkpoints round-trip, both schedules train to the same place.
 
 mod common;
 
-use common::{batch_for, runtime};
-use invertnet::coordinator::{ExecMode, FlowSession};
+use std::sync::Arc;
+
+use common::{batch_for, flow};
+use invertnet::coordinator::{ActivationSchedule, ExecMode};
 use invertnet::data::Density2d;
-use invertnet::flow::ParamStore;
 use invertnet::train::loop_::tail_mean;
 use invertnet::train::{train, Adam, GradClip, Optimizer, TrainConfig};
 use invertnet::util::rng::Pcg64;
-use invertnet::MemoryLedger;
 
-fn quick_cfg(steps: usize, mode: ExecMode) -> TrainConfig {
+fn quick_cfg(steps: usize, schedule: Arc<dyn ActivationSchedule>) -> TrainConfig {
     TrainConfig {
         steps,
-        mode,
+        schedule,
         clip: Some(GradClip { max_norm: 100.0 }),
         log_every: usize::MAX,
         out_dir: None,
@@ -25,16 +25,15 @@ fn quick_cfg(steps: usize, mode: ExecMode) -> TrainConfig {
 
 #[test]
 fn loss_decreases_on_two_moons() {
-    let rt = runtime();
-    let session = FlowSession::new(&rt, "realnvp2d", MemoryLedger::new()).unwrap();
-    let mut params = ParamStore::init(&session.def, &rt.manifest, 11).unwrap();
+    let flow = flow("realnvp2d");
+    let mut params = flow.init_params(11).unwrap();
     let mut opt = Adam::new(2e-3);
     let mut rng = Pcg64::new(70);
     let report = train(
-        &session,
+        &flow,
         &mut params,
         &mut opt,
-        &quick_cfg(120, ExecMode::Invertible),
+        &quick_cfg(120, Arc::new(ExecMode::Invertible)),
         |_| Ok((Density2d::TwoMoons.sample(256, &mut rng), None)),
     )
     .unwrap();
@@ -47,19 +46,18 @@ fn loss_decreases_on_two_moons() {
 }
 
 #[test]
-fn both_modes_train_identically() {
+fn both_schedules_train_identically() {
     // identical seeds + data order => identical loss trajectories
-    let rt = runtime();
-    let run = |mode| {
-        let session = FlowSession::new(&rt, "realnvp2d", MemoryLedger::new()).unwrap();
-        let mut params = ParamStore::init(&session.def, &rt.manifest, 21).unwrap();
+    let run = |mode: ExecMode| {
+        let flow = flow("realnvp2d");
+        let mut params = flow.init_params(21).unwrap();
         let mut opt = Adam::new(1e-3);
         let mut rng = Pcg64::new(33);
         train(
-            &session,
+            &flow,
             &mut params,
             &mut opt,
-            &quick_cfg(25, mode),
+            &quick_cfg(25, Arc::new(mode)),
             |_| Ok((Density2d::TwoMoons.sample(256, &mut rng), None)),
         )
         .unwrap()
@@ -77,9 +75,8 @@ fn both_modes_train_identically() {
 
 #[test]
 fn checkpoint_roundtrip_preserves_loss() {
-    let rt = runtime();
-    let session = FlowSession::new(&rt, "hint8d", MemoryLedger::new()).unwrap();
-    let mut params = ParamStore::init(&session.def, &rt.manifest, 77).unwrap();
+    let flow = flow("hint8d");
+    let mut params = flow.init_params(77).unwrap();
     // perturb from init so the checkpoint is non-trivial
     let mut opt = Adam::new(1e-3);
     let mut rng = Pcg64::new(44);
@@ -89,25 +86,25 @@ fn checkpoint_roundtrip_preserves_loss() {
     };
     for _ in 0..3 {
         let x = mk(&mut rng);
-        let mut r = session
-            .train_step(&x, None, &params, ExecMode::Invertible)
+        let mut r = flow
+            .train_step(&x, None, &params, &ExecMode::Invertible)
             .unwrap();
         GradClip { max_norm: 100.0 }.apply(&mut r.grads);
         opt.step(&mut params, &r.grads).unwrap();
     }
     let x_eval = mk(&mut rng);
-    let loss_before = session
-        .train_step(&x_eval, None, &params, ExecMode::Invertible)
+    let loss_before = flow
+        .train_step(&x_eval, None, &params, &ExecMode::Invertible)
         .unwrap()
         .loss;
 
     let dir = std::env::temp_dir().join(format!("invertnet_ckpt_{}", std::process::id()));
     params.save(&dir, "hint8d").unwrap();
 
-    let mut params2 = ParamStore::init(&session.def, &rt.manifest, 999).unwrap();
+    let mut params2 = flow.init_params(999).unwrap();
     params2.load(&dir).unwrap();
-    let loss_after = session
-        .train_step(&x_eval, None, &params2, ExecMode::Invertible)
+    let loss_after = flow
+        .train_step(&x_eval, None, &params2, &ExecMode::Invertible)
         .unwrap()
         .loss;
     std::fs::remove_dir_all(&dir).ok();
@@ -119,17 +116,16 @@ fn checkpoint_roundtrip_preserves_loss() {
 
 #[test]
 fn conditional_training_reduces_loss() {
-    let rt = runtime();
-    let session = FlowSession::new(&rt, "cond_realnvp2d", MemoryLedger::new()).unwrap();
-    let mut params = ParamStore::init(&session.def, &rt.manifest, 10).unwrap();
+    let flow = flow("cond_realnvp2d");
+    let mut params = flow.init_params(10).unwrap();
     let mut opt = Adam::new(2e-3);
     let prob = invertnet::data::LinearGaussian::default_problem();
     let mut rng = Pcg64::new(71);
     let report = train(
-        &session,
+        &flow,
         &mut params,
         &mut opt,
-        &quick_cfg(100, ExecMode::Invertible),
+        &quick_cfg(100, Arc::new(ExecMode::Invertible)),
         |_| {
             let (theta, y) = prob.sample(256, &mut rng);
             Ok((theta, Some(y)))
@@ -143,18 +139,16 @@ fn conditional_training_reduces_loss() {
 
 #[test]
 fn rejects_wrong_shapes() {
-    let rt = runtime();
-    let session = FlowSession::new(&rt, "realnvp2d", MemoryLedger::new()).unwrap();
-    let params = ParamStore::init(&session.def, &rt.manifest, 1).unwrap();
+    let flow = flow("realnvp2d");
+    let params = flow.init_params(1).unwrap();
     let bad = invertnet::Tensor::zeros(&[8, 2]);
-    assert!(session
-        .train_step(&bad, None, &params, ExecMode::Invertible)
+    assert!(flow
+        .train_step(&bad, None, &params, &ExecMode::Invertible)
         .is_err());
-    let (x, _) = batch_for(&session, 1);
+    let (x, _) = batch_for(&flow, 1);
     let cond = invertnet::Tensor::zeros(&[256, 2]);
     assert!(
-        session
-            .train_step(&x, Some(&cond), &params, ExecMode::Invertible)
+        flow.train_step(&x, Some(&cond), &params, &ExecMode::Invertible)
             .is_err(),
         "unconditional net must reject cond input"
     );

@@ -1,0 +1,193 @@
+//! Minimal, dependency-free subset of the `anyhow` API, vendored because the
+//! build environment is offline. Implements exactly what this workspace
+//! uses: [`Error`], [`Result`], [`Context`], and the `anyhow!` / `bail!` /
+//! `ensure!` macros.
+//!
+//! Semantics mirror upstream anyhow where it matters here:
+//! * `Display` prints the outermost message only;
+//! * alternate display (`{:#}`) prints the whole context chain joined by
+//!   `": "` (outermost first);
+//! * `Debug` prints the outermost message plus a `Caused by:` list;
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`.
+
+use std::fmt;
+
+/// An error chain: `chain[0]` is the outermost (most recent) message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<M: fmt::Display>(mut self, message: M) -> Error {
+        self.chain.insert(0, message.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes the blanket `From` below coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<M: fmt::Display>(self, message: M) -> Result<T>;
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T>;
+}
+
+// A single blanket over `E: Into<Error>` covers both `Result<T, Error>`
+// (reflexive conversion) and `Result<T, E>` for any std error (via the
+// `From` impl above) with zero impl overlap.
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<M: fmt::Display>(self, message: M) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(message)
+        })
+    }
+
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<M: fmt::Display>(self, message: M) -> Result<T> {
+        self.ok_or_else(|| Error::msg(message))
+    }
+
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Create an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn display_and_chain() {
+        let e = fails().with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert!(format!("{e:?}").contains("Caused by"));
+        assert_eq!(e.root_cause(), "inner 42");
+    }
+
+    #[test]
+    fn from_std_error() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        let e = io().context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert!(format!("{e:#}").contains("reading config: "));
+    }
+
+    #[test]
+    fn ensure_works() {
+        fn check(v: i32) -> Result<i32> {
+            ensure!(v > 0, "not positive: {v}");
+            Ok(v)
+        }
+        assert!(check(1).is_ok());
+        assert!(check(-1).is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3).context("missing").unwrap(), 3);
+    }
+}

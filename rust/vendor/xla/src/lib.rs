@@ -1,0 +1,150 @@
+//! Offline **stub** of the `xla` (xla-rs) PJRT API surface that
+//! `invertnet`'s `XlaBackend` compiles against.
+//!
+//! The build image does not ship the XLA extension, so this crate exists to
+//! (a) keep `--features xla` building hermetically and (b) document exactly
+//! which PJRT entry points the backend needs. Every runtime constructor
+//! returns an error; the value-carrying types are backed by an uninhabited
+//! `Void`, so post-construction methods are statically unreachable.
+//!
+//! To run against real PJRT, replace this path dependency with an actual
+//! xla-rs checkout exposing the same items (see `rust/src/backend/xla.rs`).
+
+/// Uninhabited marker: stub objects can never be constructed.
+#[derive(Debug, Clone, Copy)]
+enum Void {}
+
+/// Error type matching xla-rs's `Error` shape closely enough for `{e:?}`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the xla runtime is not vendored in this build; \
+         point the `xla` path dependency at a real xla-rs checkout"
+    ))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S32,
+    S64,
+}
+
+/// Host literal (stub).
+#[derive(Debug)]
+pub struct Literal(Void);
+
+/// Array shape metadata (stub).
+#[derive(Debug)]
+pub struct ArrayShape(Void);
+
+impl ArrayShape {
+    pub fn dims(&self) -> Vec<i64> {
+        match self.0 {}
+    }
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.0 {}
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        match self.0 {}
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match self.0 {}
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto(Void);
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation(Void);
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match proto.0 {}
+    }
+}
+
+/// Device buffer returned by execution (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(Void);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.0 {}
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(Void);
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.0 {}
+    }
+}
+
+/// PJRT client (stub): construction reports the missing runtime.
+#[derive(Debug)]
+pub struct PjRtClient(Void);
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.0 {}
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self.0 {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_report_missing_runtime() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.0.contains("not vendored"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, &[2], &[0; 8]).is_err());
+    }
+}
