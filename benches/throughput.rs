@@ -3,13 +3,20 @@
 //! The memory savings of invertible backprop are bought with inverse
 //! recomputation in the backward pass; this bench quantifies that
 //! wall-clock trade on the same layer programs, plus end-to-end train-step
-//! latency for the example networks and the checkpoint-hybrid schedule.
+//! latency for the example networks, the checkpoint-hybrid schedule, and
+//! the data-parallel thread-scaling curve.
 //!
 //!     cargo bench --bench throughput
+//!
+//! Machine-readable results: the thread-scaling curve is printed as a
+//! one-line `BENCH {json}` record on stdout and written to
+//! `bench_throughput.json` (override the path with INVERTNET_BENCH_JSON).
 
 use invertnet::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
 use invertnet::data::synth_images;
+use invertnet::train::ParallelTrainer;
 use invertnet::util::bench::{bench, report};
+use invertnet::util::json::Json;
 use invertnet::util::rng::Pcg64;
 use invertnet::{Engine, Flow, Tensor};
 
@@ -60,5 +67,54 @@ fn main() {
         });
         report(&format!("{net}/forward_only"), &fs);
         engine.clear_cache();
+    }
+
+    // ---- thread scaling: ParallelTrainer over the small + medium nets ----
+    println!("\n# data-parallel thread scaling (invertible schedule)");
+    let mut curve: Vec<Json> = Vec::new();
+    for net in ["realnvp2d", "glow_bench32"] {
+        let flow = engine.flow(net).unwrap();
+        let params = flow.init_params(3).unwrap();
+        let x = batch_for(&flow, &mut rng);
+        let mut base_sps = 0.0f64;
+        for threads in [1usize, 2, 4, 8] {
+            let trainer = ParallelTrainer::new(threads);
+            let s = bench(1, 5, || {
+                trainer
+                    .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
+                    .unwrap();
+            });
+            let sps = 1.0 / s.mean_s;
+            if threads == 1 {
+                base_sps = sps;
+            }
+            let speedup = sps / base_sps;
+            report(&format!("{net}/threads={threads}"), &s);
+            println!("{:<48} {sps:>8.2} steps/s  {speedup:>5.2}x vs 1 thread",
+                     format!("{net}/threads={threads}"));
+            curve.push(Json::obj(vec![
+                ("net", Json::Str(net.to_string())),
+                ("threads", Json::Num(threads as f64)),
+                ("mean_s", Json::Num(s.mean_s)),
+                ("steps_per_sec", Json::Num(sps)),
+                ("speedup_vs_1_thread", Json::Num(speedup)),
+            ]));
+        }
+        engine.clear_cache();
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("throughput".to_string())),
+        ("backend", Json::Str(engine.backend_name().to_string())),
+        ("host_parallelism", Json::Num(
+            std::thread::available_parallelism().map_or(0, |p| p.get()) as f64)),
+        ("thread_scaling", Json::Arr(curve)),
+    ]);
+    println!("BENCH {}", doc.to_string());
+    let out = std::env::var("INVERTNET_BENCH_JSON")
+        .unwrap_or_else(|_| "bench_throughput.json".to_string());
+    if let Err(e) = std::fs::write(&out, doc.to_string_pretty()) {
+        eprintln!("could not write {out}: {e}");
+    } else {
+        println!("# thread-scaling curve -> {out}");
     }
 }

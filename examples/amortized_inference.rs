@@ -63,6 +63,7 @@ fn main() -> Result<()> {
         log_every: 100,
         out_dir: Some(PathBuf::from("runs/amortized")),
         quiet: false,
+        ..TrainConfig::default()
     };
     let mut rng = Pcg64::new(5);
     let report = train(&flow, &mut params, &mut opt, &cfg, |_| {

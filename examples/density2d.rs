@@ -58,6 +58,7 @@ fn main() -> Result<()> {
         log_every: 50,
         out_dir: Some(PathBuf::from(format!("runs/density2d_{which}"))),
         quiet: false,
+        ..TrainConfig::default()
     };
     let mut rng = Pcg64::new(9);
     let report = train(&flow, &mut params, &mut opt, &cfg, |_| {

@@ -49,6 +49,8 @@ fn main() -> Result<()> {
     assert!(rt_err < 2e-3);
 
     let mut opt = Adam::new(1e-3);
+    // QUICKSTART_THREADS=N shards each minibatch across N workers
+    // (deterministic reduction — same losses as the single-threaded run)
     let cfg = TrainConfig {
         steps,
         schedule: Arc::new(ExecMode::Invertible),
@@ -56,6 +58,9 @@ fn main() -> Result<()> {
         log_every: 20,
         out_dir: Some(PathBuf::from("runs/quickstart")),
         quiet: false,
+        threads: std::env::var("QUICKSTART_THREADS")
+            .ok().and_then(|s| s.parse().ok()).unwrap_or(1),
+        ..TrainConfig::default()
     };
     let mut data_rng = Pcg64::new(1234);
     let in_shape = flow.def.in_shape.clone();

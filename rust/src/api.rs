@@ -27,6 +27,9 @@ use crate::runtime::{builtin_manifest, Manifest};
 pub struct Engine {
     backend: Arc<dyn Backend>,
     manifest: Arc<Manifest>,
+    /// Default worker-thread count for data-parallel training
+    /// ([`crate::train::ParallelTrainer`]); 1 = single-threaded.
+    threads: usize,
 }
 
 /// Builder for [`Engine`].
@@ -35,11 +38,13 @@ pub struct Engine {
 /// * `.artifacts(dir)`: load `dir/manifest.json`; with `--features xla`
 ///   and no explicit backend this also selects the XLA backend, otherwise
 ///   the RefBackend executes the same networks natively;
-/// * `.backend(b)`: explicit backend override.
+/// * `.backend(b)`: explicit backend override;
+/// * `.threads(n)`: default data-parallel worker count for training.
 #[derive(Default)]
 pub struct EngineBuilder {
     artifacts: Option<PathBuf>,
     backend: Option<Arc<dyn Backend>>,
+    threads: Option<usize>,
 }
 
 impl EngineBuilder {
@@ -55,6 +60,14 @@ impl EngineBuilder {
         self
     }
 
+    /// Default worker-thread count for data-parallel training (clamped to
+    /// at least 1). Consumers read it back via [`Engine::default_threads`];
+    /// per-run overrides go through `TrainConfig::threads`.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let manifest: Arc<Manifest> = match &self.artifacts {
             Some(dir) => Arc::new(Manifest::load(dir)
@@ -65,7 +78,7 @@ impl EngineBuilder {
             Some(b) => b,
             None => default_backend(self.artifacts.as_deref(), &manifest)?,
         };
-        Ok(Engine { backend, manifest })
+        Ok(Engine { backend, manifest, threads: self.threads.unwrap_or(1) })
     }
 }
 
@@ -101,6 +114,11 @@ impl Engine {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Default data-parallel worker count configured at build time.
+    pub fn default_threads(&self) -> usize {
+        self.threads
     }
 
     /// The underlying execution backend (for tooling like the profiler).
@@ -142,7 +160,42 @@ pub struct Flow {
     pub(crate) ledger: Arc<MemoryLedger>,
 }
 
+impl Clone for Flow {
+    /// Cloned handles share the backend, manifest AND memory ledger —
+    /// their buffer lifetimes are charged to one account. Use
+    /// [`Flow::fork`] for an independently-metered handle.
+    fn clone(&self) -> Flow {
+        Flow {
+            backend: self.backend.clone(),
+            manifest: self.manifest.clone(),
+            def: self.def.clone(),
+            ledger: self.ledger.clone(),
+        }
+    }
+}
+
 impl Flow {
+    /// An independent handle on the same network whose buffers charge a
+    /// fresh [`MemoryLedger`]. The data-parallel trainer forks the source
+    /// flow once per worker so each worker's activation peak is observable
+    /// on its own (concurrent peaks add up across workers).
+    ///
+    /// A memory budget on the source ledger carries over, applied *per
+    /// fork*: each forked walk is individually held to the budget (the
+    /// single-threaded simulated-OOM contract), while the concurrent sum
+    /// across workers is reported, not capped.
+    pub fn fork(&self) -> Flow {
+        Flow {
+            backend: self.backend.clone(),
+            manifest: self.manifest.clone(),
+            def: self.def.clone(),
+            ledger: match self.ledger.budget_bytes() {
+                Some(b) => MemoryLedger::with_budget(b),
+                None => MemoryLedger::new(),
+            },
+        }
+    }
+
     /// Leading (batch) dimension of the network input.
     pub fn batch(&self) -> usize {
         self.def.in_shape[0]

@@ -4,6 +4,7 @@
 //! ```text
 //! invertnet train   --net realnvp2d --data two-moons --steps 500
 //!                   [--mode invertible|stored|checkpoint:K]
+//!                   [--threads N] [--microbatch N]
 //! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
 //! invertnet bench   fig1|fig2   [--budget-gb 40]
 //! invertnet inspect --net glow16
@@ -37,7 +38,7 @@ invertnet — memory-frugal normalizing flows (InvertibleNetworks.jl reproductio
 USAGE:
   invertnet train   --net NAME [--data two-moons|eight-gaussians|checkerboard|spiral|images|linear-gaussian]
                     [--steps N] [--lr F] [--mode invertible|stored|checkpoint:K] [--seed N]
-                    [--out DIR] [--clip F] [--log-every N] [--quiet]
+                    [--threads N] [--microbatch N] [--out DIR] [--clip F] [--log-every N] [--quiet]
   invertnet sample  --net NAME [--ckpt DIR] [--out FILE.npy] [--batches N] [--seed N]
   invertnet bench   fig1|fig2 [--budget-gb F]
   invertnet inspect --net NAME
@@ -47,6 +48,11 @@ USAGE:
 COMMON OPTIONS:
   --backend ref|xla   execution backend (default: ref — pure Rust, no artifacts)
   --artifacts DIR     manifest/artifact directory (required for --backend xla)
+  --threads N         data-parallel worker threads for training (default: 1);
+                      minibatches are sharded with a deterministic reduction,
+                      so gradients match the single-threaded run
+  --microbatch N      gradient-accumulation shard size (default: batch/threads);
+                      smaller values tighten the activation-memory envelope
 ";
 
 /// Parse argv and dispatch. Unknown subcommands are an error; no
@@ -78,7 +84,7 @@ pub fn run(argv: &[String]) -> Result<()> {
 /// Build the engine a subcommand asked for (`--backend`, `--artifacts`).
 fn engine_of(args: &Args) -> Result<Engine> {
     let artifacts = args.get("artifacts").map(PathBuf::from);
-    let mut builder = Engine::builder();
+    let mut builder = Engine::builder().threads(args.usize_or("threads", 1)?);
     if let Some(dir) = &artifacts {
         builder = builder.artifacts(dir);
     }
@@ -191,6 +197,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         .unwrap_or(default_data(&flow.def.in_shape, cond));
     let next = batcher(data, flow.def.in_shape.clone(), cond, seed)?;
 
+    let microbatch = match args.usize_or("microbatch", 0)? {
+        0 => None,
+        mb => Some(mb),
+    };
     let cfg = TrainConfig {
         steps: args.usize_or("steps", 200)?,
         schedule: schedule_of(args)?,
@@ -198,14 +208,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         log_every: args.usize_or("log-every", 10)?,
         out_dir: args.get("out").map(PathBuf::from),
         quiet: args.flag("quiet"),
+        threads: engine.default_threads(),
+        microbatch,
     };
 
     eprintln!(
-        "training {net} ({} params, depth {}, schedule {}, backend {}) on {data}",
+        "training {net} ({} params, depth {}, schedule {}, backend {}, \
+         threads {}) on {data}",
         params.param_count(),
         flow.def.depth(),
         cfg.schedule.label(),
         flow.backend_name(),
+        cfg.threads,
     );
     let report = train(&flow, &mut params, &mut opt, &cfg, next)?;
     println!(
@@ -326,6 +340,15 @@ mod tests {
         assert!(err.to_string().contains("--artifacts"), "{err:#}");
         let a = Args::parse(&argv(&["list", "--backend", "warp"])).unwrap();
         assert!(engine_of(&a).is_err());
+    }
+
+    #[test]
+    fn threads_flag_reaches_the_engine() {
+        let a = Args::parse(&argv(&["train", "--threads", "3"])).unwrap();
+        assert_eq!(engine_of(&a).unwrap().default_threads(), 3);
+        // absent flag -> single-threaded default
+        let a = Args::parse(&argv(&["train"])).unwrap();
+        assert_eq!(engine_of(&a).unwrap().default_threads(), 1);
     }
 
     #[test]

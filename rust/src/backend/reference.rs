@@ -19,7 +19,8 @@ use crate::tensor::Tensor;
 
 use super::math::{apply_mat, apply_mat_t, cnn_apply, cnn_vjp, conv2d_same,
                   conv2d_vjp_w, conv2d_vjp_x, flip_swap, householder,
-                  householder_vjp, matmul_at, mlp_apply, mlp_vjp, sum_to_last};
+                  householder_vjp, matmul_at, mlp_apply, mlp_vjp, scratch,
+                  sum_to_last};
 use super::Backend;
 
 const HYPER_ALPHA: f32 = 0.2;
@@ -295,18 +296,24 @@ fn glowcpl(entry: &str, acts: &[&Tensor], theta: &[Tensor]) -> Result<Vec<Tensor
         "forward" => {
             let x = acts[0];
             let (x1, x2) = split_last_axis(x, c1)?;
-            let (out, _) = cnn_apply(&x1, theta);
+            let (out, cache) = cnn_apply(&x1, theta);
+            cache.recycle();
             let (raw, t) = split_last_axis(&out, c2)?;
+            scratch::recycle(out);
             let s = sigmoid2(&raw);
+            scratch::recycle(raw);
             let y2 = affine_fwd(&x2, &s, &t);
             Ok(vec![concat_last_axis(&x1, &y2)?, log_sum_per_sample(&s)])
         }
         "inverse" => {
             let y = acts[0];
             let (y1, y2) = split_last_axis(y, c1)?;
-            let (out, _) = cnn_apply(&y1, theta);
+            let (out, cache) = cnn_apply(&y1, theta);
+            cache.recycle();
             let (raw, t) = split_last_axis(&out, c2)?;
+            scratch::recycle(out);
             let s = sigmoid2(&raw);
+            scratch::recycle(raw);
             let x2 = affine_inv(&y2, &s, &t);
             Ok(vec![concat_last_axis(&y1, &x2)?])
         }
@@ -317,16 +324,22 @@ fn glowcpl(entry: &str, acts: &[&Tensor], theta: &[Tensor]) -> Result<Vec<Tensor
             let (x1, second) = split_last_axis(given, c1)?;
             let (out, cache) = cnn_apply(&x1, theta);
             let (raw, t) = split_last_axis(&out, c2)?;
+            scratch::recycle(out);
             let s = sigmoid2(&raw);
+            scratch::recycle(raw);
             let x2 = if stored { second } else { affine_inv(&second, &s, &t) };
             let (dy1, dy2) = split_last_axis(dy, c1)?;
             let (dx2, draw) = coupling_pullback(&dy2, &x2, &s, dld);
             let dout = concat_last_axis(&draw, &dy2)?;
+            scratch::recycle(draw);
             let (dx1_cnn, dtheta) = cnn_vjp(&dout, &x1, &cache, theta);
+            scratch::recycle(dout);
+            cache.recycle();
             let mut dx1 = dy1;
             for (v, g) in dx1.data.iter_mut().zip(&dx1_cnn.data) {
                 *v += g;
             }
+            scratch::recycle(dx1_cnn);
             let dx = concat_last_axis(&dx1, &dx2)?;
             let mut results = vec![dx];
             results.extend(dtheta);
@@ -350,21 +363,25 @@ fn addcpl(entry: &str, acts: &[&Tensor], theta: &[Tensor]) -> Result<Vec<Tensor>
         "forward" => {
             let x = acts[0];
             let (x1, x2) = split_last_axis(x, c1)?;
-            let (nn, _) = cnn_apply(&x1, theta);
+            let (nn, cache) = cnn_apply(&x1, theta);
+            cache.recycle();
             let mut y2 = x2;
             for (v, g) in y2.data.iter_mut().zip(&nn.data) {
                 *v += g;
             }
+            scratch::recycle(nn);
             Ok(vec![concat_last_axis(&x1, &y2)?, zeros_ld(x.shape[0])])
         }
         "inverse" => {
             let y = acts[0];
             let (y1, y2) = split_last_axis(y, c1)?;
-            let (nn, _) = cnn_apply(&y1, theta);
+            let (nn, cache) = cnn_apply(&y1, theta);
+            cache.recycle();
             let mut x2 = y2;
             for (v, g) in x2.data.iter_mut().zip(&nn.data) {
                 *v -= g;
             }
+            scratch::recycle(nn);
             Ok(vec![concat_last_axis(&y1, &x2)?])
         }
         "backward" | "backward_stored" => {
@@ -374,10 +391,12 @@ fn addcpl(entry: &str, acts: &[&Tensor], theta: &[Tensor]) -> Result<Vec<Tensor>
             let (nn, cache) = cnn_apply(&x1, theta);
             let (dy1, dy2) = split_last_axis(dy, c1)?;
             let (dx1_cnn, dtheta) = cnn_vjp(&dy2, &x1, &cache, theta);
+            cache.recycle();
             let mut dx1 = dy1;
             for (v, g) in dx1.data.iter_mut().zip(&dx1_cnn.data) {
                 *v += g;
             }
+            scratch::recycle(dx1_cnn);
             let dx = concat_last_axis(&dx1, &dy2)?;
             let mut results = vec![dx];
             results.extend(dtheta);
@@ -389,6 +408,7 @@ fn addcpl(entry: &str, acts: &[&Tensor], theta: &[Tensor]) -> Result<Vec<Tensor>
                 }
                 results.push(concat_last_axis(&x1, &x2)?);
             }
+            scratch::recycle(nn);
             Ok(results)
         }
         other => bail!("addcpl: unknown entry {other:?}"),
@@ -423,18 +443,28 @@ fn dense_core(entry: &str, acts: &[&Tensor], cond: Option<&Tensor>,
         "forward" => {
             let x = acts[0];
             let (x1, x2) = split_last_axis(x, d1)?;
-            let (out, _) = mlp_apply(&mlp_in(&x1)?, theta);
+            let net_in = mlp_in(&x1)?;
+            let (out, cache) = mlp_apply(&net_in, theta);
+            cache.recycle();
+            scratch::recycle(net_in);
             let (raw, t) = split_last_axis(&out, d2)?;
+            scratch::recycle(out);
             let s = sigmoid2(&raw);
+            scratch::recycle(raw);
             let y2 = affine_fwd(&x2, &s, &t);
             Ok(vec![concat_last_axis(&x1, &y2)?, log_sum_per_sample(&s)])
         }
         "inverse" => {
             let y = acts[0];
             let (y1, y2) = split_last_axis(y, d1)?;
-            let (out, _) = mlp_apply(&mlp_in(&y1)?, theta);
+            let net_in = mlp_in(&y1)?;
+            let (out, cache) = mlp_apply(&net_in, theta);
+            cache.recycle();
+            scratch::recycle(net_in);
             let (raw, t) = split_last_axis(&out, d2)?;
+            scratch::recycle(out);
             let s = sigmoid2(&raw);
+            scratch::recycle(raw);
             let x2 = affine_inv(&y2, &s, &t);
             Ok(vec![concat_last_axis(&y1, &x2)?])
         }
@@ -445,12 +475,18 @@ fn dense_core(entry: &str, acts: &[&Tensor], cond: Option<&Tensor>,
             let net_in = mlp_in(&x1)?;
             let (out, cache) = mlp_apply(&net_in, theta);
             let (raw, t) = split_last_axis(&out, d2)?;
+            scratch::recycle(out);
             let s = sigmoid2(&raw);
+            scratch::recycle(raw);
             let x2 = if stored { second } else { affine_inv(&second, &s, &t) };
             let (dy1, dy2) = split_last_axis(dy, d1)?;
             let (dx2, draw) = coupling_pullback(&dy2, &x2, &s, dld);
             let dout = concat_last_axis(&draw, &dy2)?;
+            scratch::recycle(draw);
             let (din, dtheta) = mlp_vjp(&dout, &net_in, &cache, theta);
+            scratch::recycle(dout);
+            cache.recycle();
+            scratch::recycle(net_in);
             // din covers (x1 | cond) jointly for the conditional variant
             let (dx1_net, dcond) = match cond {
                 Some(_) => {
@@ -593,7 +629,9 @@ fn hyper_v(x: &Tensor, kw: &Tensor) -> Tensor {
 /// for the pullback.
 fn hyper_g(x: &Tensor, kw: &Tensor) -> (Tensor, Tensor) {
     let v = hyper_v(x, kw);
-    let mut g = conv2d_same(&v, &flip_swap(kw));
+    let kwf = flip_swap(kw);
+    let mut g = conv2d_same(&v, &kwf);
+    scratch::recycle(kwf);
     for a in &mut g.data {
         *a *= HYPER_ALPHA;
     }
@@ -613,16 +651,20 @@ fn hyper_g_vjp(dg: &Tensor, x: &Tensor, v: &Tensor, kw: &Tensor) -> (Tensor, Ten
         *a *= HYPER_ALPHA;
     }
     let dkw2 = flip_swap(&dw_t);
+    scratch::recycle(dw_t);
     // du = dv * (1 - v^2)
     let du = Tensor {
         shape: dv.shape.clone(),
         data: dv.data.iter().zip(&v.data).map(|(d, t)| d * (1.0 - t * t)).collect(),
     };
+    scratch::recycle(dv);
     let dx = conv2d_vjp_x(&du, kw);
     let mut dkw = conv2d_vjp_w(x, &du, 3, 3);
+    scratch::recycle(du);
     for (a, b) in dkw.data.iter_mut().zip(&dkw2.data) {
         *a += b;
     }
+    scratch::recycle(dkw2);
     (dx, dkw)
 }
 
@@ -726,9 +768,12 @@ fn hint_fwd(x: &Tensor, depth: usize, ctx: &mut HintCtx) -> (Tensor, Tensor) {
     let d2 = d - d1;
     let (x1, x2) = split_last_axis(x, d1).expect("hint split");
     let (y1, ld1) = hint_fwd(&x1, depth - 1, ctx);
-    let (out, _) = mlp_apply(&x1, th);
+    let (out, cache) = mlp_apply(&x1, th);
+    cache.recycle();
     let (raw, t) = split_last_axis(&out, d2).expect("hint raw/t split");
+    scratch::recycle(out);
     let s = sigmoid2(&raw);
+    scratch::recycle(raw);
     let y2a = affine_fwd(&x2, &s, &t);
     let ld_aff = log_sum_per_sample(&s);
     let (y2, ld2) = hint_fwd(&y2a, depth - 1, ctx);
@@ -750,9 +795,12 @@ fn hint_inv(y: &Tensor, depth: usize, ctx: &mut HintCtx) -> Tensor {
     let (y1, y2) = split_last_axis(y, d1).expect("hint split");
     let x1 = hint_inv(&y1, depth - 1, ctx);
     let y2a = hint_inv(&y2, depth - 1, ctx);
-    let (out, _) = mlp_apply(&x1, th);
+    let (out, cache) = mlp_apply(&x1, th);
+    cache.recycle();
     let (raw, t) = split_last_axis(&out, d2).expect("hint raw/t split");
+    scratch::recycle(out);
     let s = sigmoid2(&raw);
+    scratch::recycle(raw);
     let x2 = affine_inv(&y2a, &s, &t);
     concat_last_axis(&x1, &x2).expect("hint concat")
 }
@@ -776,11 +824,16 @@ fn hint_bwd(dy: &Tensor, dld: &Tensor, y: &Tensor, depth: usize,
     let (dy2a, y2a) = hint_bwd(&dy2, dld, &y2, depth - 1, ctx, grads);
     let (out, cache) = mlp_apply(&x1, th);
     let (raw, t) = split_last_axis(&out, d2).expect("hint raw/t split");
+    scratch::recycle(out);
     let s = sigmoid2(&raw);
+    scratch::recycle(raw);
     let x2 = affine_inv(&y2a, &s, &t);
     let (dx2, draw) = coupling_pullback(&dy2a, &x2, &s, dld);
     let dout = concat_last_axis(&draw, &dy2a).expect("hint concat");
+    scratch::recycle(draw);
     let (din, dtheta) = mlp_vjp(&dout, &x1, &cache, th);
+    scratch::recycle(dout);
+    cache.recycle();
     let mut dx1 = dx1a;
     for (v, g) in dx1.data.iter_mut().zip(&din.data) {
         *v += g;

@@ -134,11 +134,26 @@ impl Flow {
             .with_context(|| format!("head {entry} for {:?}", z.shape))
     }
 
-    fn check_cond<'a>(&self, cond: Option<&'a Tensor>) -> Result<Option<&'a Tensor>> {
+    /// Validate the conditioning input. `batch` is the leading dim of the
+    /// current input batch; with `relax_batch` (the data-parallel shard
+    /// path) the cond batch must match it but may differ from the
+    /// network's canonical batch size. `pub(crate)` so the parallel
+    /// trainer's up-front validation uses the exact same predicate the
+    /// per-shard walk applies.
+    pub(crate) fn check_cond<'a>(&self, cond: Option<&'a Tensor>, batch: usize,
+                                 relax_batch: bool) -> Result<Option<&'a Tensor>> {
         match (cond, &self.def.cond_shape) {
             (Some(c), Some(shape)) => {
-                if &c.shape != shape {
-                    bail!("cond shape {:?} != network cond {:?}", c.shape, shape);
+                let ok = if relax_batch {
+                    c.shape.len() == shape.len()
+                        && c.shape[1..] == shape[1..]
+                        && c.shape.first() == Some(&batch)
+                } else {
+                    &c.shape == shape
+                };
+                if !ok {
+                    bail!("cond shape {:?} != network cond {:?} (batch {batch})",
+                          c.shape, shape);
                 }
                 Ok(Some(c))
             }
@@ -175,12 +190,22 @@ impl Flow {
         cond: Option<&Tensor>,
         params: &ParamStore,
         schedule: &dyn ActivationSchedule,
+        relax_batch: bool,
     ) -> Result<(Vec<Tracked>, Vec<f32>, Vec<Option<Tracked>>)> {
-        if x.shape != self.def.in_shape {
+        let shape_ok = if relax_batch {
+            // data-parallel shards: any non-empty leading batch, same
+            // per-sample dims (every layer program is batch-agnostic)
+            x.shape.len() == self.def.in_shape.len()
+                && x.shape.first().is_some_and(|&n| n > 0)
+                && x.shape[1..] == self.def.in_shape[1..]
+        } else {
+            x.shape == self.def.in_shape
+        };
+        if !shape_ok {
             bail!("input shape {:?} != network {:?}", x.shape, self.def.in_shape);
         }
-        let n = self.batch();
-        let cond = self.check_cond(cond)?;
+        let n = x.shape[0];
+        let cond = self.check_cond(cond, n, relax_batch)?;
         let n_layers = self.def.depth();
         let mut layer_ord = 0usize;
         let mut ld_total = vec![0.0f32; n];
@@ -233,7 +258,7 @@ impl Flow {
         params: &ParamStore,
     ) -> Result<(Vec<Tracked>, Vec<f32>)> {
         let (latents, ld, _) =
-            self.forward_with(x, cond, params, &ExecMode::Invertible)?;
+            self.forward_with(x, cond, params, &ExecMode::Invertible, false)?;
         Ok((latents, ld))
     }
 
@@ -270,12 +295,31 @@ impl Flow {
         params: &ParamStore,
         schedule: &dyn ActivationSchedule,
     ) -> Result<StepResult> {
+        self.train_step_flex(x, cond, params, schedule, false)
+    }
+
+    /// [`Flow::train_step`] with an optional relaxed batch check: the
+    /// data-parallel trainer ([`crate::train::ParallelTrainer`]) runs this
+    /// on minibatch shards whose leading dim differs from the network's
+    /// canonical batch size. `Flow::train_step` itself stays strict so
+    /// shape bugs in code using the plain API keep failing loudly;
+    /// `ParallelTrainer` documents batch-flexibility as its own contract
+    /// (gradient accumulation exists to decouple the effective batch from
+    /// the canonical one).
+    pub(crate) fn train_step_flex(
+        &self,
+        x: &Tensor,
+        cond: Option<&Tensor>,
+        params: &ParamStore,
+        schedule: &dyn ActivationSchedule,
+        relax_batch: bool,
+    ) -> Result<StepResult> {
         self.ledger.reset_peaks();
-        let n = self.batch();
-        let cond = self.check_cond(cond)?;
+        let n = x.shape.first().copied().unwrap_or(0);
+        let cond = self.check_cond(cond, n, relax_batch)?;
 
         let (mut latents, ld_total, mut tape) =
-            self.forward_with(x, cond, params, schedule)?;
+            self.forward_with(x, cond, params, schedule, relax_batch)?;
         let taped: Vec<bool> = tape.iter().map(|t| t.is_some()).collect();
 
         // ---- loss -----------------------------------------------------
@@ -433,7 +477,7 @@ impl Flow {
             bail!("expected {} latents, got {}",
                   self.def.latent_shapes.len(), latents.len());
         }
-        let cond = self.check_cond(cond)?;
+        let cond = self.check_cond(cond, self.batch(), false)?;
         let mut stack: Vec<&Tensor> = latents.iter().collect();
         let mut cur = stack.pop().unwrap().clone();
         for (i, step) in self.def.steps.iter().enumerate().rev() {

@@ -61,6 +61,15 @@ impl MemoryLedger {
         self.budget.store(bytes.map_or(0, |b| b as i64), Ordering::Relaxed);
     }
 
+    /// The configured budget, if any (so derived ledgers — e.g.
+    /// [`crate::api::Flow::fork`] worker ledgers — can inherit it).
+    pub fn budget_bytes(&self) -> Option<u64> {
+        match self.budget.load(Ordering::Relaxed) {
+            b if b > 0 => Some(b as u64),
+            _ => None,
+        }
+    }
+
     /// Register an allocation; fails (simulated OOM) if it would exceed the
     /// budget, in which case nothing is recorded.
     pub fn alloc(&self, class: MemClass, bytes: usize) -> Result<()> {
@@ -240,6 +249,17 @@ mod tests {
         let _a = Tracked::new(t(100), MemClass::Activation, &l).unwrap();
         assert_eq!(l.peak_scheduling(), 400);
         assert_eq!(l.peak_total(), 4400);
+    }
+
+    #[test]
+    fn budget_is_readable() {
+        assert_eq!(MemoryLedger::new().budget_bytes(), None);
+        assert_eq!(MemoryLedger::with_budget(4096).budget_bytes(), Some(4096));
+        let l = MemoryLedger::new();
+        l.set_budget(Some(10));
+        assert_eq!(l.budget_bytes(), Some(10));
+        l.set_budget(None);
+        assert_eq!(l.budget_bytes(), None);
     }
 
     #[test]

@@ -36,7 +36,8 @@
 //! * [`coordinator`] — schedules, the byte-exact memory ledger, and the
 //!   shape-only planner behind the paper's Figs. 1–2.
 //! * [`train`], [`data`], [`profile`], [`bench_figs`] — training loop,
-//!   synthetic workloads, per-entry profiler, figure reproductions.
+//!   the data-parallel [`train::ParallelTrainer`] (`--threads N` on the
+//!   CLI), synthetic workloads, per-entry profiler, figure reproductions.
 //!
 //! ## Quickstart
 //!
@@ -44,6 +45,7 @@
 //! use invertnet::api::Engine;
 //! use invertnet::coordinator::ExecMode;
 //! use invertnet::data::Density2d;
+//! use invertnet::train::ParallelTrainer;
 //! use invertnet::util::rng::Pcg64;
 //!
 //! # fn main() -> anyhow::Result<()> {
@@ -62,6 +64,13 @@
 //!
 //! assert!(inv.loss.is_finite());
 //! assert!(inv.peak_sched_bytes < sto.peak_sched_bytes);
+//!
+//! // Scale out: shard the batch over 2 worker threads (`--threads 2` on
+//! // the CLI). The reduction is deterministic, so the loss and gradients
+//! // match the single-threaded step to f32 reassociation error.
+//! let par = ParallelTrainer::new(2)
+//!     .train_step(&flow, &x, None, &params, &ExecMode::Invertible)?;
+//! assert!((par.loss - inv.loss).abs() <= 1e-4 * inv.loss.abs().max(1.0));
 //! # Ok(())
 //! # }
 //! ```

@@ -4,6 +4,7 @@
 //! ```text
 //! invertnet train   --net realnvp2d --data two-moons --steps 500
 //!                   [--mode invertible|stored|checkpoint:K]
+//!                   [--threads N] [--microbatch N]
 //! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
 //! invertnet bench   fig1|fig2 [--budget-gb 40]
 //! invertnet inspect --net glow16

@@ -14,7 +14,8 @@ use crate::flow::ParamStore;
 use crate::tensor::Tensor;
 use crate::util::bench::fmt_bytes;
 
-use super::optimizer::{GradClip, Optimizer};
+use super::optimizer::{grad_l2_norm, GradClip, Optimizer};
+use super::parallel::ParallelTrainer;
 
 pub struct TrainConfig {
     pub steps: usize,
@@ -26,6 +27,13 @@ pub struct TrainConfig {
     /// Write metrics.csv + checkpoint here if set.
     pub out_dir: Option<PathBuf>,
     pub quiet: bool,
+    /// Data-parallel worker threads; > 1 shards every minibatch through
+    /// [`ParallelTrainer`] (deterministic reduction, same gradients).
+    pub threads: usize,
+    /// Gradient-accumulation microbatch size for the parallel path
+    /// (None = one shard per worker). Setting this with `threads: 1`
+    /// still bounds the activation envelope to the microbatch size.
+    pub microbatch: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -37,6 +45,8 @@ impl Default for TrainConfig {
             log_every: 10,
             out_dir: None,
             quiet: false,
+            threads: 1,
+            microbatch: None,
         }
     }
 }
@@ -69,17 +79,43 @@ pub fn train(
         None => None,
     };
 
+    // threads > 1 (or an explicit microbatch) routes through the
+    // data-parallel trainer; its reduction is deterministic, so the two
+    // paths train to the same losses
+    let trainer = if cfg.threads > 1 || cfg.microbatch.is_some() {
+        let mut t = ParallelTrainer::new(cfg.threads);
+        if let Some(mb) = cfg.microbatch {
+            t = t.microbatch(mb);
+        }
+        Some(t)
+    } else {
+        None
+    };
+
     let t0 = Instant::now();
     for step in 0..cfg.steps {
         let ts = Instant::now();
         let (x, cond) = next_batch(step)?;
-        let mut result = flow
-            .train_step(&x, cond.as_ref(), params, cfg.schedule.as_ref())
-            .with_context(|| format!("train step {step}"))?;
-        let grad_norm = match &cfg.clip {
-            Some(c) => c.apply(&mut result.grads),
-            None => 0.0,
+        if step == 0 && !cfg.quiet {
+            if let Some(t) = &trainer {
+                eprintln!("data-parallel: {}", t.describe(x.batch()));
+            }
+        }
+        let mut result = match &trainer {
+            Some(t) => t
+                .train_step(flow, &x, cond.as_ref(), params,
+                            cfg.schedule.as_ref())
+                .with_context(|| format!("parallel train step {step}"))?,
+            None => flow
+                .train_step(&x, cond.as_ref(), params, cfg.schedule.as_ref())
+                .with_context(|| format!("train step {step}"))?,
         };
+        // the true global norm is reported whether or not clipping is on
+        // (previously the CSV logged 0.0 under `clip: None`)
+        let grad_norm = grad_l2_norm(&result.grads);
+        if let Some(c) = &cfg.clip {
+            c.scale_to(&mut result.grads, grad_norm);
+        }
         opt.step(params, &result.grads)?;
         peak = peak.max(result.peak_sched_bytes);
         losses.push(result.loss);

@@ -1,7 +1,10 @@
-//! Training: optimizers, schedules, the minibatch loop, metrics.
+//! Training: optimizers, schedules, the minibatch loop, the data-parallel
+//! trainer, metrics.
 
 pub mod loop_;
 pub mod optimizer;
+pub mod parallel;
 
 pub use loop_::{train, TrainConfig, TrainReport};
-pub use optimizer::{Adam, GradClip, Optimizer, Sgd};
+pub use optimizer::{grad_l2_norm, Adam, GradClip, Optimizer, Sgd};
+pub use parallel::ParallelTrainer;

@@ -8,6 +8,20 @@ use anyhow::{bail, Result};
 use crate::flow::ParamStore;
 use crate::tensor::Tensor;
 
+/// Global L2 norm over an aligned gradient store (f64 accumulation).
+///
+/// Lives outside [`GradClip`] so the training loop can report the true
+/// norm whether or not clipping is enabled — `metrics.csv` used to log
+/// `grad_norm = 0.0` whenever `clip: None` because the norm was only
+/// computed as a clipping by-product.
+pub fn grad_l2_norm(grads: &[Vec<Tensor>]) -> f32 {
+    let mut sq = 0.0f64;
+    for g in grads.iter().flatten() {
+        sq += g.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+    }
+    sq.sqrt() as f32
+}
+
 /// Gradient-clipping config (global L2 norm).
 #[derive(Debug, Clone, Copy)]
 pub struct GradClip {
@@ -16,13 +30,17 @@ pub struct GradClip {
 
 impl GradClip {
     /// Scale all grads in-place so the global norm is <= max_norm.
-    /// Returns the pre-clip norm.
+    /// Returns the pre-clip norm (see [`grad_l2_norm`]).
     pub fn apply(&self, grads: &mut [Vec<Tensor>]) -> f32 {
-        let mut sq = 0.0f64;
-        for g in grads.iter().flatten() {
-            sq += g.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
-        }
-        let norm = sq.sqrt() as f32;
+        let norm = grad_l2_norm(grads);
+        self.scale_to(grads, norm);
+        norm
+    }
+
+    /// The scaling half of [`GradClip::apply`], given an already-computed
+    /// global norm: rescales so the norm is <= max_norm, or leaves the
+    /// grads untouched if it already is.
+    pub fn scale_to(&self, grads: &mut [Vec<Tensor>], norm: f32) {
         if norm > self.max_norm && norm > 0.0 {
             let scale = self.max_norm / norm;
             for g in grads.iter_mut().flatten() {
@@ -31,7 +49,6 @@ impl GradClip {
                 }
             }
         }
-        norm
     }
 }
 
@@ -241,6 +258,17 @@ mod tests {
         assert!((pre - 50.0).abs() < 1e-4);
         let post = (g[0][0].data[0].powi(2) + g[0][0].data[1].powi(2)).sqrt();
         assert!((post - 5.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn norm_is_computable_without_clipping() {
+        let g = vec![vec![Tensor::new(vec![2], vec![3.0, 4.0]).unwrap()],
+                     vec![Tensor::new(vec![1], vec![12.0]).unwrap()]];
+        assert!((grad_l2_norm(&g) - 13.0).abs() < 1e-5);
+        // under the threshold, scale_to must not touch the grads
+        let mut g2 = g.clone();
+        GradClip { max_norm: 100.0 }.scale_to(&mut g2, 13.0);
+        assert_eq!(g2[0][0].data, vec![3.0, 4.0]);
     }
 
     #[test]

@@ -45,9 +45,10 @@ impl Pcg64 {
         lo + (hi - lo) * self.uniform()
     }
 
-    /// Standard normal via Box-Muller (one value per call, cached pair).
+    /// Standard normal via Box-Muller, cosine half only. No caching: each
+    /// call consumes two uniforms and returns one deviate, which keeps the
+    /// generator's consumption pattern independent of call history.
     pub fn normal(&mut self) -> f64 {
-        // Box-Muller without caching: simple and branch-free enough.
         let u1 = loop {
             let u = self.uniform();
             if u > 1e-12 {
@@ -67,9 +68,23 @@ impl Pcg64 {
         (0..n).map(|_| self.normal_f32()).collect()
     }
 
-    /// Random integer in [0, n).
+    /// Random integer in [0, n), exactly uniform.
+    ///
+    /// Rejection sampling: draws below `2^64 mod n` are discarded so every
+    /// residue class is equally likely (a bare `% n` over-weights the low
+    /// residues by one part in `2^64 / n`). The rejection probability is
+    /// `n / 2^64`, so a retry essentially never happens for the small `n`
+    /// used here.
     pub fn below(&mut self, n: usize) -> usize {
-        (self.next_u64() % n as u64) as usize
+        assert!(n > 0, "below(0) is meaningless");
+        let n = n as u64;
+        let lim = n.wrapping_neg() % n; // == 2^64 mod n
+        loop {
+            let v = self.next_u64();
+            if v >= lim {
+                return (v % n) as usize;
+            }
+        }
     }
 }
 
@@ -113,6 +128,19 @@ mod tests {
         }
         let mean = sum / n as f64;
         assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Pcg64::new(9);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for &c in &counts {
+            // 5 sigma of a binomial(50_000, 1/5) is ~450
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@ fn run_50_steps(mode: ExecMode) -> invertnet::train::TrainReport {
         log_every: usize::MAX,
         out_dir: None,
         quiet: true,
+        ..TrainConfig::default()
     };
     train(&flow, &mut params, &mut opt, &cfg, |_| {
         Ok((Density2d::TwoMoons.sample(256, &mut rng), None))

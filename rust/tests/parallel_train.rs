@@ -1,0 +1,297 @@
+//! Cross-thread gradient equivalence for the data-parallel trainer.
+//!
+//! Contract under test (see `train/parallel.rs` module docs):
+//! * one worker + one microbatch is **bit-exact** vs `Flow::train_step`;
+//! * a fixed microbatch size makes the reduced result **bit-identical at
+//!   any thread count** (slot-ordered f64 reduction);
+//! * any sharding matches the single-threaded step to f32
+//!   summation-reassociation error (per-sample signals never mix, only
+//!   the final batch reductions re-associate; observed ≲ 2e-6, asserted
+//!   at 1e-5 of scale);
+//! * same seed + same thread count → identical losses, run to run.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::{assert_close, batch_for, flow};
+use invertnet::coordinator::{ExecMode, StepResult};
+use invertnet::data::Density2d;
+use invertnet::train::{train, Adam, GradClip, ParallelTrainer, TrainConfig};
+use invertnet::util::rng::Pcg64;
+
+const TOL: f32 = 1e-5;
+
+fn assert_grads_close(a: &StepResult, b: &StepResult, tol: f32, what: &str) {
+    assert_eq!(a.grads.len(), b.grads.len(), "{what}: step arity");
+    for (si, (ga, gb)) in a.grads.iter().zip(&b.grads).enumerate() {
+        assert_eq!(ga.len(), gb.len(), "{what}: step {si} param arity");
+        for (pi, (ta, tb)) in ga.iter().zip(gb).enumerate() {
+            assert_close(ta, tb, tol, &format!("{what} step {si} param {pi}"));
+        }
+    }
+    match (&a.dcond, &b.dcond) {
+        (Some(x), Some(y)) => assert_close(x, y, tol, &format!("{what} dcond")),
+        (None, None) => {}
+        _ => panic!("{what}: dcond presence differs"),
+    }
+}
+
+fn assert_bit_identical(a: &StepResult, b: &StepResult, what: &str) {
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{what}: loss bits");
+    assert_eq!(a.logp_mean.to_bits(), b.logp_mean.to_bits(), "{what}: logp");
+    for (si, (ga, gb)) in a.grads.iter().zip(&b.grads).enumerate() {
+        for (pi, (ta, tb)) in ga.iter().zip(gb).enumerate() {
+            assert_eq!(ta.max_abs_diff(tb), 0.0,
+                       "{what}: step {si} param {pi} not bit-identical");
+        }
+    }
+}
+
+/// One worker, one microbatch: the exact same code path as train_step,
+/// plus a weight-1.0 f64 round-trip — must be bit-exact.
+#[test]
+fn single_worker_is_bit_exact() {
+    let flow = flow("realnvp2d");
+    let params = flow.init_params(11).unwrap();
+    let (x, _) = batch_for(&flow, 22);
+    let single = flow
+        .train_step(&x, None, &params, &ExecMode::Invertible)
+        .unwrap();
+    let par = ParallelTrainer::new(1)
+        .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
+        .unwrap();
+    assert_bit_identical(&single, &par, "t=1");
+    assert_eq!(single.peak_sched_bytes, par.peak_sched_bytes);
+}
+
+/// 1, 2 and 4 threads vs the single-threaded train_step, under both the
+/// invertible and stored schedules.
+#[test]
+fn thread_counts_match_single_threaded_step() {
+    for (sched, name) in [(ExecMode::Invertible, "invertible"),
+                          (ExecMode::Stored, "stored")] {
+        let flow = flow("realnvp2d");
+        let params = flow.init_params(1234).unwrap();
+        let (x, _) = batch_for(&flow, 77);
+        let base = flow.train_step(&x, None, &params, &sched).unwrap();
+        for threads in [1usize, 2, 4] {
+            let par = ParallelTrainer::new(threads)
+                .train_step(&flow, &x, None, &params, &sched)
+                .unwrap();
+            assert!(
+                (par.loss - base.loss).abs() <= TOL * base.loss.abs().max(1.0),
+                "{name} t={threads}: loss {} vs {}", par.loss, base.loss
+            );
+            assert!(
+                (par.logdet_mean - base.logdet_mean).abs()
+                    <= TOL * base.logdet_mean.abs().max(1.0),
+                "{name} t={threads}: logdet {} vs {}",
+                par.logdet_mean, base.logdet_mean
+            );
+            assert_grads_close(&base, &par, TOL,
+                               &format!("{name} t={threads}"));
+        }
+    }
+}
+
+/// With a pinned microbatch size the reduction runs over the exact same
+/// slot sequence whatever the thread count — results are bit-identical.
+#[test]
+fn fixed_microbatch_is_thread_count_invariant() {
+    let flow = flow("realnvp2d");
+    let params = flow.init_params(5).unwrap();
+    let (x, _) = batch_for(&flow, 6);
+    let reference = ParallelTrainer::new(1).microbatch(64)
+        .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
+        .unwrap();
+    for threads in [2usize, 4] {
+        let par = ParallelTrainer::new(threads).microbatch(64)
+            .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
+            .unwrap();
+        assert_bit_identical(&reference, &par, &format!("mb=64 t={threads}"));
+    }
+}
+
+/// Same seed + same thread count -> identical losses on every run.
+#[test]
+fn same_seed_same_threads_is_deterministic() {
+    let run = || -> Vec<f32> {
+        let flow = flow("realnvp2d");
+        let mut params = flow.init_params(21).unwrap();
+        let mut opt = Adam::new(1e-3);
+        let mut rng = Pcg64::new(33);
+        let cfg = TrainConfig {
+            steps: 8,
+            schedule: Arc::new(ExecMode::Invertible),
+            clip: Some(GradClip { max_norm: 100.0 }),
+            log_every: usize::MAX,
+            quiet: true,
+            threads: 4,
+            ..TrainConfig::default()
+        };
+        train(&flow, &mut params, &mut opt, &cfg, |_| {
+            Ok((Density2d::TwoMoons.sample(256, &mut rng), None))
+        })
+        .unwrap()
+        .losses
+    };
+    let a = run();
+    let b = run();
+    for (step, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "step {step}: {x} vs {y}");
+    }
+}
+
+/// Conditional nets: the per-shard dcond rows reassemble (reweighted) into
+/// the full-batch conditioning gradient.
+#[test]
+fn conditional_net_parallel_matches() {
+    let flow = flow("cond_realnvp2d");
+    let params = flow.init_params(9).unwrap();
+    let (x, cond) = batch_for(&flow, 13);
+    let base = flow
+        .train_step(&x, cond.as_ref(), &params, &ExecMode::Invertible)
+        .unwrap();
+    let par = ParallelTrainer::new(4)
+        .train_step(&flow, &x, cond.as_ref(), &params, &ExecMode::Invertible)
+        .unwrap();
+    assert!((par.loss - base.loss).abs() <= TOL * base.loss.abs().max(1.0));
+    assert_grads_close(&base, &par, TOL, "cond t=4");
+}
+
+/// A mismatched cond batch must fail with a shape error up front, not
+/// panic inside a worker thread mid-slice.
+#[test]
+fn mismatched_cond_is_a_clean_error() {
+    let flow = flow("cond_realnvp2d");
+    let params = flow.init_params(1).unwrap();
+    let (x, _) = batch_for(&flow, 2);
+    let short_cond = invertnet::Tensor::zeros(&[128, 2]); // batch is 256
+    let err = ParallelTrainer::new(2)
+        .train_step(&flow, &x, Some(&short_cond), &params,
+                    &ExecMode::Invertible)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("cond"), "{err:#}");
+    // missing cond on a conditional net is also rejected up front
+    let err = ParallelTrainer::new(2)
+        .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("cond"), "{err:#}");
+}
+
+/// Multiscale conv net (split steps + image layers) shards cleanly too.
+#[test]
+fn multiscale_glow_parallel_matches() {
+    let flow = flow("glow16");
+    let params = flow.init_params(17).unwrap();
+    let (x, _) = batch_for(&flow, 23);
+    let base = flow
+        .train_step(&x, None, &params, &ExecMode::Invertible)
+        .unwrap();
+    let par = ParallelTrainer::new(2)
+        .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
+        .unwrap();
+    assert!((par.loss - base.loss).abs() <= 5e-5 * base.loss.abs().max(1.0),
+            "loss {} vs {}", par.loss, base.loss);
+    assert_grads_close(&base, &par, 5e-5, "glow16 t=2");
+}
+
+/// Gradient-accumulation microbatching: the activation envelope follows
+/// the microbatch size, so large effective batches fit the invertible
+/// memory envelope.
+#[test]
+fn microbatching_caps_the_memory_envelope() {
+    let flow = flow("realnvp2d");
+    let params = flow.init_params(2).unwrap();
+    let (x, _) = batch_for(&flow, 3);
+    let full = flow
+        .train_step(&x, None, &params, &ExecMode::Invertible)
+        .unwrap()
+        .peak_sched_bytes;
+    let quarter = ParallelTrainer::new(1).microbatch(64)
+        .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
+        .unwrap()
+        .peak_sched_bytes;
+    assert!(quarter < full,
+            "microbatched peak {quarter} should undercut full-batch {full}");
+    // activations scale ~linearly in batch: a 4x smaller shard should cut
+    // the envelope by well over half
+    assert!(2 * quarter < full, "{quarter} vs {full}");
+}
+
+/// Ragged batches (batch not divisible by threads) reduce with shard-size
+/// weights and still match.
+#[test]
+fn ragged_shards_match() {
+    let flow = flow("realnvp2d");
+    let params = flow.init_params(41).unwrap();
+    let (x, _) = batch_for(&flow, 42);
+    let base = flow.train_step(&x, None, &params, &ExecMode::Invertible).unwrap();
+    // 256 = 3 * 86 - 2: shards of 86, 86, 84
+    let par = ParallelTrainer::new(3)
+        .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
+        .unwrap();
+    assert!((par.loss - base.loss).abs() <= 2e-5 * base.loss.abs().max(1.0),
+            "loss {} vs {}", par.loss, base.loss);
+    assert_grads_close(&base, &par, 2e-5, "ragged t=3");
+}
+
+/// A memory budget on the source flow's ledger carries into the forked
+/// worker ledgers: an undersized budget must trip the simulated OOM on
+/// the parallel path too.
+#[test]
+fn ledger_budget_survives_fork() {
+    let engine = common::engine();
+    let ledger = invertnet::MemoryLedger::with_budget(1024); // absurdly small
+    let flow = engine.flow_with_ledger("realnvp2d", ledger).unwrap();
+    let params = flow.init_params(1).unwrap();
+    let (x, _) = batch_for(&flow, 2);
+    let err = ParallelTrainer::new(2)
+        .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("OOM"), "{err:#}");
+}
+
+/// The training loop's `threads` config routes through the parallel path
+/// and still learns.
+#[test]
+fn train_loop_parallel_path_learns() {
+    let flow = flow("realnvp2d");
+    let mut params = flow.init_params(11).unwrap();
+    let mut opt = Adam::new(2e-3);
+    let mut rng = Pcg64::new(70);
+    let cfg = TrainConfig {
+        steps: 40,
+        schedule: Arc::new(ExecMode::Invertible),
+        clip: Some(GradClip { max_norm: 100.0 }),
+        log_every: usize::MAX,
+        quiet: true,
+        threads: 2,
+        ..TrainConfig::default()
+    };
+    let report = train(&flow, &mut params, &mut opt, &cfg, |_| {
+        Ok((Density2d::TwoMoons.sample(256, &mut rng), None))
+    })
+    .unwrap();
+    assert!(report.final_loss.is_finite());
+    assert!(
+        invertnet::train::loop_::tail_mean(&report.losses, 10)
+            < report.losses[0],
+        "parallel loop did not learn: {} -> {}",
+        report.losses[0], report.final_loss
+    );
+}
+
+/// CLI: `invertnet train --threads 2` goes end to end.
+#[test]
+fn cli_train_with_threads() {
+    let argv: Vec<String> = [
+        "train", "--net", "realnvp2d", "--data", "two-moons", "--steps", "3",
+        "--threads", "2", "--microbatch", "64", "--quiet",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    invertnet::app::run(&argv).unwrap_or_else(|e| panic!("{e:#}"));
+}

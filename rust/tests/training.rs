@@ -20,6 +20,7 @@ fn quick_cfg(steps: usize, schedule: Arc<dyn ActivationSchedule>) -> TrainConfig
         log_every: usize::MAX,
         out_dir: None,
         quiet: true,
+        ..TrainConfig::default()
     }
 }
 
@@ -135,6 +136,38 @@ fn conditional_training_reduces_loss() {
     let head = tail_mean(&report.losses[..10], 10);
     let tail = tail_mean(&report.losses, 10);
     assert!(tail < head - 0.1, "cond flow not learning: {head} -> {tail}");
+}
+
+/// Regression: with `clip: None`, metrics.csv used to log
+/// `grad_norm = 0.0` because the norm was only computed as a clipping
+/// by-product. The loop now reports the true global L2 norm regardless.
+#[test]
+fn metrics_report_true_grad_norm_without_clip() {
+    let flow = flow("realnvp2d");
+    let mut params = flow.init_params(17).unwrap();
+    let mut opt = Adam::new(1e-3);
+    let mut rng = Pcg64::new(55);
+    let dir = std::env::temp_dir()
+        .join(format!("invertnet_metrics_{}", std::process::id()));
+    let mut cfg = quick_cfg(3, Arc::new(ExecMode::Invertible));
+    cfg.clip = None;
+    cfg.out_dir = Some(dir.clone());
+    train(&flow, &mut params, &mut opt, &cfg, |_| {
+        Ok((Density2d::TwoMoons.sample(256, &mut rng), None))
+    })
+    .unwrap();
+    let csv = std::fs::read_to_string(dir.join("metrics.csv")).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let mut lines = csv.lines();
+    let header: Vec<&str> = lines.next().unwrap().split(',').collect();
+    let col = header.iter().position(|h| *h == "grad_norm").unwrap();
+    let mut rows = 0;
+    for line in lines {
+        let norm: f32 = line.split(',').nth(col).unwrap().parse().unwrap();
+        assert!(norm > 0.0, "grad_norm must be the true norm, got {norm}");
+        rows += 1;
+    }
+    assert_eq!(rows, 3);
 }
 
 #[test]
