@@ -72,7 +72,8 @@ impl EngineBuilder {
         let manifest: Arc<Manifest> = match &self.artifacts {
             Some(dir) => Arc::new(Manifest::load(dir)
                 .with_context(|| format!("loading artifacts from {dir:?}"))?),
-            None => Arc::new(builtin_manifest()),
+            None => Arc::new(builtin_manifest()
+                .context("building the builtin network catalog")?),
         };
         let backend: Arc<dyn Backend> = match self.backend {
             Some(b) => b,

@@ -17,15 +17,20 @@
 //! `--artifacts DIR` (load a manifest produced by `python -m compile.aot`;
 //! required for `--backend xla`).
 
+use std::net::TcpListener;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::api::Engine;
 use crate::backend::RefBackend;
 use crate::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
 use crate::data::{synth_images, Density2d, LinearGaussian};
+use crate::serve::{BatchConfig, Registry, Server};
+use crate::tensor::npy;
+use crate::tensor::ops::slice_rows;
 use crate::train::{train, Adam, GradClip, TrainConfig};
 use crate::util::bench::fmt_bytes;
 use crate::util::cli::Args;
@@ -40,10 +45,30 @@ USAGE:
                     [--steps N] [--lr F] [--mode invertible|stored|checkpoint:K] [--seed N]
                     [--threads N] [--microbatch N] [--out DIR] [--clip F] [--log-every N] [--quiet]
   invertnet sample  --net NAME [--ckpt DIR] [--out FILE.npy] [--batches N] [--seed N]
+                    [--temperature F]
+  invertnet serve   --ckpt DIR | --net NAME --allow-untrained
+                    [--port P | --stdio] [--max-batch N] [--max-delay-us U]
+                    [--workers N] [--queue-cap N] [--models N] [--root DIR]
+  invertnet score   --ckpt DIR --data FILE.npy [--out FILE.npy] [--cond FILE.npy]
+                    [--net NAME] [--allow-untrained] [--seed N]
   invertnet bench   fig1|fig2 [--budget-gb F]
   invertnet inspect --net NAME
   invertnet profile --net NAME [--iters N]
   invertnet list
+
+SERVING (see README for the JSON-lines protocol):
+  --ckpt DIR          checkpoint directory written by `train --out` (DIR is
+                      the `.../checkpoint` folder); its index.json names the
+                      network, so --net is optional
+  --stdio             answer JSON-lines requests on stdin/stdout (tests, CI)
+  --port P            JSON-lines loopback TCP listener (default: 7878)
+  --max-batch N       max requests coalesced into one batched pass (default 8)
+  --max-delay-us U    coalescing window for the oldest queued request
+                      (default 500)
+  --workers N         batched-pass executor threads (default 2)
+  --root DIR          lazily load models from DIR/<name>[/checkpoint] on
+                      first request for <name>
+  --allow-untrained   serve/score randomly initialized weights (loudly)
 
 COMMON OPTIONS:
   --backend ref|xla   execution backend (default: ref — pure Rust, no artifacts)
@@ -62,6 +87,8 @@ pub fn run(argv: &[String]) -> Result<()> {
     match args.subcommand.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("sample") => cmd_sample(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("score") => cmd_score(&args),
         Some("bench") => cmd_bench(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("profile") => {
@@ -235,25 +262,182 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let net = args.req("net")?;
     let engine = engine_of(args)?;
     let flow = engine.flow(net)?;
-    let mut params = flow.init_params(42)?;
-    if let Some(ckpt) = args.get("ckpt") {
-        params.load(Path::new(ckpt))?;
+    let seed = args.u64_or("seed", 42)?;
+    let mut params = flow.init_params(seed)?;
+    match args.get("ckpt") {
+        Some(ckpt) => params.load(Path::new(ckpt))?,
+        None => eprintln!(
+            "WARNING: no --ckpt given — sampling from UNTRAINED (randomly \
+             initialized, seed {seed}) weights; pass --ckpt DIR for samples \
+             from a trained model"),
     }
     if flow.def.cond_shape.is_some() {
-        bail!("use the amortized_inference example for conditional sampling");
+        bail!("use `invertnet serve` (cond-carrying sample requests) or the \
+               amortized_inference example for conditional sampling");
     }
-    let mut rng = Pcg64::new(args.u64_or("seed", 7)?);
+    let temperature = args.f64_or("temperature", 1.0)? as f32;
+    let mut rng = Pcg64::new(seed ^ 0x5a3d1e);
     let batches = args.usize_or("batches", 1)?;
     let mut all: Vec<f32> = Vec::new();
     let mut shape = flow.def.in_shape.clone();
     for _ in 0..batches {
-        let x = flow.sample(&params, None, &mut rng)?;
+        let x = flow.sample_batch(&params, flow.batch(), None, temperature,
+                                  &mut rng)?;
         all.extend_from_slice(&x.data);
     }
     shape[0] *= batches;
     let out = args.str_or("out", "samples.npy");
-    crate::tensor::npy::save(Path::new(out), &Tensor::new(shape, all)?)?;
+    npy::save(Path::new(out), &Tensor::new(shape, all)?)?;
     println!("wrote {out}");
+    Ok(())
+}
+
+/// Load (flow, params) for the serve/score paths: from `--ckpt`, or — only
+/// with `--allow-untrained` — a loud random init of `--net`.
+fn serving_weights(args: &Args, engine: &Engine, what: &str)
+                   -> Result<(crate::Flow, crate::flow::ParamStore)> {
+    match args.get("ckpt") {
+        Some(dir) => {
+            let (flow, params) =
+                Registry::load_checkpoint(engine, Path::new(dir))?;
+            if let Some(net) = args.get("net") {
+                if net != flow.def.name {
+                    bail!("--net {net:?} does not match checkpoint \
+                           network {:?}", flow.def.name);
+                }
+            }
+            Ok((flow, params))
+        }
+        None => {
+            if !args.flag("allow-untrained") {
+                bail!("{what} needs --ckpt DIR (a checkpoint written by \
+                       `train --out`); to {what} from an untrained random \
+                       init anyway, pass --net NAME --allow-untrained");
+            }
+            let net = args.req("net")?;
+            let seed = args.u64_or("seed", 42)?;
+            eprintln!(
+                "WARNING: {what} running on UNTRAINED (randomly \
+                 initialized, seed {seed}) weights for {net}");
+            let flow = engine.flow(net)?;
+            let params = flow.init_params(seed)?;
+            Ok((flow, params))
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = engine_of(args)?;
+    let cap = args.usize_or("models", 8)?;
+    let registry = match args.get("root") {
+        Some(root) => Registry::with_root(engine, cap, root),
+        None => Registry::new(engine, cap),
+    };
+    let allow_untrained = args.flag("allow-untrained");
+
+    // warm the registry at startup
+    match args.get("ckpt") {
+        Some(dir) => {
+            let m = registry.register_checkpoint(Path::new(dir))?;
+            if let Some(net) = args.get("net") {
+                if net != m.name {
+                    bail!("--net {net:?} does not match checkpoint \
+                           network {:?}", m.name);
+                }
+            }
+            eprintln!("serving {} from {dir}", m.name);
+        }
+        None => {
+            if let Some(net) = args.get("net") {
+                if !allow_untrained {
+                    bail!("refusing to serve untrained weights for {net}; \
+                           pass --ckpt DIR, or add --allow-untrained");
+                }
+                let seed = args.u64_or("seed", 42)?;
+                eprintln!(
+                    "WARNING: serving UNTRAINED (randomly initialized, \
+                     seed {seed}) weights for {net}");
+                registry.register_untrained(net, seed)?;
+            } else if args.get("root").is_none() {
+                bail!("serve needs --ckpt DIR, --net NAME, or --root DIR");
+            }
+        }
+    }
+
+    let cfg = BatchConfig {
+        max_batch: args.usize_or("max-batch", 8)?,
+        max_delay: Duration::from_micros(args.u64_or("max-delay-us", 500)?),
+        workers: args.usize_or("workers", 2)?,
+        queue_cap: args.usize_or("queue-cap", 1024)?,
+    };
+    eprintln!(
+        "micro-batching: max-batch {}, max-delay {}us, {} workers",
+        cfg.max_batch, cfg.max_delay.as_micros(), cfg.workers);
+    let mut server = Server::new(registry, cfg);
+    if allow_untrained {
+        server = server.allow_untrained();
+    }
+
+    if args.flag("stdio") {
+        let stdin = std::io::stdin();
+        server.serve_stdio(stdin.lock(), std::io::stdout().lock())
+    } else {
+        let port = args.usize_or("port", 7878)?;
+        let port = u16::try_from(port)
+            .map_err(|_| anyhow!("--port {port} out of range"))?;
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding 127.0.0.1:{port}"))?;
+        eprintln!("listening on 127.0.0.1:{} (JSON lines; send \
+                   {{\"op\":\"shutdown\"}} to stop)",
+                  listener.local_addr()?.port());
+        server.serve_tcp(listener)
+    }
+}
+
+fn cmd_score(args: &Args) -> Result<()> {
+    let engine = engine_of(args)?;
+    let (flow, params) = serving_weights(args, &engine, "score")?;
+    let x = npy::load(Path::new(args.req("data")?))?;
+    if x.shape.len() != flow.def.in_shape.len()
+        || x.shape[1..] != flow.def.in_shape[1..]
+    {
+        bail!("--data shape {:?} does not match network {} per-sample \
+               shape {:?}", x.shape, flow.def.name, &flow.def.in_shape[1..]);
+    }
+    let cond = match args.get("cond") {
+        Some(p) => Some(npy::load(Path::new(p))?),
+        None => None,
+    };
+    let n = x.batch();
+    if n == 0 {
+        bail!("--data has no rows");
+    }
+    if let Some(c) = &cond {
+        if c.batch() != n {
+            bail!("--cond has {} rows, --data has {n}", c.batch());
+        }
+    }
+
+    // chunk through the canonical batch size to bound activation memory on
+    // arbitrarily large score files
+    let chunk = flow.batch().max(1);
+    let mut scores = Vec::with_capacity(n);
+    let mut off = 0;
+    while off < n {
+        let m = chunk.min(n - off);
+        let part = slice_rows(&x, off, m)?;
+        let cpart = match &cond {
+            Some(c) => Some(slice_rows(c, off, m)?),
+            None => None,
+        };
+        scores.extend(flow.log_density(&part, cpart.as_ref(), &params)?);
+        off += m;
+    }
+
+    let mean = scores.iter().sum::<f32>() / n as f32;
+    let out = args.str_or("out", "scores.npy");
+    npy::save(Path::new(out), &Tensor::new(vec![n], scores)?)?;
+    println!("scored {n} samples  mean log-density {mean:.4}  -> {out}");
     Ok(())
 }
 
@@ -356,5 +540,58 @@ mod tests {
         assert!(run(&argv(&["list"])).is_ok());
         assert!(run(&argv(&["inspect", "--net", "glow16"])).is_ok());
         assert!(run(&argv(&["inspect", "--net", "nope"])).is_err());
+    }
+
+    #[test]
+    fn serve_refuses_untrained_weights_without_opt_in() {
+        let err = run(&argv(&["serve", "--net", "realnvp2d", "--stdio"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("untrained"), "{err:#}");
+        let err = run(&argv(&["serve", "--stdio"])).unwrap_err();
+        assert!(err.to_string().contains("--ckpt"), "{err:#}");
+    }
+
+    #[test]
+    fn score_refuses_untrained_weights_without_opt_in() {
+        let err = run(&argv(&["score", "--net", "realnvp2d",
+                              "--data", "x.npy"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("--ckpt"), "{err:#}");
+    }
+
+    #[test]
+    fn score_runs_end_to_end_with_explicit_untrained_opt_in() {
+        let dir = std::env::temp_dir()
+            .join(format!("invertnet_score_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let data = dir.join("x.npy");
+        let out = dir.join("scores.npy");
+        let mut rng = Pcg64::new(4);
+        npy::save(&data, &Tensor {
+            shape: vec![5, 2],
+            data: rng.normal_vec(10),
+        }).unwrap();
+        run(&argv(&["score", "--net", "realnvp2d", "--allow-untrained",
+                    "--data", data.to_str().unwrap(),
+                    "--out", out.to_str().unwrap()])).unwrap();
+        let scores = npy::load(&out).unwrap();
+        assert_eq!(scores.shape, vec![5]);
+        assert!(scores.data.iter().all(|v| v.is_finite()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn score_rejects_mismatched_data_shape() {
+        let dir = std::env::temp_dir()
+            .join(format!("invertnet_badscore_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let data = dir.join("x.npy");
+        npy::save(&data, &Tensor::zeros(&[3, 7])).unwrap();
+        let err = run(&argv(&["score", "--net", "realnvp2d",
+                              "--allow-untrained",
+                              "--data", data.to_str().unwrap()]))
+            .unwrap_err();
+        assert!(err.to_string().contains("per-sample"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -903,7 +903,7 @@ mod tests {
     /// integration tests).
     #[test]
     fn every_layer_kind_roundtrips() {
-        let m = builtin_manifest();
+        let m = builtin_manifest().unwrap();
         let backend = RefBackend::new();
         let mut rng = Pcg64::new(11);
         let mut kinds_seen = std::collections::BTreeSet::new();
@@ -943,7 +943,7 @@ mod tests {
     /// for a single layer (x taped vs recomputed from y).
     #[test]
     fn backward_matches_backward_stored_per_layer() {
-        let m = builtin_manifest();
+        let m = builtin_manifest().unwrap();
         let backend = RefBackend::new();
         let mut rng = Pcg64::new(21);
         for net in ["realnvp2d", "glow16", "hyper16", "hint8d", "nice16"] {
@@ -1008,7 +1008,7 @@ mod tests {
 
     #[test]
     fn rejects_malformed_calls() {
-        let m = builtin_manifest();
+        let m = builtin_manifest().unwrap();
         let backend = RefBackend::new();
         let meta = m.layer("densecpl__256x2__hd64").unwrap();
         let x = Tensor::zeros(&[256, 2]);

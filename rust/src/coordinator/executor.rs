@@ -264,13 +264,43 @@ impl Flow {
 
     /// Per-sample log-likelihood of the inputs under the flow:
     /// log p(x) = sum_latents log N(z) + total logdet.
+    ///
+    /// Strict about the leading dim (the network's canonical batch); the
+    /// serving path uses [`Flow::log_density`], which accepts any batch.
     pub fn log_likelihood(
         &self,
         x: &Tensor,
         cond: Option<&Tensor>,
         params: &ParamStore,
     ) -> Result<Vec<f32>> {
-        let (latents, ld) = self.forward(x, cond, params)?;
+        self.log_density_flex(x, cond, params, false)
+    }
+
+    /// Per-sample log density `log p(x) = sum_latents log N(z) + logdet`
+    /// for a batch of *any* leading size (the per-sample dims must match
+    /// the network). This is the serving / OOD-scoring workload: every
+    /// layer program is batch-elementwise, so scoring a concatenated batch
+    /// equals concatenating per-item scores bit-exactly (pinned in
+    /// `tests/serve.rs`).
+    pub fn log_density(
+        &self,
+        x: &Tensor,
+        cond: Option<&Tensor>,
+        params: &ParamStore,
+    ) -> Result<Vec<f32>> {
+        self.log_density_flex(x, cond, params, true)
+    }
+
+    fn log_density_flex(
+        &self,
+        x: &Tensor,
+        cond: Option<&Tensor>,
+        params: &ParamStore,
+        relax_batch: bool,
+    ) -> Result<Vec<f32>> {
+        let (latents, ld, _) =
+            self.forward_with(x, cond, params, &ExecMode::Invertible,
+                              relax_batch)?;
         let mut out = ld;
         for z in &latents {
             let lp = &self.head_t("gaussian_logp", z.tensor())?[0];
@@ -446,38 +476,111 @@ impl Flow {
     // Sampling / inversion
     // ------------------------------------------------------------------
 
-    /// Draw one batch of samples: z ~ N(0, I) at every latent site, then
-    /// walk the inverse chain (paper: "efficient sampling").
+    /// Draw one batch of samples at the network's canonical batch size:
+    /// z ~ N(0, I) at every latent site, then walk the inverse chain
+    /// (paper: "efficient sampling").
     pub fn sample(
         &self,
         params: &ParamStore,
         cond: Option<&Tensor>,
         rng: &mut Pcg64,
     ) -> Result<Tensor> {
-        let shapes = &self.def.latent_shapes;
-        let zs: Vec<Tensor> = shapes
-            .iter()
-            .map(|s| Tensor {
-                shape: s.clone(),
-                data: rng.normal_vec(s.iter().product()),
-            })
-            .collect();
-        self.invert(&zs, cond, params)
+        self.sample_batch(params, self.batch(), cond, 1.0, rng)
+    }
+
+    /// Draw `n` samples (any `n >= 1`, decoupled from the canonical batch)
+    /// with latent **temperature** `t`: z ~ t * N(0, I). `t < 1` samples a
+    /// sharpened, higher-likelihood region of the model (the standard
+    /// reduced-temperature trick); `t = 1.0` is exact model sampling and
+    /// multiplies every latent by 1.0, so it is bit-identical to the
+    /// canonical [`Flow::sample`] draw for matching `n` and rng state.
+    pub fn sample_batch(
+        &self,
+        params: &ParamStore,
+        n: usize,
+        cond: Option<&Tensor>,
+        temperature: f32,
+        rng: &mut Pcg64,
+    ) -> Result<Tensor> {
+        let zs = self.sample_latents(n, temperature, rng)?;
+        self.invert_flex(&zs, cond, params, true)
+    }
+
+    /// Draw the latent stack for `n` samples at temperature `t`, in the
+    /// same site order [`Flow::invert`] consumes. Exposed so the serving
+    /// micro-batcher can draw each request's latents from that request's
+    /// own seeded rng, concatenate across requests, and run one batched
+    /// inverse whose rows are bit-identical to per-request inversions.
+    pub fn sample_latents(
+        &self,
+        n: usize,
+        temperature: f32,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Tensor>> {
+        if n == 0 {
+            bail!("sample_latents needs n >= 1");
+        }
+        if !temperature.is_finite() || temperature < 0.0 {
+            bail!("temperature must be finite and >= 0, got {temperature}");
+        }
+        Ok(self.def.latent_shapes.iter().map(|s| {
+            let mut shape = s.clone();
+            shape[0] = n;
+            let count = shape.iter().product();
+            let mut data = rng.normal_vec(count);
+            for v in &mut data {
+                *v *= temperature;
+            }
+            Tensor { shape, data }
+        }).collect())
     }
 
     /// Map latents back to input space (inverse of [`Flow::forward`]'s
-    /// latents, in the same push order).
+    /// latents, in the same push order). Strict about the canonical batch
+    /// size; the sampling paths use the relaxed [`Flow::invert_flex`].
     pub fn invert(
         &self,
         latents: &[Tensor],
         cond: Option<&Tensor>,
         params: &ParamStore,
     ) -> Result<Tensor> {
+        self.invert_flex(latents, cond, params, false)
+    }
+
+    /// [`Flow::invert`] with an optional relaxed batch check: all latents
+    /// (and the cond, if any) must share one leading dim `n >= 1`, which
+    /// may differ from the canonical batch size. Every layer program is
+    /// batch-agnostic, so row `i` of the result depends only on row `i` of
+    /// each latent.
+    pub fn invert_flex(
+        &self,
+        latents: &[Tensor],
+        cond: Option<&Tensor>,
+        params: &ParamStore,
+        relax_batch: bool,
+    ) -> Result<Tensor> {
         if latents.len() != self.def.latent_shapes.len() {
             bail!("expected {} latents, got {}",
                   self.def.latent_shapes.len(), latents.len());
         }
-        let cond = self.check_cond(cond, self.batch(), false)?;
+        let n = latents.first()
+            .and_then(|t| t.shape.first().copied())
+            .unwrap_or(self.batch());
+        for (t, want) in latents.iter().zip(&self.def.latent_shapes) {
+            let ok = if relax_batch {
+                t.shape.len() == want.len()
+                    && t.shape.first() == Some(&n)
+                    && n > 0
+                    && t.shape[1..] == want[1..]
+            } else {
+                &t.shape == want
+            };
+            if !ok {
+                bail!("latent shape {:?} != site shape {:?} (batch {n})",
+                      t.shape, want);
+            }
+        }
+        let cond = self.check_cond(cond, n, relax_batch)?;
         let mut stack: Vec<&Tensor> = latents.iter().collect();
         let mut cur = stack.pop().unwrap().clone();
         for (i, step) in self.def.steps.iter().enumerate().rev() {

@@ -162,7 +162,7 @@ mod tests {
     /// the split after the last one silently returned the final latent.
     #[test]
     fn split_latent_accessor_is_bounds_correct() {
-        let m = builtin_manifest();
+        let m = builtin_manifest().unwrap();
         // glow16 has exactly one split ([16,8,8,6]) and a final latent
         // ([16,4,4,24]).
         let def = NetworkDef::resolve(&m, "glow16").unwrap();
@@ -183,7 +183,7 @@ mod tests {
 
     #[test]
     fn depth_counts_layers_not_splits() {
-        let m = builtin_manifest();
+        let m = builtin_manifest().unwrap();
         let def = NetworkDef::resolve(&m, "glow16").unwrap();
         // 2 scales x (haar + 4x3 glow steps) = 2 + 24 layers; 1 split
         assert_eq!(def.depth(), 26);

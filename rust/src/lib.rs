@@ -38,6 +38,12 @@
 //! * [`train`], [`data`], [`profile`], [`bench_figs`] — training loop,
 //!   the data-parallel [`train::ParallelTrainer`] (`--threads N` on the
 //!   CLI), synthetic workloads, per-entry profiler, figure reproductions.
+//! * [`serve`] — the batched inference-serving subsystem: a checkpoint
+//!   [`serve::Registry`] (LRU model cache), a micro-batching scheduler
+//!   that coalesces concurrent `sample`/`score` requests into one batched
+//!   pass (bit-identical to direct [`api::Flow::sample_batch`] /
+//!   [`api::Flow::log_density`] calls), and JSON-lines TCP/stdio fronts
+//!   (`invertnet serve`, `invertnet score`).
 //!
 //! ## Quickstart
 //!
@@ -84,6 +90,7 @@ pub mod data;
 pub mod flow;
 pub mod profile;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;

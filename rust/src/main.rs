@@ -6,6 +6,9 @@
 //!                   [--mode invertible|stored|checkpoint:K]
 //!                   [--threads N] [--microbatch N]
 //! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
+//! invertnet serve   --ckpt runs/x/checkpoint [--port 7878 | --stdio]
+//!                   [--max-batch 8] [--max-delay-us 500] [--workers 2]
+//! invertnet score   --ckpt runs/x/checkpoint --data x.npy --out scores.npy
 //! invertnet bench   fig1|fig2 [--budget-gb 40]
 //! invertnet inspect --net glow16
 //! invertnet profile --net glow16 [--iters 5]

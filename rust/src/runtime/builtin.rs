@@ -11,6 +11,8 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::{bail, Result};
+
 use crate::util::json::Json;
 
 use super::manifest::{format_split, shape_tag, HeadMeta, LayerMeta, Manifest,
@@ -228,23 +230,51 @@ impl Catalog {
         }
     }
 
+    /// Append a network assembled from `pieces`, validating the chain as
+    /// it goes. Returning the error (instead of panicking mid-walk) is
+    /// what lets a long-lived process — notably `invertnet serve` — report
+    /// a bad network definition through `Engine::build` and keep running.
     fn add(&mut self, name: &str, in_shape: Vec<usize>,
-           cond_shape: Option<Vec<usize>>, pieces: Vec<Piece>) {
+           cond_shape: Option<Vec<usize>>, pieces: Vec<Piece>) -> Result<()> {
+        if in_shape.is_empty() || in_shape.contains(&0) {
+            bail!("network {name}: bad input shape {in_shape:?}");
+        }
         let mut sigs = Vec::with_capacity(pieces.len());
         let mut latents: Vec<Vec<usize>> = Vec::new();
         let mut cur = in_shape.clone();
-        for p in pieces {
+        for (i, p) in pieces.into_iter().enumerate() {
             match p {
                 Piece::Split { zc, in_shape } => {
+                    let Some(&c) = in_shape.last() else {
+                        bail!("network {name} step {i}: split on a \
+                               shapeless input");
+                    };
+                    if zc == 0 || zc >= c {
+                        bail!("network {name} step {i}: split zc={zc} out \
+                               of range for {c} channels");
+                    }
+                    if in_shape != cur {
+                        bail!("network {name} step {i}: split input \
+                               {in_shape:?} does not chain from {cur:?}");
+                    }
                     sigs.push(format_split(zc, &in_shape));
                     let mut z = in_shape.clone();
                     *z.last_mut().unwrap() = zc;
                     latents.push(z);
                     cur = in_shape;
-                    let c = *cur.last().unwrap();
                     *cur.last_mut().unwrap() = c - zc;
                 }
                 Piece::Layer(meta) => {
+                    if meta.in_shape != cur {
+                        bail!("network {name} step {i} ({}): input \
+                               {:?} does not chain from {cur:?}",
+                              meta.sig, meta.in_shape);
+                    }
+                    if meta.out_shape.is_empty() || meta.out_shape.contains(&0)
+                    {
+                        bail!("network {name} step {i} ({}): bad output \
+                               shape {:?}", meta.sig, meta.out_shape);
+                    }
                     sigs.push(meta.sig.clone());
                     cur = meta.out_shape.clone();
                     self.layers.entry(meta.sig.clone()).or_insert(*meta);
@@ -265,13 +295,14 @@ impl Catalog {
             layers: sigs,
             latent_shapes: latents,
         });
+        Ok(())
     }
 }
 
 /// Haar squeeze then K x (ActNorm -> Conv1x1 -> AffineCoupling).
 #[allow(clippy::too_many_arguments)]
 fn glow_flat(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
-             c_in: usize, k: usize, hidden: usize) {
+             c_in: usize, k: usize, hidden: usize) -> Result<()> {
     let mut pieces = vec![l_haar(n, h, w, c_in)];
     let c = 4 * c_in;
     let (h2, w2) = (h / 2, w / 2);
@@ -280,13 +311,13 @@ fn glow_flat(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
         pieces.push(l_conv1x1(n, h2, w2, c));
         pieces.push(l_glowcpl(n, h2, w2, c, hidden));
     }
-    cat.add(name, vec![n, h, w, c_in], None, pieces);
+    cat.add(name, vec![n, h, w, c_in], None, pieces)
 }
 
 /// GLOW with Haar squeeze + factor-out between scales (paper §1).
 #[allow(clippy::too_many_arguments)]
 fn glow_multiscale(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
-                   c_in: usize, scales: usize, k: usize, hidden: usize) {
+                   c_in: usize, scales: usize, k: usize, hidden: usize) -> Result<()> {
     let mut pieces = Vec::new();
     let (mut ch, mut hh, mut ww) = (c_in, h, w);
     for s in 0..scales {
@@ -304,57 +335,57 @@ fn glow_multiscale(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
             ch -= ch / 2;
         }
     }
-    cat.add(name, vec![n, h, w, c_in], None, pieces);
+    cat.add(name, vec![n, h, w, c_in], None, pieces)
 }
 
 fn realnvp_dense(cat: &mut Catalog, name: &str, n: usize, d: usize,
-                 k: usize, hidden: usize) {
+                 k: usize, hidden: usize) -> Result<()> {
     let mut pieces = Vec::new();
     for _ in 0..k {
         pieces.push(l_densecpl(n, d, hidden));
         pieces.push(l_permute(vec![n, d]));
     }
-    cat.add(name, vec![n, d], None, pieces);
+    cat.add(name, vec![n, d], None, pieces)
 }
 
 fn cond_realnvp_dense(cat: &mut Catalog, name: &str, n: usize, d: usize,
-                      dcond: usize, k: usize, hidden: usize) {
+                      dcond: usize, k: usize, hidden: usize) -> Result<()> {
     let mut pieces = Vec::new();
     for _ in 0..k {
         pieces.push(l_condcpl(n, d, dcond, hidden));
         pieces.push(l_permute(vec![n, d]));
     }
-    cat.add(name, vec![n, d], Some(vec![n, dcond]), pieces);
+    cat.add(name, vec![n, d], Some(vec![n, dcond]), pieces)
 }
 
 #[allow(clippy::too_many_arguments)]
 fn hint_dense(cat: &mut Catalog, name: &str, n: usize, d: usize, k: usize,
-              hidden: usize, depth: usize) {
+              hidden: usize, depth: usize) -> Result<()> {
     let mut pieces = Vec::new();
     for _ in 0..k {
         pieces.push(l_hint(n, d, hidden, depth));
         pieces.push(l_permute(vec![n, d]));
     }
-    cat.add(name, vec![n, d], None, pieces);
+    cat.add(name, vec![n, d], None, pieces)
 }
 
 /// Haar squeeze to 4*c_in channels, then K leapfrog steps on the
 /// (prev|curr) paired state.
 #[allow(clippy::too_many_arguments)]
 fn hyperbolic_net(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
-                  c_in: usize, k: usize, hidden: usize) {
+                  c_in: usize, k: usize, hidden: usize) -> Result<()> {
     let mut pieces = vec![l_haar(n, h, w, c_in)];
     let c = 4 * c_in;
     for _ in 0..k {
         pieces.push(l_hyper(n, h / 2, w / 2, c, hidden));
     }
-    cat.add(name, vec![n, h, w, c_in], None, pieces);
+    cat.add(name, vec![n, h, w, c_in], None, pieces)
 }
 
 /// NICE-style additive image flow (builtin-only: exercises `addcpl`).
 #[allow(clippy::too_many_arguments)]
 fn nice_net(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
-            c_in: usize, k: usize, hidden: usize) {
+            c_in: usize, k: usize, hidden: usize) -> Result<()> {
     let mut pieces = vec![l_haar(n, h, w, c_in)];
     let c = 4 * c_in;
     let (h2, w2) = (h / 2, w / 2);
@@ -362,38 +393,42 @@ fn nice_net(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
         pieces.push(l_addcpl(n, h2, w2, c, hidden));
         pieces.push(l_permute(vec![n, h2, w2, c]));
     }
-    cat.add(name, vec![n, h, w, c_in], None, pieces);
+    cat.add(name, vec![n, h, w, c_in], None, pieces)
 }
 
 /// The default catalog: example nets + every figure sweep, mirroring
 /// `model.py::default_networks` (plus `nice16`, builtin-only).
-pub fn builtin_manifest() -> Manifest {
+///
+/// A malformed definition surfaces here as an `Err` (and through
+/// `Engine::build`) rather than a process abort — a long-lived server must
+/// be able to report a bad catalog and keep serving what it has.
+pub fn builtin_manifest() -> Result<Manifest> {
     let mut cat = Catalog::new();
     // e2e examples
-    realnvp_dense(&mut cat, "realnvp2d", 256, 2, 8, 64);
-    cond_realnvp_dense(&mut cat, "cond_realnvp2d", 256, 2, 2, 8, 64);
-    hint_dense(&mut cat, "hint8d", 256, 8, 4, 64, 2);
-    glow_multiscale(&mut cat, "glow16", 16, 16, 16, 3, 2, 4, 32);
-    hyperbolic_net(&mut cat, "hyper16", 16, 16, 16, 3, 6, 12);
-    nice_net(&mut cat, "nice16", 16, 16, 16, 3, 4, 32);
+    realnvp_dense(&mut cat, "realnvp2d", 256, 2, 8, 64)?;
+    cond_realnvp_dense(&mut cat, "cond_realnvp2d", 256, 2, 2, 8, 64)?;
+    hint_dense(&mut cat, "hint8d", 256, 8, 4, 64, 2)?;
+    glow_multiscale(&mut cat, "glow16", 16, 16, 16, 3, 2, 4, 32)?;
+    hyperbolic_net(&mut cat, "hyper16", 16, 16, 16, 3, 6, 12)?;
+    nice_net(&mut cat, "nice16", 16, 16, 16, 3, 4, 32)?;
     // fig1: spatial-size sweep, GLOW, 3 input channels, batch 8
     for hw in [16usize, 32, 64, 128, 256] {
-        glow_flat(&mut cat, &format!("glow_fig1_{hw}"), 8, hw, hw, 3, 16, 32);
+        glow_flat(&mut cat, &format!("glow_fig1_{hw}"), 8, hw, hw, 3, 16, 32)?;
     }
     // fig2: depth sweep at 64x64
     for k in [2usize, 4, 8, 16, 32, 48] {
-        glow_flat(&mut cat, &format!("glow_fig2_d{k}"), 8, 64, 64, 3, k, 32);
+        glow_flat(&mut cat, &format!("glow_fig2_d{k}"), 8, 64, 64, 3, k, 32)?;
     }
     // throughput / ablation nets
-    glow_flat(&mut cat, "glow_bench32", 8, 32, 32, 3, 8, 32);
+    glow_flat(&mut cat, "glow_bench32", 8, 32, 32, 3, 8, 32)?;
 
-    Manifest {
+    Ok(Manifest {
         backend: "ref-builtin".to_string(),
         layers: cat.layers,
         heads: cat.heads,
         networks: cat.networks,
         monoliths: BTreeMap::new(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -403,7 +438,7 @@ mod tests {
 
     #[test]
     fn catalog_matches_python_registry_shape() {
-        let m = builtin_manifest();
+        let m = builtin_manifest().unwrap();
         assert!(m.networks.len() >= 17);
         for name in ["realnvp2d", "cond_realnvp2d", "hint8d", "glow16",
                      "hyper16", "nice16", "glow_fig1_16", "glow_fig2_d48",
@@ -424,7 +459,7 @@ mod tests {
         // NetworkDef::resolve re-derives shapes and latent bookkeeping from
         // the layer metas — it failing would mean the catalog is internally
         // inconsistent.
-        let m = builtin_manifest();
+        let m = builtin_manifest().unwrap();
         for name in m.networks.keys() {
             let def = NetworkDef::resolve(&m, name)
                 .unwrap_or_else(|e| panic!("{name}: {e:#}"));
@@ -434,8 +469,29 @@ mod tests {
     }
 
     #[test]
+    fn bad_network_definitions_error_instead_of_panicking() {
+        // a long-lived server must see these as Err from Engine::build,
+        // never a process abort
+        let mut cat = Catalog::new();
+        let err = cat.add("bad_split", vec![4, 4, 4, 2], None,
+                          vec![Piece::Split {
+                              zc: 2,
+                              in_shape: vec![4, 4, 4, 2],
+                          }]).unwrap_err();
+        assert!(format!("{err:#}").contains("split"), "{err:#}");
+
+        let mut cat = Catalog::new();
+        let err = cat.add("bad_chain", vec![8, 2], None,
+                          vec![l_densecpl(4, 2, 8)]).unwrap_err();
+        assert!(format!("{err:#}").contains("chain"), "{err:#}");
+
+        let mut cat = Catalog::new();
+        assert!(cat.add("bad_shape", vec![0, 2], None, vec![]).is_err());
+    }
+
+    #[test]
     fn glow16_multiscale_structure() {
-        let m = builtin_manifest();
+        let m = builtin_manifest().unwrap();
         let net = m.network("glow16").unwrap();
         assert_eq!(net.in_shape, vec![16, 16, 16, 3]);
         assert_eq!(net.latent_shapes,
@@ -461,7 +517,7 @@ mod tests {
 
     #[test]
     fn head_shapes_cover_all_latents() {
-        let m = builtin_manifest();
+        let m = builtin_manifest().unwrap();
         for net in m.networks.values() {
             for z in &net.latent_shapes {
                 assert!(m.head_for(z).is_ok(), "{}: missing head {:?}",

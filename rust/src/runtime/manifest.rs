@@ -296,7 +296,7 @@ mod tests {
     fn split_markers_roundtrip_across_builtin_catalog() {
         // every split marker in the builtin catalog must survive
         // parse -> format unchanged (the coordinator keys off these strings)
-        let m = crate::runtime::builtin::builtin_manifest();
+        let m = crate::runtime::builtin::builtin_manifest().unwrap();
         let mut seen = 0;
         for net in m.networks.values() {
             for sig in &net.layers {
@@ -316,7 +316,7 @@ mod tests {
         let m = Manifest::parse(MINI).unwrap();
         let l = m.layer("actnorm__2x4x4x3").unwrap();
         assert_eq!(l.cfg_usize("hidden"), None); // MINI has empty cfg
-        let m2 = crate::runtime::builtin::builtin_manifest();
+        let m2 = crate::runtime::builtin::builtin_manifest().unwrap();
         let hint = m2.layer("hint__256x8__hd64__dep2").unwrap();
         assert_eq!(hint.cfg_usize("depth"), Some(2));
         assert_eq!(hint.cfg_usize("hidden"), Some(64));

@@ -1,0 +1,536 @@
+//! Request micro-batching: coalesce many single-client `sample`/`score`
+//! requests into one batched inverse/forward pass.
+//!
+//! Every layer program is batch-elementwise, so a coalesced pass returns
+//! each caller bits it could not tell apart from a private pass — batching
+//! is invisible except in throughput. The scheduler:
+//!
+//! * coalesces jobs sharing a **group** (same model, same op) from the
+//!   front of one FIFO queue;
+//! * fires a batch when it reaches `max_batch` jobs *or* the oldest job's
+//!   `max_delay` deadline passes, whichever is first;
+//! * executes on a pool of worker threads, each forking the model's flow
+//!   ([`crate::Flow::fork`]) so concurrent passes are metered on
+//!   independent ledgers;
+//! * applies backpressure through a bounded queue — `submit` blocks until
+//!   space frees (or times out with an error), so a flood of clients
+//!   degrades into queueing latency, not unbounded memory.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::ops::{concat_rows, slice_rows};
+use crate::tensor::Tensor;
+
+use super::protocol::StatsSnapshot;
+use super::registry::ServedModel;
+
+/// Scheduler knobs (CLI: `--max-batch`, `--max-delay-us`, `--workers`).
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Most jobs coalesced into one pass (1 disables coalescing).
+    pub max_batch: usize,
+    /// How long the oldest queued job may wait for company.
+    pub max_delay: Duration,
+    /// Executor threads.
+    pub workers: usize,
+    /// Bound on queued jobs (backpressure); `submit` blocks when full.
+    pub queue_cap: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig {
+            max_batch: 8,
+            max_delay: Duration::from_micros(500),
+            workers: 2,
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// One unit of batched work. `Sample` carries pre-drawn latents (each
+/// request draws from its own seeded rng *before* queueing, so coalescing
+/// cannot perturb anyone's randomness).
+pub enum Work {
+    Sample { latents: Vec<Tensor>, cond: Option<Tensor> },
+    Score { x: Tensor, cond: Option<Tensor> },
+}
+
+impl Work {
+    /// Rows this job contributes to a batched pass.
+    fn rows(&self) -> usize {
+        match self {
+            Work::Sample { latents, .. } => {
+                latents.first().map_or(0, |t| t.batch())
+            }
+            Work::Score { x, .. } => x.batch(),
+        }
+    }
+
+    fn op_tag(&self) -> u8 {
+        match self {
+            Work::Sample { .. } => 0,
+            Work::Score { .. } => 1,
+        }
+    }
+}
+
+/// What comes back: one batch row-slice per job.
+pub enum Reply {
+    Samples(Tensor),
+    Scores(Vec<f32>),
+}
+
+struct Job {
+    model: Arc<ServedModel>,
+    work: Work,
+    tx: Sender<Result<Reply>>,
+    t_enq: Instant,
+}
+
+/// Jobs batch together iff same resident model instance + same op.
+fn group_of(j: &Job) -> (usize, u8) {
+    (Arc::as_ptr(&j.model) as usize, j.work.op_tag())
+}
+
+// ---------------------------------------------------------------------------
+// Serving metrics
+// ---------------------------------------------------------------------------
+
+const LAT_RING: usize = 65_536;
+
+/// Lock-light serving counters + a latency reservoir for percentiles.
+#[derive(Default)]
+pub struct ServeStats {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    items: AtomicU64,
+    errors: AtomicU64,
+    lat_us: Mutex<VecDeque<u64>>,
+}
+
+impl ServeStats {
+    fn record_batch(&self, jobs: usize, rows: usize) {
+        self.requests.fetch_add(jobs as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.items.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    fn record_latency(&self, us: u64) {
+        let mut ring = self.lat_us.lock().unwrap();
+        if ring.len() == LAT_RING {
+            ring.pop_front();
+        }
+        ring.push_back(us);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot with queue/registry gauges supplied by the caller.
+    pub fn snapshot(&self, queue_depth: u64, models: u64) -> StatsSnapshot {
+        let mut lats: Vec<u64> =
+            self.lat_us.lock().unwrap().iter().copied().collect();
+        lats.sort_unstable();
+        let pct = |p: usize| -> u64 {
+            if lats.is_empty() {
+                0
+            } else {
+                lats[(lats.len() * p / 100).min(lats.len() - 1)]
+            }
+        };
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.items.load(Ordering::Relaxed);
+        StatsSnapshot {
+            requests,
+            batches,
+            items,
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_batch: if batches == 0 { 0.0 }
+                        else { requests as f64 / batches as f64 },
+            mean_items: if batches == 0 { 0.0 }
+                        else { items as f64 / batches as f64 },
+            p50_us: pct(50),
+            p99_us: pct(99),
+            queue_depth,
+            models,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The batcher
+// ---------------------------------------------------------------------------
+
+struct Shared {
+    cfg: BatchConfig,
+    queue: Mutex<VecDeque<Job>>,
+    /// Workers wait here for jobs / coalescing deadlines.
+    work_cv: Condvar,
+    /// Blocked submitters wait here for queue capacity.
+    space_cv: Condvar,
+    stop: AtomicBool,
+    stats: Arc<ServeStats>,
+}
+
+/// Owns the worker pool; dropping it drains the queue and joins workers.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatchConfig, stats: Arc<ServeStats>) -> Batcher {
+        let cfg = BatchConfig {
+            max_batch: cfg.max_batch.max(1),
+            workers: cfg.workers.max(1),
+            queue_cap: cfg.queue_cap.max(1),
+            ..cfg
+        };
+        let shared = Arc::new(Shared {
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            stats,
+        });
+        let workers = (0..shared.cfg.workers)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Batcher { shared, workers }
+    }
+
+    /// Queued (not yet executing) job count.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Enqueue one job and return the receiver its reply will land on.
+    /// Blocks while the queue is at capacity (bounded backpressure); gives
+    /// up with an error after 30s so a wedged server can't strand clients.
+    pub fn submit(&self, model: Arc<ServedModel>, work: Work)
+                  -> Result<Receiver<Result<Reply>>> {
+        if work.rows() == 0 {
+            bail!("empty request (0 rows)");
+        }
+        let (tx, rx) = channel();
+        let job = Job { model, work, tx, t_enq: Instant::now() };
+        let mut q = self.shared.queue.lock().unwrap();
+        while q.len() >= self.shared.cfg.queue_cap {
+            if self.shared.stop.load(Ordering::Relaxed) {
+                bail!("server is shutting down");
+            }
+            let (guard, timeout) = self.shared.space_cv
+                .wait_timeout(q, Duration::from_secs(30))
+                .unwrap();
+            q = guard;
+            if timeout.timed_out() && q.len() >= self.shared.cfg.queue_cap {
+                bail!("server overloaded: queue has been full for 30s \
+                       ({} jobs)", q.len());
+            }
+        }
+        if self.shared.stop.load(Ordering::Relaxed) {
+            bail!("server is shutting down");
+        }
+        q.push_back(job);
+        drop(q);
+        self.shared.work_cv.notify_all();
+        Ok(rx)
+    }
+
+    /// Stop accepting work, drain what is queued, join the pool.
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.work_cv.notify_all();
+        self.shared.space_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let batch = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if q.is_empty() {
+                    if sh.stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    q = sh.work_cv.wait(q).unwrap();
+                    continue;
+                }
+                // per-group (job count, oldest enqueue time); FIFO order
+                // means the first job seen for a group is its oldest, and
+                // the earliest deadline overall belongs to the queue head
+                let mut groups: Vec<((usize, u8), usize, Instant)> =
+                    Vec::new();
+                for j in q.iter() {
+                    let k = group_of(j);
+                    match groups.iter_mut().find(|g| g.0 == k) {
+                        Some(g) => g.1 += 1,
+                        None => groups.push((k, 1, j.t_enq)),
+                    }
+                }
+                // fire the first group that is ready: full, past its
+                // oldest job's deadline, or draining for shutdown. Full
+                // non-head groups fire immediately — they never wait out
+                // the head's coalescing window.
+                let now = Instant::now();
+                let stop = sh.stop.load(Ordering::Relaxed);
+                let ready = groups.iter().find(|(_, count, t0)| {
+                    stop || *count >= sh.cfg.max_batch
+                        || *t0 + sh.cfg.max_delay <= now
+                });
+                if let Some(&(key, _, _)) = ready {
+                    break take_group(&mut q, key, sh.cfg.max_batch);
+                }
+                // wait out the earliest coalescing window (the head's) or
+                // a new-job wakeup
+                let deadline = q[0].t_enq + sh.cfg.max_delay;
+                let (guard, _) = sh.work_cv
+                    .wait_timeout(q, deadline - now)
+                    .unwrap();
+                q = guard;
+            }
+        };
+        sh.space_cv.notify_all();
+        execute_batch(batch, &sh.stats);
+    }
+}
+
+/// Remove up to `cap` jobs of `key`'s group from the queue, preserving
+/// FIFO order of everything (taken and left behind).
+fn take_group(q: &mut VecDeque<Job>, key: (usize, u8), cap: usize)
+              -> Vec<Job> {
+    let mut taken = Vec::new();
+    let mut rest = VecDeque::with_capacity(q.len());
+    while let Some(j) = q.pop_front() {
+        if taken.len() < cap && group_of(&j) == key {
+            taken.push(j);
+        } else {
+            rest.push_back(j);
+        }
+    }
+    std::mem::swap(q, &mut rest);
+    taken
+}
+
+/// Run one coalesced pass and scatter row-slices back to each job.
+fn execute_batch(jobs: Vec<Job>, stats: &ServeStats) {
+    if jobs.is_empty() {
+        return;
+    }
+    let rows: Vec<usize> = jobs.iter().map(|j| j.work.rows()).collect();
+    let total: usize = rows.iter().sum();
+    let result = run_batch(&jobs, &rows);
+    stats.record_batch(jobs.len(), total);
+    match result {
+        Ok(replies) => {
+            for (job, reply) in jobs.into_iter().zip(replies) {
+                let us = job.t_enq.elapsed().as_micros() as u64;
+                stats.record_latency(us);
+                let _ = job.tx.send(Ok(reply)); // receiver may have left
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for job in jobs {
+                stats.record_error();
+                let _ = job.tx.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+/// The batched pass itself: concatenate the group's payloads along axis 0,
+/// run ONE inverse/forward pass on a forked flow (fresh ledger per pass),
+/// slice the result back per job. Row-major concat + batch-elementwise
+/// layer programs make each slice bit-identical to a private pass.
+fn run_batch(jobs: &[Job], rows: &[usize]) -> Result<Vec<Reply>> {
+    let model = &jobs[0].model;
+    let flow = model.flow.fork();
+    match &jobs[0].work {
+        Work::Sample { .. } => {
+            let n_sites = flow.def.latent_shapes.len();
+            let mut cat_sites = Vec::with_capacity(n_sites);
+            for site in 0..n_sites {
+                let parts: Vec<&Tensor> = jobs.iter().map(|j| match &j.work {
+                    Work::Sample { latents, .. } => &latents[site],
+                    Work::Score { .. } => unreachable!("mixed batch group"),
+                }).collect();
+                cat_sites.push(concat_rows(&parts)?);
+            }
+            let cond = batch_cond(jobs)?;
+            let x = flow.invert_flex(&cat_sites, cond.as_ref(),
+                                     &model.params, true)?;
+            let mut out = Vec::with_capacity(jobs.len());
+            let mut off = 0;
+            for &n in rows {
+                out.push(Reply::Samples(slice_rows(&x, off, n)?));
+                off += n;
+            }
+            Ok(out)
+        }
+        Work::Score { .. } => {
+            let parts: Vec<&Tensor> = jobs.iter().map(|j| match &j.work {
+                Work::Score { x, .. } => x,
+                Work::Sample { .. } => unreachable!("mixed batch group"),
+            }).collect();
+            let x = concat_rows(&parts)?;
+            let cond = batch_cond(jobs)?;
+            let scores = flow.log_density(&x, cond.as_ref(), &model.params)?;
+            let mut out = Vec::with_capacity(jobs.len());
+            let mut off = 0;
+            for &n in rows {
+                out.push(Reply::Scores(scores[off..off + n].to_vec()));
+                off += n;
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Concatenate the jobs' conditioning rows (all or none must carry one;
+/// the flow validates the merged shape).
+fn batch_cond(jobs: &[Job]) -> Result<Option<Tensor>> {
+    let conds: Vec<&Tensor> = jobs.iter().filter_map(|j| match &j.work {
+        Work::Sample { cond, .. } | Work::Score { cond, .. } => cond.as_ref(),
+    }).collect();
+    if conds.is_empty() {
+        return Ok(None);
+    }
+    if conds.len() != jobs.len() {
+        bail!("batch mixes conditioned and unconditioned requests \
+               for one model");
+    }
+    Ok(Some(concat_rows(&conds)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Engine;
+    use crate::serve::registry::Registry;
+    use crate::util::rng::Pcg64;
+
+    fn model() -> (Registry, Arc<ServedModel>) {
+        let r = Registry::new(Engine::native().unwrap(), 4);
+        let m = r.register_untrained("realnvp2d", 11).unwrap();
+        (r, m)
+    }
+
+    fn score_work(m: &ServedModel, seed: u64, n: usize) -> Work {
+        let mut rng = Pcg64::new(seed);
+        let d = m.flow.def.in_shape[1];
+        Work::Score {
+            x: Tensor { shape: vec![n, d], data: rng.normal_vec(n * d) },
+            cond: None,
+        }
+    }
+
+    #[test]
+    fn scores_match_direct_calls_bit_exactly() {
+        let (_r, m) = model();
+        let stats = Arc::new(ServeStats::default());
+        let b = Batcher::new(BatchConfig {
+            max_batch: 4,
+            max_delay: Duration::from_millis(20),
+            workers: 2,
+            queue_cap: 64,
+        }, stats.clone());
+
+        // burst several jobs inside one coalescing window
+        let rxs: Vec<_> = (0..6).map(|i| {
+            b.submit(m.clone(), score_work(&m, 100 + i, 1 + (i % 3) as usize))
+                .unwrap()
+        }).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let i = i as u64;
+            let Reply::Scores(got) = rx.recv().unwrap().unwrap() else {
+                panic!("wrong reply kind")
+            };
+            let Work::Score { x, .. } = score_work(&m, 100 + i,
+                                                   1 + (i % 3) as usize)
+            else { unreachable!() };
+            let want = m.flow.log_density(&x, None, &m.params).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "job {i}: batched {a} != direct {b}");
+            }
+        }
+        let snap = stats.snapshot(0, 1);
+        assert_eq!(snap.requests, 6);
+        assert!(snap.batches <= 6);
+    }
+
+    #[test]
+    fn coalescing_actually_batches_under_burst() {
+        let (_r, m) = model();
+        let stats = Arc::new(ServeStats::default());
+        let b = Batcher::new(BatchConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(50),
+            workers: 1,
+            queue_cap: 64,
+        }, stats.clone());
+        let rxs: Vec<_> = (0..8).map(|i| {
+            b.submit(m.clone(), score_work(&m, i, 1)).unwrap()
+        }).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = stats.snapshot(0, 1);
+        assert_eq!(snap.requests, 8);
+        // one worker + 50ms window + burst of 8 = very few passes
+        assert!(snap.batches <= 3, "expected coalescing, got {snap:?}");
+        assert!(snap.mean_batch >= 2.0, "{snap:?}");
+    }
+
+    #[test]
+    fn execution_errors_reach_every_job() {
+        let (_r, m) = model();
+        let stats = Arc::new(ServeStats::default());
+        let b = Batcher::new(BatchConfig::default(), stats.clone());
+        // wrong per-sample width -> the batched pass fails
+        let bad = Work::Score {
+            x: Tensor::zeros(&[2, 5]),
+            cond: None,
+        };
+        let rx = b.submit(m.clone(), bad).unwrap();
+        assert!(rx.recv().unwrap().is_err());
+        assert_eq!(stats.snapshot(0, 1).errors, 1);
+    }
+
+    #[test]
+    fn rejects_empty_work() {
+        let (_r, m) = model();
+        let b = Batcher::new(BatchConfig::default(),
+                             Arc::new(ServeStats::default()));
+        let empty = Work::Score { x: Tensor::zeros(&[0, 2]), cond: None };
+        assert!(b.submit(m, empty).is_err());
+    }
+}

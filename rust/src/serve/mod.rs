@@ -1,0 +1,47 @@
+//! `serve` — the batched inference-serving subsystem: turn trained
+//! checkpoints into a long-lived, concurrent service for the paper's
+//! amortized-inference workload (many small conditional sampling / scoring
+//! requests against one trained flow).
+//!
+//! ```text
+//!                 ┌──────────────┐   JSON lines    ┌─────────────────┐
+//!  clients ──────▶│ tcp / stdio  │────────────────▶│ Server::handle  │
+//!                 └──────────────┘                 └──────┬──────────┘
+//!                                                         │ submit
+//!                 ┌──────────────┐    LRU get      ┌──────▼──────────┐
+//!                 │   Registry   │◀────────────────│    Batcher      │
+//!                 │ (Flow,Params)│                 │ coalesce + pool │
+//!                 └──────────────┘                 └─────────────────┘
+//! ```
+//!
+//! * [`registry::Registry`] — loads/caches `(Flow, ParamStore)` pairs from
+//!   checkpoint directories, LRU-capped, warm-able at startup.
+//! * [`batcher::Batcher`] — coalesces single-item `sample`/`score`
+//!   requests into one batched inverse/forward pass (deadline- and
+//!   max-batch-triggered, bounded-queue backpressure), executed by a
+//!   worker pool of [`crate::Flow::fork`] handles.
+//! * [`server::Server`] — the transport-agnostic request core plus the
+//!   loopback TCP and stdio fronts.
+//! * [`protocol`] — the JSON-lines request/response frames.
+//!
+//! Micro-batching is **invisible**: every layer program is
+//! batch-elementwise, so a coalesced response is bit-identical to a direct
+//! [`crate::Flow::sample_batch`] / [`crate::Flow::log_density`] call
+//! (pinned in `tests/serve.rs`). CLI entry points:
+//!
+//! ```text
+//! invertnet serve --ckpt runs/moons/checkpoint --stdio
+//! invertnet serve --ckpt runs/moons/checkpoint --port 7878 \
+//!                 --max-batch 16 --max-delay-us 300 --workers 4
+//! invertnet score --ckpt runs/moons/checkpoint --data x.npy --out scores.npy
+//! ```
+
+pub mod batcher;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use batcher::{BatchConfig, Batcher, ServeStats};
+pub use protocol::{Request, Response, StatsSnapshot};
+pub use registry::{Registry, ServedModel};
+pub use server::Server;

@@ -1,0 +1,473 @@
+//! The JSON-lines request/response protocol — one JSON object per line,
+//! transport-agnostic (the same frames flow over the loopback TCP listener
+//! and the stdio loop).
+//!
+//! Requests (defaults in parens):
+//!
+//! ```text
+//! {"op":"sample","n":4,"seed":1,"temperature":0.8,"model":"realnvp2d",
+//!  "cond":{"shape":[4,2],"data":[...]}}        n(1) seed(0) temperature(1)
+//! {"op":"score","x":{"shape":[2,2],"data":[0.1,0.2,0.3,0.4]}}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Responses always carry `"ok"`:
+//!
+//! ```text
+//! {"ok":true,"op":"sample","x":{"shape":[4,2],"data":[...]}}
+//! {"ok":true,"op":"score","log_density":[-2.71,-3.14]}
+//! {"ok":true,"op":"stats","stats":{...}}
+//! {"ok":true,"op":"shutdown"}
+//! {"ok":false,"error":"..."}
+//! ```
+//!
+//! `model` is optional everywhere a model is needed; omitting it targets
+//! the registry's default (first-registered) model. Tensor payloads are
+//! `{"shape":[...],"data":[flat row-major f32...]}`. f32 values survive
+//! the wire bit-exactly: they are widened to f64, printed with Rust's
+//! shortest-roundtrip formatter, and narrowed back on parse — the
+//! micro-batched server is bit-identical to direct in-process calls.
+//! Seeds at or above 2^53 are sent as strings (`"seed":"18446..."`),
+//! since a JSON number that large may not represent them exactly.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Upper bound on samples per request (keeps one request from forcing a
+/// giant allocation; batch across requests instead).
+pub const MAX_SAMPLES_PER_REQUEST: usize = 65_536;
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Draw `n` samples at latent `temperature`, latents seeded from
+    /// `seed` — bit-identical to
+    /// `Flow::sample_batch(&params, n, cond, temperature, &mut Pcg64::new(seed))`.
+    Sample {
+        model: Option<String>,
+        n: usize,
+        temperature: f32,
+        seed: u64,
+        cond: Option<Tensor>,
+    },
+    /// Per-sample log-density scores for a batch `x` (leading dim = batch).
+    Score {
+        model: Option<String>,
+        x: Tensor,
+        cond: Option<Tensor>,
+    },
+    /// Serving metrics snapshot.
+    Stats,
+    /// Stop the server after responding.
+    Shutdown,
+}
+
+/// A server response, ready to serialize as one JSON line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Sample { x: Tensor },
+    Score { log_density: Vec<f32> },
+    Stats(StatsSnapshot),
+    Shutdown,
+    Error { error: String },
+}
+
+/// Point-in-time serving metrics (see `batcher::ServeStats`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StatsSnapshot {
+    /// Requests answered through the batcher (sample + score).
+    pub requests: u64,
+    /// Batched passes executed.
+    pub batches: u64,
+    /// Total samples/rows across those passes.
+    pub items: u64,
+    /// Requests that ended in an error reply.
+    pub errors: u64,
+    /// Mean requests coalesced per pass (`requests / batches`).
+    pub mean_batch: f64,
+    /// Mean rows per pass (`items / batches`).
+    pub mean_items: f64,
+    /// Median request latency (enqueue -> reply), microseconds.
+    pub p50_us: u64,
+    /// 99th-percentile request latency, microseconds.
+    pub p99_us: u64,
+    /// Jobs waiting in the queue at snapshot time.
+    pub queue_depth: u64,
+    /// Models resident in the registry.
+    pub models: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Tensor / f32-array payload helpers
+// ---------------------------------------------------------------------------
+
+/// `{"shape":[...],"data":[...]}` — non-finite values cross as `null`.
+pub fn tensor_to_json(t: &Tensor) -> Json {
+    Json::obj(vec![
+        ("shape", Json::arr_usize(&t.shape)),
+        ("data", f32s_to_json(&t.data)),
+    ])
+}
+
+pub fn tensor_from_json(j: &Json) -> Result<Tensor> {
+    let shape = j.req("shape")?.as_usize_vec()?;
+    let data = f32s_from_json(j.req("data")?)?;
+    Tensor::new(shape, data)
+}
+
+fn f32s_to_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| {
+        if x.is_finite() { Json::Num(x as f64) } else { Json::Null }
+    }).collect())
+}
+
+fn f32s_from_json(j: &Json) -> Result<Vec<f32>> {
+    j.as_arr()?.iter().map(|v| match v {
+        Json::Null => Ok(f32::NAN),
+        other => Ok(other.as_f64()? as f32),
+    }).collect()
+}
+
+/// Numeric seeds must stay strictly below 2^53: every such integer is an
+/// exact f64, while anything at/above may already have been rounded by
+/// the f64 parse (e.g. 2^53 + 1 arrives as exactly 2^53) — silently
+/// changing the seed would break the bit-exact `Pcg64::new(seed)`
+/// contract, so larger seeds travel as strings.
+const NUM_SEED_LIMIT: u64 = 1 << 53;
+
+fn parse_seed(j: &Json) -> Result<u64> {
+    match j.get("seed") {
+        None => Ok(0),
+        Some(Json::Str(s)) => s.parse::<u64>()
+            .map_err(|e| anyhow!("bad string seed {s:?}: {e}")),
+        Some(v) => {
+            let f = v.as_f64()?;
+            if f < 0.0 || f.fract() != 0.0 {
+                bail!("seed must be a non-negative integer");
+            }
+            if f >= NUM_SEED_LIMIT as f64 {
+                bail!("numeric seed {f} is not exactly representable in \
+                       JSON (>= 2^53); send it as a string: \
+                       \"seed\":\"...\"");
+            }
+            Ok(f as u64)
+        }
+    }
+}
+
+fn seed_to_json(seed: u64) -> Json {
+    if seed < NUM_SEED_LIMIT {
+        Json::Num(seed as f64)
+    } else {
+        Json::Str(seed.to_string())
+    }
+}
+
+fn opt_model(j: &Json) -> Result<Option<String>> {
+    match j.get("model") {
+        None => Ok(None),
+        Some(m) => Ok(Some(m.as_str()?.to_string())),
+    }
+}
+
+fn opt_cond(j: &Json) -> Result<Option<Tensor>> {
+    match j.get("cond") {
+        None => Ok(None),
+        Some(c) => Ok(Some(tensor_from_json(c)?)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request (de)serialization
+// ---------------------------------------------------------------------------
+
+impl Request {
+    /// Parse one JSON line into a request.
+    pub fn parse_line(line: &str) -> Result<Request> {
+        Request::from_json(&Json::parse(line)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request> {
+        let op = j.req("op")?.as_str()?;
+        match op {
+            "sample" => {
+                let n = match j.get("n") {
+                    None => 1,
+                    Some(v) => v.as_usize()?,
+                };
+                if n == 0 || n > MAX_SAMPLES_PER_REQUEST {
+                    bail!("sample n must be in 1..={MAX_SAMPLES_PER_REQUEST}, \
+                           got {n}");
+                }
+                let temperature = match j.get("temperature") {
+                    None => 1.0,
+                    Some(v) => v.as_f64()? as f32,
+                };
+                let seed = parse_seed(j)?;
+                Ok(Request::Sample {
+                    model: opt_model(j)?,
+                    n,
+                    temperature,
+                    seed,
+                    cond: opt_cond(j)?,
+                })
+            }
+            "score" => Ok(Request::Score {
+                model: opt_model(j)?,
+                x: tensor_from_json(j.req("x")?)?,
+                cond: opt_cond(j)?,
+            }),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown op {other:?} \
+                            (sample|score|stats|shutdown)"),
+        }
+    }
+
+    /// Serialize (for clients: tests, the bench harness).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Sample { model, n, temperature, seed, cond } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("sample".into())),
+                    ("n", Json::Num(*n as f64)),
+                    ("temperature", Json::Num(*temperature as f64)),
+                    ("seed", seed_to_json(*seed)),
+                ];
+                if let Some(m) = model {
+                    pairs.push(("model", Json::Str(m.clone())));
+                }
+                if let Some(c) = cond {
+                    pairs.push(("cond", tensor_to_json(c)));
+                }
+                Json::obj(pairs)
+            }
+            Request::Score { model, x, cond } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("score".into())),
+                    ("x", tensor_to_json(x)),
+                ];
+                if let Some(m) = model {
+                    pairs.push(("model", Json::Str(m.clone())));
+                }
+                if let Some(c) = cond {
+                    pairs.push(("cond", tensor_to_json(c)));
+                }
+                Json::obj(pairs)
+            }
+            Request::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
+            Request::Shutdown => {
+                Json::obj(vec![("op", Json::Str("shutdown".into()))])
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Response (de)serialization
+// ---------------------------------------------------------------------------
+
+impl Response {
+    pub fn err(e: impl std::fmt::Display) -> Response {
+        Response::Error { error: format!("{e}") }
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, Response::Error { .. })
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Sample { x } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("sample".into())),
+                ("x", tensor_to_json(x)),
+            ]),
+            Response::Score { log_density } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("score".into())),
+                ("log_density", f32s_to_json(log_density)),
+            ]),
+            Response::Stats(s) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("stats".into())),
+                ("stats", Json::obj(vec![
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("batches", Json::Num(s.batches as f64)),
+                    ("items", Json::Num(s.items as f64)),
+                    ("errors", Json::Num(s.errors as f64)),
+                    ("mean_batch", Json::Num(s.mean_batch)),
+                    ("mean_items", Json::Num(s.mean_items)),
+                    ("p50_us", Json::Num(s.p50_us as f64)),
+                    ("p99_us", Json::Num(s.p99_us as f64)),
+                    ("queue_depth", Json::Num(s.queue_depth as f64)),
+                    ("models", Json::Num(s.models as f64)),
+                ])),
+            ]),
+            Response::Shutdown => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("shutdown".into())),
+            ]),
+            Response::Error { error } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(error.clone())),
+            ]),
+        }
+    }
+
+    /// One wire frame (no trailing newline; the transport adds it).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a response line (for clients: tests, the bench harness).
+    pub fn parse_line(line: &str) -> Result<Response> {
+        let j = Json::parse(line)?;
+        let ok = match j.req("ok")? {
+            Json::Bool(b) => *b,
+            other => bail!("bad ok field {other:?}"),
+        };
+        if !ok {
+            return Ok(Response::Error {
+                error: j.req("error")?.as_str()?.to_string(),
+            });
+        }
+        match j.req("op")?.as_str()? {
+            "sample" => Ok(Response::Sample {
+                x: tensor_from_json(j.req("x")?)?,
+            }),
+            "score" => Ok(Response::Score {
+                log_density: f32s_from_json(j.req("log_density")?)?,
+            }),
+            "shutdown" => Ok(Response::Shutdown),
+            "stats" => {
+                let s = j.req("stats")?;
+                let u = |k: &str| -> Result<u64> {
+                    Ok(s.req(k)?.as_f64()? as u64)
+                };
+                Ok(Response::Stats(StatsSnapshot {
+                    requests: u("requests")?,
+                    batches: u("batches")?,
+                    items: u("items")?,
+                    errors: u("errors")?,
+                    mean_batch: s.req("mean_batch")?.as_f64()?,
+                    mean_items: s.req("mean_items")?.as_f64()?,
+                    p50_us: u("p50_us")?,
+                    p99_us: u("p99_us")?,
+                    queue_depth: u("queue_depth")?,
+                    models: u("models")?,
+                }))
+            }
+            other => Err(anyhow!("unknown response op {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_request_roundtrip_with_defaults() {
+        let r = Request::parse_line(r#"{"op":"sample"}"#).unwrap();
+        assert_eq!(r, Request::Sample {
+            model: None, n: 1, temperature: 1.0, seed: 0, cond: None,
+        });
+        let r = Request::parse_line(
+            r#"{"op":"sample","n":4,"seed":9,"temperature":0.5,"model":"m"}"#,
+        ).unwrap();
+        let back = Request::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn score_request_roundtrip() {
+        let r = Request::parse_line(
+            r#"{"op":"score","x":{"shape":[2,2],"data":[0.1,0.2,0.3,0.4]}}"#,
+        ).unwrap();
+        let Request::Score { x, .. } = &r else { panic!("not score") };
+        assert_eq!(x.shape, vec![2, 2]);
+        assert_eq!(Request::from_json(&r.to_json()).unwrap(), r);
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(Request::parse_line("not json").is_err());
+        assert!(Request::parse_line(r#"{"op":"frobnicate"}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"sample","n":0}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"sample","seed":-1}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"score"}"#).is_err());
+        assert!(Request::parse_line(
+            r#"{"op":"score","x":{"shape":[2,3],"data":[1]}}"#).is_err());
+    }
+
+    #[test]
+    fn seeds_beyond_2_pow_53_travel_as_strings() {
+        // a numeric seed above 2^53 would be silently rounded by f64 —
+        // the parser refuses it and points at the string form
+        let err = Request::parse_line(
+            r#"{"op":"sample","seed":9007199254740993}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("string"), "{err:#}");
+
+        let big = u64::MAX - 12345;
+        let r = Request::Sample {
+            model: None, n: 1, temperature: 1.0, seed: big, cond: None,
+        };
+        let line = r.to_json().to_string();
+        assert!(line.contains(&format!("\"{big}\"")), "{line}");
+        assert_eq!(Request::parse_line(&line).unwrap(), r);
+
+        // small seeds keep the plain numeric form
+        let r = Request::parse_line(r#"{"op":"sample","seed":7}"#).unwrap();
+        let Request::Sample { seed, .. } = r else { panic!() };
+        assert_eq!(seed, 7);
+        assert!(Request::parse_line(
+            r#"{"op":"sample","seed":"not-a-number"}"#).is_err());
+    }
+
+    #[test]
+    fn f32_payloads_survive_the_wire_bit_exactly() {
+        // awkward values: subnormal-ish, many mantissa bits, negatives
+        let xs = vec![0.1f32, -1.0 / 3.0, 1e-38, 123456.789, -0.0,
+                      f32::MIN_POSITIVE, 1.0000001];
+        let t = Tensor::new(vec![7], xs.clone()).unwrap();
+        let line = Response::Sample { x: t }.to_line();
+        let Response::Sample { x } = Response::parse_line(&line).unwrap()
+        else { panic!() };
+        for (a, b) in xs.iter().zip(&x.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn non_finite_scores_cross_as_null() {
+        let line = Response::Score {
+            log_density: vec![1.5, f32::NEG_INFINITY, f32::NAN],
+        }.to_line();
+        assert!(line.contains("null"));
+        let Response::Score { log_density } =
+            Response::parse_line(&line).unwrap() else { panic!() };
+        assert_eq!(log_density[0], 1.5);
+        assert!(log_density[1].is_nan() && log_density[2].is_nan());
+    }
+
+    #[test]
+    fn stats_and_shutdown_roundtrip() {
+        let s = StatsSnapshot {
+            requests: 10, batches: 3, items: 24, errors: 1,
+            mean_batch: 10.0 / 3.0, mean_items: 8.0,
+            p50_us: 120, p99_us: 900, queue_depth: 0, models: 2,
+        };
+        let back = Response::parse_line(&Response::Stats(s.clone()).to_line())
+            .unwrap();
+        assert_eq!(back, Response::Stats(s));
+        assert_eq!(
+            Response::parse_line(&Response::Shutdown.to_line()).unwrap(),
+            Response::Shutdown);
+        let e = Response::err("boom");
+        assert!(Response::parse_line(&e.to_line()).unwrap().is_error());
+    }
+}

@@ -1,0 +1,313 @@
+//! The model registry: loads and caches `(Flow, ParamStore)` pairs from
+//! checkpoint directories, LRU-capped so a long-lived server can front many
+//! checkpoints without holding them all resident.
+//!
+//! A checkpoint directory is what [`crate::flow::ParamStore::save`] writes
+//! (`index.json` + one `.npy` per parameter); its `"network"` field names
+//! the catalog entry, so `--net` never needs repeating at serve time.
+//! Models can be warmed eagerly at startup ([`Registry::register_checkpoint`])
+//! or resolved lazily on first request from a root directory
+//! ([`Registry::with_root`]).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::api::Engine;
+use crate::flow::ParamStore;
+use crate::util::json::Json;
+use crate::Flow;
+
+/// One servable model: an owned flow handle plus its (shared, immutable)
+/// weights. Workers `fork()` the flow per batch so each batched pass is
+/// metered on its own ledger.
+pub struct ServedModel {
+    pub name: String,
+    pub flow: Flow,
+    pub params: Arc<ParamStore>,
+    /// False when the weights are a random init (no checkpoint) — the
+    /// server refuses such models unless explicitly allowed, so a typo'd
+    /// path can't silently serve noise.
+    pub trained: bool,
+}
+
+struct Inner {
+    /// Resident models, keyed by registered name.
+    map: BTreeMap<String, Arc<ServedModel>>,
+    /// LRU order: most recently used at the back.
+    lru: Vec<String>,
+    /// Target of requests with no `"model"`: the first-registered model,
+    /// reassigned to the most recently used survivor if evicted.
+    default_name: Option<String>,
+}
+
+/// LRU-capped model cache over an [`Engine`].
+pub struct Registry {
+    engine: Engine,
+    cap: usize,
+    root: Option<PathBuf>,
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    /// A registry holding at most `cap` resident models (`cap >= 1`).
+    pub fn new(engine: Engine, cap: usize) -> Registry {
+        Registry {
+            engine,
+            cap: cap.max(1),
+            root: None,
+            inner: Mutex::new(Inner {
+                map: BTreeMap::new(),
+                lru: Vec::new(),
+                default_name: None,
+            }),
+        }
+    }
+
+    /// Like [`Registry::new`], additionally resolving cache misses from
+    /// `root`: a request for model `m` tries `root/m` then
+    /// `root/m/checkpoint` as checkpoint directories.
+    pub fn with_root(engine: Engine, cap: usize, root: impl Into<PathBuf>)
+                     -> Registry {
+        let mut r = Registry::new(engine, cap);
+        r.root = Some(root.into());
+        r
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Resident model count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The network name recorded in a checkpoint's `index.json`.
+    pub fn checkpoint_network_name(dir: &Path) -> Result<String> {
+        let text = std::fs::read_to_string(dir.join("index.json"))
+            .with_context(|| format!("reading checkpoint {dir:?}"))?;
+        Ok(Json::parse(&text)?.req("network")?.as_str()?.to_string())
+    }
+
+    /// Load a checkpoint directory into a ready `(Flow, ParamStore)` pair
+    /// — the one checkpoint-loading sequence, shared by the registry and
+    /// the offline CLI paths (`invertnet score`).
+    pub fn load_checkpoint(engine: &Engine, dir: &Path)
+                           -> Result<(Flow, ParamStore)> {
+        let net = Self::checkpoint_network_name(dir)?;
+        let flow = engine.flow(&net)?;
+        // the checkpoint holds every parameter, so the init seed below is
+        // fully overwritten; load() validates names and shapes
+        let mut params = flow.init_params(0)?;
+        params.load(dir)
+            .with_context(|| format!("loading checkpoint {dir:?}"))?;
+        Ok((flow, params))
+    }
+
+    /// Load a checkpoint directory and register it under its network name.
+    pub fn register_checkpoint(&self, dir: &Path) -> Result<Arc<ServedModel>> {
+        let (flow, params) = Self::load_checkpoint(&self.engine, dir)?;
+        self.insert(ServedModel {
+            name: flow.def.name.clone(),
+            flow,
+            params: Arc::new(params),
+            trained: true,
+        })
+    }
+
+    /// Register a random init of catalog network `net` (tests, and the
+    /// explicitly-allowed untrained serving path).
+    pub fn register_untrained(&self, net: &str, seed: u64)
+                              -> Result<Arc<ServedModel>> {
+        let flow = self.engine.flow(net)?;
+        let params = Arc::new(flow.init_params(seed)?);
+        self.insert(ServedModel {
+            name: net.to_string(),
+            flow,
+            params,
+            trained: false,
+        })
+    }
+
+    /// Register a fully-formed model (callers that already hold trained
+    /// weights in memory, e.g. a train-then-serve pipeline or tests).
+    pub fn insert(&self, model: ServedModel) -> Result<Arc<ServedModel>> {
+        let model = Arc::new(model);
+        let mut inner = self.inner.lock().unwrap();
+        let name = model.name.clone();
+        inner.map.insert(name.clone(), model.clone());
+        inner.lru.retain(|n| n != &name);
+        inner.lru.push(name.clone());
+        if inner.default_name.is_none() {
+            inner.default_name = Some(name);
+        }
+        // LRU eviction (never evicts what was just inserted: it is at the
+        // back of the order). If the default model is evicted, the default
+        // passes to the most recently used survivor so requests that omit
+        // `"model"` keep resolving.
+        while inner.map.len() > self.cap {
+            let victim = inner.lru.remove(0);
+            inner.map.remove(&victim);
+            if inner.default_name.as_deref() == Some(victim.as_str()) {
+                inner.default_name = inner.lru.last().cloned();
+            }
+        }
+        Ok(model)
+    }
+
+    /// Look up a model by name (`None` = the default model), touching the
+    /// LRU order. Misses fall back to the lazy root, if configured.
+    pub fn get(&self, name: Option<&str>) -> Result<Arc<ServedModel>> {
+        let wanted: String = {
+            let inner = self.inner.lock().unwrap();
+            match name {
+                Some(n) => n.to_string(),
+                None => match &inner.default_name {
+                    Some(d) => d.clone(),
+                    None => bail!("registry has no models"),
+                },
+            }
+        };
+        if let Some(m) = self.touch(&wanted) {
+            return Ok(m);
+        }
+        // lazy load from the root directory
+        let Some(root) = &self.root else {
+            bail!("model {wanted:?} is not registered");
+        };
+        for dir in [root.join(&wanted), root.join(&wanted).join("checkpoint")] {
+            if dir.join("index.json").is_file() {
+                // verify the name BEFORE registering — a mismatched
+                // checkpoint must not pollute the registry (or become the
+                // default model) on its way to an error
+                let actual = Self::checkpoint_network_name(&dir)?;
+                if actual != wanted {
+                    bail!("checkpoint {dir:?} holds network {actual:?}, \
+                           not {wanted:?}");
+                }
+                return self.register_checkpoint(&dir);
+            }
+        }
+        bail!("model {wanted:?} not registered and no checkpoint under \
+               {root:?}")
+    }
+
+    /// Resident names in LRU order (oldest first) — for `stats`/debugging.
+    pub fn resident(&self) -> Vec<String> {
+        self.inner.lock().unwrap().lru.clone()
+    }
+
+    fn touch(&self, name: &str) -> Option<Arc<ServedModel>> {
+        let mut inner = self.inner.lock().unwrap();
+        let m = inner.map.get(name).cloned()?;
+        inner.lru.retain(|n| n != name);
+        inner.lru.push(name.to_string());
+        Some(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry(cap: usize) -> Registry {
+        Registry::new(Engine::native().unwrap(), cap)
+    }
+
+    #[test]
+    fn default_model_is_first_registered() {
+        let r = registry(4);
+        assert!(r.get(None).is_err());
+        r.register_untrained("realnvp2d", 1).unwrap();
+        r.register_untrained("hint8d", 1).unwrap();
+        assert_eq!(r.get(None).unwrap().name, "realnvp2d");
+        assert_eq!(r.get(Some("hint8d")).unwrap().name, "hint8d");
+        assert!(r.get(Some("nope")).is_err());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let r = registry(2);
+        r.register_untrained("realnvp2d", 1).unwrap();
+        r.register_untrained("hint8d", 1).unwrap();
+        // touch realnvp2d so hint8d is the LRU victim
+        r.get(Some("realnvp2d")).unwrap();
+        r.register_untrained("nice16", 1).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.resident(), vec!["realnvp2d", "nice16"]);
+        assert!(r.get(Some("hint8d")).is_err()); // evicted, no lazy root
+    }
+
+    #[test]
+    fn evicting_the_default_model_reassigns_it() {
+        let r = registry(2);
+        r.register_untrained("realnvp2d", 1).unwrap(); // default
+        r.register_untrained("hint8d", 1).unwrap();
+        r.register_untrained("nice16", 1).unwrap(); // evicts realnvp2d
+        // requests without "model" must keep resolving
+        assert_eq!(r.get(None).unwrap().name, "nice16");
+    }
+
+    #[test]
+    fn mismatched_lazy_checkpoint_does_not_pollute_the_registry() {
+        let root = std::env::temp_dir()
+            .join(format!("reg_badroot_{}", std::process::id()));
+        let engine = Engine::native().unwrap();
+        let flow = engine.flow("realnvp2d").unwrap();
+        let params = flow.init_params(5).unwrap();
+        // dir named "foo" but the checkpoint inside names realnvp2d
+        params.save(&root.join("foo"), "realnvp2d").unwrap();
+
+        let r = Registry::with_root(Engine::native().unwrap(), 2, &root);
+        let err = r.get(Some("foo")).unwrap_err();
+        assert!(format!("{err:#}").contains("realnvp2d"), "{err:#}");
+        // nothing was registered on the way to the error
+        assert!(r.is_empty());
+        assert!(r.get(None).is_err());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_through_registry() {
+        let dir = std::env::temp_dir()
+            .join(format!("reg_ckpt_{}", std::process::id()));
+        let engine = Engine::native().unwrap();
+        let flow = engine.flow("realnvp2d").unwrap();
+        let params = flow.init_params(123).unwrap();
+        params.save(&dir, "realnvp2d").unwrap();
+
+        let r = registry(2);
+        let m = r.register_checkpoint(&dir).unwrap();
+        assert_eq!(m.name, "realnvp2d");
+        assert!(m.trained);
+        for (a, b) in m.params.tensors.iter().flatten()
+            .zip(params.tensors.iter().flatten()) {
+            assert_eq!(a, b, "registry-loaded params differ");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lazy_root_loads_on_miss() {
+        let root = std::env::temp_dir()
+            .join(format!("reg_root_{}", std::process::id()));
+        let engine = Engine::native().unwrap();
+        let flow = engine.flow("hint8d").unwrap();
+        let params = flow.init_params(5).unwrap();
+        // train-loop layout: <root>/<name>/checkpoint
+        params.save(&root.join("hint8d").join("checkpoint"), "hint8d").unwrap();
+
+        let r = Registry::with_root(Engine::native().unwrap(), 2, &root);
+        let m = r.get(Some("hint8d")).unwrap();
+        assert_eq!(m.name, "hint8d");
+        assert!(m.trained);
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

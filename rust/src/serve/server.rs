@@ -1,0 +1,354 @@
+//! The request core: [`Server::handle`] maps one [`Request`] to one
+//! [`Response`], independent of transport. Two fronts wrap it:
+//!
+//! * [`Server::serve_stdio`] — a read-line/write-line loop over any
+//!   `BufRead`/`Write` pair, which is how tests and the CI smoke drive a
+//!   full serving session hermetically;
+//! * [`Server::serve_tcp`] — a JSON-lines loopback TCP listener with one
+//!   lightweight thread per connection.
+//!
+//! Both exit after a `shutdown` request (in-flight work drains first).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Pcg64;
+
+use super::batcher::{BatchConfig, Batcher, Reply, ServeStats, Work};
+use super::protocol::{Request, Response};
+use super::registry::{Registry, ServedModel};
+
+/// Per-request conditioning check, run before a job may enter the batch
+/// queue: a request with a missing/extra/mis-shaped cond fails alone
+/// instead of erroring the whole coalesced pass it would have joined.
+fn check_cond_request(m: &ServedModel, rows: usize, cond: Option<&crate::Tensor>)
+                      -> Result<()> {
+    match (&m.flow.def.cond_shape, cond) {
+        (None, None) => Ok(()),
+        (None, Some(_)) => {
+            anyhow::bail!("network {} takes no cond", m.name)
+        }
+        (Some(_), None) => {
+            anyhow::bail!("network {} requires a cond tensor with {rows} \
+                           row(s)", m.name)
+        }
+        (Some(shape), Some(c)) => {
+            if c.shape.len() != shape.len()
+                || c.shape[1..] != shape[1..]
+                || c.batch() != rows
+            {
+                anyhow::bail!(
+                    "cond shape {:?} does not match network {} cond \
+                     per-sample shape {:?} with {rows} row(s)",
+                    c.shape, m.name, &shape[1..]);
+            }
+            Ok(())
+        }
+    }
+}
+
+/// A long-lived inference service over a model [`Registry`].
+pub struct Server {
+    registry: Arc<Registry>,
+    batcher: Batcher,
+    stats: Arc<ServeStats>,
+    shutdown: AtomicBool,
+    /// Allow serving models whose weights are a random init (off by
+    /// default so a missing checkpoint cannot silently serve noise).
+    allow_untrained: bool,
+}
+
+impl Server {
+    pub fn new(registry: Registry, cfg: BatchConfig) -> Server {
+        let stats = Arc::new(ServeStats::default());
+        Server {
+            registry: Arc::new(registry),
+            batcher: Batcher::new(cfg, stats.clone()),
+            stats,
+            shutdown: AtomicBool::new(false),
+            allow_untrained: false,
+        }
+    }
+
+    /// Opt in to serving untrained (randomly initialized) models.
+    pub fn allow_untrained(mut self) -> Server {
+        self.allow_untrained = true;
+        self
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Relaxed)
+    }
+
+    // ------------------------------------------------------------------
+    // Transport-agnostic core
+    // ------------------------------------------------------------------
+
+    /// Answer one request. Never panics on bad input — protocol and
+    /// execution errors come back as [`Response::Error`].
+    pub fn handle(&self, req: Request) -> Response {
+        match self.try_handle(req) {
+            Ok(resp) => resp,
+            Err(e) => Response::err(format!("{e:#}")),
+        }
+    }
+
+    fn try_handle(&self, req: Request) -> Result<Response> {
+        match req {
+            Request::Sample { model, n, temperature, seed, cond } => {
+                let m = self.model(model.as_deref())?;
+                // validate BEFORE queueing: a bad request must fail alone,
+                // never poison the valid requests it would coalesce with
+                check_cond_request(&m, n, cond.as_ref())?;
+                // each request draws its own latents from its own seed, so
+                // the reply is bit-identical to a direct
+                // `sample_batch(&params, n, cond, T, &mut Pcg64::new(seed))`
+                // no matter what it batches with
+                let latents = m.flow.sample_latents(
+                    n, temperature, &mut Pcg64::new(seed))?;
+                let rx = self.batcher.submit(
+                    m, Work::Sample { latents, cond })?;
+                match rx.recv().context("serve worker hung up")?? {
+                    Reply::Samples(x) => Ok(Response::Sample { x }),
+                    Reply::Scores(_) => unreachable!("sample got scores"),
+                }
+            }
+            Request::Score { model, x, cond } => {
+                let m = self.model(model.as_deref())?;
+                let want = &m.flow.def.in_shape;
+                if x.batch() == 0 {
+                    anyhow::bail!("score x has no rows");
+                }
+                if x.shape.len() != want.len() || x.shape[1..] != want[1..] {
+                    anyhow::bail!(
+                        "score x shape {:?} does not match network {} \
+                         per-sample shape {:?}",
+                        x.shape, m.name, &want[1..]);
+                }
+                check_cond_request(&m, x.batch(), cond.as_ref())?;
+                let rx = self.batcher.submit(m, Work::Score { x, cond })?;
+                match rx.recv().context("serve worker hung up")?? {
+                    Reply::Scores(log_density) => {
+                        Ok(Response::Score { log_density })
+                    }
+                    Reply::Samples(_) => unreachable!("score got samples"),
+                }
+            }
+            Request::Stats => Ok(Response::Stats(self.stats.snapshot(
+                self.batcher.queue_depth() as u64,
+                self.registry.len() as u64,
+            ))),
+            Request::Shutdown => {
+                self.shutdown.store(true, Ordering::Relaxed);
+                Ok(Response::Shutdown)
+            }
+        }
+    }
+
+    fn model(&self, name: Option<&str>)
+             -> Result<Arc<ServedModel>> {
+        let m = self.registry.get(name)?;
+        if !m.trained && !self.allow_untrained {
+            anyhow::bail!(
+                "model {:?} has untrained (randomly initialized) weights; \
+                 load a checkpoint or start the server with untrained \
+                 models explicitly allowed", m.name);
+        }
+        Ok(m)
+    }
+
+    /// Parse-handle-serialize one wire line.
+    pub fn handle_line(&self, line: &str) -> Response {
+        match Request::parse_line(line) {
+            Ok(req) => self.handle(req),
+            Err(e) => Response::err(format!("bad request: {e:#}")),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Fronts
+    // ------------------------------------------------------------------
+
+    /// JSON-lines loop over arbitrary streams (the `--stdio` front; also
+    /// what tests and CI drive). Blank lines are skipped; the loop ends at
+    /// EOF or after answering `shutdown`.
+    pub fn serve_stdio(&self, input: impl BufRead, mut out: impl Write)
+                       -> Result<()> {
+        for line in input.lines() {
+            let line = line.context("reading request line")?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let resp = self.handle_line(&line);
+            writeln!(out, "{}", resp.to_line())?;
+            out.flush()?;
+            if self.is_shutdown() {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Accept loopback JSON-lines connections until some client sends
+    /// `shutdown`. One thread per connection; in-flight connections finish
+    /// their current request before the listener returns.
+    pub fn serve_tcp(&self, listener: TcpListener) -> Result<()> {
+        listener.set_nonblocking(true)
+            .context("listener nonblocking")?;
+        std::thread::scope(|scope| -> Result<()> {
+            loop {
+                if self.is_shutdown() {
+                    return Ok(());
+                }
+                match listener.accept() {
+                    Ok((stream, _addr)) => {
+                        scope.spawn(move || {
+                            if let Err(e) = self.serve_conn(stream) {
+                                eprintln!("serve: connection error: {e:#}");
+                            }
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => return Err(e).context("accept"),
+                }
+            }
+        })
+    }
+
+    /// One JSON-lines TCP session. The read side uses a short timeout so
+    /// idle connections notice a server-wide shutdown and exit instead of
+    /// pinning the listener's scope forever.
+    fn serve_conn(&self, stream: TcpStream) -> Result<()> {
+        stream.set_read_timeout(Some(Duration::from_millis(100)))
+            .context("read timeout")?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        let mut buf = String::new();
+        loop {
+            match reader.read_line(&mut buf) {
+                Ok(0) => return Ok(()), // client closed
+                Ok(_) => {
+                    if !buf.trim().is_empty() {
+                        let resp = self.handle_line(buf.trim_end());
+                        writeln!(writer, "{}", resp.to_line())?;
+                        writer.flush()?;
+                    }
+                    buf.clear();
+                    if self.is_shutdown() {
+                        return Ok(());
+                    }
+                }
+                Err(e) if matches!(e.kind(),
+                                   std::io::ErrorKind::WouldBlock
+                                   | std::io::ErrorKind::TimedOut) => {
+                    // keep any partial line in `buf` and poll shutdown
+                    if self.is_shutdown() {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e).context("reading request"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Engine;
+    use crate::tensor::Tensor;
+
+    fn server() -> Server {
+        let registry = Registry::new(Engine::native().unwrap(), 4);
+        registry.register_untrained("realnvp2d", 3).unwrap();
+        Server::new(registry, BatchConfig {
+            max_delay: Duration::from_micros(200),
+            ..BatchConfig::default()
+        }).allow_untrained()
+    }
+
+    #[test]
+    fn untrained_models_are_refused_by_default() {
+        let registry = Registry::new(Engine::native().unwrap(), 4);
+        registry.register_untrained("realnvp2d", 3).unwrap();
+        let s = Server::new(registry, BatchConfig::default());
+        let resp = s.handle(Request::Sample {
+            model: None, n: 1, temperature: 1.0, seed: 0, cond: None,
+        });
+        let Response::Error { error } = resp else {
+            panic!("expected refusal, got {resp:?}")
+        };
+        assert!(error.contains("untrained"), "{error}");
+    }
+
+    #[test]
+    fn handle_answers_sample_score_stats_shutdown() {
+        let s = server();
+        let Response::Sample { x } = s.handle(Request::Sample {
+            model: None, n: 3, temperature: 1.0, seed: 7, cond: None,
+        }) else { panic!("sample failed") };
+        assert_eq!(x.shape, vec![3, 2]);
+
+        let Response::Score { log_density } = s.handle(Request::Score {
+            model: None, x, cond: None,
+        }) else { panic!("score failed") };
+        assert_eq!(log_density.len(), 3);
+        assert!(log_density.iter().all(|v| v.is_finite()));
+
+        let Response::Stats(snap) = s.handle(Request::Stats) else {
+            panic!("stats failed")
+        };
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.models, 1);
+
+        assert_eq!(s.handle(Request::Shutdown), Response::Shutdown);
+        assert!(s.is_shutdown());
+    }
+
+    #[test]
+    fn bad_lines_become_error_responses_not_crashes() {
+        let s = server();
+        assert!(s.handle_line("{{{").is_error());
+        assert!(s.handle_line(r#"{"op":"warp"}"#).is_error());
+        let resp = s.handle(Request::Score {
+            model: None,
+            x: Tensor::zeros(&[2, 9]), // wrong feature width
+            cond: None,
+        });
+        assert!(resp.is_error(), "{resp:?}");
+    }
+
+    #[test]
+    fn stdio_session_runs_to_shutdown() {
+        let s = server();
+        let session = concat!(
+            r#"{"op":"sample","n":2,"seed":1}"#, "\n",
+            "\n", // blank lines are skipped
+            r#"{"op":"stats"}"#, "\n",
+            r#"{"op":"shutdown"}"#, "\n",
+            r#"{"op":"never-reached"}"#, "\n",
+        );
+        let mut out = Vec::new();
+        s.serve_stdio(session.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        assert!(matches!(Response::parse_line(lines[0]).unwrap(),
+                         Response::Sample { .. }));
+        assert!(matches!(Response::parse_line(lines[1]).unwrap(),
+                         Response::Stats(_)));
+        assert_eq!(Response::parse_line(lines[2]).unwrap(),
+                   Response::Shutdown);
+    }
+}

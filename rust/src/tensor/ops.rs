@@ -61,6 +61,44 @@ pub fn add_assign(dst: &mut Tensor, src: &Tensor) -> Result<()> {
     Ok(())
 }
 
+/// Stack tensors along axis 0 (the serving micro-batcher coalesces
+/// per-request payloads with this). All parts must share per-sample dims;
+/// row-major layout makes this pure memory movement, so row `i` of the
+/// output is bit-identical to the row it came from.
+pub fn concat_rows(parts: &[&Tensor]) -> Result<Tensor> {
+    let Some(first) = parts.first() else {
+        bail!("concat_rows needs at least one part");
+    };
+    let mut n = 0usize;
+    let mut out = Vec::with_capacity(parts.iter().map(|t| t.len()).sum());
+    for t in parts {
+        if t.shape.len() != first.shape.len()
+            || t.shape[1..] != first.shape[1..]
+        {
+            bail!("concat_rows per-sample shape mismatch: {:?} vs {:?}",
+                  t.shape, first.shape);
+        }
+        n += t.batch();
+        out.extend_from_slice(&t.data);
+    }
+    let mut shape = first.shape.clone();
+    shape[0] = n;
+    Tensor::new(shape, out)
+}
+
+/// Rows `[start, start+len)` along axis 0 (inverse of [`concat_rows`]).
+pub fn slice_rows(t: &Tensor, start: usize, len: usize) -> Result<Tensor> {
+    let n = t.batch();
+    if start + len > n {
+        bail!("slice_rows [{start}, {}) out of range {n}", start + len);
+    }
+    let inner = t.inner_len();
+    let mut shape = t.shape.clone();
+    shape[0] = len;
+    Tensor::new(shape,
+                t.data[start * inner..(start + len) * inner].to_vec())
+}
+
 /// Flatten a batch of rows from a bigger tensor: select `idx` rows along
 /// axis 0 (used by the data loader for minibatching).
 pub fn gather_rows(t: &Tensor, idx: &[usize]) -> Result<Tensor> {
@@ -120,6 +158,20 @@ mod tests {
         assert_eq!(a.data, vec![0.0, 2.0, 4.0, 6.0]);
         let c = t(&[4]);
         assert!(add_assign(&mut a, &c).is_err());
+    }
+
+    #[test]
+    fn concat_and_slice_rows_roundtrip() {
+        let a = t(&[2, 3]);
+        let b = t(&[1, 3]);
+        let cat = concat_rows(&[&a, &b]).unwrap();
+        assert_eq!(cat.shape, vec![3, 3]);
+        assert_eq!(slice_rows(&cat, 0, 2).unwrap(), a);
+        assert_eq!(slice_rows(&cat, 2, 1).unwrap(), b);
+        assert!(slice_rows(&cat, 2, 2).is_err());
+        let bad = t(&[2, 4]);
+        assert!(concat_rows(&[&a, &bad]).is_err());
+        assert!(concat_rows(&[]).is_err());
     }
 
     #[test]

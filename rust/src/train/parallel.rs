@@ -42,6 +42,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::api::Flow;
 use crate::coordinator::{ActivationSchedule, StepResult};
 use crate::flow::ParamStore;
+use crate::tensor::ops::slice_rows;
 use crate::tensor::Tensor;
 
 /// Shards minibatches across worker threads with deterministic reduction.
@@ -138,8 +139,9 @@ impl ParallelTrainer {
                     while j < n_micro {
                         let lo = j * mb;
                         let hi = ((j + 1) * mb).min(n);
-                        let xs = slice_rows(x, lo, hi);
-                        let cs = cond.map(|c| slice_rows(c, lo, hi));
+                        let xs = slice_rows(x, lo, hi - lo)?;
+                        let cs = cond.map(|c| slice_rows(c, lo, hi - lo))
+                            .transpose()?;
                         let r = worker_flow
                             .train_step_flex(&xs, cs.as_ref(), params,
                                              schedule, true)?;
@@ -259,15 +261,6 @@ impl ParallelTrainer {
     }
 }
 
-/// Copy rows `[lo, hi)` along axis 0 into an owned tensor (rows are
-/// contiguous in row-major layout).
-fn slice_rows(t: &Tensor, lo: usize, hi: usize) -> Tensor {
-    let inner = t.inner_len();
-    let mut shape = t.shape.clone();
-    shape[0] = hi - lo;
-    Tensor { shape, data: t.data[lo * inner..hi * inner].to_vec() }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,9 +287,10 @@ mod tests {
 
     #[test]
     fn slice_rows_is_contiguous() {
+        // shard slicing rides on the shared tensor::ops::slice_rows
         let t = Tensor::new(vec![4, 2],
                             vec![0., 1., 2., 3., 4., 5., 6., 7.]).unwrap();
-        let s = slice_rows(&t, 1, 3);
+        let s = slice_rows(&t, 1, 2).unwrap();
         assert_eq!(s.shape, vec![2, 2]);
         assert_eq!(s.data, vec![2., 3., 4., 5.]);
     }

@@ -132,7 +132,16 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // bare `inf`/`NaN` is not JSON; null is the standard
+                    // lossy encoding (the serve protocol documents it)
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15
+                    && !(*n == 0.0 && n.is_sign_negative())
+                {
+                    // integral fast path; -0.0 is excluded because casting
+                    // it to i64 would drop the sign and break the serve
+                    // protocol's bit-exact f32 wire contract
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -412,6 +421,24 @@ mod tests {
         let v = Json::parse("[8, 64, 64, 3]").unwrap();
         assert_eq!(v.as_usize_vec().unwrap(), vec![8, 64, 64, 3]);
         assert!(Json::parse("[1.5]").unwrap().as_usize_vec().is_err());
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign() {
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+        let back = Json::parse("-0").unwrap();
+        let Json::Num(v) = back else { panic!("{back:?}") };
+        assert!(v == 0.0 && v.is_sign_negative(), "{v}");
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        let v = Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NEG_INFINITY)]);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(),
+                   Json::Arr(vec![Json::Num(1.0), Json::Null]));
     }
 
     #[test]

@@ -1,0 +1,109 @@
+//! Checkpoint round-trip guarantees: `ParamStore::save`/`load` through
+//! `tensor/npy` must preserve every parameter bit-exactly for every
+//! builtin example network (including the ragged multiscale shapes of
+//! glow16 and the per-node HINT parameter trees), and inference after a
+//! reload must reproduce pre-save results exactly — a served model must
+//! not drift by a ULP across a restart.
+
+mod common;
+
+use invertnet::tensor::ops::slice_rows;
+use invertnet::util::rng::Pcg64;
+
+/// Every layer kind + split topology in the catalog, at test-runnable
+/// sizes (the fig-sweep nets repeat these kinds bigger).
+const NETS: [&str; 6] = ["realnvp2d", "cond_realnvp2d", "hint8d", "glow16",
+                         "hyper16", "nice16"];
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("invertnet_ckpt_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn params_roundtrip_bit_exactly_for_every_builtin_net() {
+    for net in NETS {
+        let flow = common::flow(net);
+        let saved = flow.init_params(31).unwrap();
+        let dir = tmp_dir(net);
+        saved.save(&dir, net).unwrap();
+
+        // start from different weights so the load has to do the work
+        let mut loaded = flow.init_params(99).unwrap();
+        let differs = saved.tensors.iter().flatten()
+            .zip(loaded.tensors.iter().flatten())
+            .any(|(a, b)| a != b);
+        assert!(differs, "{net}: seeds 31 and 99 initialized identically?");
+
+        loaded.load(&dir).unwrap();
+        assert_eq!(saved.num_steps(), loaded.num_steps(), "{net}");
+        for (si, (ts_a, ts_b)) in saved.tensors.iter()
+            .zip(&loaded.tensors).enumerate() {
+            assert_eq!(ts_a.len(), ts_b.len(), "{net} step {si}");
+            for (pi, (a, b)) in ts_a.iter().zip(ts_b).enumerate() {
+                assert_eq!(a.shape, b.shape, "{net} s{si}/p{pi}");
+                for (va, vb) in a.data.iter().zip(&b.data) {
+                    assert_eq!(va.to_bits(), vb.to_bits(),
+                               "{net} s{si}/p{pi}: {va} != {vb}");
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn log_density_is_bit_identical_after_reload() {
+    for net in NETS {
+        let flow = common::flow(net);
+        let params = flow.init_params(31).unwrap();
+        let dir = tmp_dir(&format!("ld_{net}"));
+        params.save(&dir, net).unwrap();
+
+        // a small relaxed batch keeps the image nets fast
+        let (x_full, cond_full) = common::batch_for(&flow, 7);
+        let k = 4.min(x_full.batch());
+        let x = slice_rows(&x_full, 0, k).unwrap();
+        let cond = cond_full.as_ref()
+            .map(|c| slice_rows(c, 0, k).unwrap());
+
+        let before = flow.log_density(&x, cond.as_ref(), &params).unwrap();
+
+        let mut reloaded = flow.init_params(99).unwrap();
+        reloaded.load(&dir).unwrap();
+        let after = flow.log_density(&x, cond.as_ref(), &reloaded).unwrap();
+
+        assert_eq!(before.len(), after.len(), "{net}");
+        for (a, b) in before.iter().zip(&after) {
+            assert!(a.is_finite(), "{net}: non-finite log-density {a}");
+            assert_eq!(a.to_bits(), b.to_bits(),
+                       "{net}: pre-save {a} != post-reload {b}");
+        }
+
+        // sampling is pinned too: same latents, same weights, same bits
+        let s_before = flow.sample_batch(&params, 2, cond.as_ref()
+            .map(|c| slice_rows(c, 0, 2).unwrap()).as_ref(), 1.0,
+            &mut Pcg64::new(12)).unwrap();
+        let s_after = flow.sample_batch(&reloaded, 2, cond.as_ref()
+            .map(|c| slice_rows(c, 0, 2).unwrap()).as_ref(), 1.0,
+            &mut Pcg64::new(12)).unwrap();
+        assert_eq!(s_before, s_after, "{net}: sampling drifted after reload");
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn load_rejects_mismatched_checkpoints() {
+    let flow_a = common::flow("realnvp2d");
+    let params_a = flow_a.init_params(1).unwrap();
+    let dir = tmp_dir("mismatch");
+    params_a.save(&dir, "realnvp2d").unwrap();
+
+    // a different architecture must refuse these tensors
+    let flow_b = common::flow("hint8d");
+    let mut params_b = flow_b.init_params(1).unwrap();
+    assert!(params_b.load(&dir).is_err(),
+            "hint8d accepted a realnvp2d checkpoint");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,325 @@
+//! Integration tests for the `serve/` subsystem.
+//!
+//! The load-bearing contract: **micro-batching is invisible**. A response
+//! produced by a coalesced pass must be bit-identical to a direct
+//! `Flow::sample_batch` / `Flow::log_density` call with the same inputs —
+//! concurrency and batching may only change throughput, never bits.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use invertnet::api::Engine;
+use invertnet::serve::{BatchConfig, Registry, Request, Response, Server};
+use invertnet::tensor::ops::slice_rows;
+use invertnet::util::rng::Pcg64;
+use invertnet::Tensor;
+
+const NET: &str = "realnvp2d";
+const PARAM_SEED: u64 = 3;
+
+fn boot_server(max_batch: usize, delay: Duration, workers: usize) -> Server {
+    let registry = Registry::new(Engine::native().unwrap(), 4);
+    registry.register_untrained(NET, PARAM_SEED).unwrap();
+    Server::new(registry, BatchConfig {
+        max_batch,
+        max_delay: delay,
+        workers,
+        queue_cap: 256,
+    }).allow_untrained()
+}
+
+/// What one client sends in one round, derived only from (client, round) —
+/// so the expected bits can be recomputed independently.
+fn round_inputs(flow: &invertnet::Flow, client: u64, round: u64)
+                -> (u64, usize, f32, Tensor) {
+    let seed = 1000 * client + round;
+    let n = 1 + ((client + round) % 3) as usize;
+    let temperature = [1.0f32, 0.7, 1.3][(round % 3) as usize];
+    let d = flow.def.in_shape[1];
+    let mut rng = Pcg64::new(seed ^ 0xd0_0d);
+    let x = Tensor { shape: vec![n, d], data: rng.normal_vec(n * d) };
+    (seed, n, temperature, x)
+}
+
+/// The acceptance-criterion test: >= 4 concurrent TCP clients interleaving
+/// `sample` and `score`, every response bit-identical to a direct
+/// in-process call on an independent engine.
+#[test]
+fn tcp_four_concurrent_clients_get_bit_identical_answers() {
+    let server = boot_server(8, Duration::from_micros(400), 2);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = Arc::new(server);
+
+    // reference results come from a *separate* engine: same catalog, same
+    // param seed -> same weights
+    let ref_flow = common::flow(NET);
+    let ref_params = ref_flow.init_params(PARAM_SEED).unwrap();
+
+    std::thread::scope(|scope| {
+        let srv = server.clone();
+        let acceptor = scope.spawn(move || srv.serve_tcp(listener).unwrap());
+
+        let clients: Vec<_> = (0..4u64).map(|client| {
+            let ref_flow = &ref_flow;
+            let ref_params = &ref_params;
+            scope.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                for round in 0..5u64 {
+                    let (seed, n, temperature, x) =
+                        round_inputs(ref_flow, client, round);
+
+                    // sample, then recompute the same draw directly
+                    let req = Request::Sample {
+                        model: None, n, temperature, seed, cond: None,
+                    };
+                    writeln!(writer, "{}", req.to_json().to_string()).unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let Response::Sample { x: got } =
+                        Response::parse_line(line.trim()).unwrap()
+                    else { panic!("client {client}: {line}") };
+                    let want = ref_flow.sample_batch(
+                        ref_params, n, None, temperature,
+                        &mut Pcg64::new(seed)).unwrap();
+                    assert_eq!(got.shape, want.shape);
+                    for (a, b) in got.data.iter().zip(&want.data) {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "client {client} round {round}: sample \
+                                    {a} != direct {b}");
+                    }
+
+                    // score, same deal
+                    let req = Request::Score {
+                        model: None, x: x.clone(), cond: None,
+                    };
+                    writeln!(writer, "{}", req.to_json().to_string()).unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let Response::Score { log_density } =
+                        Response::parse_line(line.trim()).unwrap()
+                    else { panic!("client {client}: {line}") };
+                    let want =
+                        ref_flow.log_density(&x, None, ref_params).unwrap();
+                    assert_eq!(log_density.len(), want.len());
+                    for (a, b) in log_density.iter().zip(&want) {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "client {client} round {round}: score \
+                                    {a} != direct {b}");
+                    }
+                }
+            })
+        }).collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+
+        // stats reflect the traffic; then shut the listener down
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writeln!(writer, "{}", Request::Stats.to_json().to_string()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let Response::Stats(snap) = Response::parse_line(line.trim()).unwrap()
+        else { panic!("{line}") };
+        assert_eq!(snap.requests, 4 * 5 * 2, "{snap:?}");
+        assert!(snap.batches >= 1 && snap.batches <= snap.requests);
+        assert_eq!(snap.errors, 0, "{snap:?}");
+
+        writeln!(writer, "{}",
+                 Request::Shutdown.to_json().to_string()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(Response::parse_line(line.trim()).unwrap(),
+                   Response::Shutdown);
+        acceptor.join().unwrap();
+    });
+}
+
+/// A complete scripted stdio session: sample + score + stats + shutdown
+/// (the same script CI pipes through `invertnet serve --stdio`).
+#[test]
+fn stdio_scripted_session() {
+    let server = boot_server(8, Duration::from_micros(200), 2);
+    let session = concat!(
+        r#"{"op":"sample","n":2,"seed":5,"temperature":0.8}"#, "\n",
+        r#"{"op":"score","x":{"shape":[2,2],"data":[0.1,-0.2,1.5,0.3]}}"#,
+        "\n",
+        r#"{"op":"stats"}"#, "\n",
+        r#"{"op":"shutdown"}"#, "\n",
+    );
+    let mut out = Vec::new();
+    server.serve_stdio(session.as_bytes(), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let responses: Vec<Response> = text.lines()
+        .map(|l| Response::parse_line(l).unwrap())
+        .collect();
+    assert_eq!(responses.len(), 4, "{text}");
+    let Response::Sample { x } = &responses[0] else { panic!("{text}") };
+    assert_eq!(x.shape, vec![2, 2]);
+    let Response::Score { log_density } = &responses[1] else {
+        panic!("{text}")
+    };
+    assert!(log_density.iter().all(|v| v.is_finite()), "{log_density:?}");
+    let Response::Stats(snap) = &responses[2] else { panic!("{text}") };
+    assert_eq!(snap.requests, 2);
+    assert_eq!(responses[3], Response::Shutdown);
+}
+
+/// Satellite property test, pinned for every servable builtin network:
+/// `log_density(sample(z; T=1))` is finite, and scoring a batch equals
+/// scoring each item alone, bit-exactly — micro-batching cannot change
+/// results.
+#[test]
+fn log_density_finite_and_batching_exact_on_all_builtin_nets() {
+    // the example nets cover every layer kind + ragged multiscale latents;
+    // the fig-sweep nets repeat the same kinds at sizes too slow for CI
+    let nets = ["realnvp2d", "cond_realnvp2d", "hint8d", "glow16",
+                "hyper16", "nice16", "glow_bench32"];
+    for net in nets {
+        let flow = common::flow(net);
+        let params = flow.init_params(17).unwrap();
+        let k = 3usize;
+        let mut rng = Pcg64::new(99);
+        let cond = flow.def.cond_shape.as_ref().map(|s| {
+            let inner: usize = s[1..].iter().product();
+            let mut shape = s.clone();
+            shape[0] = k;
+            Tensor { shape, data: rng.normal_vec(k * inner) }
+        });
+
+        let x = flow.sample_batch(&params, k, cond.as_ref(), 1.0, &mut rng)
+            .unwrap_or_else(|e| panic!("{net}: sample_batch: {e:#}"));
+        assert_eq!(x.shape[0], k, "{net}");
+        assert_eq!(x.shape[1..], flow.def.in_shape[1..], "{net}");
+
+        let batched = flow.log_density(&x, cond.as_ref(), &params)
+            .unwrap_or_else(|e| panic!("{net}: log_density: {e:#}"));
+        assert_eq!(batched.len(), k, "{net}");
+        assert!(batched.iter().all(|v| v.is_finite()),
+                "{net}: non-finite log-density {batched:?}");
+
+        for i in 0..k {
+            let xi = slice_rows(&x, i, 1).unwrap();
+            let ci = cond.as_ref().map(|c| slice_rows(c, i, 1).unwrap());
+            let solo = flow.log_density(&xi, ci.as_ref(), &params).unwrap();
+            assert_eq!(solo.len(), 1);
+            assert_eq!(solo[0].to_bits(), batched[i].to_bits(),
+                       "{net} row {i}: solo {} != batched {}",
+                       solo[0], batched[i]);
+        }
+    }
+}
+
+/// Temperature scales the latent draw: T=0 collapses to the mode path,
+/// and the T=1 draw matches the canonical `sample` bit-for-bit.
+#[test]
+fn sample_temperature_contract() {
+    let flow = common::flow(NET);
+    let params = flow.init_params(PARAM_SEED).unwrap();
+
+    let canon = flow.sample(&params, None, &mut Pcg64::new(8)).unwrap();
+    let via_batch = flow.sample_batch(&params, flow.batch(), None, 1.0,
+                                      &mut Pcg64::new(8)).unwrap();
+    assert_eq!(canon, via_batch, "T=1 canonical-batch draw must be exact");
+
+    // T=0: all latents are zero -> every sample row is the same mode point
+    let x0 = flow.sample_batch(&params, 4, None, 0.0,
+                               &mut Pcg64::new(8)).unwrap();
+    let row0 = slice_rows(&x0, 0, 1).unwrap();
+    for i in 1..4 {
+        assert_eq!(slice_rows(&x0, i, 1).unwrap().data, row0.data,
+                   "T=0 rows must be identical");
+    }
+    assert!(flow.sample_batch(&params, 2, None, f32::NAN,
+                              &mut Pcg64::new(8)).is_err());
+    assert!(flow.sample_batch(&params, 0, None, 1.0,
+                              &mut Pcg64::new(8)).is_err());
+}
+
+/// Bounded-queue backpressure under a burst: nothing is lost, nothing
+/// deadlocks — submissions just wait their turn.
+#[test]
+fn burst_through_tiny_queue_loses_nothing() {
+    let server = Arc::new(boot_server(4, Duration::from_micros(100), 1));
+    let flow = common::flow(NET);
+    let params = flow.init_params(PARAM_SEED).unwrap();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4u64).map(|client| {
+            let server = server.clone();
+            let flow = &flow;
+            let params = &params;
+            scope.spawn(move || {
+                for round in 0..8u64 {
+                    let (seed, n, temperature, _x) =
+                        round_inputs(flow, client, round);
+                    let Response::Sample { x } = server.handle(
+                        Request::Sample {
+                            model: None, n, temperature, seed, cond: None,
+                        }) else { panic!("sample failed") };
+                    let want = flow.sample_batch(
+                        params, n, None, temperature,
+                        &mut Pcg64::new(seed)).unwrap();
+                    assert_eq!(x, want, "client {client} round {round}");
+                }
+            })
+        }).collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let Response::Stats(snap) = server.handle(Request::Stats) else {
+        panic!()
+    };
+    assert_eq!(snap.requests, 32, "{snap:?}");
+    assert_eq!(snap.errors, 0, "{snap:?}");
+}
+
+/// Conditional serving: cond rows ride along with each request and are
+/// coalesced with the batch.
+#[test]
+fn conditional_sample_and_score_through_the_server() {
+    let registry = Registry::new(Engine::native().unwrap(), 4);
+    registry.register_untrained("cond_realnvp2d", PARAM_SEED).unwrap();
+    let server = Server::new(registry, BatchConfig {
+        max_delay: Duration::from_micros(200),
+        ..BatchConfig::default()
+    }).allow_untrained();
+
+    let flow = common::flow("cond_realnvp2d");
+    let params = flow.init_params(PARAM_SEED).unwrap();
+    let n = 2usize;
+    let dc: usize = flow.def.cond_shape.as_ref().unwrap()[1..]
+        .iter().product();
+    let mut rng = Pcg64::new(21);
+    let cond = Tensor { shape: vec![n, dc], data: rng.normal_vec(n * dc) };
+
+    let Response::Sample { x } = server.handle(Request::Sample {
+        model: None, n, temperature: 1.0, seed: 77,
+        cond: Some(cond.clone()),
+    }) else { panic!("cond sample failed") };
+    let want = flow.sample_batch(&params, n, Some(&cond), 1.0,
+                                 &mut Pcg64::new(77)).unwrap();
+    assert_eq!(x, want);
+
+    let Response::Score { log_density } = server.handle(Request::Score {
+        model: None, x: x.clone(), cond: Some(cond.clone()),
+    }) else { panic!("cond score failed") };
+    let want = flow.log_density(&x, Some(&cond), &params).unwrap();
+    for (a, b) in log_density.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // a missing cond is a clean per-request error
+    let resp = server.handle(Request::Sample {
+        model: None, n: 1, temperature: 1.0, seed: 1, cond: None,
+    });
+    assert!(resp.is_error(), "{resp:?}");
+}
