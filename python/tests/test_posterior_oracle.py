@@ -1,0 +1,197 @@
+"""Numpy mirrors for the rust posterior subsystem's analytic contracts.
+
+Three things are pinned here, numpy-only (no jax import):
+
+1. the PCG64 (XSL-RR 128/64, splitmix-seeded) reference streams that
+   ``rust/tests/data_determinism.rs`` asserts — computed with python's
+   arbitrary-precision integers, so the two implementations are checked
+   against each other through shared constants;
+2. ``data::LinearGaussian::posterior``: the hand-rolled 2x2 closed form in
+   rust/src/data/mod.rs against numpy's generic linear-algebra solution
+   Sigma = inv(A^T A / s^2 + I), mu = Sigma A^T y / s^2;
+3. the SBC rank-uniformity + coverage contract behind
+   ``posterior::analysis::calibrate``: ranks of theta* among draws from
+   the TRUE posterior are uniform, and central credible intervals hit
+   nominal coverage — the property the rust oracle test relies on.
+"""
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+MASK128 = (1 << 128) - 1
+PCG_MUL = 0x2360ED051FC65DA44385DF649FCCF645
+
+# shared with rust/tests/data_determinism.rs — the same table, verbatim
+PCG_STREAMS = {
+    0: [0x906D4ECA56ED8AE5, 0xE4A474DC21387F33,
+        0x9EFD931A70AE01DD, 0x87A81634D5E319BB],
+    1: [0x6D47425BCBABC14D, 0xEC400D71D0B112F5,
+        0xB1575561E45B957E, 0x0A47D6678A408530],
+    42: [0x1C8A598CB5CDE4DF, 0x370266B610066177,
+         0x9C11B2EAD90B8E58, 0x0549FF73553B7CF1],
+}
+
+
+def _splitmix(x):
+    x = (x + 0x9E3779B97F4A7C15) & MASK64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & MASK64
+    return x ^ (x >> 31)
+
+
+class Pcg64:
+    """Integer-exact mirror of rust/src/util/rng.rs (generation only)."""
+
+    def __init__(self, seed):
+        s0 = _splitmix(seed)
+        s1 = _splitmix(s0)
+        s2 = _splitmix(s1)
+        s3 = _splitmix(s2)
+        self.state = ((s0 << 64) | s1) & MASK128
+        self.inc = (((s2 << 64) | s3) | 1) & MASK128
+        self.next_u64()  # the rust constructor burns one output
+
+    def next_u64(self):
+        self.state = (self.state * PCG_MUL + self.inc) & MASK128
+        rot = (self.state >> 122) & 0x3F
+        xsl = ((self.state >> 64) ^ self.state) & MASK64
+        return ((xsl >> rot) | (xsl << ((64 - rot) & 63))) & MASK64
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+def test_pcg64_reference_streams_match_the_pinned_table():
+    for seed, want in PCG_STREAMS.items():
+        rng = Pcg64(seed)
+        got = [rng.next_u64() for _ in want]
+        assert got == want, f"seed {seed}: {[hex(v) for v in got]}"
+
+
+def test_pcg64_uniform_values_match_the_rust_test():
+    # rust/tests/data_determinism.rs pins these exact f64s for seed 42;
+    # (u >> 11) * 2^-53 is exact, so equality holds bit-for-bit
+    rng = Pcg64(42)
+    want = [0.11148605046565008, 0.2148803896416438,
+            0.6096450637206045, 0.02066036763902257]
+    got = [rng.uniform() for _ in want]
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# LinearGaussian::posterior mirror
+# ---------------------------------------------------------------------------
+
+def rust_posterior(a, sigma, y):
+    """Literal transcription of LinearGaussian::posterior (2x2 inverse)."""
+    s2 = sigma * sigma
+    p = [[0.0, 0.0], [0.0, 0.0]]
+    for i in range(2):
+        for j in range(2):
+            for k in range(2):
+                p[i][j] += a[k][i] * a[k][j] / s2
+        p[i][i] += 1.0
+    det = p[0][0] * p[1][1] - p[0][1] * p[1][0]
+    cov = [[p[1][1] / det, -p[0][1] / det],
+           [-p[1][0] / det, p[0][0] / det]]
+    aty = [(a[0][0] * y[0] + a[1][0] * y[1]) / s2,
+           (a[0][1] * y[0] + a[1][1] * y[1]) / s2]
+    mu = [cov[0][0] * aty[0] + cov[0][1] * aty[1],
+          cov[1][0] * aty[0] + cov[1][1] * aty[1]]
+    return np.array(mu), np.array(cov)
+
+
+def numpy_posterior(a, sigma, y):
+    a = np.asarray(a, dtype=np.float64)
+    prec = a.T @ a / sigma**2 + np.eye(2)
+    cov = np.linalg.inv(prec)
+    mu = cov @ a.T @ np.asarray(y, dtype=np.float64) / sigma**2
+    return mu, cov
+
+
+def test_linear_gaussian_posterior_matches_numpy_linear_algebra():
+    rng = np.random.default_rng(0)
+    cases = [([[1.0, 0.6], [0.0, 0.8]], 0.5, [0.7, -0.4])]  # the default
+    for _ in range(200):
+        a = rng.standard_normal((2, 2))
+        # keep A well-conditioned enough that inv() is trustworthy
+        if abs(np.linalg.det(a)) < 1e-2:
+            continue
+        cases.append((a.tolist(), float(0.1 + rng.random()),
+                      rng.standard_normal(2).tolist()))
+    for a, sigma, y in cases:
+        mu_r, cov_r = rust_posterior(a, sigma, y)
+        mu_n, cov_n = numpy_posterior(a, sigma, y)
+        assert np.allclose(mu_r, mu_n, rtol=1e-10, atol=1e-12), (a, sigma, y)
+        assert np.allclose(cov_r, cov_n, rtol=1e-10, atol=1e-12), (a, sigma, y)
+        # posterior covariance is symmetric positive definite and smaller
+        # than the prior (observing y can only shrink uncertainty)
+        assert cov_n[0, 1] == cov_n[1, 0] or np.isclose(cov_n[0, 1],
+                                                        cov_n[1, 0])
+        assert np.all(np.linalg.eigvalsh(cov_n) > 0)
+        assert np.all(np.linalg.eigvalsh(cov_n) <= 1.0 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# SBC machinery mirror
+# ---------------------------------------------------------------------------
+
+A_DEFAULT = np.array([[1.0, 0.6], [0.0, 0.8]])
+SIGMA_DEFAULT = 0.5
+
+
+def test_sbc_ranks_from_the_true_posterior_are_uniform():
+    """The contract rust's calibrate() holds trained flows to: an exactly
+    calibrated sampler gives uniform ranks and nominal coverage."""
+    rng = np.random.default_rng(99)
+    # 127 draws keep the finite-sample coverage bias of the interpolated
+    # central interval small (~0.011; it is ~0.028 at 63 draws)
+    datasets, draws, bins, level = 256, 127, 8, 0.9
+    ranks = np.zeros((2, datasets), dtype=int)
+    inside = np.zeros(2)
+    for d in range(datasets):
+        theta = rng.standard_normal(2)
+        y = A_DEFAULT @ theta + rng.standard_normal(2) * SIGMA_DEFAULT
+        mu, cov = numpy_posterior(A_DEFAULT, SIGMA_DEFAULT, y)
+        draws_ = rng.multivariate_normal(mu, cov, size=draws)
+        for dim in range(2):
+            ranks[dim, d] = int((draws_[:, dim] < theta[dim]).sum())
+            lo, hi = np.quantile(draws_[:, dim],
+                                 [(1 - level) / 2, 1 - (1 - level) / 2])
+            inside[dim] += lo <= theta[dim] <= hi
+    crit = 24.32  # chi2(df=7) upper tail at alpha = 0.001
+    for dim in range(2):
+        counts = np.bincount(ranks[dim] * bins // (draws + 1),
+                             minlength=bins)
+        expect = datasets / bins
+        chi2 = float(((counts - expect) ** 2 / expect).sum())
+        assert chi2 < crit, f"dim {dim}: chi2 {chi2}"
+        coverage = inside[dim] / datasets
+        assert abs(coverage - level) < 0.08, f"dim {dim}: {coverage}"
+
+
+def test_wilson_hilferty_crit_matches_tables():
+    """Mirror of posterior::analysis::chi2_crit (same approximation)."""
+
+    import math
+
+    def inv_norm(p):
+        # bisection on the erf-based normal CDF (no scipy dependency)
+        lo, hi = -10.0, 10.0
+        for _ in range(200):
+            mid = (lo + hi) / 2
+            if 0.5 * (1 + math.erf(mid / math.sqrt(2))) < p:
+                lo = mid
+            else:
+                hi = mid
+        return (lo + hi) / 2
+
+    def chi2_crit(df, alpha):
+        z = inv_norm(1 - alpha)
+        t = 1 - 2 / (9 * df) + z * np.sqrt(2 / (9 * df))
+        return df * t**3
+
+    # textbook upper-tail values
+    assert abs(chi2_crit(7, 0.05) - 14.07) < 0.2
+    assert abs(chi2_crit(7, 0.001) - 24.32) < 0.5
+    assert abs(chi2_crit(9, 0.05) - 16.92) < 0.2

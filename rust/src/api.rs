@@ -219,26 +219,41 @@ impl Flow {
         self.backend.name()
     }
 
-    /// Human-readable step table (the `invertnet inspect` payload).
+    /// Human-readable step table (the `invertnet inspect` payload): the
+    /// network-level input/cond shapes, then per layer its kind, shapes,
+    /// conditioning input (`-` for unconditioned layers) and parameter
+    /// count — the numbers that make conditional nets debuggable.
     pub fn inspect(&self) -> Result<String> {
         use std::fmt::Write as _;
         let def = &self.def;
         let mut out = String::new();
-        writeln!(out, "network {}: input {:?}, cond {:?}",
-                 def.name, def.in_shape, def.cond_shape).ok();
+        match &def.cond_shape {
+            Some(c) => writeln!(
+                out, "network {}: input {:?}, cond {:?} (conditional)",
+                def.name, def.in_shape, c).ok(),
+            None => writeln!(out, "network {}: input {:?}, cond None",
+                             def.name, def.in_shape).ok(),
+        };
         let mut total_params = 0usize;
         for (i, s) in def.steps.iter().enumerate() {
-            let (kind, nparams) = match s.kind {
-                StepKind::Split { zc } => (format!("split(zc={zc})"), 0),
+            let (kind, cond, nparams) = match s.kind {
+                StepKind::Split { zc } => {
+                    (format!("split(zc={zc})"), "-".to_string(), 0)
+                }
                 StepKind::Layer => {
                     let m = self.manifest.layer(&s.sig)?;
-                    (m.kind.clone(), m.param_count())
+                    let cond = match &m.cond_shape {
+                        Some(c) => format!("{c:?}"),
+                        None => "-".to_string(),
+                    };
+                    (m.kind.clone(), cond, m.param_count())
                 }
             };
             total_params += nparams;
             writeln!(
                 out,
-                "  [{i:>3}] {kind:<12} {:>18} -> {:<18} {:>9} params   {}",
+                "  [{i:>3}] {kind:<12} {:>18} -> {:<18} cond {cond:<14} \
+                 {:>9} params   {}",
                 format!("{:?}", s.in_shape),
                 format!("{:?}", s.out_shape),
                 nparams,
@@ -309,5 +324,17 @@ mod tests {
         assert!(table.contains("glow16"));
         assert!(table.contains("split(zc=6)"));
         assert!(table.contains("total params:"));
+    }
+
+    #[test]
+    fn inspect_shows_per_layer_conditioning() {
+        let engine = Engine::native().unwrap();
+        let table = engine.flow("cond_lingauss2d").unwrap().inspect().unwrap();
+        assert!(table.contains("(conditional)"), "{table}");
+        assert!(table.contains("cond [128, 2]"), "{table}");
+        assert!(table.contains("condcpl"), "{table}");
+        let table = engine.flow("realnvp2d").unwrap().inspect().unwrap();
+        assert!(table.contains("cond None"), "{table}");
+        assert!(table.contains("cond -"), "{table}");
     }
 }

@@ -28,10 +28,13 @@ use crate::api::Engine;
 use crate::backend::RefBackend;
 use crate::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
 use crate::data::{synth_images, Density2d, LinearGaussian};
+use crate::posterior::analysis::{self, chi2_crit};
+use crate::posterior::{amortized_train, calibrate, posterior_samples,
+                       summarize, PosteriorTrainConfig, Simulator};
 use crate::serve::{BatchConfig, Registry, Server};
 use crate::tensor::npy;
-use crate::tensor::ops::slice_rows;
-use crate::train::{train, Adam, GradClip, TrainConfig};
+use crate::tensor::ops::{concat_rows, slice_rows};
+use crate::train::{bits_per_dim, train, Adam, GradClip, TrainConfig};
 use crate::util::bench::fmt_bytes;
 use crate::util::cli::Args;
 use crate::util::rng::Pcg64;
@@ -44,8 +47,22 @@ USAGE:
   invertnet train   --net NAME [--data two-moons|eight-gaussians|checkerboard|spiral|images|linear-gaussian]
                     [--steps N] [--lr F] [--mode invertible|stored|checkpoint:K] [--seed N]
                     [--threads N] [--microbatch N] [--out DIR] [--clip F] [--log-every N] [--quiet]
+                    [--eval-every N] [--eval-batches B]
   invertnet sample  --net NAME [--ckpt DIR] [--out FILE.npy] [--batches N] [--seed N]
                     [--temperature F]
+  invertnet posterior-train
+                    --sim linear-gaussian|denoise|deblur|inpaint [--net NAME]
+                    [--steps N] [--lr F] [--seed N] [--out DIR] [--eval-every N]
+                    [--eval-batches B] [--threads N] [--microbatch N] [--mode M]
+                    [--clip F] [--log-every N] [--quiet]
+  invertnet posterior-sample
+                    --ckpt DIR --y V1,V2,... | --y-file FILE.npy
+                    [--n N] [--temperature F] [--seed N] [--level F]
+                    [--out FILE.npy] [--net NAME] [--allow-untrained]
+  invertnet calibrate
+                    --ckpt DIR --sim NAME [--datasets N] [--draws N] [--bins N]
+                    [--level F] [--alpha F] [--tol F] [--seed N] [--check]
+                    [--net NAME] [--allow-untrained]
   invertnet serve   --ckpt DIR | --net NAME --allow-untrained
                     [--port P | --stdio] [--max-batch N] [--max-delay-us U]
                     [--workers N] [--queue-cap N] [--models N] [--root DIR]
@@ -55,6 +72,26 @@ USAGE:
   invertnet inspect --net NAME
   invertnet profile --net NAME [--iters N]
   invertnet list
+
+AMORTIZED POSTERIOR INFERENCE:
+  --sim NAME          synthetic inverse problem streaming (x, y) training
+                      pairs: linear-gaussian (closed-form oracle), denoise,
+                      deblur, inpaint (over 4x4 textured-blob fields);
+                      each has a matching builtin conditional net
+                      (cond_lingauss2d, cond_denoise16, ...)
+  --eval-every N      score a held-out eval split every N steps; the mean
+                      NLL lands in metrics.csv as eval_nll (default 50;
+                      0 disables — note the split consumes --eval-batches
+                      draws from the data stream before training starts)
+  --eval-batches B    eval-split size, in canonical batches (default 1;
+                      0 disables the eval split)
+  --y V1,V2,...       one observation row for posterior-sample (or
+                      --y-file FILE.npy with a single row)
+  --datasets/--draws  SBC datasets and posterior draws per dataset for
+                      calibrate (defaults 128 / 63)
+  --check             make calibrate exit non-zero when the SBC chi-square
+                      rejects at --alpha or coverage misses --level by
+                      more than --tol
 
 SERVING (see README for the JSON-lines protocol):
   --ckpt DIR          checkpoint directory written by `train --out` (DIR is
@@ -87,6 +124,9 @@ pub fn run(argv: &[String]) -> Result<()> {
     match args.subcommand.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("sample") => cmd_sample(&args),
+        Some("posterior-train") => cmd_posterior_train(&args),
+        Some("posterior-sample") => cmd_posterior_sample(&args),
+        Some("calibrate") => cmd_calibrate(&args),
         Some("serve") => cmd_serve(&args),
         Some("score") => cmd_score(&args),
         Some("bench") => cmd_bench(&args),
@@ -158,6 +198,23 @@ fn schedule_of(args: &Args) -> Result<Arc<dyn ActivationSchedule>> {
     }
 }
 
+/// `--microbatch N` (0 / absent = one shard per worker).
+fn microbatch_of(args: &Args) -> Result<Option<usize>> {
+    Ok(match args.usize_or("microbatch", 0)? {
+        0 => None,
+        mb => Some(mb),
+    })
+}
+
+/// "  eval_nll X (Y b/d)" suffix for the final training summary line.
+fn eval_note(report: &crate::train::TrainReport, dims: usize) -> String {
+    match report.eval_nll {
+        Some(nll) => format!("  eval_nll {nll:.4} ({:.3} b/d)",
+                             bits_per_dim(nll, dims)),
+        None => String::new(),
+    }
+}
+
 /// Pick a sensible default data source for a network's input shape.
 fn default_data(in_shape: &[usize], cond: bool) -> &'static str {
     if cond {
@@ -222,11 +279,32 @@ fn cmd_train(args: &Args) -> Result<()> {
     let data = args
         .get("data")
         .unwrap_or(default_data(&flow.def.in_shape, cond));
-    let next = batcher(data, flow.def.in_shape.clone(), cond, seed)?;
+    let mut next = batcher(data, flow.def.in_shape.clone(), cond, seed)?;
 
-    let microbatch = match args.usize_or("microbatch", 0)? {
-        0 => None,
-        mb => Some(mb),
+    let microbatch = microbatch_of(args)?;
+    // hold out an eval split up front (drawn from the same stream, before
+    // any training batch) so metrics.csv carries the eval_nll signal
+    let eval_every = args.usize_or("eval-every", 50)?;
+    let eval_batches = args.usize_or("eval-batches", 1)?;
+    let eval_set = if eval_every > 0 && eval_batches > 0 {
+        let mut xs = Vec::with_capacity(eval_batches);
+        let mut cs = Vec::with_capacity(eval_batches);
+        for _ in 0..eval_batches {
+            let (x, c) = next(0)?;
+            xs.push(x);
+            if let Some(c) = c {
+                cs.push(c);
+            }
+        }
+        let x = concat_rows(&xs.iter().collect::<Vec<_>>())?;
+        let c = if cs.is_empty() {
+            None
+        } else {
+            Some(concat_rows(&cs.iter().collect::<Vec<_>>())?)
+        };
+        Some((x, c))
+    } else {
+        None
     };
     let cfg = TrainConfig {
         steps: args.usize_or("steps", 200)?,
@@ -237,6 +315,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         quiet: args.flag("quiet"),
         threads: engine.default_threads(),
         microbatch,
+        eval_set,
+        eval_every,
     };
 
     eprintln!(
@@ -250,8 +330,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let report = train(&flow, &mut params, &mut opt, &cfg, next)?;
     println!(
-        "final_loss {:.4}  peak_sched {}  {:.2} steps/s",
+        "final_loss {:.4}{}  peak_sched {}  {:.2} steps/s",
         report.final_loss,
+        eval_note(&report, flow.def.dims_per_sample()),
         fmt_bytes(report.peak_sched_bytes as u64),
         report.steps_per_sec
     );
@@ -289,6 +370,160 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let out = args.str_or("out", "samples.npy");
     npy::save(Path::new(out), &Tensor::new(shape, all)?)?;
     println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_posterior_train(args: &Args) -> Result<()> {
+    let engine = engine_of(args)?;
+    let sim = Simulator::parse(args.str_or("sim", "linear-gaussian"))?;
+    let net = args.get("net").unwrap_or_else(|| sim.default_net());
+    let flow = engine.flow(net)?;
+    let seed = args.u64_or("seed", 42)?;
+    let mut params = flow.init_params(seed)?;
+    let microbatch = microbatch_of(args)?;
+    let cfg = PosteriorTrainConfig {
+        steps: args.usize_or("steps", 500)?,
+        lr: args.f64_or("lr", 3e-3)? as f32,
+        seed,
+        eval_every: args.usize_or("eval-every", 50)?,
+        eval_batches: args.usize_or("eval-batches", 1)?,
+        schedule: schedule_of(args)?,
+        clip: Some(GradClip { max_norm: args.f64_or("clip", 50.0)? as f32 }),
+        log_every: args.usize_or("log-every", 50)?,
+        out_dir: args.get("out").map(PathBuf::from),
+        quiet: args.flag("quiet"),
+        threads: engine.default_threads(),
+        microbatch,
+    };
+    eprintln!(
+        "amortized posterior training: {net} ({} params) on simulator {} \
+         (x dim {}, y dim {}), {} steps, backend {}",
+        params.param_count(), sim.name(), sim.x_dim(), sim.y_dim(),
+        cfg.steps, flow.backend_name());
+    let report = amortized_train(&flow, &mut params, &sim, &cfg)?;
+    println!("final_loss {:.4}{}  {:.2} steps/s",
+             report.final_loss,
+             eval_note(&report, flow.def.dims_per_sample()),
+             report.steps_per_sec);
+    Ok(())
+}
+
+/// Parse the observation row: `--y v1,v2,...` or `--y-file FILE.npy`
+/// (flattened; a (1, d) file and a (d,) file both work).
+fn observation_of(args: &Args) -> Result<Vec<f32>> {
+    // same contract as the serve protocol's posterior op: a non-empty,
+    // all-finite observation row (a NaN here would otherwise surface
+    // later as a misleading "model diverged" error)
+    let finite = |y: Vec<f32>, what: &str| -> Result<Vec<f32>> {
+        if y.is_empty() {
+            bail!("{what} needs at least one component");
+        }
+        if let Some(bad) = y.iter().find(|v| !v.is_finite()) {
+            bail!("{what} must be finite, got {bad}");
+        }
+        Ok(y)
+    };
+    if let Some(spec) = args.get("y") {
+        let y = spec.split(',')
+            .map(|v| v.trim().parse::<f32>()
+                 .map_err(|e| anyhow!("--y component {v:?}: {e}")))
+            .collect::<Result<_>>()?;
+        return finite(y, "--y");
+    }
+    if let Some(path) = args.get("y-file") {
+        let t = npy::load(Path::new(path))?;
+        if t.batch() != 1 && t.shape.len() > 1 {
+            bail!("--y-file {path} holds {} rows; posterior-sample takes \
+                   one observation", t.batch());
+        }
+        return finite(t.data, "--y-file");
+    }
+    bail!("posterior-sample needs --y V1,V2,... or --y-file FILE.npy")
+}
+
+fn cmd_posterior_sample(args: &Args) -> Result<()> {
+    let engine = engine_of(args)?;
+    let (flow, params) = serving_weights(args, &engine, "posterior-sample")?;
+    if flow.def.cond_shape.is_none() {
+        bail!("network {} takes no cond — posterior sampling needs a \
+               conditional (amortized) flow", flow.def.name);
+    }
+    let y = observation_of(args)?;
+    let n = args.usize_or("n", 256)?;
+    let temperature = args.f64_or("temperature", 1.0)? as f32;
+    let seed = args.u64_or("seed", 42)?;
+    let level = args.f64_or("level", 0.9)?;
+
+    let samples = posterior_samples(&flow, &params, &y, n, temperature, seed)?;
+    let s = summarize(&samples);
+    let (lo, hi) = analysis::central_interval(&samples, level)?;
+
+    println!("posterior p(x | y) from {} ({} draws, seed {seed}):",
+             flow.def.name, n);
+    println!("{:>5} {:>12} {:>12} {:>12} {:>12}",
+             "dim", "mean", "std", format!("q{:.1}", 50.0 * (1.0 - level)),
+             format!("q{:.1}", 100.0 - 50.0 * (1.0 - level)));
+    for d in 0..s.mean.len() {
+        println!("{d:>5} {:>12.5} {:>12.5} {:>12.5} {:>12.5}",
+                 s.mean[d], s.std[d], lo[d], hi[d]);
+    }
+    let out = args.str_or("out", "posterior_samples.npy");
+    npy::save(Path::new(out), &samples)?;
+    println!("wrote {n} posterior samples -> {out}");
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let engine = engine_of(args)?;
+    let (flow, params) = serving_weights(args, &engine, "calibrate")?;
+    let sim = Simulator::parse(args.req("sim")?)?;
+    crate::posterior::trainer::check_sim_matches_flow(&sim, &flow)?;
+
+    let datasets = args.usize_or("datasets", 128)?;
+    let draws = args.usize_or("draws", 63)?;
+    let bins = args.usize_or("bins", 8)?;
+    let level = args.f64_or("level", 0.9)?;
+    let alpha = args.f64_or("alpha", 1e-3)?;
+    if !(alpha > 0.0 && alpha < 1.0) {
+        bail!("--alpha must be in (0, 1), got {alpha}");
+    }
+    let tol = args.f64_or("tol", 0.1)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    let mut rng = Pcg64::new(seed ^ 0xca11_b7a7);
+    let cal = calibrate(&sim, datasets, draws, level, bins, &mut rng,
+                        |y, l, r| {
+        let cond = analysis::tile_observation(y, l)?;
+        flow.sample_batch(&params, l, Some(&cond), 1.0, r)
+    })?;
+
+    let crit = chi2_crit(cal.df(), alpha);
+    println!("calibration of {} on {} ({datasets} datasets x {draws} \
+              draws, {bins} bins):", flow.def.name, sim.name());
+    println!("{:>5} {:>12} {:>12} {:>12} {:>10}",
+             "dim", "sbc_chi2", format!("crit@{alpha}"), "coverage",
+             format!("target{level}"));
+    let mut ok = true;
+    for d in 0..cal.chi2.len() {
+        let pass = cal.chi2[d] <= crit
+            && (cal.coverage[d] - level).abs() <= tol;
+        ok &= pass;
+        println!("{d:>5} {:>12.3} {:>12.3} {:>12.3} {:>10}",
+                 cal.chi2[d], crit, cal.coverage[d],
+                 if pass { "ok" } else { "MISS" });
+    }
+    // machine-readable line for CI
+    println!(
+        "CALIB {{\"sim\":\"{}\",\"net\":\"{}\",\"worst_chi2\":{:.4},\
+         \"chi2_crit\":{:.4},\"worst_coverage_gap\":{:.4},\"tol\":{tol},\
+         \"pass\":{ok}}}",
+        sim.name(), flow.def.name, cal.worst_chi2(), crit,
+        cal.worst_coverage_gap());
+    if args.flag("check") && !ok {
+        bail!("calibration check failed: worst chi2 {:.3} (crit {crit:.3}), \
+               worst coverage gap {:.3} (tol {tol})",
+              cal.worst_chi2(), cal.worst_coverage_gap());
+    }
     Ok(())
 }
 
@@ -452,13 +687,18 @@ fn cmd_list(args: &Args) -> Result<()> {
     let engine = engine_of(args)?;
     println!("manifest: {}   backend: {}",
              engine.manifest().backend, engine.backend_name());
-    println!("{:<24} {:>18} {:>7} {:>9}", "network", "input", "depth", "params");
+    println!("{:<24} {:>18} {:>12} {:>7} {:>9}",
+             "network", "input", "cond", "depth", "params");
     let names: Vec<String> = engine.manifest().networks.keys().cloned().collect();
     for name in names {
         let flow = engine.flow(&name)?;
         let params = flow.def.param_count(engine.manifest())?;
+        let cond = match &flow.def.cond_shape {
+            Some(c) => format!("{c:?}"),
+            None => "-".to_string(),
+        };
         println!(
-            "{name:<24} {:>18} {:>7} {:>9}",
+            "{name:<24} {:>18} {cond:>12} {:>7} {:>9}",
             format!("{:?}", flow.def.in_shape),
             flow.def.depth(),
             params
@@ -578,6 +818,68 @@ mod tests {
         assert_eq!(scores.shape, vec![5]);
         assert!(scores.data.iter().all(|v| v.is_finite()));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn posterior_sample_runs_untrained_with_opt_in() {
+        let dir = std::env::temp_dir()
+            .join(format!("invertnet_postsmp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("post.npy");
+        run(&argv(&["posterior-sample", "--net", "cond_lingauss2d",
+                    "--allow-untrained", "--y", "0.7,-0.4", "--n", "12",
+                    "--out", out.to_str().unwrap()])).unwrap();
+        let t = npy::load(&out).unwrap();
+        assert_eq!(t.shape, vec![12, 2]);
+        assert!(t.data.iter().all(|v| v.is_finite()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn posterior_sample_needs_an_observation_and_a_conditional_net() {
+        let err = run(&argv(&["posterior-sample", "--net", "cond_lingauss2d",
+                              "--allow-untrained"])).unwrap_err();
+        assert!(err.to_string().contains("--y"), "{err:#}");
+        let err = run(&argv(&["posterior-sample", "--net", "realnvp2d",
+                              "--allow-untrained", "--y", "0.1,0.2"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("no cond"), "{err:#}");
+        // a NaN observation is a CLI error, not "model diverged" later
+        let err = run(&argv(&["posterior-sample", "--net", "cond_lingauss2d",
+                              "--allow-untrained", "--y", "nan,0.4"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("finite"), "{err:#}");
+    }
+
+    #[test]
+    fn calibrate_runs_and_validates_inputs() {
+        // calibrate on an (explicitly allowed) untrained flow reports
+        // without erroring...
+        run(&argv(&["calibrate", "--net", "cond_lingauss2d",
+                    "--allow-untrained", "--sim", "linear-gaussian",
+                    "--datasets", "24", "--draws", "15", "--bins", "4"]))
+            .unwrap();
+        // ...but a sim/net mismatch is always an error
+        let err = run(&argv(&["calibrate", "--net", "cond_lingauss2d",
+                              "--allow-untrained", "--sim", "denoise",
+                              "--datasets", "4", "--draws", "7"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{err:#}");
+        let err = run(&argv(&["calibrate", "--net", "cond_lingauss2d",
+                              "--allow-untrained"])).unwrap_err();
+        assert!(err.to_string().contains("--sim"), "{err:#}");
+        // bad alpha is a CLI error, never a panic deep in chi2_crit
+        let err = run(&argv(&["calibrate", "--net", "cond_lingauss2d",
+                              "--allow-untrained", "--sim", "linear-gaussian",
+                              "--alpha", "0"])).unwrap_err();
+        assert!(err.to_string().contains("--alpha"), "{err:#}");
+    }
+
+    #[test]
+    fn posterior_train_validates_sim_names() {
+        let err = run(&argv(&["posterior-train", "--sim", "warp"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown simulator"), "{err:#}");
     }
 
     #[test]

@@ -152,6 +152,27 @@ impl LinearGaussian {
          Tensor { shape: vec![n, 2], data: ys })
     }
 
+    /// Draw `n` exact posterior samples theta ~ p(theta | y) via the
+    /// closed form: mu + L eps with L the Cholesky factor of Sigma_post.
+    /// This is the exactly-calibrated reference sampler the posterior
+    /// subsystem's SBC/coverage diagnostics are validated against.
+    pub fn sample_posterior(&self, y: [f64; 2], n: usize, rng: &mut Pcg64)
+                            -> Tensor {
+        let (mu, cov) = self.posterior(y);
+        // 2x2 lower Cholesky of the (SPD) posterior covariance
+        let l00 = cov[0][0].sqrt();
+        let l10 = cov[1][0] / l00;
+        let l11 = (cov[1][1] - l10 * l10).sqrt();
+        let mut data = Vec::with_capacity(n * 2);
+        for _ in 0..n {
+            let e0 = rng.normal();
+            let e1 = rng.normal();
+            data.push((mu[0] + l00 * e0) as f32);
+            data.push((mu[1] + l10 * e0 + l11 * e1) as f32);
+        }
+        Tensor { shape: vec![n, 2], data }
+    }
+
     /// Analytic posterior (mu, Sigma) for one observation y.
     pub fn posterior(&self, y: [f64; 2]) -> ([f64; 2], [[f64; 2]; 2]) {
         let a = self.a;
@@ -249,5 +270,39 @@ mod tests {
         assert!((emp[0] - mu[0]).abs() < 0.15, "{emp:?} vs {mu:?}");
         assert!((emp[1] - mu[1]).abs() < 0.15, "{emp:?} vs {mu:?}");
         assert!(cov[0][0] > 0.0 && cov[1][1] > 0.0);
+    }
+
+    #[test]
+    fn exact_posterior_sampler_has_the_analytic_moments() {
+        let prob = LinearGaussian::default_problem();
+        let y = [0.9, -0.3];
+        let (mu, cov) = prob.posterior(y);
+        let mut rng = Pcg64::new(13);
+        let t = prob.sample_posterior(y, 40_000, &mut rng);
+        assert_eq!(t.shape, vec![40_000, 2]);
+        let n = 40_000f64;
+        let mut m = [0.0f64; 2];
+        for p in t.data.chunks(2) {
+            m[0] += p[0] as f64;
+            m[1] += p[1] as f64;
+        }
+        m[0] /= n;
+        m[1] /= n;
+        let mut c = [[0.0f64; 2]; 2];
+        for p in t.data.chunks(2) {
+            let d = [p[0] as f64 - m[0], p[1] as f64 - m[1]];
+            for i in 0..2 {
+                for j in 0..2 {
+                    c[i][j] += d[i] * d[j] / n;
+                }
+            }
+        }
+        for i in 0..2 {
+            assert!((m[i] - mu[i]).abs() < 0.02, "mean {m:?} vs {mu:?}");
+            for j in 0..2 {
+                assert!((c[i][j] - cov[i][j]).abs() < 0.02,
+                        "cov {c:?} vs {cov:?}");
+            }
+        }
     }
 }

@@ -40,10 +40,17 @@
 //!   CLI), synthetic workloads, per-entry profiler, figure reproductions.
 //! * [`serve`] — the batched inference-serving subsystem: a checkpoint
 //!   [`serve::Registry`] (LRU model cache), a micro-batching scheduler
-//!   that coalesces concurrent `sample`/`score` requests into one batched
-//!   pass (bit-identical to direct [`api::Flow::sample_batch`] /
-//!   [`api::Flow::log_density`] calls), and JSON-lines TCP/stdio fronts
+//!   that coalesces concurrent `sample`/`score`/`posterior` requests into
+//!   one batched pass (bit-identical to direct [`api::Flow::sample_batch`]
+//!   / [`api::Flow::log_density`] calls), and JSON-lines TCP/stdio fronts
 //!   (`invertnet serve`, `invertnet score`).
+//! * [`posterior`] — amortized Bayesian inference: a simulator catalog of
+//!   synthetic inverse problems ([`posterior::Simulator`]), the amortized
+//!   training driver ([`posterior::amortized_train`]), posterior
+//!   sampling + uncertainty maps, and calibration diagnostics (SBC rank
+//!   statistics, credible-interval coverage) validated against the
+//!   closed-form [`data::LinearGaussian`] posterior (`invertnet
+//!   posterior-train`, `posterior-sample`, `calibrate`).
 //!
 //! ## Quickstart
 //!
@@ -88,6 +95,7 @@ pub mod bench_figs;
 pub mod coordinator;
 pub mod data;
 pub mod flow;
+pub mod posterior;
 pub mod profile;
 pub mod runtime;
 pub mod serve;

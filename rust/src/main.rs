@@ -4,8 +4,12 @@
 //! ```text
 //! invertnet train   --net realnvp2d --data two-moons --steps 500
 //!                   [--mode invertible|stored|checkpoint:K]
-//!                   [--threads N] [--microbatch N]
+//!                   [--threads N] [--microbatch N] [--eval-every N]
 //! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
+//! invertnet posterior-train  --sim linear-gaussian --out runs/post
+//! invertnet posterior-sample --ckpt runs/post/checkpoint --y 0.7,-0.4 --n 256
+//! invertnet calibrate        --ckpt runs/post/checkpoint --sim linear-gaussian
+//!                            [--datasets 128] [--draws 63] [--check]
 //! invertnet serve   --ckpt runs/x/checkpoint [--port 7878 | --stdio]
 //!                   [--max-batch 8] [--max-delay-us 500] [--workers 2]
 //! invertnet score   --ckpt runs/x/checkpoint --data x.npy --out scores.npy

@@ -1,0 +1,487 @@
+//! Posterior sampling, uncertainty maps and calibration diagnostics.
+//!
+//! Everything here consumes a *trained conditional flow* as an amortized
+//! posterior sampler: tile one observation y across a conditioning batch,
+//! transport latent draws through the inverse, and summarize the resulting
+//! sample cloud. The two calibration diagnostics are the standard ones for
+//! simulation-based inference:
+//!
+//! * **SBC rank statistics** (Talts et al. 2018): draw (x*, y) from the
+//!   simulator, rank x* among L posterior draws given y; a calibrated
+//!   sampler produces uniform ranks, checked with a chi-square test;
+//! * **credible-interval coverage**: the central `level` interval of the
+//!   posterior draws should contain x* a `level` fraction of the time.
+//!
+//! On [`crate::data::LinearGaussian`] the whole pipeline is validated
+//! against the closed-form posterior (`tests/posterior.rs`).
+//!
+//! The serve-side `posterior` op follows the exact same path —
+//! [`tile_observation`], latents from `Pcg64::new(seed)`, a batched
+//! inverse, [`summarize`] — so its replies are bit-identical to
+//! [`posterior_samples`] + [`summarize`] called in-process.
+
+use anyhow::{bail, Result};
+
+use crate::api::Flow;
+use crate::flow::ParamStore;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+use super::simulator::Simulator;
+
+/// Tile one observation row into an (n, len(y)) conditioning tensor.
+pub fn tile_observation(y: &[f32], n: usize) -> Result<Tensor> {
+    if y.is_empty() {
+        bail!("observation y is empty");
+    }
+    if n == 0 {
+        bail!("need n >= 1 posterior samples");
+    }
+    let mut data = Vec::with_capacity(n * y.len());
+    for _ in 0..n {
+        data.extend_from_slice(y);
+    }
+    Tensor::new(vec![n, y.len()], data)
+}
+
+/// Draw `n` posterior samples x ~ p(x | y) from an amortized conditional
+/// flow. Latents come from `Pcg64::new(seed)`, which is the generator the
+/// serve-side `posterior` op uses — both paths return bit-identical
+/// samples for the same (y, n, temperature, seed).
+pub fn posterior_samples(
+    flow: &Flow,
+    params: &ParamStore,
+    y: &[f32],
+    n: usize,
+    temperature: f32,
+    seed: u64,
+) -> Result<Tensor> {
+    let cond = tile_observation(y, n)?;
+    flow.sample_batch(params, n, Some(&cond), temperature,
+                      &mut Pcg64::new(seed))
+}
+
+/// Pointwise posterior summary over a sample cloud: per-dimension mean
+/// and (unbiased) standard-deviation maps — the paper's "uncertainty
+/// image" for imaging problems.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PosteriorSummary {
+    /// Samples the summary was computed from.
+    pub n: usize,
+    /// Per-dimension posterior mean (the point estimate).
+    pub mean: Vec<f32>,
+    /// Per-dimension posterior std (the uncertainty map); zeros for n = 1.
+    pub std: Vec<f32>,
+}
+
+/// Per-column f64 means of an (n, d...) tensor, accumulated row-major in
+/// a fixed order — deterministic (equal input bits give equal output
+/// bits), which the serve-side bit-identity contract relies on.
+fn column_means(samples: &Tensor) -> Vec<f64> {
+    let n = samples.batch();
+    let d = samples.inner_len();
+    let mut mean = vec![0.0f64; d];
+    for row in samples.data.chunks(d) {
+        for (m, &v) in mean.iter_mut().zip(row) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n.max(1) as f64;
+    }
+    mean
+}
+
+/// Column-wise mean/std of an (n, d...) sample tensor (see
+/// [`column_means`] for the determinism contract).
+pub fn summarize(samples: &Tensor) -> PosteriorSummary {
+    let n = samples.batch();
+    let d = samples.inner_len();
+    let mean = column_means(samples);
+    let mut var = vec![0.0f64; d];
+    if n > 1 {
+        for row in samples.data.chunks(d) {
+            for ((s, &v), m) in var.iter_mut().zip(row).zip(&mean) {
+                let dv = v as f64 - m;
+                *s += dv * dv;
+            }
+        }
+        for s in &mut var {
+            *s = (*s / (n - 1) as f64).sqrt();
+        }
+    }
+    PosteriorSummary {
+        n,
+        mean: mean.iter().map(|&m| m as f32).collect(),
+        std: var.iter().map(|&s| s as f32).collect(),
+    }
+}
+
+/// Per-dimension quantiles at `probs` (linear interpolation between order
+/// statistics, numpy's default scheme). Returns one row per prob, each of
+/// `samples.inner_len()` values.
+pub fn quantiles(samples: &Tensor, probs: &[f64]) -> Result<Vec<Vec<f32>>> {
+    let n = samples.batch();
+    let d = samples.inner_len();
+    if n == 0 {
+        bail!("quantiles need at least one sample");
+    }
+    for &p in probs {
+        if !(0.0..=1.0).contains(&p) {
+            bail!("quantile prob {p} outside [0, 1]");
+        }
+    }
+    // a diverged flow can emit NaN/inf samples; that is a data condition,
+    // not a programming error — report it instead of panicking mid-sort
+    if let Some(bad) = samples.data.iter().find(|v| !v.is_finite()) {
+        bail!("samples contain a non-finite value ({bad}); the model \
+               likely diverged");
+    }
+    let mut out = vec![vec![0.0f32; d]; probs.len()];
+    let mut col = vec![0.0f32; n];
+    for j in 0..d {
+        for (i, c) in col.iter_mut().enumerate() {
+            *c = samples.data[i * d + j];
+        }
+        col.sort_unstable_by(f32::total_cmp);
+        for (pi, &p) in probs.iter().enumerate() {
+            let pos = p * (n - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            let frac = pos - lo as f64;
+            out[pi][j] = (col[lo] as f64 * (1.0 - frac)
+                          + col[hi] as f64 * frac) as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// Central credible interval at `level` (e.g. 0.9 -> the [5%, 95%]
+/// quantile band), per dimension: returns (lo, hi) maps.
+pub fn central_interval(samples: &Tensor, level: f64)
+                        -> Result<(Vec<f32>, Vec<f32>)> {
+    if !(0.0..1.0).contains(&level) || level <= 0.0 {
+        bail!("credible level must be in (0, 1), got {level}");
+    }
+    let a = (1.0 - level) / 2.0;
+    let qs = quantiles(samples, &[a, 1.0 - a])?;
+    let mut it = qs.into_iter();
+    Ok((it.next().unwrap(), it.next().unwrap()))
+}
+
+/// Sample mean vector and covariance matrix (f64; unbiased), for
+/// validating against [`crate::data::LinearGaussian::posterior`].
+pub fn sample_mean_cov(samples: &Tensor) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let n = samples.batch();
+    let d = samples.inner_len();
+    let mu = column_means(samples);
+    let mut cov = vec![vec![0.0f64; d]; d];
+    if n > 1 {
+        for row in samples.data.chunks(d) {
+            for i in 0..d {
+                let di = row[i] as f64 - mu[i];
+                for j in 0..d {
+                    cov[i][j] += di * (row[j] as f64 - mu[j]);
+                }
+            }
+        }
+        for r in &mut cov {
+            for v in r.iter_mut() {
+                *v /= (n - 1) as f64;
+            }
+        }
+    }
+    (mu, cov)
+}
+
+/// Calibration diagnostics for an amortized posterior sampler.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub datasets: usize,
+    /// Posterior draws per dataset; ranks take values 0..=draws.
+    pub draws: usize,
+    /// Histogram bins for the chi-square uniformity test.
+    pub bins: usize,
+    /// Credible level the coverage was measured at.
+    pub level: f64,
+    /// `ranks[dim][dataset]`: rank of the true x among the draws.
+    pub ranks: Vec<Vec<usize>>,
+    /// Chi-square uniformity statistic per dimension (df = bins - 1).
+    pub chi2: Vec<f64>,
+    /// Fraction of datasets whose truth fell inside the central `level`
+    /// interval, per dimension.
+    pub coverage: Vec<f64>,
+}
+
+impl Calibration {
+    /// Degrees of freedom of the per-dimension chi-square statistics.
+    pub fn df(&self) -> usize {
+        self.bins.saturating_sub(1)
+    }
+
+    pub fn worst_chi2(&self) -> f64 {
+        self.chi2.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Largest |coverage - level| across dimensions.
+    pub fn worst_coverage_gap(&self) -> f64 {
+        self.coverage.iter()
+            .map(|c| (c - self.level).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Run SBC + coverage against `sim`. `post(y, draws, rng)` must return a
+/// `(draws, x_dim)` tensor of posterior samples for observation row `y` —
+/// pass a closure over a trained flow, or over the analytic oracle to
+/// validate the diagnostics themselves.
+pub fn calibrate(
+    sim: &Simulator,
+    datasets: usize,
+    draws: usize,
+    level: f64,
+    bins: usize,
+    rng: &mut Pcg64,
+    mut post: impl FnMut(&[f32], usize, &mut Pcg64) -> Result<Tensor>,
+) -> Result<Calibration> {
+    if datasets == 0 || draws == 0 {
+        bail!("calibrate needs datasets >= 1 and draws >= 1");
+    }
+    if bins < 2 || bins > draws + 1 {
+        bail!("bins must be in 2..=draws+1 (got bins {bins}, draws {draws})");
+    }
+    let d = sim.x_dim();
+    let mut ranks = vec![Vec::with_capacity(datasets); d];
+    let mut inside = vec![0usize; d];
+    for _ in 0..datasets {
+        let (truth, y) = sim.sample_pairs(1, rng)?;
+        let samples = post(&y.data, draws, rng)?;
+        if samples.batch() != draws || samples.inner_len() != d {
+            bail!("posterior sampler returned shape {:?}, want ({draws}, {d})",
+                  samples.shape);
+        }
+        let (lo, hi) = central_interval(&samples, level)?;
+        for dim in 0..d {
+            let t = truth.data[dim];
+            let r = (0..draws)
+                .filter(|&i| samples.data[i * d + dim] < t)
+                .count();
+            ranks[dim].push(r);
+            if lo[dim] <= t && t <= hi[dim] {
+                inside[dim] += 1;
+            }
+        }
+    }
+    let chi2 = ranks.iter()
+        .map(|r| chi_square_uniform(r, draws, bins))
+        .collect();
+    let coverage = inside.iter()
+        .map(|&c| c as f64 / datasets as f64)
+        .collect();
+    Ok(Calibration { datasets, draws, bins, level, ranks, chi2, coverage })
+}
+
+/// Chi-square statistic for uniformity of SBC ranks (values 0..=draws)
+/// over `bins` bins. Under a calibrated sampler this is approximately
+/// chi-square with `bins - 1` degrees of freedom.
+///
+/// When `bins` does not divide `draws + 1` the rank-value bins have
+/// unequal widths, so each bin's expected count is proportional to the
+/// number of rank values it covers — a flat `n / bins` expectation would
+/// inflate the statistic for a perfectly calibrated sampler.
+pub fn chi_square_uniform(ranks: &[usize], draws: usize, bins: usize) -> f64 {
+    let values = draws + 1;
+    let mut counts = vec![0usize; bins];
+    for &r in ranks {
+        counts[(r * bins / values).min(bins - 1)] += 1;
+    }
+    let mut width = vec![0usize; bins];
+    for v in 0..values {
+        width[(v * bins / values).min(bins - 1)] += 1;
+    }
+    let n = ranks.len() as f64;
+    counts.iter().zip(&width)
+        .map(|(&c, &w)| {
+            if w == 0 {
+                // only reachable for bins > draws + 1; such a bin can
+                // hold no ranks either, so it contributes nothing
+                0.0
+            } else {
+                let e = n * w as f64 / values as f64;
+                let d = c as f64 - e;
+                d * d / e
+            }
+        })
+        .sum()
+}
+
+/// Upper-tail chi-square critical value via the Wilson–Hilferty cube
+/// approximation (good to ~1% for df >= 3, plenty for pass/fail
+/// calibration gates).
+pub fn chi2_crit(df: usize, alpha: f64) -> f64 {
+    let df = df.max(1) as f64;
+    // clamp extreme significance levels: 1.0 - 1e-20 rounds to exactly
+    // 1.0 in f64, which would trip inv_norm_cdf's open-interval domain
+    let alpha = alpha.clamp(1e-12, 1.0 - 1e-12);
+    let z = inv_norm_cdf(1.0 - alpha);
+    let t = 1.0 - 2.0 / (9.0 * df) + z * (2.0 / (9.0 * df)).sqrt();
+    df * t * t * t
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation, max
+/// relative error ~1.15e-9).
+pub fn inv_norm_cdf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "inv_norm_cdf needs p in (0, 1), got {p}");
+    const A: [f64; 6] = [-3.969683028665376e+01, 2.209460984245205e+02,
+                         -2.759285104469687e+02, 1.383577518672690e+02,
+                         -3.066479806614716e+01, 2.506628277459239e+00];
+    const B: [f64; 5] = [-5.447609879822406e+01, 1.615858368580409e+02,
+                         -1.556989798598866e+02, 6.680131188771972e+01,
+                         -1.328068155288572e+01];
+    const C: [f64; 6] = [-7.784894002430293e-03, -3.223964580411365e-01,
+                         -2.400758277161838e+00, -2.549732539343734e+00,
+                         4.374664141464968e+00, 2.938163982698783e+00];
+    const D: [f64; 4] = [7.784695709041462e-03, 3.224671290700398e-01,
+                         2.445134137142996e+00, 3.754408661907416e+00];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5])
+            * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r
+               + 1.0)
+    } else {
+        -inv_norm_cdf(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cloud(rows: &[[f32; 2]]) -> Tensor {
+        Tensor::new(vec![rows.len(), 2],
+                    rows.iter().flatten().copied().collect()).unwrap()
+    }
+
+    #[test]
+    fn tile_repeats_the_observation() {
+        let t = tile_observation(&[1.0, -2.0], 3).unwrap();
+        assert_eq!(t.shape, vec![3, 2]);
+        assert_eq!(t.data, vec![1.0, -2.0, 1.0, -2.0, 1.0, -2.0]);
+        assert!(tile_observation(&[], 3).is_err());
+        assert!(tile_observation(&[1.0], 0).is_err());
+    }
+
+    #[test]
+    fn summarize_mean_and_std() {
+        let s = summarize(&cloud(&[[0.0, 1.0], [2.0, 1.0], [4.0, 1.0]]));
+        assert_eq!(s.n, 3);
+        assert_eq!(s.mean, vec![2.0, 1.0]);
+        assert!((s.std[0] - 2.0).abs() < 1e-6); // unbiased: var 4
+        assert_eq!(s.std[1], 0.0);
+        // n = 1: std map is all zeros, not NaN
+        let s = summarize(&cloud(&[[5.0, -1.0]]));
+        assert_eq!(s.std, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn quantiles_interpolate_linearly() {
+        let t = Tensor::new(vec![5, 1], vec![4.0, 0.0, 2.0, 1.0, 3.0]).unwrap();
+        let q = quantiles(&t, &[0.0, 0.5, 1.0, 0.25]).unwrap();
+        assert_eq!(q[0], vec![0.0]);
+        assert_eq!(q[1], vec![2.0]);
+        assert_eq!(q[2], vec![4.0]);
+        assert_eq!(q[3], vec![1.0]);
+        assert!(quantiles(&t, &[1.5]).is_err());
+        let (lo, hi) = central_interval(&t, 0.5).unwrap();
+        assert_eq!((lo[0], hi[0]), (1.0, 3.0));
+        assert!(central_interval(&t, 1.0).is_err());
+    }
+
+    #[test]
+    fn non_finite_samples_error_instead_of_panicking() {
+        // a diverged flow's NaN must surface as Err, not a sort panic
+        let t = Tensor::new(vec![3, 1], vec![1.0, f32::NAN, 2.0]).unwrap();
+        let err = quantiles(&t, &[0.5]).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+        assert!(central_interval(&t, 0.9).is_err());
+    }
+
+    #[test]
+    fn mean_cov_matches_hand_computation() {
+        let (mu, cov) = sample_mean_cov(&cloud(
+            &[[1.0, 0.0], [3.0, 4.0], [2.0, 2.0]]));
+        assert!((mu[0] - 2.0).abs() < 1e-12);
+        assert!((mu[1] - 2.0).abs() < 1e-12);
+        assert!((cov[0][0] - 1.0).abs() < 1e-9);
+        assert!((cov[1][1] - 4.0).abs() < 1e-9);
+        assert!((cov[0][1] - 2.0).abs() < 1e-9);
+        assert_eq!(cov[0][1], cov[1][0]);
+    }
+
+    #[test]
+    fn chi_square_flags_nonuniform_ranks() {
+        // perfectly uniform ranks over 0..=63 -> statistic 0
+        let uniform: Vec<usize> = (0..64).collect();
+        assert!(chi_square_uniform(&uniform, 63, 8) < 1e-9);
+        // all mass in one bin -> huge statistic
+        let spike = vec![0usize; 64];
+        assert!(chi_square_uniform(&spike, 63, 8) > 100.0);
+    }
+
+    #[test]
+    fn chi_square_handles_unequal_bin_widths() {
+        // draws = 8 -> 9 rank values over 8 bins: bin 0 covers {0, 1}.
+        // one of each rank value is a perfectly proportional draw, so
+        // the statistic must be exactly central (0), not inflated
+        let proportional: Vec<usize> = (0..=8).collect();
+        assert!(chi_square_uniform(&proportional, 8, 8) < 1e-9,
+                "{}", chi_square_uniform(&proportional, 8, 8));
+        // and a spike still registers
+        assert!(chi_square_uniform(&[4usize; 9], 8, 8) > 20.0);
+    }
+
+    #[test]
+    fn chi2_crit_matches_tables() {
+        // textbook values: chi2(df=7): 14.07 @ 0.05, 24.32 @ 0.001
+        assert!((chi2_crit(7, 0.05) - 14.07).abs() < 0.2);
+        assert!((chi2_crit(7, 0.001) - 24.32).abs() < 0.5);
+        assert!((chi2_crit(9, 0.05) - 16.92).abs() < 0.2);
+        // extreme alphas clamp instead of panicking in inv_norm_cdf
+        let tiny = chi2_crit(7, 1e-300);
+        assert!(tiny.is_finite() && tiny > chi2_crit(7, 1e-4));
+        assert!(chi2_crit(7, 1.0 - 1e-300).is_finite());
+    }
+
+    #[test]
+    fn inv_norm_cdf_matches_tables() {
+        assert!(inv_norm_cdf(0.5).abs() < 1e-9);
+        assert!((inv_norm_cdf(0.975) - 1.959964).abs() < 1e-5);
+        assert!((inv_norm_cdf(0.999) - 3.090232).abs() < 1e-5);
+        assert!((inv_norm_cdf(0.025) + 1.959964).abs() < 1e-5);
+        // tail branch
+        assert!((inv_norm_cdf(1e-4) + 3.719016).abs() < 1e-4);
+    }
+
+    #[test]
+    fn calibrate_validates_its_inputs() {
+        let sim = Simulator::parse("linear-gaussian").unwrap();
+        let mut rng = Pcg64::new(1);
+        let bad = calibrate(&sim, 0, 8, 0.9, 4, &mut rng,
+                            |_, _, _| unreachable!());
+        assert!(bad.is_err());
+        let bad = calibrate(&sim, 4, 8, 0.9, 100, &mut rng,
+                            |_, _, _| unreachable!());
+        assert!(bad.is_err());
+        // a sampler returning the wrong shape is rejected
+        let bad = calibrate(&sim, 2, 8, 0.9, 4, &mut rng,
+                            |_, _, _| Ok(Tensor::zeros(&[8, 5])));
+        assert!(bad.is_err());
+    }
+}

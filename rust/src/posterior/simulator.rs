@@ -1,0 +1,277 @@
+//! Synthetic inverse problems for amortized posterior training.
+//!
+//! Each simulator is a joint distribution over (x, y): draw a latent
+//! "ground truth" x from its prior, then a synthetic observation y from
+//! the forward model. Training a conditional flow on a stream of such
+//! pairs amortizes Bayesian inference — after training, inverting the
+//! flow at a fixed y transports N(0, I) to p(x | y) (Papamakarios et al.
+//! 2019; the paper's seismic/medical imaging applications all follow this
+//! pattern).
+//!
+//! The catalog covers the paper's imaging motifs at toy scale, over the
+//! textured-blob fields of [`crate::data::synth_images`] flattened to
+//! feature rows:
+//!
+//! * `denoise`  — additive white noise: y = x + sigma * eps;
+//! * `deblur`   — gaussian-blur deconvolution: y = G x + sigma * eps;
+//! * `inpaint`  — random-mask inpainting: y = [x .* m ; m];
+//! * `linear-gaussian` — the [`crate::data::LinearGaussian`] problem,
+//!   whose **closed-form Gaussian posterior** makes it the end-to-end
+//!   correctness oracle for the whole subsystem (see
+//!   [`crate::posterior::analysis`]).
+
+use anyhow::{bail, Result};
+
+use crate::data::{synth_images, LinearGaussian};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Side length of the image-based simulators' square fields.
+pub const IMG_SIDE: usize = 4;
+/// Feature width of the image-based simulators (IMG_SIDE^2, one channel).
+pub const IMG_DIM: usize = IMG_SIDE * IMG_SIDE;
+
+/// Observation-noise scale for the denoise/deblur simulators.
+const NOISE_SIGMA: f64 = 0.2;
+/// Per-pixel keep probability for the inpainting mask.
+const KEEP_PROB: f64 = 0.7;
+
+/// A catalog entry: a named (x, y) pair generator.
+pub enum Simulator {
+    /// y = A x + eps with the analytic posterior oracle.
+    LinearGaussian(LinearGaussian),
+    /// y = x + sigma * eps over flattened textured-blob fields.
+    Denoise,
+    /// y = blur(x) + sigma * eps (3x3 binomial kernel, renormalized at
+    /// the edges).
+    Deblur,
+    /// y = [x .* m ; m] for a Bernoulli keep-mask m (the mask is part of
+    /// the observation, as in masked-acquisition imaging).
+    Inpaint,
+}
+
+impl Simulator {
+    pub fn parse(name: &str) -> Result<Simulator> {
+        Ok(match name {
+            "linear-gaussian" | "lg" => {
+                Simulator::LinearGaussian(LinearGaussian::default_problem())
+            }
+            "denoise" => Simulator::Denoise,
+            "deblur" => Simulator::Deblur,
+            "inpaint" => Simulator::Inpaint,
+            other => bail!("unknown simulator {other:?} \
+                            (linear-gaussian|denoise|deblur|inpaint)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Simulator::LinearGaussian(_) => "linear-gaussian",
+            Simulator::Denoise => "denoise",
+            Simulator::Deblur => "deblur",
+            Simulator::Inpaint => "inpaint",
+        }
+    }
+
+    /// Feature width of the latent x rows.
+    pub fn x_dim(&self) -> usize {
+        match self {
+            Simulator::LinearGaussian(_) => 2,
+            _ => IMG_DIM,
+        }
+    }
+
+    /// Feature width of the observation y rows.
+    pub fn y_dim(&self) -> usize {
+        match self {
+            Simulator::LinearGaussian(_) => 2,
+            Simulator::Denoise | Simulator::Deblur => IMG_DIM,
+            // observed pixels and the mask itself
+            Simulator::Inpaint => 2 * IMG_DIM,
+        }
+    }
+
+    /// The builtin conditional network sized for this simulator.
+    pub fn default_net(&self) -> &'static str {
+        match self {
+            Simulator::LinearGaussian(_) => "cond_lingauss2d",
+            Simulator::Denoise => "cond_denoise16",
+            Simulator::Deblur => "cond_deblur16",
+            Simulator::Inpaint => "cond_inpaint16",
+        }
+    }
+
+    /// The analytic oracle, when this simulator has one.
+    pub fn oracle(&self) -> Option<&LinearGaussian> {
+        match self {
+            Simulator::LinearGaussian(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Draw `n` (x, y) pairs: x with shape (n, x_dim), y with (n, y_dim).
+    pub fn sample_pairs(&self, n: usize, rng: &mut Pcg64)
+                        -> Result<(Tensor, Tensor)> {
+        if n == 0 {
+            bail!("sample_pairs needs n >= 1");
+        }
+        match self {
+            Simulator::LinearGaussian(p) => Ok(p.sample(n, rng)),
+            Simulator::Denoise => {
+                let x = flat_fields(n, rng);
+                let y = Tensor {
+                    shape: x.shape.clone(),
+                    data: x.data.iter()
+                        .map(|&v| v + (rng.normal() * NOISE_SIGMA) as f32)
+                        .collect(),
+                };
+                Ok((x, y))
+            }
+            Simulator::Deblur => {
+                let x = flat_fields(n, rng);
+                let mut y = blur_rows(&x);
+                for v in &mut y.data {
+                    *v += (rng.normal() * NOISE_SIGMA) as f32;
+                }
+                Ok((x, y))
+            }
+            Simulator::Inpaint => {
+                let x = flat_fields(n, rng);
+                let mut y = Vec::with_capacity(n * 2 * IMG_DIM);
+                for row in x.data.chunks(IMG_DIM) {
+                    let mask: Vec<f32> = (0..IMG_DIM)
+                        .map(|_| if rng.uniform() < KEEP_PROB { 1.0 } else { 0.0 })
+                        .collect();
+                    y.extend(row.iter().zip(&mask).map(|(v, m)| v * m));
+                    y.extend_from_slice(&mask);
+                }
+                Ok((x, Tensor::new(vec![n, 2 * IMG_DIM], y)?))
+            }
+        }
+    }
+}
+
+/// Textured-blob fields flattened to (n, IMG_DIM) feature rows — NHWC is
+/// row-major, so reshaping is free.
+fn flat_fields(n: usize, rng: &mut Pcg64) -> Tensor {
+    let mut t = synth_images(n, IMG_SIDE, IMG_SIDE, 1, rng);
+    t.shape = vec![n, IMG_DIM];
+    t
+}
+
+/// 3x3 binomial blur ((1,2,1) x (1,2,1) / 16) over each IMG_SIDE^2 row,
+/// with the kernel renormalized by its in-bounds weight at the edges so
+/// the blur never darkens the border.
+fn blur_rows(x: &Tensor) -> Tensor {
+    let s = IMG_SIDE as i64;
+    let mut out = vec![0.0f32; x.data.len()];
+    for (r, row) in x.data.chunks(IMG_DIM).enumerate() {
+        for i in 0..s {
+            for j in 0..s {
+                let mut acc = 0.0f64;
+                let mut wsum = 0.0f64;
+                for di in -1..=1i64 {
+                    for dj in -1..=1i64 {
+                        let (ii, jj) = (i + di, j + dj);
+                        if ii < 0 || ii >= s || jj < 0 || jj >= s {
+                            continue;
+                        }
+                        let w = ((2 - di.abs()) * (2 - dj.abs())) as f64;
+                        acc += w * row[(ii * s + jj) as usize] as f64;
+                        wsum += w;
+                    }
+                }
+                out[r * IMG_DIM + (i * s + j) as usize] = (acc / wsum) as f32;
+            }
+        }
+    }
+    Tensor { shape: x.shape.clone(), data: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_dims() {
+        for (name, dx, dy) in [("linear-gaussian", 2, 2),
+                               ("denoise", IMG_DIM, IMG_DIM),
+                               ("deblur", IMG_DIM, IMG_DIM),
+                               ("inpaint", IMG_DIM, 2 * IMG_DIM)] {
+            let s = Simulator::parse(name).unwrap();
+            assert_eq!(s.name(), name);
+            assert_eq!(s.x_dim(), dx);
+            assert_eq!(s.y_dim(), dy);
+        }
+        assert!(Simulator::parse("warp").is_err());
+    }
+
+    #[test]
+    fn pairs_have_declared_shapes() {
+        for name in ["linear-gaussian", "denoise", "deblur", "inpaint"] {
+            let s = Simulator::parse(name).unwrap();
+            let mut rng = Pcg64::new(3);
+            let (x, y) = s.sample_pairs(5, &mut rng).unwrap();
+            assert_eq!(x.shape, vec![5, s.x_dim()], "{name}");
+            assert_eq!(y.shape, vec![5, s.y_dim()], "{name}");
+            assert!(x.data.iter().chain(&y.data).all(|v| v.is_finite()));
+            assert!(s.sample_pairs(0, &mut rng).is_err());
+        }
+    }
+
+    #[test]
+    fn fixed_seed_is_bit_exact() {
+        for name in ["linear-gaussian", "denoise", "deblur", "inpaint"] {
+            let s = Simulator::parse(name).unwrap();
+            let (xa, ya) = s.sample_pairs(4, &mut Pcg64::new(11)).unwrap();
+            let (xb, yb) = s.sample_pairs(4, &mut Pcg64::new(11)).unwrap();
+            assert_eq!(xa, xb, "{name} x drifted");
+            assert_eq!(ya, yb, "{name} y drifted");
+        }
+    }
+
+    #[test]
+    fn denoise_observation_stays_near_truth() {
+        let s = Simulator::parse("denoise").unwrap();
+        let mut rng = Pcg64::new(9);
+        let (x, y) = s.sample_pairs(64, &mut rng).unwrap();
+        let mut sq = 0.0f64;
+        for (a, b) in x.data.iter().zip(&y.data) {
+            sq += ((a - b) as f64).powi(2);
+        }
+        let rms = (sq / x.data.len() as f64).sqrt();
+        assert!((rms - NOISE_SIGMA).abs() < 0.05, "residual rms {rms}");
+    }
+
+    #[test]
+    fn blur_preserves_constant_fields() {
+        // edge renormalization means a constant field blurs to itself
+        let x = Tensor::full(&[2, IMG_DIM], 0.37);
+        let y = blur_rows(&x);
+        for v in &y.data {
+            assert!((v - 0.37).abs() < 1e-6, "{v}");
+        }
+    }
+
+    #[test]
+    fn inpaint_mask_is_consistent_with_observation() {
+        let s = Simulator::parse("inpaint").unwrap();
+        let mut rng = Pcg64::new(21);
+        let (x, y) = s.sample_pairs(16, &mut rng).unwrap();
+        let mut kept = 0usize;
+        for (xr, yr) in x.data.chunks(IMG_DIM).zip(y.data.chunks(2 * IMG_DIM)) {
+            let (obs, mask) = yr.split_at(IMG_DIM);
+            for k in 0..IMG_DIM {
+                assert!(mask[k] == 0.0 || mask[k] == 1.0);
+                if mask[k] == 1.0 {
+                    assert_eq!(obs[k], xr[k]);
+                    kept += 1;
+                } else {
+                    assert_eq!(obs[k], 0.0);
+                }
+            }
+        }
+        let frac = kept as f64 / (16 * IMG_DIM) as f64;
+        assert!((frac - KEEP_PROB).abs() < 0.15, "keep fraction {frac}");
+    }
+}

@@ -1,0 +1,205 @@
+//! The amortized-objective training driver: stream simulator minibatches
+//! through the existing (data-parallel) train path instead of a fixed
+//! dataset.
+//!
+//! Amortized variational inference trains the conditional flow on fresh
+//! (x, y) draws every step — the "dataset" is the simulator itself, so
+//! there is no epoch structure and no risk of memorizing a finite training
+//! set. A held-out eval split (drawn once, from a separate stream) feeds
+//! the train loop's `eval_nll` model-selection signal.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::api::Flow;
+use crate::coordinator::{ActivationSchedule, ExecMode};
+use crate::flow::ParamStore;
+use crate::train::{train, Adam, GradClip, TrainConfig, TrainReport};
+use crate::util::rng::Pcg64;
+
+use super::simulator::Simulator;
+
+/// Stream tag xor-ed into the seed for the training data stream.
+const TRAIN_STREAM: u64 = 0x5e1f_7ea1;
+/// Stream tag for the held-out eval split (disjoint from training data).
+const EVAL_STREAM: u64 = 0xe7a1_0b5e;
+
+/// Knobs for [`amortized_train`] (CLI: `invertnet posterior-train`).
+pub struct PosteriorTrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// Seeds parameter init and both data streams.
+    pub seed: u64,
+    /// Eval-split scoring cadence (steps); 0 disables the eval split.
+    pub eval_every: usize,
+    /// Eval-split size in canonical batches; 0 also disables the eval
+    /// split (matching `train --eval-batches 0`).
+    pub eval_batches: usize,
+    pub schedule: Arc<dyn ActivationSchedule>,
+    pub clip: Option<GradClip>,
+    pub log_every: usize,
+    pub out_dir: Option<PathBuf>,
+    pub quiet: bool,
+    pub threads: usize,
+    pub microbatch: Option<usize>,
+}
+
+impl Default for PosteriorTrainConfig {
+    fn default() -> Self {
+        PosteriorTrainConfig {
+            steps: 500,
+            lr: 3e-3,
+            seed: 42,
+            eval_every: 50,
+            eval_batches: 1,
+            schedule: Arc::new(ExecMode::Invertible),
+            clip: Some(GradClip { max_norm: 50.0 }),
+            log_every: 50,
+            out_dir: None,
+            quiet: false,
+            threads: 1,
+            microbatch: None,
+        }
+    }
+}
+
+/// The flow must be a conditional dense network whose input/cond widths
+/// match the simulator's (x, y) pair widths.
+pub fn check_sim_matches_flow(sim: &Simulator, flow: &Flow) -> Result<()> {
+    let def = &flow.def;
+    if def.in_shape.len() != 2 || def.in_shape[1] != sim.x_dim() {
+        bail!("network {} input {:?} does not match simulator {} x rows \
+               (n, {})", def.name, def.in_shape, sim.name(), sim.x_dim());
+    }
+    match &def.cond_shape {
+        None => bail!("network {} takes no cond — amortized training needs \
+                       a conditional network (e.g. {})",
+                      def.name, sim.default_net()),
+        Some(c) if c.len() != 2 || c[1] != sim.y_dim() => {
+            bail!("network {} cond {:?} does not match simulator {} y rows \
+                   (n, {})", def.name, c, sim.name(), sim.y_dim())
+        }
+        Some(_) => Ok(()),
+    }
+}
+
+/// Train `flow` as an amortized posterior sampler for `sim`: every step
+/// draws a fresh (x, y) minibatch from the simulator and feeds it through
+/// [`crate::train::train`] (which routes through the data-parallel trainer
+/// when `threads > 1`).
+pub fn amortized_train(
+    flow: &Flow,
+    params: &mut ParamStore,
+    sim: &Simulator,
+    cfg: &PosteriorTrainConfig,
+) -> Result<TrainReport> {
+    check_sim_matches_flow(sim, flow)?;
+    let batch = flow.batch();
+    let mut opt = Adam::new(cfg.lr);
+
+    let eval_set = if cfg.eval_every > 0 && cfg.eval_batches > 0 {
+        let n = batch * cfg.eval_batches;
+        let mut erng = Pcg64::new(cfg.seed ^ EVAL_STREAM);
+        let (x, y) = sim.sample_pairs(n, &mut erng)
+            .context("drawing the eval split")?;
+        Some((x, Some(y)))
+    } else {
+        None
+    };
+
+    let tcfg = TrainConfig {
+        steps: cfg.steps,
+        schedule: cfg.schedule.clone(),
+        clip: cfg.clip,
+        log_every: cfg.log_every,
+        out_dir: cfg.out_dir.clone(),
+        quiet: cfg.quiet,
+        threads: cfg.threads,
+        microbatch: cfg.microbatch,
+        eval_set,
+        eval_every: cfg.eval_every,
+    };
+
+    let mut rng = Pcg64::new(cfg.seed ^ TRAIN_STREAM);
+    train(flow, params, &mut opt, &tcfg, |_| {
+        let (x, y) = sim.sample_pairs(batch, &mut rng)?;
+        Ok((x, Some(y)))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Engine;
+
+    #[test]
+    fn sim_flow_compatibility_is_validated() {
+        let engine = Engine::native().unwrap();
+        let lg = Simulator::parse("linear-gaussian").unwrap();
+        let den = Simulator::parse("denoise").unwrap();
+        let inp = Simulator::parse("inpaint").unwrap();
+
+        let cond2d = engine.flow("cond_lingauss2d").unwrap();
+        assert!(check_sim_matches_flow(&lg, &cond2d).is_ok());
+        // wrong x width
+        assert!(check_sim_matches_flow(&den, &cond2d).is_err());
+        // unconditional net
+        let plain = engine.flow("realnvp2d").unwrap();
+        assert!(check_sim_matches_flow(&lg, &plain).is_err());
+        // wrong cond width (denoise net has dcond 16, inpaint needs 32)
+        let dnet = engine.flow("cond_denoise16").unwrap();
+        assert!(check_sim_matches_flow(&den, &dnet).is_ok());
+        assert!(check_sim_matches_flow(&inp, &dnet).is_err());
+        let inet = engine.flow("cond_inpaint16").unwrap();
+        assert!(check_sim_matches_flow(&inp, &inet).is_ok());
+    }
+
+    #[test]
+    fn a_few_amortized_steps_run_and_report_eval_nll() {
+        let engine = Engine::native().unwrap();
+        let flow = engine.flow("cond_lingauss2d").unwrap();
+        let mut params = flow.init_params(7).unwrap();
+        let sim = Simulator::parse("linear-gaussian").unwrap();
+        let cfg = PosteriorTrainConfig {
+            steps: 3,
+            eval_every: 2,
+            quiet: true,
+            log_every: usize::MAX,
+            ..PosteriorTrainConfig::default()
+        };
+        let report = amortized_train(&flow, &mut params, &sim, &cfg).unwrap();
+        assert_eq!(report.losses.len(), 3);
+        assert!(report.final_loss.is_finite());
+        let nll = report.eval_nll.expect("eval split was configured");
+        assert!(nll.is_finite());
+    }
+
+    #[test]
+    fn eval_split_can_be_disabled() {
+        let engine = Engine::native().unwrap();
+        let flow = engine.flow("cond_lingauss2d").unwrap();
+        let mut params = flow.init_params(8).unwrap();
+        let sim = Simulator::parse("linear-gaussian").unwrap();
+        let cfg = PosteriorTrainConfig {
+            steps: 2,
+            eval_every: 0,
+            quiet: true,
+            log_every: usize::MAX,
+            ..PosteriorTrainConfig::default()
+        };
+        let report = amortized_train(&flow, &mut params, &sim, &cfg).unwrap();
+        assert!(report.eval_nll.is_none());
+        // --eval-batches 0 disables it too (same contract as plain train)
+        let cfg = PosteriorTrainConfig {
+            steps: 2,
+            eval_batches: 0,
+            quiet: true,
+            log_every: usize::MAX,
+            ..PosteriorTrainConfig::default()
+        };
+        let report = amortized_train(&flow, &mut params, &sim, &cfg).unwrap();
+        assert!(report.eval_nll.is_none());
+    }
+}

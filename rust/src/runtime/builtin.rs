@@ -408,6 +408,12 @@ pub fn builtin_manifest() -> Result<Manifest> {
     realnvp_dense(&mut cat, "realnvp2d", 256, 2, 8, 64)?;
     cond_realnvp_dense(&mut cat, "cond_realnvp2d", 256, 2, 2, 8, 64)?;
     hint_dense(&mut cat, "hint8d", 256, 8, 4, 64, 2)?;
+    // amortized-posterior nets, sized for the posterior::Simulator catalog
+    // (builtin-only, like nice16): x rows condition on simulator y rows
+    cond_realnvp_dense(&mut cat, "cond_lingauss2d", 128, 2, 2, 6, 32)?;
+    cond_realnvp_dense(&mut cat, "cond_denoise16", 128, 16, 16, 6, 64)?;
+    cond_realnvp_dense(&mut cat, "cond_deblur16", 128, 16, 16, 6, 64)?;
+    cond_realnvp_dense(&mut cat, "cond_inpaint16", 128, 16, 32, 6, 64)?;
     glow_multiscale(&mut cat, "glow16", 16, 16, 16, 3, 2, 4, 32)?;
     hyperbolic_net(&mut cat, "hyper16", 16, 16, 16, 3, 6, 12)?;
     nice_net(&mut cat, "nice16", 16, 16, 16, 3, 4, 32)?;
@@ -442,12 +448,21 @@ mod tests {
         assert!(m.networks.len() >= 17);
         for name in ["realnvp2d", "cond_realnvp2d", "hint8d", "glow16",
                      "hyper16", "nice16", "glow_fig1_16", "glow_fig2_d48",
-                     "glow_bench32"] {
+                     "glow_bench32", "cond_lingauss2d", "cond_denoise16",
+                     "cond_deblur16", "cond_inpaint16"] {
             assert!(m.networks.contains_key(name), "missing {name}");
         }
         // spot-check signatures against the python sig convention
         assert!(m.layers.contains_key("densecpl__256x2__hd64"));
         assert!(m.layers.contains_key("condcpl__256x2__hd64__cond256x2"));
+        assert!(m.layers.contains_key("condcpl__128x2__hd32__cond128x2"));
+        assert!(m.layers.contains_key("condcpl__128x16__hd64__cond128x16"));
+        assert!(m.layers.contains_key("condcpl__128x16__hd64__cond128x32"));
+        // posterior nets are conditional with the simulator's y width
+        assert_eq!(m.networks["cond_lingauss2d"].cond_shape,
+                   Some(vec![128, 2]));
+        assert_eq!(m.networks["cond_inpaint16"].cond_shape,
+                   Some(vec![128, 32]));
         assert!(m.layers.contains_key("hint__256x8__hd64__dep2"));
         assert!(m.layers.contains_key("haar__16x16x16x3"));
         assert!(m.layers.contains_key("hyper__16x8x8x12__hd12"));

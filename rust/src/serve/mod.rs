@@ -19,7 +19,9 @@
 //! * [`batcher::Batcher`] — coalesces single-item `sample`/`score`
 //!   requests into one batched inverse/forward pass (deadline- and
 //!   max-batch-triggered, bounded-queue backpressure), executed by a
-//!   worker pool of [`crate::Flow::fork`] handles.
+//!   worker pool of [`crate::Flow::fork`] handles. The `posterior` op
+//!   rides the same sample path: its tiled-cond inversion coalesces with
+//!   ordinary sample requests for the same model.
 //! * [`server::Server`] — the transport-agnostic request core plus the
 //!   loopback TCP and stdio fronts.
 //! * [`protocol`] — the JSON-lines request/response frames.

@@ -8,6 +8,8 @@
 //! {"op":"sample","n":4,"seed":1,"temperature":0.8,"model":"realnvp2d",
 //!  "cond":{"shape":[4,2],"data":[...]}}        n(1) seed(0) temperature(1)
 //! {"op":"score","x":{"shape":[2,2],"data":[0.1,0.2,0.3,0.4]}}
+//! {"op":"posterior","y":[0.7,-0.4],"n":64,"seed":1,"samples":true}
+//!                                              n(64) seed(0) temperature(1)
 //! {"op":"stats"}
 //! {"op":"shutdown"}
 //! ```
@@ -17,10 +19,18 @@
 //! ```text
 //! {"ok":true,"op":"sample","x":{"shape":[4,2],"data":[...]}}
 //! {"ok":true,"op":"score","log_density":[-2.71,-3.14]}
+//! {"ok":true,"op":"posterior","n":64,"mean":[...],"std":[...],
+//!  "x":{"shape":[64,2],"data":[...]}}          x only with "samples":true
 //! {"ok":true,"op":"stats","stats":{...}}
 //! {"ok":true,"op":"shutdown"}
 //! {"ok":false,"error":"..."}
 //! ```
+//!
+//! `posterior` targets a *conditional* model: `y` is one observation row
+//! (a plain f32 array); the server tiles it across `n` conditioning rows,
+//! draws latents from `Pcg64::new(seed)`, runs the batched inverse, and
+//! summarizes — bit-identical to the in-process
+//! `posterior::analysis::posterior_samples` + `summarize` path.
 //!
 //! `model` is optional everywhere a model is needed; omitting it targets
 //! the registry's default (first-registered) model. Tensor payloads are
@@ -59,6 +69,17 @@ pub enum Request {
         x: Tensor,
         cond: Option<Tensor>,
     },
+    /// Amortized posterior query: `n` draws x ~ p(x | y) for one
+    /// observation row `y`, plus pointwise mean/std maps. The full sample
+    /// cloud is returned only when `return_samples` is set.
+    Posterior {
+        model: Option<String>,
+        y: Vec<f32>,
+        n: usize,
+        temperature: f32,
+        seed: u64,
+        return_samples: bool,
+    },
     /// Serving metrics snapshot.
     Stats,
     /// Stop the server after responding.
@@ -70,6 +91,14 @@ pub enum Request {
 pub enum Response {
     Sample { x: Tensor },
     Score { log_density: Vec<f32> },
+    /// Posterior summary (and optionally the sample cloud) for one
+    /// observation.
+    Posterior {
+        n: usize,
+        mean: Vec<f32>,
+        std: Vec<f32>,
+        samples: Option<Tensor>,
+    },
     Stats(StatsSnapshot),
     Shutdown,
     Error { error: String },
@@ -220,10 +249,43 @@ impl Request {
                 x: tensor_from_json(j.req("x")?)?,
                 cond: opt_cond(j)?,
             }),
+            "posterior" => {
+                let y = f32s_from_json(j.req("y")?)?;
+                if y.is_empty() || y.iter().any(|v| !v.is_finite()) {
+                    bail!("posterior y must be a non-empty array of \
+                           finite numbers");
+                }
+                let n = match j.get("n") {
+                    None => 64,
+                    Some(v) => v.as_usize()?,
+                };
+                if n == 0 || n > MAX_SAMPLES_PER_REQUEST {
+                    bail!("posterior n must be in \
+                           1..={MAX_SAMPLES_PER_REQUEST}, got {n}");
+                }
+                let temperature = match j.get("temperature") {
+                    None => 1.0,
+                    Some(v) => v.as_f64()? as f32,
+                };
+                let return_samples = match j.get("samples") {
+                    None => false,
+                    Some(Json::Bool(b)) => *b,
+                    Some(other) => bail!("posterior samples flag must be \
+                                          a bool, got {other:?}"),
+                };
+                Ok(Request::Posterior {
+                    model: opt_model(j)?,
+                    y,
+                    n,
+                    temperature,
+                    seed: parse_seed(j)?,
+                    return_samples,
+                })
+            }
             "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown),
             other => bail!("unknown op {other:?} \
-                            (sample|score|stats|shutdown)"),
+                            (sample|score|posterior|stats|shutdown)"),
         }
     }
 
@@ -255,6 +317,23 @@ impl Request {
                 }
                 if let Some(c) = cond {
                     pairs.push(("cond", tensor_to_json(c)));
+                }
+                Json::obj(pairs)
+            }
+            Request::Posterior { model, y, n, temperature, seed,
+                                 return_samples } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("posterior".into())),
+                    ("y", f32s_to_json(y)),
+                    ("n", Json::Num(*n as f64)),
+                    ("temperature", Json::Num(*temperature as f64)),
+                    ("seed", seed_to_json(*seed)),
+                ];
+                if *return_samples {
+                    pairs.push(("samples", Json::Bool(true)));
+                }
+                if let Some(m) = model {
+                    pairs.push(("model", Json::Str(m.clone())));
                 }
                 Json::obj(pairs)
             }
@@ -291,6 +370,19 @@ impl Response {
                 ("op", Json::Str("score".into())),
                 ("log_density", f32s_to_json(log_density)),
             ]),
+            Response::Posterior { n, mean, std, samples } => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("op", Json::Str("posterior".into())),
+                    ("n", Json::Num(*n as f64)),
+                    ("mean", f32s_to_json(mean)),
+                    ("std", f32s_to_json(std)),
+                ];
+                if let Some(x) = samples {
+                    pairs.push(("x", tensor_to_json(x)));
+                }
+                Json::obj(pairs)
+            }
             Response::Stats(s) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("op", Json::Str("stats".into())),
@@ -341,6 +433,15 @@ impl Response {
             }),
             "score" => Ok(Response::Score {
                 log_density: f32s_from_json(j.req("log_density")?)?,
+            }),
+            "posterior" => Ok(Response::Posterior {
+                n: j.req("n")?.as_usize()?,
+                mean: f32s_from_json(j.req("mean")?)?,
+                std: f32s_from_json(j.req("std")?)?,
+                samples: match j.get("x") {
+                    None => None,
+                    Some(x) => Some(tensor_from_json(x)?),
+                },
             }),
             "shutdown" => Ok(Response::Shutdown),
             "stats" => {
@@ -402,6 +503,52 @@ mod tests {
         assert!(Request::parse_line(r#"{"op":"score"}"#).is_err());
         assert!(Request::parse_line(
             r#"{"op":"score","x":{"shape":[2,3],"data":[1]}}"#).is_err());
+    }
+
+    #[test]
+    fn posterior_request_roundtrip_and_validation() {
+        let r = Request::parse_line(
+            r#"{"op":"posterior","y":[0.7,-0.4]}"#).unwrap();
+        assert_eq!(r, Request::Posterior {
+            model: None, y: vec![0.7, -0.4], n: 64, temperature: 1.0,
+            seed: 0, return_samples: false,
+        });
+        let r = Request::parse_line(
+            r#"{"op":"posterior","y":[1.5],"n":8,"seed":3,"samples":true,
+                "temperature":0.5,"model":"m"}"#).unwrap();
+        assert_eq!(Request::from_json(&r.to_json()).unwrap(), r);
+        let Request::Posterior { return_samples, .. } = r else { panic!() };
+        assert!(return_samples);
+
+        // missing / empty / non-finite y, bad n, bad samples flag
+        assert!(Request::parse_line(r#"{"op":"posterior"}"#).is_err());
+        assert!(Request::parse_line(
+            r#"{"op":"posterior","y":[]}"#).is_err());
+        assert!(Request::parse_line(
+            r#"{"op":"posterior","y":[1.0,null]}"#).is_err());
+        assert!(Request::parse_line(
+            r#"{"op":"posterior","y":[1.0],"n":0}"#).is_err());
+        assert!(Request::parse_line(
+            r#"{"op":"posterior","y":[1.0],"samples":"yes"}"#).is_err());
+    }
+
+    #[test]
+    fn posterior_response_roundtrip() {
+        let with = Response::Posterior {
+            n: 3,
+            mean: vec![0.25, -1.5],
+            std: vec![0.5, 0.125],
+            samples: Some(Tensor::new(vec![3, 2],
+                                      vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6])
+                          .unwrap()),
+        };
+        assert_eq!(Response::parse_line(&with.to_line()).unwrap(), with);
+        let without = Response::Posterior {
+            n: 3, mean: vec![0.25], std: vec![0.5], samples: None,
+        };
+        let line = without.to_line();
+        assert!(!line.contains("\"x\""), "{line}");
+        assert_eq!(Response::parse_line(&line).unwrap(), without);
     }
 
     #[test]

@@ -17,6 +17,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::posterior::analysis;
 use crate::util::rng::Pcg64;
 
 use super::batcher::{BatchConfig, Batcher, Reply, ServeStats, Work};
@@ -141,6 +142,34 @@ impl Server {
                         Ok(Response::Score { log_density })
                     }
                     Reply::Samples(_) => unreachable!("score got samples"),
+                }
+            }
+            Request::Posterior { model, y, n, temperature, seed,
+                                 return_samples } => {
+                let m = self.model(model.as_deref())?;
+                // tile the observation across the conditioning batch and
+                // validate it exactly like a sample request, BEFORE
+                // queueing (a bad y must fail alone, not poison a batch)
+                let cond = analysis::tile_observation(&y, n)?;
+                check_cond_request(&m, n, Some(&cond))?;
+                // same generator as analysis::posterior_samples, so the
+                // reply is bit-identical to the in-process call no matter
+                // what this job coalesces with
+                let latents = m.flow.sample_latents(
+                    n, temperature, &mut Pcg64::new(seed))?;
+                let rx = self.batcher.submit(
+                    m, Work::Sample { latents, cond: Some(cond) })?;
+                match rx.recv().context("serve worker hung up")?? {
+                    Reply::Samples(x) => {
+                        let s = analysis::summarize(&x);
+                        Ok(Response::Posterior {
+                            n,
+                            mean: s.mean,
+                            std: s.std,
+                            samples: return_samples.then_some(x),
+                        })
+                    }
+                    Reply::Scores(_) => unreachable!("posterior got scores"),
                 }
             }
             Request::Stats => Ok(Response::Stats(self.stats.snapshot(
@@ -325,6 +354,63 @@ mod tests {
             model: None,
             x: Tensor::zeros(&[2, 9]), // wrong feature width
             cond: None,
+        });
+        assert!(resp.is_error(), "{resp:?}");
+    }
+
+    #[test]
+    fn posterior_op_is_bit_identical_to_the_analysis_path() {
+        let registry = Registry::new(Engine::native().unwrap(), 4);
+        registry.register_untrained("cond_lingauss2d", 5).unwrap();
+        let s = Server::new(registry, BatchConfig {
+            max_delay: Duration::from_micros(200),
+            ..BatchConfig::default()
+        }).allow_untrained();
+
+        let y = vec![0.7f32, -0.4];
+        let resp = s.handle(Request::Posterior {
+            model: None, y: y.clone(), n: 16, temperature: 1.0, seed: 9,
+            return_samples: true,
+        });
+        let Response::Posterior { n, mean, std, samples } = resp else {
+            panic!("posterior failed: {resp:?}")
+        };
+        assert_eq!(n, 16);
+
+        let m = s.registry().get(None).unwrap();
+        let direct = analysis::posterior_samples(
+            &m.flow, &m.params, &y, 16, 1.0, 9).unwrap();
+        let direct_sum = analysis::summarize(&direct);
+        let got = samples.expect("samples were requested");
+        assert_eq!(got.shape, direct.shape);
+        for (a, b) in got.data.iter().zip(&direct.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "sample bits differ");
+        }
+        for (a, b) in mean.iter().zip(&direct_sum.mean) {
+            assert_eq!(a.to_bits(), b.to_bits(), "mean bits differ");
+        }
+        for (a, b) in std.iter().zip(&direct_sum.std) {
+            assert_eq!(a.to_bits(), b.to_bits(), "std bits differ");
+        }
+    }
+
+    #[test]
+    fn posterior_op_rejects_unconditional_models_and_bad_y() {
+        let s = server(); // realnvp2d: no cond
+        let resp = s.handle(Request::Posterior {
+            model: None, y: vec![0.1, 0.2], n: 4, temperature: 1.0,
+            seed: 0, return_samples: false,
+        });
+        assert!(resp.is_error(), "{resp:?}");
+
+        let registry = Registry::new(Engine::native().unwrap(), 4);
+        registry.register_untrained("cond_lingauss2d", 5).unwrap();
+        let s = Server::new(registry, BatchConfig::default())
+            .allow_untrained();
+        // y width 3 != dcond 2
+        let resp = s.handle(Request::Posterior {
+            model: None, y: vec![0.1, 0.2, 0.3], n: 4, temperature: 1.0,
+            seed: 0, return_samples: false,
         });
         assert!(resp.is_error(), "{resp:?}");
     }

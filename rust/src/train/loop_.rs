@@ -34,6 +34,14 @@ pub struct TrainConfig {
     /// (None = one shard per worker). Setting this with `threads: 1`
     /// still bounds the activation envelope to the microbatch size.
     pub microbatch: Option<usize>,
+    /// Held-out eval split `(x, cond)` for model selection. When set, the
+    /// loop scores it with [`Flow::log_density`] every `eval_every` steps
+    /// (and at the last step) and logs the mean NLL as the `eval_nll`
+    /// column of metrics.csv — the signal `posterior-train` and plain
+    /// `train` expose for comparing runs. Any leading batch size works.
+    pub eval_set: Option<(Tensor, Option<Tensor>)>,
+    /// Cadence of eval-split scoring (steps); 0 scores only the last step.
+    pub eval_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -47,6 +55,8 @@ impl Default for TrainConfig {
             quiet: false,
             threads: 1,
             microbatch: None,
+            eval_set: None,
+            eval_every: 50,
         }
     }
 }
@@ -54,8 +64,16 @@ impl Default for TrainConfig {
 pub struct TrainReport {
     pub losses: Vec<f32>,
     pub final_loss: f32,
+    /// Last eval-split mean NLL (None when no eval set was configured).
+    pub eval_nll: Option<f32>,
     pub peak_sched_bytes: i64,
     pub steps_per_sec: f64,
+}
+
+/// NLL (nats/sample) -> bits per dimension, the standard density-model
+/// comparison unit.
+pub fn bits_per_dim(nll: f32, dims_per_sample: usize) -> f32 {
+    nll / (dims_per_sample.max(1) as f32 * std::f32::consts::LN_2)
 }
 
 /// Run `cfg.steps` optimizer steps, drawing a fresh minibatch from
@@ -73,7 +91,8 @@ pub fn train(
         Some(dir) => {
             std::fs::create_dir_all(dir)?;
             let mut f = std::fs::File::create(dir.join("metrics.csv"))?;
-            writeln!(f, "step,loss,logp_mean,logdet_mean,grad_norm,peak_sched_bytes,ms")?;
+            writeln!(f, "step,loss,logp_mean,logdet_mean,grad_norm,\
+                         peak_sched_bytes,ms,eval_nll")?;
             Some(f)
         }
         None => None,
@@ -92,6 +111,8 @@ pub fn train(
         None
     };
 
+    let mut last_eval: Option<f32> = None;
+    let dims = flow.def.dims_per_sample();
     let t0 = Instant::now();
     for step in 0..cfg.steps {
         let ts = Instant::now();
@@ -120,19 +141,41 @@ pub fn train(
         peak = peak.max(result.peak_sched_bytes);
         losses.push(result.loss);
 
+        // eval-split NLL on the (post-update) parameters, at the
+        // configured cadence plus always at the final step
+        let mut eval_cell = String::new();
+        if let Some((ex, ec)) = &cfg.eval_set {
+            let due = step + 1 == cfg.steps
+                || (cfg.eval_every > 0 && step % cfg.eval_every == 0);
+            if due {
+                let scores = flow.log_density(ex, ec.as_ref(), params)
+                    .with_context(|| format!("eval split at step {step}"))?;
+                let nll = -(scores.iter().map(|&v| v as f64).sum::<f64>()
+                            / scores.len().max(1) as f64) as f32;
+                last_eval = Some(nll);
+                eval_cell = format!("{nll}");
+            }
+        }
+
         let ms = ts.elapsed().as_secs_f64() * 1e3;
         if let Some(f) = &mut csv {
             writeln!(
                 f,
-                "{step},{},{},{},{grad_norm},{},{ms:.1}",
+                "{step},{},{},{},{grad_norm},{},{ms:.1},{eval_cell}",
                 result.loss, result.logp_mean, result.logdet_mean,
                 result.peak_sched_bytes
             )?;
         }
         if !cfg.quiet && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            let eval_note = match (&cfg.eval_set, last_eval) {
+                (Some(_), Some(nll)) => format!(
+                    "  eval_nll {nll:>8.4} ({:.3} b/d)",
+                    bits_per_dim(nll, dims)),
+                _ => String::new(),
+            };
             eprintln!(
                 "step {step:>5}  loss {:>10.4}  logp {:>10.4}  logdet {:>8.4}  \
-                 |g| {grad_norm:>8.2}  peak {:>10}  {ms:>7.1} ms",
+                 |g| {grad_norm:>8.2}  peak {:>10}  {ms:>7.1} ms{eval_note}",
                 result.loss, result.logp_mean, result.logdet_mean,
                 fmt_bytes(result.peak_sched_bytes as u64)
             );
@@ -147,6 +190,7 @@ pub fn train(
     Ok(TrainReport {
         final_loss: *losses.last().unwrap_or(&f32::NAN),
         losses,
+        eval_nll: last_eval,
         peak_sched_bytes: peak,
         steps_per_sec: cfg.steps as f64 / elapsed,
     })
@@ -177,5 +221,15 @@ mod tests {
         let cfg = TrainConfig::default();
         assert_eq!(cfg.schedule.label(), "invertible");
         assert_eq!(cfg.steps, 100);
+        assert!(cfg.eval_set.is_none());
+        assert_eq!(cfg.eval_every, 50);
+    }
+
+    #[test]
+    fn bits_per_dim_conversion() {
+        // 2-dim samples at NLL = 2 ln 2 nats -> exactly 1 bit/dim
+        let nll = 2.0 * std::f32::consts::LN_2;
+        assert!((bits_per_dim(nll, 2) - 1.0).abs() < 1e-6);
+        assert!(bits_per_dim(1.0, 0).is_finite()); // clamped denominator
     }
 }

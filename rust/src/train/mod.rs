@@ -5,6 +5,6 @@ pub mod loop_;
 pub mod optimizer;
 pub mod parallel;
 
-pub use loop_::{train, TrainConfig, TrainReport};
+pub use loop_::{bits_per_dim, train, TrainConfig, TrainReport};
 pub use optimizer::{grad_l2_norm, Adam, GradClip, Optimizer, Sgd};
 pub use parallel::ParallelTrainer;
