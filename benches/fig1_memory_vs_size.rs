@@ -4,9 +4,18 @@
 //!
 //!     cargo bench --bench fig1_memory_vs_size
 //!
-//! Runs hermetically on the RefBackend; set INVERTNET_ARTIFACTS (with a
-//! `--features xla` build) to measure through PJRT instead.
+//! Prints the full paper table (measured + planner-model rows) and then
+//! runs the gated library suite [`invertnet::perf::memory_vs_size`],
+//! writing `BENCH_memory_vs_size.json` (override with
+//! INVERTNET_FIG1_JSON — each bench binary has its own override so
+//! `cargo bench` runs don't clobber each other's records) so figure
+//! regenerations also land on the perf trajectory. Runs hermetically on
+//! the RefBackend; set INVERTNET_ARTIFACTS (with a `--features xla`
+//! build) to measure through PJRT instead.
 
+use std::path::PathBuf;
+
+use invertnet::perf::{memory_vs_size, Scale, SuiteReport};
 use invertnet::Engine;
 
 fn main() {
@@ -16,4 +25,10 @@ fn main() {
     }
     let engine = builder.build().expect("engine boot");
     invertnet::bench_figs::fig1(&engine, 40.0).unwrap();
+    let mut report = SuiteReport::new("memory_vs_size");
+    report.absorb(memory_vs_size(&engine, Scale::Full).expect("suite"));
+    let out = PathBuf::from(std::env::var("INVERTNET_FIG1_JSON")
+        .unwrap_or_else(|_| "BENCH_memory_vs_size.json".to_string()));
+    report.write(engine.backend_name(), engine.default_threads(), &out)
+        .expect("write report");
 }

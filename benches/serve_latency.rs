@@ -1,143 +1,29 @@
 //! Serving throughput: coalesced micro-batching vs one-request-per-pass.
 //!
-//! Many concurrent clients fire single-item `sample`/`score` requests at
-//! the transport-agnostic server core. `max-batch 1` is the unbatched
-//! baseline (every request pays a full pass); `max-batch 8` lets the
-//! scheduler coalesce, amortizing per-pass overhead across requests —
-//! the tentpole claim is >= 2x throughput at max-batch >= 8.
+//! Thin wrapper over the library suite [`invertnet::perf::serve_latency`]
+//! (full scale): many concurrent clients fire single-item `sample`/`score`
+//! requests; `max-batch 1` is the unbatched baseline, `max-batch 8` lets
+//! the scheduler coalesce — the tentpole claim is >= 2x throughput.
 //!
 //!     cargo bench --bench serve_latency
 //!
-//! Machine-readable results: one `BENCH {json}` line on stdout, also
-//! written to `bench_serve_latency.json` (override with
-//! INVERTNET_SERVE_JSON).
+//! Machine-readable results: one `BENCH {json}` line on stdout and
+//! `BENCH_serve.json` (override with INVERTNET_SERVE_JSON), carrying the
+//! environment block. The CLI equivalent is `invertnet bench --suite serve`.
 
-use std::time::{Duration, Instant};
+use std::path::PathBuf;
 
-use invertnet::api::Engine;
-use invertnet::serve::{BatchConfig, Registry, Request, Response, Server,
-                       StatsSnapshot};
-use invertnet::util::json::Json;
-use invertnet::util::rng::Pcg64;
-use invertnet::Tensor;
-
-const NET: &str = "realnvp2d";
-const CLIENTS: usize = 8;
-const REQS_PER_CLIENT: usize = 150;
-
-fn boot(max_batch: usize) -> Server {
-    let registry = Registry::new(Engine::native().expect("engine boot"), 2);
-    registry.register_untrained(NET, 3).expect("register model");
-    Server::new(registry, BatchConfig {
-        max_batch,
-        max_delay: Duration::from_micros(300),
-        workers: 2,
-        queue_cap: 1024,
-    }).allow_untrained()
-}
-
-/// Fire `CLIENTS * REQS_PER_CLIENT` single-item requests, return
-/// (requests/sec, stats).
-fn run_load(server: &Server, op: &str) -> (f64, StatsSnapshot) {
-    let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for client in 0..CLIENTS as u64 {
-            scope.spawn(move || {
-                let mut rng = Pcg64::new(0xbe7c ^ client);
-                for i in 0..REQS_PER_CLIENT as u64 {
-                    let req = match op {
-                        "sample" => Request::Sample {
-                            model: None,
-                            n: 1,
-                            temperature: 1.0,
-                            seed: client * 10_000 + i,
-                            cond: None,
-                        },
-                        _ => Request::Score {
-                            model: None,
-                            x: Tensor {
-                                shape: vec![1, 2],
-                                data: rng.normal_vec(2),
-                            },
-                            cond: None,
-                        },
-                    };
-                    let resp = server.handle(req);
-                    assert!(!resp.is_error(), "{op}: {resp:?}");
-                }
-            });
-        }
-    });
-    let elapsed = t0.elapsed().as_secs_f64();
-    let total = (CLIENTS * REQS_PER_CLIENT) as f64;
-    let Response::Stats(snap) = server.handle(Request::Stats) else {
-        panic!("stats failed")
-    };
-    (total / elapsed, snap)
-}
-
-fn stats_json(rps: f64, s: &StatsSnapshot) -> Json {
-    Json::obj(vec![
-        ("reqs_per_sec", Json::Num(rps)),
-        ("mean_batch", Json::Num(s.mean_batch)),
-        ("mean_items", Json::Num(s.mean_items)),
-        ("p50_us", Json::Num(s.p50_us as f64)),
-        ("p99_us", Json::Num(s.p99_us as f64)),
-        ("batches", Json::Num(s.batches as f64)),
-    ])
-}
+use invertnet::perf::{serve_latency, Scale, SuiteReport};
+use invertnet::Engine;
 
 fn main() {
-    let backend = Engine::native().expect("engine").backend_name().to_string();
-    println!("# serving throughput, {CLIENTS} clients x {REQS_PER_CLIENT} \
-              single-item requests, net {NET}, backend {backend}");
-    let mut doc = vec![
-        ("bench", Json::Str("serve_latency".to_string())),
-        ("backend", Json::Str(backend)),
-        ("net", Json::Str(NET.to_string())),
-        ("clients", Json::Num(CLIENTS as f64)),
-        ("requests", Json::Num((CLIENTS * REQS_PER_CLIENT) as f64)),
-    ];
-
-    for op in ["score", "sample"] {
-        // unbatched baseline: every request is its own pass
-        let base = boot(1);
-        let (rps_1, snap_1) = run_load(&base, op);
-        // coalesced: up to 8 requests share one pass
-        let coal = boot(8);
-        let (rps_8, snap_8) = run_load(&coal, op);
-
-        let speedup = rps_8 / rps_1;
-        println!(
-            "{op:<7} max-batch 1: {rps_1:>9.0} req/s  p50 {:>5}us  \
-             p99 {:>6}us  mean batch {:.2}",
-            snap_1.p50_us, snap_1.p99_us, snap_1.mean_batch);
-        println!(
-            "{op:<7} max-batch 8: {rps_8:>9.0} req/s  p50 {:>5}us  \
-             p99 {:>6}us  mean batch {:.2}   {speedup:.2}x",
-            snap_8.p50_us, snap_8.p99_us, snap_8.mean_batch);
-
-        doc.push((match op {
-            "sample" => "sample_unbatched",
-            _ => "score_unbatched",
-        }, stats_json(rps_1, &snap_1)));
-        doc.push((match op {
-            "sample" => "sample_coalesced",
-            _ => "score_coalesced",
-        }, stats_json(rps_8, &snap_8)));
-        doc.push((match op {
-            "sample" => "sample_speedup",
-            _ => "score_speedup",
-        }, Json::Num(speedup)));
-    }
-
-    let doc = Json::obj(doc);
-    println!("BENCH {}", doc.to_string());
-    let out = std::env::var("INVERTNET_SERVE_JSON")
-        .unwrap_or_else(|_| "bench_serve_latency.json".to_string());
-    if let Err(e) = std::fs::write(&out, doc.to_string_pretty()) {
-        eprintln!("could not write {out}: {e}");
-    } else {
-        println!("# serve-latency results -> {out}");
-    }
+    let engine = Engine::native().expect("engine boot");
+    println!("# serving throughput, backend {}", engine.backend_name());
+    let mut report = SuiteReport::new("serve");
+    report.absorb(serve_latency(&engine, Scale::Full).expect("suite"));
+    report.print();
+    let out = PathBuf::from(std::env::var("INVERTNET_SERVE_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string()));
+    report.write(engine.backend_name(), engine.default_threads(), &out)
+        .expect("write report");
 }

@@ -1,33 +1,22 @@
 //! Throughput + recompute-overhead ablation (DESIGN.md experiment index).
 //!
-//! The memory savings of invertible backprop are bought with inverse
-//! recomputation in the backward pass; this bench quantifies that
-//! wall-clock trade on the same layer programs, plus end-to-end train-step
-//! latency for the example networks, the checkpoint-hybrid schedule, and
-//! the data-parallel thread-scaling curve.
+//! Thin wrapper over the library suite [`invertnet::perf::train_throughput`]
+//! (full scale): train-step latency per activation schedule, the
+//! recompute-overhead trade, the data-parallel thread-scaling curve, and
+//! the threaded inference hot path (`log_density` / `sample_batch`
+//! rows/sec vs thread count).
 //!
 //!     cargo bench --bench throughput
 //!
-//! Machine-readable results: the thread-scaling curve is printed as a
-//! one-line `BENCH {json}` record on stdout and written to
-//! `bench_throughput.json` (override the path with INVERTNET_BENCH_JSON).
+//! Machine-readable results: one `BENCH {json}` line on stdout and
+//! `BENCH_throughput.json` (override the path with INVERTNET_BENCH_JSON),
+//! carrying the environment block (git rev, threads, cpus, profile).
+//! The CLI equivalent is `invertnet bench --suite throughput`.
 
-use invertnet::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
-use invertnet::data::synth_images;
-use invertnet::train::ParallelTrainer;
-use invertnet::util::bench::{bench, report};
-use invertnet::util::json::Json;
-use invertnet::util::rng::Pcg64;
-use invertnet::{Engine, Flow, Tensor};
+use std::path::PathBuf;
 
-fn batch_for(flow: &Flow, rng: &mut Pcg64) -> Tensor {
-    let s = &flow.def.in_shape;
-    if s.len() == 4 {
-        synth_images(s[0], s[1], s[2], s[3], rng)
-    } else {
-        Tensor { shape: s.clone(), data: rng.normal_vec(s.iter().product()) }
-    }
-}
+use invertnet::perf::{train_throughput, Scale, SuiteReport};
+use invertnet::Engine;
 
 fn main() {
     let mut builder = Engine::builder();
@@ -35,86 +24,13 @@ fn main() {
         builder = builder.artifacts(dir);
     }
     let engine = builder.build().expect("engine boot");
-    println!("# train-step latency, invertible vs stored (same layer programs, \
-              backend {})", engine.backend_name());
-    let mut rng = Pcg64::new(11);
-    for net in ["realnvp2d", "hint8d", "glow_bench32", "glow_fig2_d8", "hyper16"] {
-        let flow = engine.flow(net).unwrap();
-        let params = flow.init_params(3).unwrap();
-        let x = batch_for(&flow, &mut rng);
-
-        let schedules: [(&str, &dyn ActivationSchedule); 3] = [
-            ("invertible", &ExecMode::Invertible),
-            ("stored", &ExecMode::Stored),
-            ("checkpoint:4", &CheckpointEveryK(4)),
-        ];
-        let mut stats = Vec::new();
-        for (name, sched) in schedules {
-            let s = bench(2, 8, || {
-                flow.train_step(&x, None, &params, sched).unwrap();
-            });
-            report(&format!("{net}/{name}"), &s);
-            stats.push(s);
-        }
-        println!(
-            "{net:<48} recompute overhead: {:+.1}% wall-clock for O(1) memory",
-            (stats[0].mean_s / stats[1].mean_s - 1.0) * 100.0
-        );
-
-        // phase split: forward-only vs full step
-        let fs = bench(1, 8, || {
-            flow.forward(&x, None, &params).unwrap();
-        });
-        report(&format!("{net}/forward_only"), &fs);
-        engine.clear_cache();
-    }
-
-    // ---- thread scaling: ParallelTrainer over the small + medium nets ----
-    println!("\n# data-parallel thread scaling (invertible schedule)");
-    let mut curve: Vec<Json> = Vec::new();
-    for net in ["realnvp2d", "glow_bench32"] {
-        let flow = engine.flow(net).unwrap();
-        let params = flow.init_params(3).unwrap();
-        let x = batch_for(&flow, &mut rng);
-        let mut base_sps = 0.0f64;
-        for threads in [1usize, 2, 4, 8] {
-            let trainer = ParallelTrainer::new(threads);
-            let s = bench(1, 5, || {
-                trainer
-                    .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
-                    .unwrap();
-            });
-            let sps = 1.0 / s.mean_s;
-            if threads == 1 {
-                base_sps = sps;
-            }
-            let speedup = sps / base_sps;
-            report(&format!("{net}/threads={threads}"), &s);
-            println!("{:<48} {sps:>8.2} steps/s  {speedup:>5.2}x vs 1 thread",
-                     format!("{net}/threads={threads}"));
-            curve.push(Json::obj(vec![
-                ("net", Json::Str(net.to_string())),
-                ("threads", Json::Num(threads as f64)),
-                ("mean_s", Json::Num(s.mean_s)),
-                ("steps_per_sec", Json::Num(sps)),
-                ("speedup_vs_1_thread", Json::Num(speedup)),
-            ]));
-        }
-        engine.clear_cache();
-    }
-    let doc = Json::obj(vec![
-        ("bench", Json::Str("throughput".to_string())),
-        ("backend", Json::Str(engine.backend_name().to_string())),
-        ("host_parallelism", Json::Num(
-            std::thread::available_parallelism().map_or(0, |p| p.get()) as f64)),
-        ("thread_scaling", Json::Arr(curve)),
-    ]);
-    println!("BENCH {}", doc.to_string());
-    let out = std::env::var("INVERTNET_BENCH_JSON")
-        .unwrap_or_else(|_| "bench_throughput.json".to_string());
-    if let Err(e) = std::fs::write(&out, doc.to_string_pretty()) {
-        eprintln!("could not write {out}: {e}");
-    } else {
-        println!("# thread-scaling curve -> {out}");
-    }
+    println!("# train/inference throughput, backend {}",
+             engine.backend_name());
+    let mut report = SuiteReport::new("throughput");
+    report.absorb(train_throughput(&engine, Scale::Full).expect("suite"));
+    report.print();
+    let out = PathBuf::from(std::env::var("INVERTNET_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_throughput.json".to_string()));
+    report.write(engine.backend_name(), engine.default_threads(), &out)
+        .expect("write report");
 }

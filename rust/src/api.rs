@@ -24,11 +24,19 @@ use crate::flow::{NetworkDef, ParamStore, StepKind};
 use crate::runtime::{builtin_manifest, Manifest};
 
 /// Backend + manifest pair; cheap to clone flows out of.
+///
+/// `Engine` itself is `Clone` (both halves are `Arc`s): clones share the
+/// backend executable cache and the manifest, so tooling that needs an
+/// owned engine — e.g. [`crate::serve::Registry::new`] — can take a clone
+/// without recompiling anything.
+#[derive(Clone)]
 pub struct Engine {
     backend: Arc<dyn Backend>,
     manifest: Arc<Manifest>,
     /// Default worker-thread count for data-parallel training
-    /// ([`crate::train::ParallelTrainer`]); 1 = single-threaded.
+    /// ([`crate::train::ParallelTrainer`]) and for the threaded inference
+    /// hot path ([`Flow::sample_batch`] / [`Flow::log_density`] /
+    /// [`Flow::invert_flex`]); 1 = single-threaded.
     threads: usize,
 }
 
@@ -60,9 +68,12 @@ impl EngineBuilder {
         self
     }
 
-    /// Default worker-thread count for data-parallel training (clamped to
-    /// at least 1). Consumers read it back via [`Engine::default_threads`];
-    /// per-run overrides go through `TrainConfig::threads`.
+    /// Default worker-thread count (clamped to at least 1) for both
+    /// data-parallel training and the threaded inference hot path: flows
+    /// handed out by [`Engine::flow`] chunk large `sample_batch` /
+    /// `log_density` / `invert_flex` batches across this many workers.
+    /// Consumers read it back via [`Engine::default_threads`]; per-run
+    /// training overrides go through `TrainConfig::threads`.
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = Some(n.max(1));
         self
@@ -147,6 +158,7 @@ impl Engine {
             manifest: self.manifest.clone(),
             def,
             ledger,
+            threads: self.threads,
         })
     }
 }
@@ -159,6 +171,10 @@ pub struct Flow {
     pub(crate) manifest: Arc<Manifest>,
     pub def: NetworkDef,
     pub(crate) ledger: Arc<MemoryLedger>,
+    /// Worker count for the threaded inference hot path (chunked
+    /// `sample_batch` / `log_density` / `invert_flex`); inherited from
+    /// [`EngineBuilder::threads`], overridable via [`Flow::with_threads`].
+    pub(crate) threads: usize,
 }
 
 impl Clone for Flow {
@@ -171,6 +187,7 @@ impl Clone for Flow {
             manifest: self.manifest.clone(),
             def: self.def.clone(),
             ledger: self.ledger.clone(),
+            threads: self.threads,
         }
     }
 }
@@ -194,12 +211,25 @@ impl Flow {
                 Some(b) => MemoryLedger::with_budget(b),
                 None => MemoryLedger::new(),
             },
+            threads: self.threads,
         }
     }
 
     /// Leading (batch) dimension of the network input.
     pub fn batch(&self) -> usize {
         self.def.in_shape[0]
+    }
+
+    /// Worker count the inference hot path fans out over (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Override the inference worker count on this handle (clamped to at
+    /// least 1). The engine default comes from [`EngineBuilder::threads`].
+    pub fn with_threads(mut self, n: usize) -> Flow {
+        self.threads = n.max(1);
+        self
     }
 
     /// Random-initialize a parameter store for this network.
@@ -324,6 +354,22 @@ mod tests {
         assert!(table.contains("glow16"));
         assert!(table.contains("split(zc=6)"));
         assert!(table.contains("total params:"));
+    }
+
+    #[test]
+    fn threads_flow_from_builder_to_handles() {
+        let engine = Engine::builder().threads(4).build().unwrap();
+        assert_eq!(engine.default_threads(), 4);
+        let flow = engine.flow("realnvp2d").unwrap();
+        assert_eq!(flow.threads(), 4);
+        // clone and fork both inherit; with_threads overrides and clamps
+        assert_eq!(flow.clone().threads(), 4);
+        assert_eq!(flow.fork().threads(), 4);
+        assert_eq!(flow.clone().with_threads(0).threads(), 1);
+        // engine clones share the catalog and the thread default
+        let e2 = engine.clone();
+        assert_eq!(e2.default_threads(), 4);
+        assert!(e2.flow("realnvp2d").is_ok());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //!                   [--mode invertible|stored|checkpoint:K]
 //!                   [--threads N] [--microbatch N]
 //! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
+//! invertnet bench   --suite quick --check --baseline baselines/quick.json
 //! invertnet bench   fig1|fig2   [--budget-gb 40]
 //! invertnet inspect --net glow16
 //! invertnet profile --net glow16 [--iters 5]
@@ -33,7 +34,7 @@ use crate::posterior::{amortized_train, calibrate, posterior_samples,
                        summarize, PosteriorTrainConfig, Simulator};
 use crate::serve::{BatchConfig, Registry, Server};
 use crate::tensor::npy;
-use crate::tensor::ops::{concat_rows, slice_rows};
+use crate::tensor::ops::concat_rows;
 use crate::train::{bits_per_dim, train, Adam, GradClip, TrainConfig};
 use crate::util::bench::fmt_bytes;
 use crate::util::cli::Args;
@@ -68,6 +69,8 @@ USAGE:
                     [--workers N] [--queue-cap N] [--models N] [--root DIR]
   invertnet score   --ckpt DIR --data FILE.npy [--out FILE.npy] [--cond FILE.npy]
                     [--net NAME] [--allow-untrained] [--seed N]
+  invertnet bench   --suite all|quick|memory|throughput|serve|posterior
+                    [--out FILE|DIR] [--baseline FILE|DIR] [--check] [--tol PCT]
   invertnet bench   fig1|fig2 [--budget-gb F]
   invertnet inspect --net NAME
   invertnet profile --net NAME [--iters N]
@@ -107,12 +110,24 @@ SERVING (see README for the JSON-lines protocol):
                       first request for <name>
   --allow-untrained   serve/score randomly initialized weights (loudly)
 
+BENCH SUITES (see BENCHMARKS.md for the schema and baseline procedure):
+  --suite NAME        quick (CI-sized union of all suites), memory,
+                      throughput, serve, posterior, or all (every full
+                      suite as its own report)
+  --out FILE|DIR      where BENCH_<suite>.json lands (DIR => DIR/<suite>.json,
+                      the committed-baseline layout under baselines/)
+  --baseline F|DIR    compare gated (deterministic) metrics against a
+                      committed baseline; with --check, exit non-zero on
+                      any regression beyond --tol percent (default 5)
+
 COMMON OPTIONS:
   --backend ref|xla   execution backend (default: ref — pure Rust, no artifacts)
   --artifacts DIR     manifest/artifact directory (required for --backend xla)
-  --threads N         data-parallel worker threads for training (default: 1);
-                      minibatches are sharded with a deterministic reduction,
-                      so gradients match the single-threaded run
+  --threads N         worker threads (default: 1). Training shards
+                      minibatches with a deterministic reduction; inference
+                      (sample/score/serve/posterior-sample) chunks large
+                      batches across the same pool — both bit-identical to
+                      the single-threaded run
   --microbatch N      gradient-accumulation shard size (default: batch/threads);
                       smaller values tighten the activation-memory envelope
 ";
@@ -653,21 +668,11 @@ fn cmd_score(args: &Args) -> Result<()> {
         }
     }
 
-    // chunk through the canonical batch size to bound activation memory on
-    // arbitrarily large score files
-    let chunk = flow.batch().max(1);
-    let mut scores = Vec::with_capacity(n);
-    let mut off = 0;
-    while off < n {
-        let m = chunk.min(n - off);
-        let part = slice_rows(&x, off, m)?;
-        let cpart = match &cond {
-            Some(c) => Some(slice_rows(c, off, m)?),
-            None => None,
-        };
-        scores.extend(flow.log_density(&part, cpart.as_ref(), &params)?);
-        off += m;
-    }
+    // log_density chunks through the canonical batch internally (bounding
+    // activation memory on arbitrarily large score files) and fans the
+    // chunks across the engine's worker pool (`--threads N`) —
+    // bit-identical to the sequential walk at any thread count
+    let scores = flow.log_density(&x, cond.as_ref(), &params)?;
 
     let mean = scores.iter().sum::<f32>() / n as f32;
     let out = args.str_or("out", "scores.npy");
@@ -708,20 +713,92 @@ fn cmd_list(args: &Args) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
-// bench fig1 / fig2 — the paper's two figures, printed as tables.
-// (The harness-less benches in benches/ wrap the same routines; this
-// subcommand is the quick interactive path.)
+// bench — the unified perf harness (suites + regression gate), plus the
+// paper's two figures as interactive tables (`bench fig1|fig2`).
 // ---------------------------------------------------------------------------
 
-fn cmd_bench(args: &Args) -> Result<()> {
-    let which = args.subcommand.get(1).map(|s| s.as_str());
-    let budget_gb = args.f64_or("budget-gb", 40.0)?;
-    let engine = engine_of(args)?;
-    match which {
-        Some("fig1") => crate::bench_figs::fig1(&engine, budget_gb),
-        Some("fig2") => crate::bench_figs::fig2(&engine, budget_gb),
-        _ => bail!("usage: invertnet bench fig1|fig2"),
+/// Where one suite's JSON lands: `BENCH_<suite>.json` by default; an
+/// explicit `--out` names the file directly, unless it is (or must be,
+/// because several suites ran) a directory — then `<dir>/<suite>.json`,
+/// which is also the committed-baseline layout.
+fn bench_out_path(out: Option<&str>, suite: &str, multi: bool) -> PathBuf {
+    match out {
+        None => PathBuf::from(format!("BENCH_{suite}.json")),
+        Some(o) => {
+            let p = PathBuf::from(o);
+            if multi || o.ends_with('/') || p.is_dir() {
+                p.join(format!("{suite}.json"))
+            } else {
+                p
+            }
+        }
     }
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let engine = engine_of(args)?;
+    match args.subcommand.get(1).map(|s| s.as_str()) {
+        Some("fig1") => {
+            return crate::bench_figs::fig1(&engine,
+                                           args.f64_or("budget-gb", 40.0)?);
+        }
+        Some("fig2") => {
+            return crate::bench_figs::fig2(&engine,
+                                           args.f64_or("budget-gb", 40.0)?);
+        }
+        Some(other) => bail!("unknown bench target {other:?} \
+                              (fig1|fig2, or --suite NAME)"),
+        None => {}
+    }
+    let Some(suite) = args.get("suite") else {
+        bail!("usage: invertnet bench fig1|fig2  |  invertnet bench \
+               --suite {} [--out FILE|DIR] [--baseline FILE|DIR] \
+               [--check] [--tol PCT]",
+              crate::perf::SUITE_NAMES.join("|"));
+    };
+    let tol = args.f64_or("tol", 5.0)?;
+    if tol < 0.0 {
+        bail!("--tol must be >= 0, got {tol}");
+    }
+    let baseline = args.get("baseline").map(PathBuf::from);
+    if args.flag("check") && baseline.is_none() {
+        bail!("--check needs --baseline FILE|DIR (e.g. \
+               baselines/quick.json)");
+    }
+
+    let reports = crate::perf::run_suite(&engine, suite)?;
+    let multi = reports.len() > 1;
+    let mut regressions = 0usize;
+    let mut missing = 0usize;
+    for report in &reports {
+        report.print();
+        let path = bench_out_path(args.get("out"), &report.suite, multi);
+        report.write(engine.backend_name(), engine.default_threads(),
+                     &path)?;
+        if let Some(base) = &baseline {
+            let bfile = if base.is_dir() {
+                base.join(format!("{}.json", report.suite))
+            } else {
+                base.clone()
+            };
+            let b = crate::perf::Baseline::load(&bfile)?;
+            let outcome = crate::perf::check_report(report, &b, tol)?;
+            println!(
+                "# {}: {} gated metric(s) compared, {} bootstrap, \
+                 {} missing, {} regression(s) beyond {tol}%",
+                report.suite, outcome.compared, outcome.bootstrap,
+                outcome.missing.len(), outcome.regressions.len());
+            regressions += outcome.regressions.len();
+            missing += outcome.missing.len();
+        }
+    }
+    if args.flag("check") && (regressions > 0 || missing > 0) {
+        bail!("perf check failed: {regressions} regression(s) beyond \
+               --tol {tol}%, {missing} gated metric(s) missing from the \
+               baseline (see CHECK lines above; regenerate baselines \
+               after intentional changes)");
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -880,6 +957,39 @@ mod tests {
         let err = run(&argv(&["posterior-train", "--sim", "warp"]))
             .unwrap_err();
         assert!(err.to_string().contains("unknown simulator"), "{err:#}");
+    }
+
+    #[test]
+    fn bench_verb_validates_its_arguments() {
+        // no target and no suite -> usage error naming the suites
+        let err = run(&argv(&["bench"])).unwrap_err();
+        assert!(err.to_string().contains("--suite"), "{err:#}");
+        let err = run(&argv(&["bench", "fig3"])).unwrap_err();
+        assert!(err.to_string().contains("unknown bench target"), "{err:#}");
+        let err = run(&argv(&["bench", "--suite", "warp"])).unwrap_err();
+        assert!(err.to_string().contains("unknown suite"), "{err:#}");
+        // --check without a baseline is a CLI error before any measuring
+        let err = run(&argv(&["bench", "--suite", "quick", "--check"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("--baseline"), "{err:#}");
+        let err = run(&argv(&["bench", "--suite", "quick", "--check",
+                              "--baseline", "b.json", "--tol", "-1"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("--tol"), "{err:#}");
+    }
+
+    #[test]
+    fn bench_out_paths_follow_the_baseline_layout() {
+        use std::path::Path;
+        assert_eq!(bench_out_path(None, "quick", false),
+                   Path::new("BENCH_quick.json"));
+        assert_eq!(bench_out_path(Some("x.json"), "quick", false),
+                   Path::new("x.json"));
+        // multiple reports, or a trailing slash, force the dir layout
+        assert_eq!(bench_out_path(Some("baselines"), "memory", true),
+                   Path::new("baselines/memory.json"));
+        assert_eq!(bench_out_path(Some("baselines/"), "memory", false),
+                   Path::new("baselines/memory.json"));
     }
 
     #[test]

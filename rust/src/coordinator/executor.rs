@@ -26,7 +26,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::api::Flow;
 use crate::flow::{ParamStore, StepKind};
-use crate::tensor::ops::{add_assign, concat_last_axis, split_last_axis};
+use crate::tensor::ops::{add_assign, concat_last_axis, concat_rows,
+                         slice_rows, split_last_axis};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
@@ -281,7 +282,9 @@ impl Flow {
     /// the network). This is the serving / OOD-scoring workload: every
     /// layer program is batch-elementwise, so scoring a concatenated batch
     /// equals concatenating per-item scores bit-exactly (pinned in
-    /// `tests/serve.rs`).
+    /// `tests/serve.rs`). Batches larger than [`Flow::infer_chunk`] chunk
+    /// across the inference worker pool when the flow carries more than
+    /// one thread ([`crate::api::EngineBuilder::threads`]), bit-identically.
     pub fn log_density(
         &self,
         x: &Tensor,
@@ -292,6 +295,35 @@ impl Flow {
     }
 
     fn log_density_flex(
+        &self,
+        x: &Tensor,
+        cond: Option<&Tensor>,
+        params: &ParamStore,
+        relax_batch: bool,
+    ) -> Result<Vec<f32>> {
+        let n = x.shape.first().copied().unwrap_or(0);
+        // Threaded hot path: chunk rows across the worker pool. Engaged
+        // only when the inputs would validate on the relaxed walk — bad
+        // shapes fall through to the serial path so its error messages
+        // stay authoritative. Every layer program is batch-elementwise, so
+        // chunked scores are bit-identical to the one-pass walk.
+        if self.infer_engaged(n, relax_batch)
+            && x.shape.len() == self.def.in_shape.len()
+            && x.shape[1..] == self.def.in_shape[1..]
+            && self.check_cond(cond, n, true).is_ok()
+        {
+            let parts = self.infer_parallel(n, |f, lo, len| {
+                let xs = slice_rows(x, lo, len)?;
+                let cs = cond.map(|c| slice_rows(c, lo, len)).transpose()?;
+                f.log_density_serial(&xs, cs.as_ref(), params, true)
+            })?;
+            return Ok(parts.into_iter().flatten().collect());
+        }
+        self.log_density_serial(x, cond, params, relax_batch)
+    }
+
+    /// The single-pass log-density walk (one forward, no chunking).
+    fn log_density_serial(
         &self,
         x: &Tensor,
         cond: Option<&Tensor>,
@@ -309,6 +341,115 @@ impl Flow {
             }
         }
         Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Threaded inference hot path
+    // ------------------------------------------------------------------
+
+    /// Fixed row-chunk size for the threaded inference paths: the
+    /// network's canonical batch. A *fixed* chunk (never derived from the
+    /// thread count) is what makes results bit-identical at any thread
+    /// count — and since every layer program is batch-elementwise, chunked
+    /// results are additionally bit-identical to the unchunked walk
+    /// (pinned in `tests/perf.rs` and `tests/serve.rs`).
+    pub fn infer_chunk(&self) -> usize {
+        self.batch().max(1)
+    }
+
+    /// Should an `n`-row relaxed-batch inference call take the chunked
+    /// path? Whenever there is more than one chunk of work: with one
+    /// worker the chunks run inline (sequentially), which bounds the
+    /// activation envelope to one chunk on arbitrarily large batches;
+    /// with more workers they fan out across the pool. Either way the
+    /// result is bit-identical to the one-pass walk.
+    fn infer_engaged(&self, n: usize, relax_batch: bool) -> bool {
+        relax_batch && n > self.infer_chunk()
+    }
+
+    /// Run `work` over contiguous row-chunks of an `n`-row batch on a
+    /// scoped pool of [`Flow::fork`] handles (same sharding/reduction
+    /// shape as `train::ParallelTrainer`): worker `w` of `T` owns chunks
+    /// `w, w+T, ...` (static round-robin), and results are returned in
+    /// chunk order, so the stitched output never depends on thread
+    /// completion order. `work(flow, lo, len)` sees row window
+    /// `[lo, lo+len)`.
+    fn infer_parallel<T, F>(&self, n: usize, work: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(&Flow, usize, usize) -> Result<T> + Sync,
+    {
+        let chunk = self.infer_chunk();
+        let n_chunks = n.div_ceil(chunk);
+        let threads = self.threads.min(n_chunks).max(1);
+        if threads == 1 {
+            // inline sequential chunking: same walk, no thread overhead
+            let mut out = Vec::with_capacity(n_chunks);
+            for j in 0..n_chunks {
+                let lo = j * chunk;
+                let hi = ((j + 1) * chunk).min(n);
+                out.push(work(self, lo, hi - lo)?);
+            }
+            return Ok(out);
+        }
+        let mut slots: Vec<Option<T>> = Vec::new();
+        slots.resize_with(n_chunks, || None);
+        let work = &work;
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(threads);
+            for w in 0..threads {
+                let worker = self.fork();
+                handles.push(scope.spawn(
+                    move || -> Result<Vec<(usize, T)>> {
+                        let mut done = Vec::new();
+                        let mut j = w;
+                        while j < n_chunks {
+                            let lo = j * chunk;
+                            let hi = ((j + 1) * chunk).min(n);
+                            done.push((j, work(&worker, lo, hi - lo)?));
+                            j += threads;
+                        }
+                        Ok(done)
+                    },
+                ));
+            }
+            // join EVERY handle before reporting any failure (see
+            // ParallelTrainer: an early return would let thread::scope
+            // re-panic over a clean Err)
+            let mut first_err: Option<anyhow::Error> = None;
+            for (w, handle) in handles.into_iter().enumerate() {
+                match handle.join() {
+                    Err(payload) => {
+                        let msg = payload.downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>()
+                                .cloned())
+                            .unwrap_or_else(
+                                || "non-string panic payload".into());
+                        first_err.get_or_insert_with(
+                            || anyhow!("inference worker {w} panicked: \
+                                        {msg}"));
+                    }
+                    Ok(Err(e)) => {
+                        first_err.get_or_insert(e);
+                    }
+                    Ok(Ok(results)) => {
+                        for (j, r) in results {
+                            slots[j] = Some(r);
+                        }
+                    }
+                }
+            }
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })?;
+        slots.into_iter()
+            .enumerate()
+            .map(|(j, s)| s.ok_or_else(
+                || anyhow!("inference chunk {j} missing (scheduler bug)")))
+            .collect()
     }
 
     // ------------------------------------------------------------------
@@ -494,6 +635,12 @@ impl Flow {
     /// reduced-temperature trick); `t = 1.0` is exact model sampling and
     /// multiplies every latent by 1.0, so it is bit-identical to the
     /// canonical [`Flow::sample`] draw for matching `n` and rng state.
+    ///
+    /// All latents are drawn from `rng` up front (sequentially, so the
+    /// stream is thread-count-independent); the inverse walk then rides
+    /// the threaded chunked path when the flow has more than one worker
+    /// thread and `n` exceeds [`Flow::infer_chunk`] — bit-identical to
+    /// the single-threaded draw (pinned in `tests/perf.rs`).
     pub fn sample_batch(
         &self,
         params: &ParamStore,
@@ -551,7 +698,9 @@ impl Flow {
     /// (and the cond, if any) must share one leading dim `n >= 1`, which
     /// may differ from the canonical batch size. Every layer program is
     /// batch-agnostic, so row `i` of the result depends only on row `i` of
-    /// each latent.
+    /// each latent — which is also what lets large relaxed batches chunk
+    /// across the inference worker pool ([`crate::api::EngineBuilder::threads`])
+    /// without changing a single bit of the result.
     pub fn invert_flex(
         &self,
         latents: &[Tensor],
@@ -581,8 +730,35 @@ impl Flow {
             }
         }
         let cond = self.check_cond(cond, n, relax_batch)?;
+        // Threaded hot path (validated above): chunk the latent rows
+        // across the worker pool and stitch results back in chunk order.
+        // Row i of the inverse depends only on row i of each latent, so
+        // the stitched tensor is bit-identical to the one-pass walk.
+        if self.infer_engaged(n, relax_batch) {
+            let parts = self.infer_parallel(n, |f, lo, len| {
+                let lats: Vec<Tensor> = latents.iter()
+                    .map(|t| slice_rows(t, lo, len))
+                    .collect::<Result<_>>()?;
+                let cs = cond.map(|c| slice_rows(c, lo, len)).transpose()?;
+                f.invert_rows(&lats, cs.as_ref(), params)
+            })?;
+            return concat_rows(&parts.iter().collect::<Vec<_>>());
+        }
+        self.invert_rows(latents, cond, params)
+    }
+
+    /// The single-pass inverse walk; inputs are pre-validated by
+    /// [`Flow::invert_flex`] (or are row-slices of validated inputs).
+    fn invert_rows(
+        &self,
+        latents: &[Tensor],
+        cond: Option<&Tensor>,
+        params: &ParamStore,
+    ) -> Result<Tensor> {
         let mut stack: Vec<&Tensor> = latents.iter().collect();
-        let mut cur = stack.pop().unwrap().clone();
+        let mut cur = stack.pop()
+            .ok_or_else(|| anyhow!("invert needs at least one latent"))?
+            .clone();
         for (i, step) in self.def.steps.iter().enumerate().rev() {
             match step.kind {
                 StepKind::Split { zc: _ } => {

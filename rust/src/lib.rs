@@ -38,6 +38,15 @@
 //! * [`train`], [`data`], [`profile`], [`bench_figs`] — training loop,
 //!   the data-parallel [`train::ParallelTrainer`] (`--threads N` on the
 //!   CLI), synthetic workloads, per-entry profiler, figure reproductions.
+//!   The same `--threads` pool drives the **threaded inference hot
+//!   path**: large [`api::Flow::sample_batch`] / [`api::Flow::log_density`]
+//!   / [`api::Flow::invert_flex`] batches chunk across forked handles,
+//!   bit-identically to the single-threaded walk.
+//! * [`perf`] — the unified performance harness: the bench suites
+//!   (memory, throughput, serve latency, posterior end-to-end) as
+//!   library code, one `BENCH_<suite>.json` schema with an environment
+//!   block, and the committed-baseline regression gate behind
+//!   `invertnet bench --suite ... --check` (see BENCHMARKS.md).
 //! * [`serve`] — the batched inference-serving subsystem: a checkpoint
 //!   [`serve::Registry`] (LRU model cache), a micro-batching scheduler
 //!   that coalesces concurrent `sample`/`score`/`posterior` requests into
@@ -95,6 +104,7 @@ pub mod bench_figs;
 pub mod coordinator;
 pub mod data;
 pub mod flow;
+pub mod perf;
 pub mod posterior;
 pub mod profile;
 pub mod runtime;

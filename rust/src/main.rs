@@ -13,6 +13,8 @@
 //! invertnet serve   --ckpt runs/x/checkpoint [--port 7878 | --stdio]
 //!                   [--max-batch 8] [--max-delay-us 500] [--workers 2]
 //! invertnet score   --ckpt runs/x/checkpoint --data x.npy --out scores.npy
+//! invertnet bench   --suite all|quick|memory|throughput|serve|posterior
+//!                   [--out FILE|DIR] [--baseline FILE|DIR] [--check] [--tol 5]
 //! invertnet bench   fig1|fig2 [--budget-gb 40]
 //! invertnet inspect --net glow16
 //! invertnet profile --net glow16 [--iters 5]

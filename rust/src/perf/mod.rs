@@ -1,0 +1,568 @@
+//! `perf` — the unified performance harness.
+//!
+//! The paper's headline claim is quantitative (invertible backprop beats
+//! the autodiff tape on memory, and the package is *measurably* fast), so
+//! regressions in the memory ledger or the training/serving hot paths must
+//! be visible, not vibes. This module turns the four ad-hoc `benches/*.rs`
+//! binaries into **library suites** with one machine-readable output
+//! schema, one CLI verb, and a committed-baseline regression gate:
+//!
+//! ```text
+//! invertnet bench --suite quick --check --baseline baselines/quick.json
+//! invertnet bench --suite all --out baselines/        # regenerate
+//! ```
+//!
+//! * [`suites`] — the measurement code: memory-vs-size, memory-vs-depth,
+//!   train-throughput, serve-latency, and an end-to-end posterior suite,
+//!   each at [`Scale::Quick`] (CI-sized) or [`Scale::Full`].
+//! * [`Metric`] — one named number with a unit, a goodness direction, and
+//!   a `check` bit: **deterministic** metrics (ledger bytes, exact
+//!   counts, fixed-seed losses) gate CI; wall-clock metrics record the
+//!   trajectory but never gate, because they are machine-dependent.
+//! * [`SuiteReport`] — metrics + suite name, serialized as the
+//!   `invertnet-bench/v1` JSON document (`BENCH_<suite>.json`), carrying
+//!   the [`crate::util::bench::env_json`] environment block (git rev,
+//!   threads, cpus, profile) so historical records are comparable.
+//! * [`check_report`] — compare a fresh report against a committed
+//!   baseline with a relative tolerance; regressions in the bad direction
+//!   beyond `--tol` percent fail the run (either direction for equality
+//!   **pins** like the fixed inference chunk). Baseline values of `null`
+//!   are *bootstrap* placeholders: they document the expected metric
+//!   names before the first trusted machine fills the numbers in, and
+//!   never fail the check. A gated metric *absent* from the baseline, or
+//!   a baseline recorded for a different suite, DOES fail — the gate
+//!   must not silently de-gate itself.
+
+pub mod suites;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::api::Engine;
+use crate::util::bench::env_json;
+use crate::util::json::Json;
+
+pub use suites::{memory_vs_depth, memory_vs_size, posterior_e2e,
+                 serve_latency, train_throughput, Scale};
+
+/// Schema tag written into (and required of) every bench document.
+pub const SCHEMA: &str = "invertnet-bench/v1";
+
+// ---------------------------------------------------------------------------
+// Metrics and reports
+// ---------------------------------------------------------------------------
+
+/// One measured number. `name` is `suite/case/metric`
+/// (e.g. `memory_vs_size/hw16/invertible_peak_bytes`).
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+    /// Which direction is good: `false` for bytes/latency, `true` for
+    /// throughput/ratio-of-claim metrics.
+    pub higher_is_better: bool,
+    /// Gated by `--check`. Only deterministic metrics set this; timing
+    /// metrics record the trajectory without gating.
+    pub check: bool,
+    /// Equality pin: deviation in *either* direction beyond tolerance is
+    /// a regression (contract constants like the fixed inference chunk,
+    /// or exactly-once counters). `higher_is_better` is ignored.
+    pub pin: bool,
+}
+
+impl Metric {
+    /// Deterministic byte count (ledger peaks): lower is better, gated.
+    pub fn bytes(name: impl Into<String>, value: i64) -> Metric {
+        Metric {
+            name: name.into(),
+            value: value as f64,
+            unit: "bytes".into(),
+            higher_is_better: false,
+            check: true,
+            pin: false,
+        }
+    }
+
+    /// Deterministic dimensionless value, gated. `higher_is_better`
+    /// states the good direction.
+    pub fn exact(name: impl Into<String>, value: f64,
+                 higher_is_better: bool) -> Metric {
+        Metric {
+            name: name.into(),
+            value,
+            unit: "".into(),
+            higher_is_better,
+            check: true,
+            pin: false,
+        }
+    }
+
+    /// Deterministic contract constant, gated as an equality pin: any
+    /// drift beyond tolerance — in either direction — is a regression.
+    pub fn pinned(name: impl Into<String>, value: f64) -> Metric {
+        Metric {
+            name: name.into(),
+            value,
+            unit: "".into(),
+            higher_is_better: true,
+            check: true,
+            pin: true,
+        }
+    }
+
+    /// Wall-clock rate (per second): higher is better, never gated.
+    pub fn rate(name: impl Into<String>, value: f64) -> Metric {
+        Metric {
+            name: name.into(),
+            value,
+            unit: "per_sec".into(),
+            higher_is_better: true,
+            check: false,
+            pin: false,
+        }
+    }
+
+    /// Wall-clock duration in microseconds: lower is better, never gated.
+    pub fn micros(name: impl Into<String>, value: f64) -> Metric {
+        Metric {
+            name: name.into(),
+            value,
+            unit: "us".into(),
+            higher_is_better: false,
+            check: false,
+            pin: false,
+        }
+    }
+
+    /// Unitless observation (speedups, mean batch sizes): recorded for
+    /// the trajectory, never gated.
+    pub fn observed(name: impl Into<String>, value: f64,
+                    higher_is_better: bool) -> Metric {
+        Metric {
+            name: name.into(),
+            value,
+            unit: "".into(),
+            higher_is_better,
+            check: false,
+            pin: false,
+        }
+    }
+}
+
+/// A named bundle of metrics — one `BENCH_<suite>.json` document.
+#[derive(Debug, Clone)]
+pub struct SuiteReport {
+    pub suite: String,
+    pub metrics: Vec<Metric>,
+}
+
+impl SuiteReport {
+    pub fn new(suite: impl Into<String>) -> SuiteReport {
+        SuiteReport { suite: suite.into(), metrics: Vec::new() }
+    }
+
+    /// Merge another report's metrics into this one (the `quick` and
+    /// `memory` CLI suites are unions of library suites).
+    pub fn absorb(&mut self, other: SuiteReport) {
+        self.metrics.extend(other.metrics);
+    }
+
+    /// The full `invertnet-bench/v1` document. `threads` feeds the
+    /// environment block; `backend` names the execution backend measured.
+    pub fn to_json(&self, backend: &str, threads: usize) -> Json {
+        let mut env = match env_json(threads) {
+            Json::Obj(m) => m,
+            _ => unreachable!("env_json returns an object"),
+        };
+        env.insert("backend".into(), Json::Str(backend.into()));
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.into())),
+            ("suite", Json::Str(self.suite.clone())),
+            ("env", Json::Obj(env)),
+            ("metrics", Json::Arr(
+                self.metrics.iter().map(|m| Json::obj(vec![
+                    ("name", Json::Str(m.name.clone())),
+                    ("value", Json::Num(m.value)),
+                    ("unit", Json::Str(m.unit.clone())),
+                    ("higher_is_better", Json::Bool(m.higher_is_better)),
+                    ("check", Json::Bool(m.check)),
+                    ("pin", Json::Bool(m.pin)),
+                ])).collect())),
+        ])
+    }
+
+    /// Write the document to `path` and echo a one-line `BENCH {json}`
+    /// record on stdout (the convention CI greps for).
+    pub fn write(&self, backend: &str, threads: usize, path: &Path)
+                 -> Result<()> {
+        let doc = self.to_json(backend, threads);
+        println!("BENCH {}", doc.to_string());
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {parent:?}"))?;
+            }
+        }
+        std::fs::write(path, doc.to_string_pretty())
+            .with_context(|| format!("writing {path:?}"))?;
+        println!("# {} suite -> {}", self.suite, path.display());
+        Ok(())
+    }
+
+    /// Human-readable table of the metrics.
+    pub fn print(&self) {
+        println!("# suite {} ({} metrics)", self.suite, self.metrics.len());
+        for m in &self.metrics {
+            println!("{:<56} {:>16.3} {:<8} {}{}",
+                     m.name, m.value, m.unit,
+                     if m.higher_is_better { "up" } else { "down" },
+                     if m.check { "  [gated]" } else { "" });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baselines
+// ---------------------------------------------------------------------------
+
+/// One baseline entry: `value: None` is a bootstrap placeholder (names
+/// the metric, fails nothing).
+#[derive(Debug, Clone)]
+pub struct BaselineMetric {
+    pub value: Option<f64>,
+    pub higher_is_better: bool,
+    pub check: bool,
+    /// Equality pin (optional in the document; defaults to false).
+    pub pin: bool,
+}
+
+/// A parsed baseline document: metric name -> entry.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    pub suite: String,
+    pub metrics: std::collections::BTreeMap<String, BaselineMetric>,
+}
+
+impl Baseline {
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let doc = Json::parse(text)?;
+        let schema = doc.req("schema")?.as_str()?;
+        if schema != SCHEMA {
+            bail!("baseline schema {schema:?} != {SCHEMA:?}");
+        }
+        let mut b = Baseline {
+            suite: doc.req("suite")?.as_str()?.to_string(),
+            metrics: Default::default(),
+        };
+        for m in doc.req("metrics")?.as_arr()? {
+            let name = m.req("name")?.as_str()?.to_string();
+            let value = match m.req("value")? {
+                Json::Null => None,
+                v => Some(v.as_f64()?),
+            };
+            let higher = matches!(m.req("higher_is_better")?,
+                                  Json::Bool(true));
+            let check = matches!(m.req("check")?, Json::Bool(true));
+            let pin = matches!(m.get("pin"), Some(Json::Bool(true)));
+            b.metrics.insert(
+                name, BaselineMetric { value, higher_is_better: higher,
+                                       check, pin });
+        }
+        Ok(b)
+    }
+
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading baseline {path:?}"))?;
+        Baseline::parse(&text)
+            .with_context(|| format!("parsing baseline {path:?}"))
+    }
+}
+
+/// Outcome of a baseline comparison.
+#[derive(Debug, Default)]
+pub struct CheckOutcome {
+    /// Gated metrics compared against a recorded value.
+    pub compared: usize,
+    /// Gated metrics whose baseline value is `null` (bootstrap
+    /// placeholders): recorded only, never a failure.
+    pub bootstrap: usize,
+    /// Gated metrics with NO baseline entry at all. Under `--check` this
+    /// is a failure: a renamed metric (or the wrong baseline file) must
+    /// not silently de-gate itself — regenerate the baseline instead.
+    pub missing: Vec<String>,
+    /// `(name, baseline, measured, bad-direction % change)` beyond tol.
+    pub regressions: Vec<(String, f64, f64, f64)>,
+}
+
+impl CheckOutcome {
+    /// Clean iff nothing regressed AND every gated metric had a baseline
+    /// entry (null placeholders count as present).
+    pub fn ok(&self) -> bool {
+        self.regressions.is_empty() && self.missing.is_empty()
+    }
+}
+
+/// Compare `report` against `baseline` with a relative tolerance of
+/// `tol_pct` percent. Errors if the baseline was recorded for a
+/// different suite (comparing `serve` numbers against `quick.json` is a
+/// user error, not a clean pass). Only metrics gated (`check: true`) in
+/// **both** the report and the baseline are compared; the measured value
+/// may drift up to `tol_pct` percent in the *bad* direction (per the
+/// metric's goodness direction — either direction for equality pins)
+/// before it counts as a regression. A gated metric with no baseline
+/// entry at all lands in [`CheckOutcome::missing`] and fails
+/// [`CheckOutcome::ok`]. Prints one `CHECK` line per gated metric.
+pub fn check_report(report: &SuiteReport, baseline: &Baseline,
+                    tol_pct: f64) -> Result<CheckOutcome> {
+    if baseline.suite != report.suite {
+        bail!("baseline is for suite {:?}, report is {:?} — wrong \
+               --baseline file?", baseline.suite, report.suite);
+    }
+    let mut out = CheckOutcome::default();
+    for m in report.metrics.iter().filter(|m| m.check) {
+        let Some(base) = baseline.metrics.get(&m.name)
+            .filter(|b| b.check) else {
+            out.missing.push(m.name.clone());
+            println!("CHECK {:<56} measured {:>14.3}  MISSING from \
+                      baseline (regenerate it)", m.name, m.value);
+            continue;
+        };
+        let Some(base_v) = base.value else {
+            out.bootstrap += 1;
+            println!("CHECK {:<56} measured {:>14.3}  (baseline null — \
+                      bootstrap, recorded only)", m.name, m.value);
+            continue;
+        };
+        // % change in the bad direction; <= 0 means equal or improved.
+        // Pins treat ANY deviation as bad.
+        let bad_pct = if base_v == 0.0 {
+            // relative change is undefined; any bad-direction move on a
+            // zero baseline is treated as a full regression
+            let moved = if m.pin {
+                m.value != 0.0
+            } else if m.higher_is_better {
+                m.value < 0.0
+            } else {
+                m.value > 0.0
+            };
+            if moved { f64::INFINITY } else { 0.0 }
+        } else if m.pin {
+            (m.value - base_v).abs() / base_v.abs() * 100.0
+        } else if m.higher_is_better {
+            (base_v - m.value) / base_v.abs() * 100.0
+        } else {
+            (m.value - base_v) / base_v.abs() * 100.0
+        };
+        out.compared += 1;
+        let verdict = if bad_pct > tol_pct { "REGRESSION" } else { "ok" };
+        println!("CHECK {:<56} base {:>14.3}  now {:>14.3}  {:>+8.2}% {}{}",
+                 m.name, base_v, m.value,
+                 if m.higher_is_better && !m.pin { -bad_pct } else { bad_pct },
+                 verdict,
+                 if m.pin { " [pin]" } else { "" });
+        if bad_pct > tol_pct {
+            out.regressions.push((m.name.clone(), base_v, m.value, bad_pct));
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// CLI suite resolution
+// ---------------------------------------------------------------------------
+
+/// The CLI-facing suite names `invertnet bench --suite` accepts.
+pub const SUITE_NAMES: &[&str] =
+    &["all", "quick", "memory", "throughput", "serve", "posterior"];
+
+/// Resolve a CLI suite name into one or more reports. `quick` is a
+/// single merged report of every library suite at [`Scale::Quick`];
+/// `all` is the four full suites as separate reports; the rest are one
+/// full suite each (`memory` merges the size and depth sweeps).
+pub fn run_suite(engine: &Engine, name: &str) -> Result<Vec<SuiteReport>> {
+    match name {
+        "quick" => {
+            let mut r = SuiteReport::new("quick");
+            r.absorb(memory_vs_size(engine, Scale::Quick)?);
+            r.absorb(memory_vs_depth(engine, Scale::Quick)?);
+            r.absorb(train_throughput(engine, Scale::Quick)?);
+            r.absorb(serve_latency(engine, Scale::Quick)?);
+            r.absorb(posterior_e2e(engine, Scale::Quick)?);
+            Ok(vec![r])
+        }
+        "memory" => {
+            let mut r = SuiteReport::new("memory");
+            r.absorb(memory_vs_size(engine, Scale::Full)?);
+            r.absorb(memory_vs_depth(engine, Scale::Full)?);
+            Ok(vec![r])
+        }
+        "throughput" => {
+            let mut r = SuiteReport::new("throughput");
+            r.absorb(train_throughput(engine, Scale::Full)?);
+            Ok(vec![r])
+        }
+        "serve" => {
+            let mut r = SuiteReport::new("serve");
+            r.absorb(serve_latency(engine, Scale::Full)?);
+            Ok(vec![r])
+        }
+        "posterior" => {
+            let mut r = SuiteReport::new("posterior");
+            r.absorb(posterior_e2e(engine, Scale::Full)?);
+            Ok(vec![r])
+        }
+        "all" => {
+            let mut out = Vec::new();
+            for sub in ["memory", "throughput", "serve", "posterior"] {
+                out.extend(run_suite(engine, sub)?);
+            }
+            Ok(out)
+        }
+        other => bail!("unknown suite {other:?} (expected one of \
+                        {SUITE_NAMES:?})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> SuiteReport {
+        SuiteReport {
+            suite: "t".into(),
+            metrics: vec![
+                Metric::bytes("t/a/peak_bytes", 1000),
+                Metric::rate("t/a/steps_per_sec", 42.0),
+                Metric::exact("t/a/ratio", 4.0, true),
+                Metric::pinned("t/a/chunk", 256.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_through_json() {
+        let r = report();
+        let doc = r.to_json("ref", 2);
+        assert_eq!(doc.req("schema").unwrap().as_str().unwrap(), SCHEMA);
+        assert_eq!(doc.req("suite").unwrap().as_str().unwrap(), "t");
+        let env = doc.req("env").unwrap();
+        assert_eq!(env.req("backend").unwrap().as_str().unwrap(), "ref");
+        assert_eq!(env.req("threads").unwrap().as_usize().unwrap(), 2);
+        assert!(env.req("git_rev").is_ok());
+        assert!(env.req("profile").is_ok());
+        // the serialized report is its own valid baseline
+        let b = Baseline::parse(&doc.to_string()).unwrap();
+        assert_eq!(b.suite, "t");
+        assert_eq!(b.metrics.len(), 4);
+        assert_eq!(b.metrics["t/a/peak_bytes"].value, Some(1000.0));
+        assert!(b.metrics["t/a/peak_bytes"].check);
+        assert!(!b.metrics["t/a/steps_per_sec"].check);
+        assert!(b.metrics["t/a/chunk"].pin);
+        assert!(!b.metrics["t/a/peak_bytes"].pin);
+        // a baseline without "pin" keys (older documents) still parses
+        let legacy = Baseline::parse(
+            r#"{"schema":"invertnet-bench/v1","suite":"t","metrics":
+                [{"name":"x","value":1,"unit":"","higher_is_better":true,
+                  "check":true}]}"#).unwrap();
+        assert!(!legacy.metrics["x"].pin);
+    }
+
+    #[test]
+    fn self_comparison_is_clean() {
+        let r = report();
+        let b = Baseline::parse(&r.to_json("ref", 1).to_string()).unwrap();
+        let out = check_report(&r, &b, 2.0).unwrap();
+        assert!(out.ok());
+        assert_eq!(out.compared, 3); // the three gated metrics
+        assert_eq!(out.bootstrap, 0);
+        assert!(out.missing.is_empty());
+    }
+
+    #[test]
+    fn regressions_respect_direction_and_tolerance() {
+        let r = report();
+        let mut b = Baseline::parse(&r.to_json("ref", 1).to_string())
+            .unwrap();
+        // bytes grew 10% over baseline -> lower-is-better regression
+        b.metrics.get_mut("t/a/peak_bytes").unwrap().value = Some(909.0);
+        let out = check_report(&r, &b, 5.0).unwrap();
+        assert_eq!(out.regressions.len(), 1);
+        assert_eq!(out.regressions[0].0, "t/a/peak_bytes");
+        // within tolerance -> clean
+        let out = check_report(&r, &b, 15.0).unwrap();
+        assert!(out.ok());
+        // higher-is-better metric dropping is also a regression
+        b.metrics.get_mut("t/a/peak_bytes").unwrap().value = Some(1000.0);
+        b.metrics.get_mut("t/a/ratio").unwrap().value = Some(8.0);
+        let out = check_report(&r, &b, 5.0).unwrap();
+        assert_eq!(out.regressions.len(), 1);
+        assert_eq!(out.regressions[0].0, "t/a/ratio");
+        // improvements never fail, at any tolerance
+        b.metrics.get_mut("t/a/ratio").unwrap().value = Some(1.0);
+        assert!(check_report(&r, &b, 0.0).unwrap().ok());
+    }
+
+    #[test]
+    fn pins_fail_on_drift_in_either_direction() {
+        let r = report();
+        let mut b = Baseline::parse(&r.to_json("ref", 1).to_string())
+            .unwrap();
+        // measured 256 vs pinned 128: "higher" would pass a directional
+        // gate, but a pin must flag it
+        b.metrics.get_mut("t/a/chunk").unwrap().value = Some(128.0);
+        let out = check_report(&r, &b, 5.0).unwrap();
+        assert_eq!(out.regressions.len(), 1, "{:?}", out.regressions);
+        assert_eq!(out.regressions[0].0, "t/a/chunk");
+        // and a drop is flagged too
+        b.metrics.get_mut("t/a/chunk").unwrap().value = Some(512.0);
+        let out = check_report(&r, &b, 5.0).unwrap();
+        assert_eq!(out.regressions.len(), 1);
+        // exact match is clean at zero tolerance
+        b.metrics.get_mut("t/a/chunk").unwrap().value = Some(256.0);
+        assert!(check_report(&r, &b, 0.0).unwrap().ok());
+    }
+
+    #[test]
+    fn null_baselines_bootstrap_without_failing() {
+        let r = report();
+        let mut b = Baseline::parse(&r.to_json("ref", 1).to_string())
+            .unwrap();
+        b.metrics.get_mut("t/a/peak_bytes").unwrap().value = None;
+        let out = check_report(&r, &b, 0.0).unwrap();
+        assert!(out.ok());
+        assert_eq!(out.bootstrap, 1);
+        assert_eq!(out.compared, 2);
+    }
+
+    #[test]
+    fn missing_entries_and_wrong_suites_fail_the_gate() {
+        let r = report();
+        let mut b = Baseline::parse(&r.to_json("ref", 1).to_string())
+            .unwrap();
+        // a gated metric absent from the baseline must NOT silently pass
+        b.metrics.remove("t/a/peak_bytes");
+        let out = check_report(&r, &b, 5.0).unwrap();
+        assert!(!out.ok());
+        assert_eq!(out.missing, vec!["t/a/peak_bytes".to_string()]);
+        assert!(out.regressions.is_empty());
+        // a baseline recorded for another suite is an error, not a pass
+        b.suite = "other".into();
+        assert!(check_report(&r, &b, 5.0).is_err());
+    }
+
+    #[test]
+    fn baseline_rejects_wrong_schema() {
+        assert!(Baseline::parse(
+            r#"{"schema":"other/v9","suite":"x","metrics":[]}"#).is_err());
+        assert!(Baseline::parse("not json").is_err());
+    }
+
+    #[test]
+    fn unknown_suite_is_an_error() {
+        let engine = Engine::native().unwrap();
+        assert!(run_suite(&engine, "warp").is_err());
+    }
+}

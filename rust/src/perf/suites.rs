@@ -1,0 +1,468 @@
+//! The measurement suites behind `invertnet bench --suite ...` — the
+//! library home of what the `benches/*.rs` binaries used to hand-roll.
+//!
+//! Each suite takes the [`Engine`] to measure and a [`Scale`]:
+//! [`Scale::Quick`] is CI-sized (a couple of minutes on two cores, small
+//! sweeps), [`Scale::Full`] is the interactive/bench-binary shape. Every
+//! suite returns a [`SuiteReport`] whose deterministic metrics (memory
+//! ledger peaks, fixed-seed losses, exact counts) are gated against
+//! committed baselines, while wall-clock metrics record the perf
+//! trajectory without gating (they are machine-dependent; the env block
+//! says which machine).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::api::Engine;
+use crate::bench_figs::measure_peak;
+use crate::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
+use crate::data::{synth_images, LinearGaussian};
+use crate::posterior::{amortized_train, posterior_samples, summarize,
+                       PosteriorTrainConfig, Simulator};
+use crate::serve::{BatchConfig, Registry, Request, Response, Server,
+                   StatsSnapshot};
+use crate::tensor::Tensor;
+use crate::train::ParallelTrainer;
+use crate::util::bench::bench;
+use crate::util::rng::Pcg64;
+
+use super::{Metric, SuiteReport};
+
+/// How big a sweep a suite runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-sized: smallest interesting sweep, few timed iterations.
+    Quick,
+    /// The full bench-binary shape.
+    Full,
+}
+
+impl Scale {
+    fn pick<T: Copy>(self, quick: T, full: T) -> T {
+        match self {
+            Scale::Quick => quick,
+            Scale::Full => full,
+        }
+    }
+}
+
+fn batch_for(flow: &crate::api::Flow, rng: &mut Pcg64) -> Tensor {
+    let s = &flow.def.in_shape;
+    if s.len() == 4 {
+        synth_images(s[0], s[1], s[2], s[3], rng)
+    } else {
+        Tensor { shape: s.clone(), data: rng.normal_vec(s.iter().product()) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Memory suites (the paper's Figs. 1-2, as gated numbers)
+// ---------------------------------------------------------------------------
+
+/// Peak training memory vs spatial image size (GLOW, 3 channels, batch 8):
+/// one measured `train_step` per (size, schedule) under the byte-exact
+/// ledger. All metrics are deterministic and gated.
+pub fn memory_vs_size(engine: &Engine, scale: Scale) -> Result<SuiteReport> {
+    let sizes: &[usize] = scale.pick(&[16usize][..], &[16, 32, 64][..]);
+    let mut r = SuiteReport::new("memory_vs_size");
+    for &hw in sizes {
+        let net = format!("glow_fig1_{hw}");
+        let inv = measure_peak(engine, &net, ExecMode::Invertible, None)?;
+        let sto = measure_peak(engine, &net, ExecMode::Stored, None)?;
+        r.metrics.push(Metric::bytes(
+            format!("memory_vs_size/hw{hw}/invertible_peak_bytes"), inv));
+        r.metrics.push(Metric::bytes(
+            format!("memory_vs_size/hw{hw}/stored_peak_bytes"), sto));
+        if inv > 0 {
+            // the paper's claim, as a number that must not shrink
+            r.metrics.push(Metric::exact(
+                format!("memory_vs_size/hw{hw}/stored_over_invertible"),
+                sto as f64 / inv as f64, true));
+        }
+        engine.clear_cache();
+    }
+    Ok(r)
+}
+
+/// Peak training memory vs GLOW depth at a fixed 64x64x3 input:
+/// invertible must stay flat, stored grows linearly. The flatness ratio
+/// (deepest / shallowest invertible peak) is the gated claim metric.
+pub fn memory_vs_depth(engine: &Engine, scale: Scale) -> Result<SuiteReport> {
+    let depths: &[usize] = scale.pick(&[2usize, 4][..], &[2, 4, 8, 16][..]);
+    let mut r = SuiteReport::new("memory_vs_depth");
+    let mut inv_first = None;
+    let mut inv_last = 0i64;
+    let mut sto_last = 0i64;
+    for &k in depths {
+        let net = format!("glow_fig2_d{k}");
+        let inv = measure_peak(engine, &net, ExecMode::Invertible, None)?;
+        let sto = measure_peak(engine, &net, ExecMode::Stored, None)?;
+        r.metrics.push(Metric::bytes(
+            format!("memory_vs_depth/d{k}/invertible_peak_bytes"), inv));
+        r.metrics.push(Metric::bytes(
+            format!("memory_vs_depth/d{k}/stored_peak_bytes"), sto));
+        inv_first.get_or_insert(inv);
+        inv_last = inv;
+        sto_last = sto;
+        engine.clear_cache();
+    }
+    let first = inv_first.ok_or_else(|| anyhow!("empty depth sweep"))?;
+    if first > 0 {
+        r.metrics.push(Metric::exact(
+            "memory_vs_depth/invertible_flatness",
+            inv_last as f64 / first as f64, false));
+    }
+    if inv_last > 0 {
+        let deepest = depths.last().expect("non-empty sweep");
+        r.metrics.push(Metric::exact(
+            format!("memory_vs_depth/stored_over_invertible_at_d{deepest}"),
+            sto_last as f64 / inv_last as f64, true));
+    }
+    Ok(r)
+}
+
+// ---------------------------------------------------------------------------
+// Train throughput (+ the threaded hot paths)
+// ---------------------------------------------------------------------------
+
+/// Train-step latency per schedule, the recompute-overhead trade, the
+/// data-parallel thread-scaling curve, and the threaded inference hot
+/// path (`log_density` / `sample_batch` rows/sec vs thread count). All
+/// wall-clock: recorded, never gated.
+pub fn train_throughput(engine: &Engine, scale: Scale)
+                        -> Result<SuiteReport> {
+    let nets: &[&str] = scale.pick(&["realnvp2d"][..],
+                                   &["realnvp2d", "glow_bench32"][..]);
+    let (warmup, iters) = scale.pick((1, 3), (2, 8));
+    let train_threads: &[usize] =
+        scale.pick(&[1usize, 2][..], &[1, 2, 4, 8][..]);
+    let infer_threads: &[usize] =
+        scale.pick(&[1usize, 2][..], &[1, 2, 4][..]);
+    let mut r = SuiteReport::new("train_throughput");
+    let mut rng = Pcg64::new(11);
+
+    for net in nets {
+        let flow = engine.flow(net)?;
+        let params = flow.init_params(3)?;
+        let x = batch_for(&flow, &mut rng);
+
+        // -- schedules: invertible vs stored vs hybrid ------------------
+        let schedules: [(&str, &dyn ActivationSchedule); 3] = [
+            ("invertible", &ExecMode::Invertible),
+            ("stored", &ExecMode::Stored),
+            ("checkpoint4", &CheckpointEveryK(4)),
+        ];
+        let mut mean_s = Vec::new();
+        for (label, sched) in schedules {
+            flow.train_step(&x, None, &params, sched)?; // surface errors
+            let s = bench(warmup, iters, || {
+                flow.train_step(&x, None, &params, sched).unwrap();
+            });
+            r.metrics.push(Metric::rate(
+                format!("train_throughput/{net}/{label}_steps_per_sec"),
+                1.0 / s.mean_s));
+            mean_s.push(s.mean_s);
+        }
+        r.metrics.push(Metric::observed(
+            format!("train_throughput/{net}/recompute_overhead_pct"),
+            (mean_s[0] / mean_s[1] - 1.0) * 100.0, false));
+
+        // -- data-parallel thread scaling -------------------------------
+        let mut base = 0.0f64;
+        for &t in train_threads {
+            let trainer = ParallelTrainer::new(t);
+            trainer.train_step(&flow, &x, None, &params,
+                               &ExecMode::Invertible)?;
+            let s = bench(1, iters, || {
+                trainer.train_step(&flow, &x, None, &params,
+                                   &ExecMode::Invertible).unwrap();
+            });
+            let sps = 1.0 / s.mean_s;
+            if t == *train_threads.first().expect("non-empty") {
+                base = sps;
+            }
+            r.metrics.push(Metric::rate(
+                format!("train_throughput/{net}/train_threads{t}_steps_per_sec"),
+                sps));
+            r.metrics.push(Metric::observed(
+                format!("train_throughput/{net}/train_threads{t}_speedup"),
+                sps / base, true));
+        }
+
+        // -- threaded inference hot path --------------------------------
+        // rows chosen so the chunked path engages (n = 4 canonical
+        // batches); same latents/inputs at every thread count, so the
+        // curve isolates the pool overhead + scaling
+        let n = flow.batch() * 4;
+        let chunk = flow.infer_chunk();
+        // stack 4 canonical batches worth of rows
+        let mut xr = batch_for(&flow, &mut rng);
+        while xr.shape[0] < n {
+            let more = batch_for(&flow, &mut rng);
+            xr.data.extend_from_slice(&more.data);
+            xr.shape[0] += more.shape[0];
+        }
+        let mut base_ld = 0.0f64;
+        let mut base_sb = 0.0f64;
+        for &t in infer_threads {
+            let tflow = flow.clone().with_threads(t);
+            tflow.log_density(&xr, None, &params)?;
+            let s = bench(1, iters, || {
+                tflow.log_density(&xr, None, &params).unwrap();
+            });
+            let rows = n as f64 / s.mean_s;
+            let s2 = bench(1, iters, || {
+                let mut r2 = Pcg64::new(17);
+                tflow.sample_batch(&params, n, None, 1.0, &mut r2).unwrap();
+            });
+            let srows = n as f64 / s2.mean_s;
+            if t == *infer_threads.first().expect("non-empty") {
+                base_ld = rows;
+                base_sb = srows;
+            }
+            r.metrics.push(Metric::rate(
+                format!("train_throughput/{net}/log_density_threads{t}_rows_per_sec"),
+                rows));
+            r.metrics.push(Metric::observed(
+                format!("train_throughput/{net}/log_density_threads{t}_speedup"),
+                rows / base_ld, true));
+            r.metrics.push(Metric::rate(
+                format!("train_throughput/{net}/sample_batch_threads{t}_rows_per_sec"),
+                srows));
+            r.metrics.push(Metric::observed(
+                format!("train_throughput/{net}/sample_batch_threads{t}_speedup"),
+                srows / base_sb, true));
+        }
+        // the fixed chunk size the bit-identity contract depends on:
+        // drift in EITHER direction is a contract change, so it's a pin
+        r.metrics.push(Metric::pinned(
+            format!("train_throughput/{net}/infer_chunk_rows"),
+            chunk as f64));
+        engine.clear_cache();
+    }
+    Ok(r)
+}
+
+// ---------------------------------------------------------------------------
+// Serve latency
+// ---------------------------------------------------------------------------
+
+const SERVE_NET: &str = "realnvp2d";
+
+fn boot_server(engine: &Engine, max_batch: usize) -> Result<Server> {
+    let registry = Registry::new(engine.clone(), 2);
+    registry.register_untrained(SERVE_NET, 3)?;
+    Ok(Server::new(registry, BatchConfig {
+        max_batch,
+        max_delay: Duration::from_micros(300),
+        workers: 2,
+        queue_cap: 1024,
+    }).allow_untrained())
+}
+
+/// Fire `clients * reqs` single-item requests, return (requests/sec,
+/// stats snapshot). Errored requests are collected and surfaced as an
+/// `Err` — never a panic inside a worker thread, so a transient server
+/// error (e.g. bounded-queue give-up on a loaded runner) fails the
+/// suite cleanly instead of aborting the whole bench process.
+fn run_load(server: &Server, op: &str, clients: usize, reqs: usize)
+            -> Result<(f64, StatsSnapshot)> {
+    use std::sync::Mutex;
+    let first_err: Mutex<Option<String>> = Mutex::new(None);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for client in 0..clients as u64 {
+            let first_err = &first_err;
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(0xbe7c ^ client);
+                for i in 0..reqs as u64 {
+                    let req = match op {
+                        "sample" => Request::Sample {
+                            model: None,
+                            n: 1,
+                            temperature: 1.0,
+                            seed: client * 10_000 + i,
+                            cond: None,
+                        },
+                        _ => Request::Score {
+                            model: None,
+                            x: Tensor {
+                                shape: vec![1, 2],
+                                data: rng.normal_vec(2),
+                            },
+                            cond: None,
+                        },
+                    };
+                    let resp = server.handle(req);
+                    if resp.is_error() {
+                        first_err.lock().unwrap().get_or_insert_with(
+                            || format!("{op} request failed: {resp:?}"));
+                        return;
+                    }
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    if let Some(msg) = first_err.into_inner().unwrap() {
+        return Err(anyhow!("{msg}"));
+    }
+    let total = (clients * reqs) as f64;
+    let Response::Stats(snap) = server.handle(Request::Stats) else {
+        return Err(anyhow!("stats request failed"));
+    };
+    Ok((total / elapsed, snap))
+}
+
+/// Serving throughput: coalesced micro-batching (max-batch 8) vs
+/// one-request-per-pass (max-batch 1), for `score` and `sample`. The
+/// request-count metric is exact and gated; rates/latencies are recorded.
+pub fn serve_latency(engine: &Engine, scale: Scale) -> Result<SuiteReport> {
+    let (clients, reqs) = scale.pick((4, 25), (8, 150));
+    let mut r = SuiteReport::new("serve_latency");
+    let mut total_expected = 0u64;
+    let mut total_seen = 0u64;
+    for op in ["score", "sample"] {
+        let base = boot_server(engine, 1)?;
+        let (rps_1, snap_1) = run_load(&base, op, clients, reqs)?;
+        let coal = boot_server(engine, 8)?;
+        let (rps_8, snap_8) = run_load(&coal, op, clients, reqs)?;
+        total_expected += 2 * (clients * reqs) as u64;
+        total_seen += snap_1.requests + snap_8.requests;
+
+        r.metrics.push(Metric::rate(
+            format!("serve_latency/{op}/unbatched_reqs_per_sec"), rps_1));
+        r.metrics.push(Metric::rate(
+            format!("serve_latency/{op}/coalesced_reqs_per_sec"), rps_8));
+        r.metrics.push(Metric::observed(
+            format!("serve_latency/{op}/coalesce_speedup"),
+            rps_8 / rps_1, true));
+        r.metrics.push(Metric::micros(
+            format!("serve_latency/{op}/coalesced_p50_us"),
+            snap_8.p50_us as f64));
+        r.metrics.push(Metric::micros(
+            format!("serve_latency/{op}/coalesced_p99_us"),
+            snap_8.p99_us as f64));
+        r.metrics.push(Metric::observed(
+            format!("serve_latency/{op}/coalesced_mean_batch"),
+            snap_8.mean_batch, true));
+    }
+    // every request must be answered exactly once — an equality pin, so
+    // double-counting (ratio > 1) fails just like dropped requests
+    r.metrics.push(Metric::pinned(
+        "serve_latency/requests_answered_over_sent",
+        total_seen as f64 / total_expected as f64));
+    Ok(r)
+}
+
+// ---------------------------------------------------------------------------
+// Posterior end-to-end
+// ---------------------------------------------------------------------------
+
+/// End-to-end amortized inference: train `cond_lingauss2d` on the
+/// linear-gaussian simulator for a fixed-seed budget, then draw posterior
+/// samples for a fixed observation and compare the sample mean against
+/// the closed-form posterior. Loss, ledger peak and mean error are
+/// deterministic (fixed seeds, single-threaded training) and gated;
+/// rates are recorded.
+pub fn posterior_e2e(engine: &Engine, scale: Scale) -> Result<SuiteReport> {
+    let steps = scale.pick(60, 400);
+    let draws = scale.pick(128usize, 256);
+    let sim = Simulator::parse("linear-gaussian")?;
+    let flow = engine.flow(sim.default_net())?;
+    let mut params = flow.init_params(7)?;
+    let cfg = PosteriorTrainConfig {
+        steps,
+        lr: 3e-3,
+        seed: 7,
+        eval_every: 0,
+        eval_batches: 0,
+        schedule: Arc::new(ExecMode::Invertible),
+        clip: Some(crate::train::GradClip { max_norm: 50.0 }),
+        log_every: usize::MAX,
+        out_dir: None,
+        quiet: true,
+        threads: 1,
+        microbatch: None,
+    };
+    let t0 = Instant::now();
+    let report = amortized_train(&flow, &mut params, &sim, &cfg)?;
+    let train_s = t0.elapsed().as_secs_f64();
+
+    let mut r = SuiteReport::new("posterior");
+    r.metrics.push(Metric::exact(
+        format!("posterior/lingauss/final_loss_{steps}steps"),
+        report.final_loss as f64, false));
+    r.metrics.push(Metric::bytes(
+        "posterior/lingauss/train_peak_sched_bytes",
+        report.peak_sched_bytes));
+    r.metrics.push(Metric::rate(
+        "posterior/lingauss/train_steps_per_sec",
+        steps as f64 / train_s.max(1e-9)));
+
+    // fixed observation, fixed seed -> deterministic sample mean
+    let y = [0.7f32, -0.4];
+    let t1 = Instant::now();
+    let samples = posterior_samples(&flow, &params, &y, draws, 1.0, 99)?;
+    let sample_s = t1.elapsed().as_secs_f64();
+    let s = summarize(&samples);
+    let (mu, _cov) = LinearGaussian::default_problem()
+        .posterior([y[0] as f64, y[1] as f64]);
+    let err = s.mean.iter().zip(&mu)
+        .map(|(a, b)| (*a as f64 - b).abs())
+        .fold(0.0f64, f64::max);
+    r.metrics.push(Metric::exact(
+        format!("posterior/lingauss/mean_abs_err_{steps}steps"),
+        err, false));
+    r.metrics.push(Metric::rate(
+        "posterior/lingauss/sample_rows_per_sec",
+        draws as f64 / sample_s.max(1e-9)));
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_picks() {
+        assert_eq!(Scale::Quick.pick(1, 2), 1);
+        assert_eq!(Scale::Full.pick(1, 2), 2);
+    }
+
+    #[test]
+    fn memory_suite_reports_gated_deterministic_bytes() {
+        let engine = Engine::native().unwrap();
+        let a = memory_vs_size(&engine, Scale::Quick).unwrap();
+        assert!(a.metrics.iter().any(
+            |m| m.name == "memory_vs_size/hw16/invertible_peak_bytes"));
+        let inv = a.metrics.iter()
+            .find(|m| m.name.ends_with("invertible_peak_bytes")).unwrap();
+        let sto = a.metrics.iter()
+            .find(|m| m.name.ends_with("stored_peak_bytes")).unwrap();
+        assert!(inv.check && sto.check);
+        assert!(sto.value > inv.value,
+                "stored {} should exceed invertible {}",
+                sto.value, inv.value);
+        // deterministic: a second run reproduces the bytes exactly
+        let b = memory_vs_size(&engine, Scale::Quick).unwrap();
+        for (ma, mb) in a.metrics.iter().zip(&b.metrics) {
+            assert_eq!(ma.name, mb.name);
+            assert_eq!(ma.value, mb.value, "{}", ma.name);
+        }
+    }
+
+    #[test]
+    fn depth_suite_pins_the_flatness_claim() {
+        let engine = Engine::native().unwrap();
+        let r = memory_vs_depth(&engine, Scale::Quick).unwrap();
+        let flat = r.metrics.iter()
+            .find(|m| m.name == "memory_vs_depth/invertible_flatness")
+            .expect("flatness metric");
+        assert!(flat.check);
+        // invertible peak must stay ~flat in depth (paper claim)
+        assert!(flat.value < 1.6, "flatness {}", flat.value);
+    }
+}

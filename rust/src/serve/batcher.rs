@@ -15,6 +15,15 @@
 //! * applies backpressure through a bounded queue — `submit` blocks until
 //!   space frees (or times out with an error), so a flood of clients
 //!   degrades into queueing latency, not unbounded memory.
+//!
+//! Two thread pools compose here: `--workers` runs *passes* concurrently
+//! (many small coalesced batches), while `--threads` (the engine's
+//! inference pool, inherited by every forked flow) chunks *within* one
+//! large pass — a single `posterior`/`sample` request for hundreds of
+//! rows fans its inverse across the pool via
+//! [`crate::Flow::invert_flex`]'s chunked path, bit-identically. Size
+//! them jointly: `workers * threads` is the worst-case concurrent
+//! backend parallelism.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -368,7 +377,10 @@ fn execute_batch(jobs: Vec<Job>, stats: &ServeStats) {
 /// The batched pass itself: concatenate the group's payloads along axis 0,
 /// run ONE inverse/forward pass on a forked flow (fresh ledger per pass),
 /// slice the result back per job. Row-major concat + batch-elementwise
-/// layer programs make each slice bit-identical to a private pass.
+/// layer programs make each slice bit-identical to a private pass. The
+/// fork inherits the engine's inference thread count, so a pass larger
+/// than the network's canonical batch additionally chunks across the
+/// intra-pass worker pool (see the module docs), still bit-identically.
 fn run_batch(jobs: &[Job], rows: &[usize]) -> Result<Vec<Reply>> {
     let model = &jobs[0].model;
     let flow = model.flow.fork();

@@ -1,9 +1,18 @@
 //! Micro-bench harness (criterion is not in the offline vendor set).
 //!
 //! Warmup + timed iterations with mean / stddev / min, printed in a
-//! criterion-like one-liner. Used by the `benches/` binaries.
+//! criterion-like one-liner. Used by the `benches/` binaries and the
+//! [`crate::perf`] suites.
+//!
+//! Also home of the **environment block** every `BENCH_*.json` document
+//! carries ([`env_json`]): git revision, worker threads, CPU count and
+//! build profile — the context that makes historical perf records
+//! comparable across machines.
 
+use std::path::Path;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy)]
 pub struct Stats {
@@ -73,6 +82,131 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Environment capture
+// ---------------------------------------------------------------------------
+
+/// The build profile this binary was compiled under (release benches are
+/// the only ones worth comparing; debug records are flagged as such).
+pub fn build_profile() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
+    }
+}
+
+/// Logical CPU count (0 when the platform cannot say).
+pub fn cpu_count() -> usize {
+    std::thread::available_parallelism().map_or(0, |p| p.get())
+}
+
+/// The current git revision, best-effort and offline: `INVERTNET_GIT_REV`
+/// override, then `GITHUB_SHA` (CI), then a walk up from the working
+/// directory reading `.git/HEAD` (following one level of `ref:`
+/// indirection, with a `packed-refs` fallback). `"unknown"` when nothing
+/// answers — never an error, so env capture cannot fail a bench run.
+pub fn git_rev() -> String {
+    for var in ["INVERTNET_GIT_REV", "GITHUB_SHA"] {
+        if let Ok(sha) = std::env::var(var) {
+            let sha = sha.trim().to_string();
+            if !sha.is_empty() {
+                return short_rev(&sha);
+            }
+        }
+    }
+    let mut dir = std::env::current_dir().ok();
+    while let Some(d) = dir {
+        // `.git` is a directory in a normal checkout, but a one-line
+        // `gitdir: <path>` FILE in worktrees and submodules — stopping
+        // at the first `.git` of either kind keeps the walk from
+        // attributing the record to an enclosing, unrelated repository
+        if let Some(git_dir) = locate_git_dir(&d) {
+            if let Ok(head) = std::fs::read_to_string(git_dir.join("HEAD")) {
+                return resolve_head(&git_dir, head.trim());
+            }
+            return "unknown".to_string();
+        }
+        dir = d.parent().map(Path::to_path_buf);
+    }
+    "unknown".to_string()
+}
+
+/// The actual git dir for a checkout rooted at `d`, if `d/.git` exists:
+/// the directory itself, or the target of a `gitdir:` file.
+fn locate_git_dir(d: &Path) -> Option<std::path::PathBuf> {
+    let dotgit = d.join(".git");
+    if dotgit.is_dir() {
+        return Some(dotgit);
+    }
+    let text = std::fs::read_to_string(&dotgit).ok()?;
+    let target = text.trim().strip_prefix("gitdir:")?.trim();
+    let target = Path::new(target);
+    Some(if target.is_absolute() {
+        target.to_path_buf()
+    } else {
+        d.join(target)
+    })
+}
+
+fn resolve_head(git_dir: &Path, head: &str) -> String {
+    let Some(refname) = head.strip_prefix("ref: ") else {
+        return short_rev(head); // detached HEAD holds the sha directly
+    };
+    let refname = refname.trim();
+    // worktree git dirs keep HEAD locally but share refs/packed-refs with
+    // the main repository via `commondir`
+    let mut ref_dirs = vec![git_dir.to_path_buf()];
+    if let Ok(common) = std::fs::read_to_string(git_dir.join("commondir")) {
+        let common = Path::new(common.trim());
+        ref_dirs.push(if common.is_absolute() {
+            common.to_path_buf()
+        } else {
+            git_dir.join(common)
+        });
+    }
+    for rd in &ref_dirs {
+        if let Ok(sha) = std::fs::read_to_string(rd.join(refname)) {
+            return short_rev(sha.trim());
+        }
+    }
+    for rd in &ref_dirs {
+        if let Ok(packed) = std::fs::read_to_string(rd.join("packed-refs")) {
+            for line in packed.lines() {
+                // "  <sha> <refname>"
+                if let Some((sha, name)) = line.trim().split_once(' ') {
+                    if name == refname {
+                        return short_rev(sha);
+                    }
+                }
+            }
+        }
+    }
+    "unknown".to_string()
+}
+
+fn short_rev(sha: &str) -> String {
+    let sha: String = sha.chars().take(12).collect();
+    if sha.is_empty() {
+        "unknown".to_string()
+    } else {
+        sha
+    }
+}
+
+/// The environment block carried by every `BENCH_*.json` document:
+/// `{git_rev, threads, cpus, profile}`. `threads` is the worker count the
+/// run was configured with (training/inference pool size), not the
+/// machine's — `cpus` records that.
+pub fn env_json(threads: usize) -> Json {
+    Json::obj(vec![
+        ("git_rev", Json::Str(git_rev())),
+        ("threads", Json::Num(threads as f64)),
+        ("cpus", Json::Num(cpu_count() as f64)),
+        ("profile", Json::Str(build_profile().to_string())),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,6 +217,69 @@ mod tests {
         assert!(s.mean_s >= 0.001);
         assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s);
         assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn env_block_has_the_comparability_fields() {
+        let env = env_json(3);
+        assert_eq!(env.req("threads").unwrap().as_usize().unwrap(), 3);
+        // profile is whatever this test binary was built as
+        let profile = env.req("profile").unwrap().as_str().unwrap();
+        assert!(profile == "debug" || profile == "release");
+        // git_rev is best-effort but always a non-empty string
+        let rev = env.req("git_rev").unwrap().as_str().unwrap();
+        assert!(!rev.is_empty());
+        assert!(env.req("cpus").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn rev_shortening_and_detached_heads() {
+        assert_eq!(short_rev("0123456789abcdef0123"), "0123456789ab");
+        assert_eq!(short_rev(""), "unknown");
+        let d = std::env::temp_dir()
+            .join(format!("invertnet_git_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        // detached: HEAD holds the sha itself
+        assert_eq!(resolve_head(&d, "feedfacefeedfacefeedface"),
+                   "feedfacefeed");
+        // symbolic ref with a loose ref file
+        std::fs::create_dir_all(d.join("refs/heads")).unwrap();
+        std::fs::write(d.join("refs/heads/main"),
+                       "cafebabecafebabecafebabe\n").unwrap();
+        assert_eq!(resolve_head(&d, "ref: refs/heads/main"), "cafebabecafe");
+        // missing ref and no packed-refs -> unknown, never an error
+        assert_eq!(resolve_head(&d, "ref: refs/heads/gone"), "unknown");
+        std::fs::write(d.join("packed-refs"),
+                       "# pack-refs with: peeled\n\
+                        aabbccddeeff00112233 refs/heads/gone\n").unwrap();
+        assert_eq!(resolve_head(&d, "ref: refs/heads/gone"), "aabbccddeeff");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn gitfile_worktrees_resolve_through_commondir() {
+        let root = std::env::temp_dir()
+            .join(format!("invertnet_wt_{}", std::process::id()));
+        let main = root.join("main/.git");
+        let wt_git = main.join("worktrees/feature");
+        let checkout = root.join("feature");
+        std::fs::create_dir_all(main.join("refs/heads")).unwrap();
+        std::fs::create_dir_all(&wt_git).unwrap();
+        std::fs::create_dir_all(&checkout).unwrap();
+        // the checkout's .git is a FILE pointing at the worktree git dir
+        std::fs::write(checkout.join(".git"),
+                       format!("gitdir: {}\n", wt_git.display())).unwrap();
+        std::fs::write(wt_git.join("HEAD"),
+                       "ref: refs/heads/feature\n").unwrap();
+        std::fs::write(wt_git.join("commondir"), "../..\n").unwrap();
+        std::fs::write(main.join("refs/heads/feature"),
+                       "0123456789abcdef0123\n").unwrap();
+        let gd = locate_git_dir(&checkout).expect("gitfile resolves");
+        assert_eq!(resolve_head(&gd, "ref: refs/heads/feature"),
+                   "0123456789ab");
+        // a directory .git still resolves to itself
+        assert_eq!(locate_git_dir(&root.join("main")).unwrap(), main);
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Perf-harness contracts: the Fig. 1 OOM crossover under a fixed memory
+//! budget, bit-identical threaded inference, and the bench-report /
+//! baseline-gate roundtrip.
+
+use invertnet::coordinator::ExecMode;
+use invertnet::perf::{check_report, memory_vs_size, Baseline, Scale};
+use invertnet::util::rng::Pcg64;
+use invertnet::{Engine, MemoryLedger, Tensor};
+
+/// One real training step of `net` under `mode`; returns
+/// (peak_sched_bytes, peak_total_bytes).
+fn measure(engine: &Engine, net: &str, mode: ExecMode,
+           budget: Option<u64>) -> anyhow::Result<(i64, i64)> {
+    let ledger = match budget {
+        Some(b) => MemoryLedger::with_budget(b),
+        None => MemoryLedger::new(),
+    };
+    let flow = engine.flow_with_ledger(net, ledger)?;
+    let params = flow.init_params(42)?;
+    let s = &flow.def.in_shape;
+    let mut rng = Pcg64::new(99);
+    let x = invertnet::data::synth_images(s[0], s[1], s[2], s[3], &mut rng);
+    let r = flow.train_step(&x, None, &params, &mode)?;
+    Ok((r.peak_sched_bytes, r.peak_total_bytes))
+}
+
+/// The paper's Fig. 1 claim as a regression test: under a budget pinned
+/// between the two schedules' peaks, stored-mode training OOMs while
+/// invertible mode trains — same network, same data, same step.
+#[test]
+fn stored_mode_ooms_where_invertible_succeeds() {
+    let engine = Engine::native().unwrap();
+    let net = "glow_fig1_16";
+    let (inv_sched, inv_total) =
+        measure(&engine, net, ExecMode::Invertible, None).unwrap();
+    let (sto_sched, sto_total) =
+        measure(&engine, net, ExecMode::Stored, None).unwrap();
+    assert!(sto_sched > inv_sched,
+            "stored ({sto_sched}) must tape more than invertible \
+             ({inv_sched})");
+
+    // a budget between the two totals: invertible fits, stored cannot
+    let budget = ((inv_total + sto_total) / 2) as u64;
+    let (inv_b, _) = measure(&engine, net, ExecMode::Invertible,
+                             Some(budget)).unwrap();
+    // the budget changes what is *allowed*, not what is allocated
+    assert_eq!(inv_b, inv_sched, "budgeted run must reproduce the peak");
+    let err = measure(&engine, net, ExecMode::Stored, Some(budget))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("OOM"), "{err:#}");
+}
+
+/// Threaded inference is bit-identical to the single-threaded walk for a
+/// fixed chunk size, on both `sample_batch` (inverse) and `log_density`
+/// (forward), including a ragged final chunk and a multiscale net.
+#[test]
+fn threaded_inference_is_bit_identical() {
+    let e1 = Engine::builder().threads(1).build().unwrap();
+    let e4 = Engine::builder().threads(4).build().unwrap();
+    for net in ["realnvp2d", "glow16"] {
+        let f1 = e1.flow(net).unwrap();
+        let f4 = e4.flow(net).unwrap();
+        assert_eq!(f1.infer_chunk(), f4.infer_chunk(),
+                   "chunk size must not depend on the thread count");
+        let params = f1.init_params(5).unwrap();
+        let params4 = f4.init_params(5).unwrap();
+        // 3 full chunks + a ragged tail
+        let n = f1.infer_chunk() * 3 + 3;
+
+        // sample_batch: same rng stream, chunked inverse
+        let mut r1 = Pcg64::new(123);
+        let mut r4 = Pcg64::new(123);
+        let s1 = f1.sample_batch(&params, n, None, 1.0, &mut r1).unwrap();
+        let s4 = f4.sample_batch(&params4, n, None, 1.0, &mut r4).unwrap();
+        assert_eq!(s1.shape, s4.shape);
+        for (a, b) in s1.data.iter().zip(&s4.data) {
+            assert_eq!(a.to_bits(), b.to_bits(),
+                       "{net}: threaded sample diverged");
+        }
+
+        // log_density: chunked forward over the samples just drawn
+        let d1 = f1.log_density(&s1, None, &params).unwrap();
+        let d4 = f4.log_density(&s1, None, &params4).unwrap();
+        assert_eq!(d1.len(), n);
+        for (a, b) in d1.iter().zip(&d4) {
+            assert_eq!(a.to_bits(), b.to_bits(),
+                       "{net}: threaded log_density diverged");
+        }
+
+        // with_threads on one handle reproduces the same bits too
+        let d4b = f1.clone().with_threads(4)
+            .log_density(&s1, None, &params).unwrap();
+        for (a, b) in d1.iter().zip(&d4b) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+/// The conditional (serving/posterior) path threads bit-identically too.
+#[test]
+fn threaded_conditional_inference_matches() {
+    let e4 = Engine::builder().threads(4).build().unwrap();
+    let f1 = Engine::builder().threads(1).build().unwrap()
+        .flow("cond_lingauss2d").unwrap();
+    let f4 = e4.flow("cond_lingauss2d").unwrap();
+    let params = f1.init_params(9).unwrap();
+    let params4 = f4.init_params(9).unwrap();
+    let n = f1.infer_chunk() * 2 + 5;
+    let cond = Tensor {
+        shape: vec![n, 2],
+        data: Pcg64::new(31).normal_vec(n * 2),
+    };
+    let mut r1 = Pcg64::new(77);
+    let mut r4 = Pcg64::new(77);
+    let s1 = f1.sample_batch(&params, n, Some(&cond), 0.8, &mut r1).unwrap();
+    let s4 = f4.sample_batch(&params4, n, Some(&cond), 0.8, &mut r4).unwrap();
+    for (a, b) in s1.data.iter().zip(&s4.data) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let d1 = f1.log_density(&s1, Some(&cond), &params).unwrap();
+    let d4 = f4.log_density(&s1, Some(&cond), &params4).unwrap();
+    for (a, b) in d1.iter().zip(&d4) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// Bad inputs fail with the serial path's error messages even when the
+/// flow carries a thread pool (the chunked path must not mangle errors).
+#[test]
+fn threaded_path_preserves_validation_errors() {
+    let engine = Engine::builder().threads(4).build().unwrap();
+    let flow = engine.flow("realnvp2d").unwrap();
+    let params = flow.init_params(3).unwrap();
+    let n = flow.infer_chunk() * 2 + 1;
+    // wrong per-sample width
+    let bad = Tensor::zeros(&[n, 5]);
+    let err = flow.log_density(&bad, None, &params).unwrap_err();
+    assert!(format!("{err:#}").contains("shape"), "{err:#}");
+    // cond on an unconditioned net
+    let x = Tensor::zeros(&[n, 2]);
+    let cond = Tensor::zeros(&[n, 2]);
+    let err = flow.log_density(&x, Some(&cond), &params).unwrap_err();
+    assert!(format!("{err:#}").contains("no cond"), "{err:#}");
+}
+
+/// A fresh report is clean against its own serialization; a perturbed
+/// baseline flags exactly the regressed metric; on-disk roundtrip works.
+#[test]
+fn bench_report_baseline_roundtrip() {
+    let engine = Engine::native().unwrap();
+    let report = memory_vs_size(&engine, Scale::Quick).unwrap();
+    assert!(report.metrics.iter().any(|m| m.check),
+            "memory suite must emit gated metrics");
+
+    let dir = std::env::temp_dir()
+        .join(format!("invertnet_perf_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("quick.json");
+    report.write(engine.backend_name(), engine.default_threads(), &path)
+        .unwrap();
+
+    let baseline = Baseline::load(&path).unwrap();
+    let clean = check_report(&report, &baseline, 0.0).unwrap();
+    assert!(clean.ok(), "self-check regressed: {:?}", clean.regressions);
+    assert!(clean.compared > 0);
+    assert!(clean.missing.is_empty());
+
+    // shrink one byte baseline by 20% -> a lower-is-better regression
+    let mut bad = baseline.clone();
+    let name = report.metrics.iter()
+        .find(|m| m.check && m.unit == "bytes")
+        .map(|m| m.name.clone())
+        .expect("a gated bytes metric");
+    let entry = bad.metrics.get_mut(&name).unwrap();
+    entry.value = Some(entry.value.unwrap() * 0.8);
+    let out = check_report(&report, &bad, 5.0).unwrap();
+    assert_eq!(out.regressions.len(), 1, "{:?}", out.regressions);
+    assert_eq!(out.regressions[0].0, name);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

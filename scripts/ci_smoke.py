@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Validate the JSON-lines transcripts the CI smoke steps capture.
+
+Usage:
+    python3 scripts/ci_smoke.py serve     /tmp/serve_out.jsonl
+    python3 scripts/ci_smoke.py posterior /tmp/post_serve.jsonl
+    python3 scripts/ci_smoke.py bench     BENCH_quick.json
+
+Each suite checks one kind of artifact:
+
+* ``serve``     — a stdio serve session transcript: sample + score +
+                  stats + shutdown, all ok, with the expected shapes.
+* ``posterior`` — a posterior-op serve transcript: one posterior reply
+                  (mean/std/samples) + shutdown.
+* ``bench``     — a ``BENCH_<suite>.json`` document: schema tag, the
+                  environment block, and at least one gated metric.
+
+Exit code 0 on success; an AssertionError message names what broke.
+(Replaces the inline ``python3 -c`` heredocs that used to live in
+.github/workflows/ci.yml — a checked-in script is diffable, lintable,
+and shared between the smoke steps.)
+"""
+
+import json
+import sys
+
+
+def load_lines(path):
+    with open(path) as fh:
+        return [json.loads(line) for line in fh if line.strip()]
+
+
+def check_serve(path):
+    resp = load_lines(path)
+    assert len(resp) == 4, f"expected 4 replies, got {len(resp)}: {resp}"
+    assert all(r["ok"] for r in resp), resp
+    assert resp[0]["x"]["shape"] == [2, 2], resp[0]
+    assert len(resp[1]["log_density"]) == 2, resp[1]
+    assert resp[2]["stats"]["requests"] == 2, resp[2]
+
+
+def check_posterior(path):
+    resp = load_lines(path)
+    assert len(resp) == 2, f"expected 2 replies, got {len(resp)}: {resp}"
+    assert all(r["ok"] for r in resp), resp
+    post = resp[0]
+    assert post["n"] == 32, post
+    assert len(post["mean"]) == 2 and len(post["std"]) == 2, post
+    assert all(s > 0 for s in post["std"]), post
+    assert post["x"]["shape"] == [32, 2], post
+
+
+def check_bench(path):
+    with open(path) as fh:
+        doc = json.load(fh)
+    assert doc["schema"] == "invertnet-bench/v1", doc.get("schema")
+    env = doc["env"]
+    for key in ("git_rev", "threads", "cpus", "profile", "backend"):
+        assert key in env, f"env block missing {key!r}: {env}"
+    metrics = doc["metrics"]
+    assert metrics, "no metrics recorded"
+    gated = [m for m in metrics if m["check"]]
+    assert gated, "no gated metrics — the regression gate would be empty"
+    for m in metrics:
+        assert isinstance(m["value"], (int, float)), m
+
+
+CHECKS = {"serve": check_serve, "posterior": check_posterior,
+          "bench": check_bench}
+
+
+def main(argv):
+    if len(argv) != 3 or argv[1] not in CHECKS:
+        sys.stderr.write(__doc__)
+        return 2
+    CHECKS[argv[1]](argv[2])
+    print(f"ci_smoke {argv[1]}: {argv[2]} ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
