@@ -1,0 +1,130 @@
+//! Static checkpoint validation: an `index.json` is checked against the
+//! network spec *before any weight bytes load* — wrong-shaped, unknown,
+//! and (crucially) missing params are all structured diagnostics, so a
+//! truncated or foreign checkpoint can't reach a registry or a ledger.
+//!
+//! This closes a real gap: `ParamStore::load` validates every entry it
+//! finds but silently keeps the random init for params the index never
+//! mentions. [`verify_checkpoint_index`] makes completeness explicit.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::flow::{NetworkDef, StepKind};
+use crate::runtime::Manifest;
+use crate::util::json::Json;
+
+use super::{codes, Diagnostic};
+
+/// Validate a checkpoint directory's `index.json` against the resolved
+/// network. IO/parse failures are `Err`; content violations come back as
+/// diagnostics (empty vec = the checkpoint matches the spec exactly).
+pub fn verify_checkpoint_index(manifest: &Manifest, def: &NetworkDef,
+                               dir: &Path) -> Result<Vec<Diagnostic>> {
+    let text = std::fs::read_to_string(dir.join("index.json"))
+        .with_context(|| format!("reading checkpoint {dir:?}"))?;
+    let doc = Json::parse(&text)?;
+
+    // every param the spec expects, keyed the way the index records them
+    let mut expected: BTreeMap<(usize, String), Vec<usize>> = BTreeMap::new();
+    for (si, step) in def.steps.iter().enumerate() {
+        if step.kind != StepKind::Layer {
+            continue;
+        }
+        for spec in &manifest.layer(&step.sig)?.params {
+            expected.insert((si, spec.name.clone()), spec.shape.clone());
+        }
+    }
+
+    let mut diags = Vec::new();
+    let mut seen: BTreeSet<(usize, String)> = BTreeSet::new();
+    for entry in doc.req("params")?.as_arr()? {
+        let si = entry.req("step")?.as_usize()?;
+        let name = entry.req("name")?.as_str()?.to_string();
+        let shape = entry.req("shape")?.as_usize_vec()?;
+        match expected.get(&(si, name.clone())) {
+            None => diags.push(Diagnostic::error(
+                codes::CKPT_UNKNOWN_PARAM, Some(si),
+                format!("checkpoint records param {name:?} at step {si}, \
+                         which network {} does not have", def.name))),
+            Some(want) if *want != shape => diags.push(Diagnostic::error(
+                codes::CKPT_SHAPE_MISMATCH, Some(si),
+                format!("checkpoint param {name:?} at step {si} has shape \
+                         {shape:?}, spec says {want:?}"))),
+            Some(_) => {
+                seen.insert((si, name));
+            }
+        }
+    }
+
+    for ((si, name), shape) in &expected {
+        if !seen.contains(&(*si, name.clone())) {
+            diags.push(Diagnostic::error(
+                codes::CKPT_MISSING_PARAM, Some(*si),
+                format!("checkpoint does not record param {name:?} \
+                         {shape:?} at step {si}; loading it would \
+                         silently keep the random init")));
+        }
+    }
+
+    Ok(diags)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::has_errors;
+    use crate::api::Engine;
+
+    fn temp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("flowcheck_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn clean_checkpoint_verifies_empty() {
+        let dir = temp("clean");
+        let engine = Engine::native().unwrap();
+        let flow = engine.flow("realnvp2d").unwrap();
+        let params = flow.init_params(7).unwrap();
+        params.save(&dir, "realnvp2d").unwrap();
+        let diags = verify_checkpoint_index(engine.manifest(), &flow.def,
+                                            &dir).unwrap();
+        assert!(diags.is_empty(), "{diags:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_index_reports_every_missing_param() {
+        let dir = temp("trunc");
+        let engine = Engine::native().unwrap();
+        let flow = engine.flow("realnvp2d").unwrap();
+        let params = flow.init_params(7).unwrap();
+        params.save(&dir, "realnvp2d").unwrap();
+        // drop half the recorded params — ParamStore::load would accept
+        // this silently, the static check must not
+        let text = std::fs::read_to_string(dir.join("index.json")).unwrap();
+        let mut doc = Json::parse(&text).unwrap();
+        let dropped;
+        {
+            let Json::Obj(m) = &mut doc else { panic!("index not an obj") };
+            let Some(Json::Arr(entries)) = m.get_mut("params") else {
+                panic!("no params array")
+            };
+            dropped = entries.len() - entries.len() / 2;
+            entries.truncate(entries.len() / 2);
+        }
+        std::fs::write(dir.join("index.json"), doc.to_string()).unwrap();
+
+        let diags = verify_checkpoint_index(engine.manifest(), &flow.def,
+                                            &dir).unwrap();
+        assert!(has_errors(&diags));
+        let missing = diags.iter()
+            .filter(|d| d.code == codes::CKPT_MISSING_PARAM)
+            .count();
+        assert_eq!(missing, dropped, "{diags:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,135 @@
+//! `flowcheck`: a static flow verifier and exact memory cost model.
+//!
+//! Everything in this module runs over a manifest / [`NetworkDef`] layer
+//! program *without executing it*:
+//!
+//! * [`verify_network`] / [`verify_manifest`] — shape/width propagation
+//!   through every layer kind, split/concat bookkeeping, multiscale
+//!   squeeze factors, conditional-input widths, and an invertibility
+//!   audit (each kind must declare a total inverse; the composed chain
+//!   must be bijective on its stated dimensions). Every violation is a
+//!   structured [`Diagnostic`] instead of a runtime panic.
+//! * [`predict_peak`] / [`schedule_peaks`] — the static memory planner:
+//!   the *exact* predicted ledger peak bytes per
+//!   [`ActivationSchedule`](crate::coordinator::ActivationSchedule),
+//!   pinned `predicted == measured` against the coordinator's ledger in
+//!   tests and as equality-pin metrics in the memory perf suites.
+//! * [`verify_checkpoint_index`] — checkpoint `index.json` contents
+//!   validated against the spec statically, before any weight loads.
+//!
+//! Gated everywhere a network enters the system: `Engine::build`, the
+//! serve [`Registry`](crate::serve::Registry), and the `invertnet lint`
+//! CLI verb.
+//!
+//! [`NetworkDef`]: crate::flow::NetworkDef
+
+use std::fmt;
+
+mod checkpoint;
+mod planner;
+mod verify;
+
+pub use checkpoint::verify_checkpoint_index;
+pub use planner::{predict_peak, schedule_peaks};
+pub use verify::{verify_checkpoint_k, verify_manifest, verify_network,
+                 INVERTIBLE_KINDS};
+
+/// How bad a [`Diagnostic`] is. `Error` means the network must be
+/// rejected; `Warning` flags suspicious-but-executable definitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// The stable machine-readable diagnostic codes, one per distinct
+/// violation class. Tests and CI smoke checks match on these strings, so
+/// they are part of the `invertnet-lint/v1` contract.
+pub mod codes {
+    /// A network references a layer sig the manifest doesn't define.
+    pub const UNKNOWN_LAYER: &str = "unknown-layer";
+    /// A layer's declared input shape disagrees with the propagated flow
+    /// shape at its position in the chain.
+    pub const SHAPE_MISMATCH: &str = "shape-mismatch";
+    /// A split marker with a bad channel count (`zc == 0` or `zc >= c`)
+    /// or an input shape that disagrees with the propagated flow shape.
+    pub const BAD_SPLIT: &str = "bad-split";
+    /// A squeeze (haar) layer with a non-4D input, odd spatial dims, or
+    /// an output other than `[n, h/2, w/2, 4c]`.
+    pub const BAD_SQUEEZE: &str = "bad-squeeze";
+    /// A non-squeeze layer that changes its shape — width changes are
+    /// only sanctioned at squeeze points, anywhere else the chain can't
+    /// be bijective.
+    pub const WIDTH_CHANGE: &str = "width-change";
+    /// A layer consumes a conditioning input the network doesn't declare,
+    /// or declares a different conditioning width than the network.
+    pub const COND_MISMATCH: &str = "cond-mismatch";
+    /// The network declares a conditioning input no layer consumes.
+    pub const DANGLING_COND: &str = "dangling-cond";
+    /// The declared latent shapes disagree with the ones derived from
+    /// the split markers and the final flow shape (dangling split half).
+    pub const LATENT_MISMATCH: &str = "latent-mismatch";
+    /// Total latent elements differ from input elements: the composed
+    /// chain is not a bijection on its stated dimensions.
+    pub const NOT_BIJECTIVE: &str = "not-bijective";
+    /// A layer kind that does not declare a total inverse.
+    pub const NO_INVERSE: &str = "no-inverse";
+    /// A checkpoint-every-K schedule with `K == 0` (error) or `K` larger
+    /// than the network depth (warning: degenerates to invertible + one
+    /// tape entry).
+    pub const BAD_CHECKPOINT_K: &str = "bad-checkpoint-k";
+    /// A checkpoint index records a param the spec doesn't have.
+    pub const CKPT_UNKNOWN_PARAM: &str = "ckpt-unknown-param";
+    /// A checkpoint param's recorded shape disagrees with the spec.
+    pub const CKPT_SHAPE_MISMATCH: &str = "ckpt-shape-mismatch";
+    /// A spec param the checkpoint index doesn't record — loading would
+    /// silently keep the random init for it.
+    pub const CKPT_MISSING_PARAM: &str = "ckpt-missing-param";
+}
+
+/// One structured verifier finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Step index in the network's layer program, when the finding is
+    /// attributable to one step; `None` for whole-network findings.
+    pub layer_idx: Option<usize>,
+    /// A stable code from [`codes`].
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, layer_idx: Option<usize>,
+                 message: String) -> Diagnostic {
+        Diagnostic { severity: Severity::Error, layer_idx, code, message }
+    }
+
+    pub fn warning(code: &'static str, layer_idx: Option<usize>,
+                   message: String) -> Diagnostic {
+        Diagnostic { severity: Severity::Warning, layer_idx, code, message }
+    }
+
+    pub fn is_error(&self) -> bool {
+        self.severity == Severity::Error
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        };
+        match self.layer_idx {
+            Some(i) => write!(f, "{sev}[{}] step {i}: {}", self.code,
+                              self.message),
+            None => write!(f, "{sev}[{}]: {}", self.code, self.message),
+        }
+    }
+}
+
+/// True if any diagnostic in the slice is error-severity.
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(Diagnostic::is_error)
+}

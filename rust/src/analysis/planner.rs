@@ -1,0 +1,192 @@
+//! The static memory planner: the *exact* predicted ledger peak per
+//! activation schedule, computed by replaying the coordinator executor's
+//! alloc/free order over shapes alone — no tensors, no backend.
+//!
+//! The simulation mirrors `Flow::train_step` statement for statement
+//! (forward tracking, the dy seed, and the per-step backward churn,
+//! including the `y: Option<Tracked>` recompute-activation handoff), so
+//! `predict_peak(def, s) == StepResult::peak_sched_bytes` bit-for-bit
+//! for every schedule. That equality is pinned in `tests/analysis.rs`
+//! and emitted as `*_predicted_over_measured` pin metrics by the memory
+//! perf suites.
+
+use crate::coordinator::memory::bytes_of_shape;
+use crate::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
+use crate::flow::{NetworkDef, Step, StepKind};
+
+/// A shape-only replay of [`MemoryLedger`](crate::MemoryLedger)'s
+/// scheduling-class accounting. Params are never tracked by the
+/// executor, so the simulated ledger starts (and the peak competes)
+/// from zero live bytes — exactly what `reset_peaks()` leaves behind.
+struct Sim {
+    live: i64,
+    peak: i64,
+}
+
+impl Sim {
+    fn new() -> Sim {
+        Sim { live: 0, peak: 0 }
+    }
+
+    fn alloc(&mut self, shape: &[usize]) {
+        self.live += bytes_of_shape(shape);
+        self.peak = self.peak.max(self.live);
+    }
+
+    fn free(&mut self, shape: &[usize]) {
+        self.live -= bytes_of_shape(shape);
+    }
+}
+
+/// After the taped input at step `i` is consumed, does an earlier step
+/// still need a live activation? Mirrors the executor's
+/// `y_needed_before`: true iff the nearest preceding *layer* step is
+/// untaped (splits only reshape the activation on the way down).
+fn y_needed_before(i: usize, taped: &[bool], steps: &[Step]) -> bool {
+    for j in (0..i).rev() {
+        match steps[j].kind {
+            StepKind::Layer => return !taped[j],
+            StepKind::Split { .. } => continue,
+        }
+    }
+    false
+}
+
+/// Exact predicted `peak_sched_bytes` of one training step of `def`
+/// under `schedule`.
+pub fn predict_peak(def: &NetworkDef, schedule: &dyn ActivationSchedule)
+                    -> i64 {
+    let n_layers = def.depth();
+    let mut taped = vec![false; def.steps.len()];
+    let mut layer_ord = 0usize;
+    for (i, step) in def.steps.iter().enumerate() {
+        if step.kind == StepKind::Layer {
+            taped[i] = schedule.tape(layer_ord, n_layers);
+            layer_ord += 1;
+        }
+    }
+
+    let mut sim = Sim::new();
+
+    // ---- forward: the tracked input clone, then per-step tracking ----
+    sim.alloc(&def.in_shape);
+    for (i, step) in def.steps.iter().enumerate() {
+        match step.kind {
+            StepKind::Split { .. } => {
+                let z = step.split_z_shape().expect("split step");
+                sim.alloc(&z); // factored-out latent
+                sim.alloc(&step.out_shape); // kept half
+                sim.free(&step.in_shape); // consumed activation
+            }
+            StepKind::Layer => {
+                sim.alloc(&step.out_shape);
+                if !taped[i] {
+                    sim.free(&step.in_shape); // recompute keeps nothing
+                }
+            }
+        }
+    }
+    // the final activation is re-tracked as the last latent
+    // (free-then-alloc of the same bytes: never a new peak)
+    let final_shape: &[usize] = def.steps.last()
+        .map(|s| s.out_shape.as_slice())
+        .unwrap_or(&def.in_shape);
+
+    // ---- backward: seed dy at the final latent, walk in reverse ------
+    sim.alloc(final_shape);
+    // `y` mirrors the executor's Option<Tracked> current activation
+    let mut y: Option<&[usize]> = Some(final_shape);
+    for (i, step) in def.steps.iter().enumerate().rev() {
+        match step.kind {
+            StepKind::Split { .. } => {
+                let z = step.split_z_shape().expect("split step");
+                sim.alloc(&step.in_shape); // joined dy
+                sim.free(&step.out_shape); // old dy
+                if y.is_some() {
+                    sim.alloc(&step.in_shape); // re-joined activation
+                    sim.free(&step.out_shape); // old kept-half activation
+                    y = Some(&step.in_shape);
+                }
+                sim.free(&z); // the z latent is consumed here
+            }
+            StepKind::Layer if !taped[i] => {
+                // inverse-recompute: dx replaces dy, x_rec replaces y
+                sim.alloc(&step.in_shape);
+                sim.free(&step.out_shape);
+                sim.alloc(&step.in_shape);
+                sim.free(&step.out_shape);
+                y = Some(&step.in_shape);
+            }
+            StepKind::Layer => {
+                // taped: the stored input supersedes the running y ...
+                if y.take().is_some() {
+                    sim.free(&step.out_shape);
+                }
+                // ... and is itself dropped unless an earlier untaped
+                // layer still needs an activation to invert from
+                let keep = y_needed_before(i, &taped, &def.steps);
+                if !keep {
+                    sim.free(&step.in_shape);
+                }
+                sim.alloc(&step.in_shape); // dx
+                sim.free(&step.out_shape); // old dy
+                if keep {
+                    y = Some(&step.in_shape);
+                }
+            }
+        }
+    }
+
+    sim.peak
+}
+
+/// Predicted peaks under the three canonical schedules, labeled with
+/// each schedule's own `label()` — what `invertnet inspect` and `lint`
+/// print per network.
+pub fn schedule_peaks(def: &NetworkDef) -> Vec<(String, i64)> {
+    let schedules: [&dyn ActivationSchedule; 3] = [
+        &ExecMode::Invertible,
+        &ExecMode::Stored,
+        &CheckpointEveryK(4),
+    ];
+    schedules.iter()
+        .map(|s| (s.label(), predict_peak(def, *s)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::planner::glow_flat_shape_def;
+
+    #[test]
+    fn hybrid_peak_sits_between_the_pure_schedules() {
+        let def = glow_flat_shape_def(8, 64, 64, 3, 16);
+        let inv = predict_peak(&def, &ExecMode::Invertible);
+        let sto = predict_peak(&def, &ExecMode::Stored);
+        let mid = predict_peak(&def, &CheckpointEveryK(6));
+        assert!(inv < mid && mid < sto, "{inv} {mid} {sto}");
+    }
+
+    #[test]
+    fn checkpoint_interval_interpolates_monotonically() {
+        // larger K -> fewer tape entries -> lower peak
+        let def = glow_flat_shape_def(8, 64, 64, 3, 24);
+        let peaks: Vec<i64> = [2usize, 4, 8, 16]
+            .iter()
+            .map(|&k| predict_peak(&def, &CheckpointEveryK(k)))
+            .collect();
+        assert!(peaks.windows(2).all(|w| w[1] < w[0]), "{peaks:?}");
+    }
+
+    #[test]
+    fn schedule_peaks_reports_all_three_labels() {
+        let def = glow_flat_shape_def(8, 32, 32, 3, 8);
+        let peaks = schedule_peaks(&def);
+        let labels: Vec<&str> =
+            peaks.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels,
+                   ["invertible", "stored", "checkpoint_every_4"]);
+        assert!(peaks.iter().all(|&(_, b)| b > 0));
+    }
+}

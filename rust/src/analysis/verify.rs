@@ -1,0 +1,206 @@
+//! The static flow verifier: shape/width propagation, split/concat and
+//! squeeze bookkeeping, conditional-input widths, and the invertibility
+//! audit — all over manifest metadata, without resolving or executing
+//! the network. Unlike [`NetworkDef::resolve`](crate::flow::NetworkDef),
+//! which bails at the first problem, the verifier keeps walking and
+//! collects *every* violation as a [`Diagnostic`].
+
+use crate::runtime::manifest::parse_split;
+use crate::runtime::{Manifest, NetworkMeta};
+
+use super::{codes, Diagnostic};
+
+/// The layer kinds with a total inverse — every kind the coordinator can
+/// run backward without a stored tape. Anything else fails the
+/// invertibility audit with [`codes::NO_INVERSE`].
+pub const INVERTIBLE_KINDS: &[&str] = &[
+    "actnorm", "addcpl", "condcpl", "conv1x1", "densecpl", "glowcpl",
+    "haar", "hint", "hyper", "permute",
+];
+
+/// Statically verify one network's layer program. Returns every finding;
+/// an empty vec means the definition is clean.
+pub fn verify_network(manifest: &Manifest, net: &NetworkMeta)
+                      -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut cur = net.in_shape.clone();
+    let mut derived_latents: Vec<Vec<usize>> = Vec::new();
+    let mut cond_consumed = false;
+
+    for (i, sig) in net.layers.iter().enumerate() {
+        if let Some((zc, in_shape)) = parse_split(sig) {
+            if in_shape != cur {
+                diags.push(Diagnostic::error(codes::BAD_SPLIT, Some(i),
+                    format!("split marker {sig:?} expects input \
+                             {in_shape:?}, flow shape here is {cur:?}")));
+                cur = in_shape; // resync to the declared shape and continue
+            }
+            let c = *cur.last().unwrap_or(&0);
+            if zc == 0 || zc >= c {
+                diags.push(Diagnostic::error(codes::BAD_SPLIT, Some(i),
+                    format!("split zc={zc} must leave both halves \
+                             non-empty at width {c}")));
+                continue; // can't derive a latent from a degenerate split
+            }
+            let mut z = cur.clone();
+            *z.last_mut().unwrap() = zc;
+            derived_latents.push(z);
+            *cur.last_mut().unwrap() = c - zc;
+            continue;
+        }
+
+        let Ok(meta) = manifest.layer(sig) else {
+            diags.push(Diagnostic::error(codes::UNKNOWN_LAYER, Some(i),
+                format!("network references undefined layer sig {sig:?}")));
+            continue; // shape unknown: keep cur and keep walking
+        };
+
+        if !INVERTIBLE_KINDS.contains(&meta.kind.as_str()) {
+            diags.push(Diagnostic::error(codes::NO_INVERSE, Some(i),
+                format!("layer kind {:?} does not declare a total \
+                         inverse", meta.kind)));
+        }
+
+        if meta.in_shape != cur {
+            diags.push(Diagnostic::error(codes::SHAPE_MISMATCH, Some(i),
+                format!("layer {sig} expects input {:?}, flow shape here \
+                         is {cur:?}", meta.in_shape)));
+        }
+
+        // squeeze factors and width rules, judged on the layer's own
+        // declared shapes (a chain mismatch is reported separately above)
+        if meta.kind == "haar" {
+            let s = &meta.in_shape;
+            let squeezed_ok = s.len() == 4
+                && s[1] % 2 == 0
+                && s[2] % 2 == 0
+                && meta.out_shape == vec![s[0], s[1] / 2, s[2] / 2, 4 * s[3]];
+            if !squeezed_ok {
+                diags.push(Diagnostic::error(codes::BAD_SQUEEZE, Some(i),
+                    format!("haar squeeze {sig} must map 4-D \
+                             [n, 2h, 2w, c] to [n, h, w, 4c], got {:?} -> \
+                             {:?}", meta.in_shape, meta.out_shape)));
+            }
+        } else if meta.out_shape != meta.in_shape {
+            diags.push(Diagnostic::error(codes::WIDTH_CHANGE, Some(i),
+                format!("layer {sig} changes shape {:?} -> {:?}; width \
+                         changes are only sanctioned at squeeze points",
+                        meta.in_shape, meta.out_shape)));
+        }
+
+        match (&meta.cond_shape, &net.cond_shape) {
+            (Some(lc), Some(nc)) => {
+                cond_consumed = true;
+                if lc != nc {
+                    diags.push(Diagnostic::error(codes::COND_MISMATCH,
+                        Some(i),
+                        format!("layer {sig} conditions on {lc:?}, network \
+                                 declares cond {nc:?}")));
+                }
+            }
+            (Some(lc), None) => {
+                cond_consumed = true;
+                diags.push(Diagnostic::error(codes::COND_MISMATCH, Some(i),
+                    format!("layer {sig} conditions on {lc:?}, but the \
+                             network declares no conditioning input")));
+            }
+            (None, _) => {}
+        }
+
+        cur = meta.out_shape.clone();
+    }
+
+    derived_latents.push(cur);
+
+    if net.cond_shape.is_some() && !cond_consumed {
+        diags.push(Diagnostic::warning(codes::DANGLING_COND, None,
+            format!("network declares cond {:?} but no layer consumes it",
+                    net.cond_shape.as_ref().unwrap())));
+    }
+
+    if derived_latents != net.latent_shapes {
+        diags.push(Diagnostic::error(codes::LATENT_MISMATCH, None,
+            format!("declared latent shapes {:?} != derived {:?} (split \
+                     halves + final flow shape)",
+                    net.latent_shapes, derived_latents)));
+    }
+
+    // bijectivity on the stated dims: the declared latents must tile the
+    // input element count exactly — no dimension created or destroyed
+    let in_elems: usize = net.in_shape.iter().product();
+    let latent_elems: usize = net.latent_shapes.iter()
+        .map(|s| s.iter().product::<usize>())
+        .sum();
+    if latent_elems != in_elems {
+        diags.push(Diagnostic::error(codes::NOT_BIJECTIVE, None,
+            format!("latent shapes carry {latent_elems} elements but the \
+                     input has {in_elems}: the composed chain is not a \
+                     bijection on its stated dimensions")));
+    }
+
+    diags
+}
+
+/// Verify every network in a manifest. Returns `(name, diagnostics)`
+/// pairs in catalog order.
+pub fn verify_manifest(manifest: &Manifest)
+                       -> Vec<(String, Vec<Diagnostic>)> {
+    manifest.networks.values()
+        .map(|net| (net.name.clone(), verify_network(manifest, net)))
+        .collect()
+}
+
+/// Validate a checkpoint-every-K schedule against a network of `depth`
+/// layers: `K == 0` is an error (nothing would tape, the executor clamps
+/// to 1); `K > depth` a warning (degenerates to taping only layer 0).
+pub fn verify_checkpoint_k(depth: usize, k: usize) -> Vec<Diagnostic> {
+    if k == 0 {
+        vec![Diagnostic::error(codes::BAD_CHECKPOINT_K, None,
+            "checkpoint every 0 layers is meaningless (the executor \
+             clamps K to 1); pass K >= 1".to_string())]
+    } else if k > depth {
+        vec![Diagnostic::warning(codes::BAD_CHECKPOINT_K, None,
+            format!("checkpoint every {k} layers exceeds the network \
+                     depth {depth}: only layer 0 tapes, the schedule \
+                     degenerates to near-invertible"))]
+    } else {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::has_errors;
+    use crate::runtime::builtin_manifest;
+
+    #[test]
+    fn builtin_catalog_is_clean() {
+        let m = builtin_manifest().unwrap();
+        assert!(!m.networks.is_empty());
+        for (name, diags) in verify_manifest(&m) {
+            assert!(diags.is_empty(), "{name}: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_k_bounds() {
+        let zero = verify_checkpoint_k(16, 0);
+        assert!(has_errors(&zero));
+        assert_eq!(zero[0].code, codes::BAD_CHECKPOINT_K);
+        let over = verify_checkpoint_k(16, 17);
+        assert!(!has_errors(&over) && !over.is_empty());
+        assert!(verify_checkpoint_k(16, 4).is_empty());
+        assert!(verify_checkpoint_k(16, 16).is_empty());
+    }
+
+    #[test]
+    fn unknown_layer_is_reported_not_fatal() {
+        let mut m = builtin_manifest().unwrap();
+        m.networks.get_mut("realnvp2d").unwrap().layers[0] =
+            "warp__256x2".to_string();
+        let diags = verify_network(&m, m.network("realnvp2d").unwrap());
+        assert!(diags.iter().any(|d| d.code == codes::UNKNOWN_LAYER),
+                "{diags:?}");
+    }
+}

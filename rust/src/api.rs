@@ -16,7 +16,7 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::backend::{Backend, RefBackend};
 use crate::coordinator::memory::MemoryLedger;
@@ -86,6 +86,19 @@ impl EngineBuilder {
             None => Arc::new(builtin_manifest()
                 .context("building the builtin network catalog")?),
         };
+        // static flow verifier gate: no engine over a manifest with a
+        // malformed network — every violation up front, not at first use
+        let mut bad: Vec<String> = Vec::new();
+        for (name, diags) in crate::analysis::verify_manifest(&manifest) {
+            bad.extend(diags.iter()
+                .filter(|d| d.is_error())
+                .map(|d| format!("{name}: {d}")));
+        }
+        if !bad.is_empty() {
+            bail!("manifest failed the static flow verifier ({} error(s), \
+                   run `invertnet lint` for the full report):\n  {}",
+                  bad.len(), bad.join("\n  "));
+        }
         let backend: Arc<dyn Backend> = match self.backend {
             Some(b) => b,
             None => default_backend(self.artifacts.as_deref(), &manifest)?,
@@ -292,6 +305,11 @@ impl Flow {
         }
         writeln!(out, "latents: {:?}", def.latent_shapes).ok();
         writeln!(out, "total params: {total_params}").ok();
+        writeln!(out, "predicted peak scheduling bytes (static planner):")
+            .ok();
+        for (label, bytes) in crate::analysis::schedule_peaks(def) {
+            writeln!(out, "  {label:<20} {bytes:>14}").ok();
+        }
         Ok(out)
     }
 }
@@ -354,6 +372,11 @@ mod tests {
         assert!(table.contains("glow16"));
         assert!(table.contains("split(zc=6)"));
         assert!(table.contains("total params:"));
+        // static-planner peaks per schedule ride along
+        assert!(table.contains("predicted peak scheduling bytes"), "{table}");
+        for label in ["invertible", "stored", "checkpoint_every_4"] {
+            assert!(table.contains(label), "{label} missing:\n{table}");
+        }
     }
 
     #[test]

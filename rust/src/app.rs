@@ -10,6 +10,7 @@
 //! invertnet bench   fig1|fig2   [--budget-gb 40]
 //! invertnet inspect --net glow16
 //! invertnet profile --net glow16 [--iters 5]
+//! invertnet lint    [--net NAME | --all] [--json] [--check]
 //! invertnet list
 //! ```
 //!
@@ -32,12 +33,15 @@ use crate::data::{synth_images, Density2d, LinearGaussian};
 use crate::posterior::analysis::{self, chi2_crit};
 use crate::posterior::{amortized_train, calibrate, posterior_samples,
                        summarize, PosteriorTrainConfig, Simulator};
+use crate::flow::NetworkDef;
+use crate::runtime::{builtin_manifest, parse_split, Manifest};
 use crate::serve::{BatchConfig, Registry, Server};
 use crate::tensor::npy;
 use crate::tensor::ops::concat_rows;
 use crate::train::{bits_per_dim, train, Adam, GradClip, TrainConfig};
 use crate::util::bench::fmt_bytes;
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::Tensor;
 
@@ -74,6 +78,7 @@ USAGE:
   invertnet bench   fig1|fig2 [--budget-gb F]
   invertnet inspect --net NAME
   invertnet profile --net NAME [--iters N]
+  invertnet lint    [--net NAME | --all] [--json] [--check] [--checkpoint K]
   invertnet list
 
 AMORTIZED POSTERIOR INFERENCE:
@@ -120,6 +125,17 @@ BENCH SUITES (see BENCHMARKS.md for the schema and baseline procedure):
                       committed baseline; with --check, exit non-zero on
                       any regression beyond --tol percent (default 5)
 
+STATIC ANALYSIS (no execution — see README \"Static guarantees\"):
+  lint                verify every network in the manifest without running
+                      it: shape/width propagation, split/concat bookkeeping,
+                      squeeze factors, conditional wiring, invertibility of
+                      the composed chain; clean networks also report the
+                      planner's predicted peak bytes per activation schedule
+  --net NAME | --all  one network, or the whole catalog (default: all)
+  --json              machine-readable report on stdout (invertnet-lint/v1)
+  --check             exit non-zero if any error-severity diagnostic fires
+  --checkpoint K      also audit checkpoint-every-K against each depth
+
 COMMON OPTIONS:
   --backend ref|xla   execution backend (default: ref — pure Rust, no artifacts)
   --artifacts DIR     manifest/artifact directory (required for --backend xla)
@@ -146,6 +162,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         Some("score") => cmd_score(&args),
         Some("bench") => cmd_bench(&args),
         Some("inspect") => cmd_inspect(&args),
+        Some("lint") => cmd_lint(&args),
         Some("profile") => {
             let engine = engine_of(&args)?;
             crate::profile::profile_network(
@@ -688,6 +705,125 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `invertnet lint` — run the static flow verifier (and, for clean
+/// networks, the peak planner) over the manifest WITHOUT building an
+/// engine, so malformed manifests produce structured diagnostics
+/// instead of a build error.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let manifest: Manifest = match args.get("artifacts") {
+        Some(dir) => Manifest::load(Path::new(dir))
+            .with_context(|| format!("loading manifest from {dir:?}"))?,
+        None => builtin_manifest()?,
+    };
+    // parse --checkpoint by hand: usize_or would conflate "absent" with
+    // K=0, and K=0 must reach the auditor (it is the error case)
+    let ckpt_k: Option<usize> = match args.get("checkpoint") {
+        Some(s) => Some(s.parse().map_err(
+            |e| anyhow!("--checkpoint K — bad K: {e}"))?),
+        None => None,
+    };
+    let names: Vec<String> = match (args.get("net"), args.flag("all")) {
+        (Some(_), true) => bail!("pass --net NAME or --all, not both"),
+        (Some(n), false) => {
+            if !manifest.networks.contains_key(n) {
+                bail!("unknown network {n:?} (try `invertnet list`)");
+            }
+            vec![n.to_string()]
+        }
+        _ => manifest.networks.keys().cloned().collect(),
+    };
+
+    let mut total_err = 0usize;
+    let mut total_warn = 0usize;
+    // (name, diagnostics, per-schedule peaks for clean networks)
+    let mut rows: Vec<(String, Vec<crate::analysis::Diagnostic>,
+                       Option<Vec<(String, i64)>>)> = Vec::new();
+    for name in &names {
+        let net = manifest.network(name)?;
+        let mut diags = crate::analysis::verify_network(&manifest, net);
+        if let Some(k) = ckpt_k {
+            let depth = net.layers.iter()
+                .filter(|s| parse_split(s).is_none()).count();
+            diags.extend(crate::analysis::verify_checkpoint_k(depth, k));
+        }
+        let mut peaks = None;
+        if !crate::analysis::has_errors(&diags) {
+            // a verifier-clean network should always resolve; if it does
+            // not, the gap is itself a finding, not a CLI crash
+            match NetworkDef::resolve(&manifest, name) {
+                Ok(def) => peaks = Some(crate::analysis::schedule_peaks(&def)),
+                Err(e) => diags.push(crate::analysis::Diagnostic::error(
+                    crate::analysis::codes::SHAPE_MISMATCH, None,
+                    format!("verifier passed but resolve failed: {e:#}"))),
+            }
+        }
+        let errs = diags.iter().filter(|d| d.is_error()).count();
+        total_err += errs;
+        total_warn += diags.len() - errs;
+        rows.push((name.clone(), diags, peaks));
+    }
+
+    if args.flag("json") {
+        // stdout carries pure JSON in this mode (scripts pipe it)
+        let nets: Vec<Json> = rows.iter().map(|(name, diags, peaks)| {
+            let ds: Vec<Json> = diags.iter().map(|d| Json::obj(vec![
+                ("severity", Json::Str(
+                    if d.is_error() { "error" } else { "warning" }.into())),
+                ("layer_idx", match d.layer_idx {
+                    Some(i) => Json::Num(i as f64),
+                    None => Json::Null,
+                }),
+                ("code", Json::Str(d.code.into())),
+                ("message", Json::Str(d.message.clone())),
+            ])).collect();
+            Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("ok", Json::Bool(!crate::analysis::has_errors(diags))),
+                ("errors", Json::Num(
+                    diags.iter().filter(|d| d.is_error()).count() as f64)),
+                ("warnings", Json::Num(
+                    diags.iter().filter(|d| !d.is_error()).count() as f64)),
+                ("diagnostics", Json::Arr(ds)),
+                ("peaks", match peaks {
+                    Some(ps) => Json::Obj(ps.iter().map(
+                        |(l, b)| (l.clone(), Json::Num(*b as f64))).collect()),
+                    None => Json::Null,
+                }),
+            ])
+        }).collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::Str("invertnet-lint/v1".into())),
+            ("backend", Json::Str(manifest.backend.clone())),
+            ("networks", Json::Arr(nets)),
+            ("errors", Json::Num(total_err as f64)),
+            ("warnings", Json::Num(total_warn as f64)),
+        ]);
+        println!("{}", doc.to_string_pretty());
+    } else {
+        for (name, diags, peaks) in &rows {
+            if diags.is_empty() {
+                let peaks = peaks.as_ref().map(|ps| ps.iter()
+                    .map(|(l, b)| format!("{l} {}", fmt_bytes(*b as u64)))
+                    .collect::<Vec<_>>().join("  "))
+                    .unwrap_or_default();
+                println!("{name:<24} ok   peak {peaks}");
+            } else {
+                println!("{name:<24} {} diagnostic(s)", diags.len());
+                for d in diags {
+                    println!("  {d}");
+                }
+            }
+        }
+        println!("lint: {} network(s), {total_err} error(s), \
+                  {total_warn} warning(s)", rows.len());
+    }
+    if args.flag("check") && total_err > 0 {
+        bail!("lint failed: {total_err} error(s) across {} network(s)",
+              rows.len());
+    }
+    Ok(())
+}
+
 fn cmd_list(args: &Args) -> Result<()> {
     let engine = engine_of(args)?;
     println!("manifest: {}   backend: {}",
@@ -857,6 +993,30 @@ mod tests {
         assert!(run(&argv(&["list"])).is_ok());
         assert!(run(&argv(&["inspect", "--net", "glow16"])).is_ok());
         assert!(run(&argv(&["inspect", "--net", "nope"])).is_err());
+    }
+
+    #[test]
+    fn lint_passes_on_the_builtin_catalog() {
+        assert!(run(&argv(&["lint", "--all", "--check"])).is_ok());
+        assert!(run(&argv(&["lint", "--net", "glow16", "--json",
+                            "--check"])).is_ok());
+        let err = run(&argv(&["lint", "--net", "nope"])).unwrap_err();
+        assert!(err.to_string().contains("unknown network"), "{err:#}");
+        let err = run(&argv(&["lint", "--net", "glow16", "--all"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("not both"), "{err:#}");
+    }
+
+    #[test]
+    fn lint_audits_the_checkpoint_interval() {
+        // K = 0 is an error under --check; K > depth only warns
+        let err = run(&argv(&["lint", "--all", "--check",
+                              "--checkpoint", "0"])).unwrap_err();
+        assert!(err.to_string().contains("lint failed"), "{err:#}");
+        assert!(run(&argv(&["lint", "--net", "realnvp2d", "--check",
+                            "--checkpoint", "99"])).is_ok());
+        assert!(run(&argv(&["lint", "--net", "realnvp2d", "--check",
+                            "--checkpoint", "4"])).is_ok());
     }
 
     #[test]

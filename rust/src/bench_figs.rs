@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use crate::api::Engine;
 use crate::coordinator::planner::{glow_flat_shape_def, predict_peak_sched};
-use crate::coordinator::ExecMode;
+use crate::coordinator::{ActivationSchedule, ExecMode};
 use crate::data::synth_images;
 use crate::util::bench::fmt_bytes;
 use crate::util::rng::Pcg64;
@@ -24,9 +24,10 @@ use crate::MemoryLedger;
 
 const GB: f64 = 1024.0 * 1024.0 * 1024.0;
 
-/// Measure one real training step's peak scheduling bytes; Err(oom) if the
-/// budget is exceeded.
-pub fn measure_peak(engine: &Engine, net: &str, mode: ExecMode,
+/// Measure one real training step's peak scheduling bytes under any
+/// activation schedule; Err(oom) if the budget is exceeded.
+pub fn measure_peak(engine: &Engine, net: &str,
+                    schedule: &dyn ActivationSchedule,
                     budget: Option<u64>) -> Result<i64> {
     let ledger = match budget {
         Some(b) => MemoryLedger::with_budget(b),
@@ -37,7 +38,7 @@ pub fn measure_peak(engine: &Engine, net: &str, mode: ExecMode,
     let s = &flow.def.in_shape;
     let mut rng = Pcg64::new(99);
     let x = synth_images(s[0], s[1], s[2], s[3], &mut rng);
-    let result = flow.train_step(&x, None, &params, &mode)?;
+    let result = flow.train_step(&x, None, &params, schedule)?;
     Ok(result.peak_sched_bytes)
 }
 
@@ -67,8 +68,8 @@ pub fn fig1(engine: &Engine, budget_gb: f64) -> Result<()> {
     };
     for &hw in measured {
         let net = format!("glow_fig1_{hw}");
-        let inv = measure_peak(engine, &net, ExecMode::Invertible, Some(budget));
-        let sto = measure_peak(engine, &net, ExecMode::Stored, Some(budget));
+        let inv = measure_peak(engine, &net, &ExecMode::Invertible, Some(budget));
+        let sto = measure_peak(engine, &net, &ExecMode::Stored, Some(budget));
         let ratio = match (&inv, &sto) {
             (Ok(a), Ok(b)) if *a > 0 => format!("{:.1}x", *b as f64 / *a as f64),
             _ => "-".into(),
@@ -113,8 +114,8 @@ pub fn fig2(engine: &Engine, budget_gb: f64) -> Result<()> {
     };
     for &k in measured {
         let net = format!("glow_fig2_d{k}");
-        let inv = measure_peak(engine, &net, ExecMode::Invertible, Some(budget));
-        let sto = measure_peak(engine, &net, ExecMode::Stored, Some(budget));
+        let inv = measure_peak(engine, &net, &ExecMode::Invertible, Some(budget));
+        let sto = measure_peak(engine, &net, &ExecMode::Stored, Some(budget));
         let ratio = match (&inv, &sto) {
             (Ok(a), Ok(b)) if *a > 0 => format!("{:.1}x", *b as f64 / *a as f64),
             _ => "-".into(),

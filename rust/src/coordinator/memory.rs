@@ -34,6 +34,16 @@ pub const N_CLASSES: usize = 4;
 
 const CLASS_NAMES: [&str; N_CLASSES] = ["activation", "gradient", "latent", "param"];
 
+/// Bytes per element of the single dtype the ledger meters (f32).
+pub const BYTES_PER_ELEM: usize = 4;
+
+/// Ledger bytes of an f32 tensor of `shape` — the static planner's unit
+/// of account, kept next to the ledger so predicted and measured bytes
+/// share one definition.
+pub fn bytes_of_shape(shape: &[usize]) -> i64 {
+    (shape.iter().product::<usize>() * BYTES_PER_ELEM) as i64
+}
+
 /// Thread-safe live/peak byte ledger with an optional budget.
 #[derive(Debug, Default)]
 pub struct MemoryLedger {

@@ -1,132 +1,25 @@
-//! Shape-only memory planner: replays the exact alloc/free schedule each
-//! executor performs, without executing any compute.
+//! Shape-only memory planning entry point for the coordinator.
 //!
-//! Used by the Fig. 1 bench to extend the measured sweep to the paper's
-//! full 1024x1024 range (where artifacts would be impractically slow to
-//! execute on the CPU test substrate) and to locate OOM crossovers under a
-//! budget. `tests/memory_model.rs` pins the planner to the real
-//! [`MemoryLedger`] measurements byte-for-byte on executable configs, so
-//! the extrapolated rows carry the measured rows' semantics.
+//! The actual replay now lives in [`crate::analysis::predict_peak`],
+//! which simulates the executor's alloc/free order for *any*
+//! [`ActivationSchedule`](super::ActivationSchedule) (invertible /
+//! stored / checkpoint-every-K) — this module keeps the historical
+//! `ExecMode`-typed entry point plus [`glow_flat_shape_def`], the
+//! synthetic GLOW program the Fig. 1 bench uses to extend the measured
+//! sweep to the paper's full 1024x1024 range. `tests/memory_model.rs`
+//! and `tests/analysis.rs` pin the prediction to the real
+//! [`MemoryLedger`](super::MemoryLedger) measurements byte-for-byte on
+//! executable configs, so extrapolated rows carry the measured rows'
+//! semantics.
 
 use crate::flow::{NetworkDef, Step, StepKind};
 
 use super::executor::ExecMode;
 
-const F32: usize = 4;
-
-fn bytes_of(shape: &[usize]) -> usize {
-    shape.iter().product::<usize>() * F32
-}
-
-/// Tracks live/peak while replaying the executor schedule.
-struct Sim {
-    live: i64,
-    peak: i64,
-}
-
-impl Sim {
-    fn new() -> Sim {
-        Sim { live: 0, peak: 0 }
-    }
-
-    fn alloc(&mut self, shape: &[usize]) {
-        self.live += bytes_of(shape) as i64;
-        self.peak = self.peak.max(self.live);
-    }
-
-    fn free(&mut self, shape: &[usize]) {
-        self.live -= bytes_of(shape) as i64;
-    }
-}
-
-fn z_shape(step: &Step, zc: usize) -> Vec<usize> {
-    let mut z = step.in_shape.clone();
-    *z.last_mut().unwrap() = zc;
-    z
-}
-
-/// Predicted peak scheduling bytes (activations+gradients+latents) for one
-/// `train_step` of the given mode — mirrors `executor.rs` line by line.
+/// Predicted peak scheduling bytes (activations+gradients+latents) for
+/// one `train_step` of the given mode.
 pub fn predict_peak_sched(def: &NetworkDef, mode: ExecMode) -> i64 {
-    let mut sim = Sim::new();
-    let tape = mode == ExecMode::Stored;
-
-    // ---- forward ----------------------------------------------------------
-    // cur = track(x)
-    sim.alloc(&def.in_shape);
-    // latents pushed in order; in stored mode, taped inputs stay alive
-    let mut latent_shapes: Vec<Vec<usize>> = Vec::new();
-    for step in &def.steps {
-        match step.kind {
-            StepKind::Split { zc } => {
-                let z = z_shape(step, zc);
-                sim.alloc(&z); // latents.push(track(z))
-                sim.alloc(&step.out_shape); // next = track(h)
-                sim.free(&step.in_shape); // cur dropped
-                latent_shapes.push(z);
-            }
-            StepKind::Layer => {
-                sim.alloc(&step.out_shape); // next = track(y)
-                if !tape {
-                    sim.free(&step.in_shape); // cur dropped (invertible)
-                }
-                // stored: cur moves into the tape, stays alive
-            }
-        }
-    }
-    let final_shape = def.steps.last().map(|s| s.out_shape.clone())
-        .unwrap_or_else(|| def.in_shape.clone());
-    // z_final = track(cur.into_inner()): free + alloc same bytes (no-op for peak)
-    latent_shapes.push(final_shape.clone());
-
-    // ---- backward seeds ----------------------------------------------------
-    // dy = track(dz_final)
-    sim.alloc(&final_shape);
-
-    // y starts as z_final (already counted); tape entries already counted.
-    let mut first_layer_seen = false;
-    for step in def.steps.iter().rev() {
-        match step.kind {
-            StepKind::Split { zc } => {
-                let z = z_shape(step, zc);
-                // new_dy = track(concat(dz, dy)) ; then old dy freed
-                sim.alloc(&step.in_shape);
-                sim.free(&step.out_shape);
-                // y = track(concat(z, y)) ; old y freed; z (latent) freed
-                sim.alloc(&step.in_shape);
-                sim.free(&step.out_shape);
-                sim.free(&z);
-                latent_shapes.pop();
-            }
-            StepKind::Layer => {
-                match mode {
-                    ExecMode::Invertible => {
-                        // alloc dx; free dy_old; alloc x_rec; free y_old
-                        sim.alloc(&step.in_shape);
-                        sim.free(&step.out_shape);
-                        sim.alloc(&step.in_shape);
-                        sim.free(&step.out_shape);
-                    }
-                    ExecMode::Stored => {
-                        // tape entry consumed (freed at end of the arm),
-                        // new dy allocated, old dy freed; on the FIRST
-                        // layer in reverse order, y (z_final latent ref...)
-                        // is set to None — but z_final is a latent that was
-                        // popped; it is dropped when `y` is overwritten.
-                        sim.free(&step.in_shape); // xin dropped after exec
-                        sim.alloc(&step.in_shape); // new_dy = track(dx)
-                        sim.free(&step.out_shape); // old dy freed
-                        if !first_layer_seen {
-                            // y = None drops the z_final Tracked
-                            sim.free(&final_shape);
-                            first_layer_seen = true;
-                        }
-                    }
-                }
-            }
-        }
-    }
-    sim.peak
+    crate::analysis::predict_peak(def, &mode)
 }
 
 /// Build a shape-only GLOW definition matching `model.glow_flat` in

@@ -26,6 +26,22 @@ pub struct Step {
     pub out_shape: Vec<usize>,
 }
 
+impl Step {
+    /// For a split step, the shape of the factored-out latent (the first
+    /// `zc` channels of the input); `None` for layer steps. Shared by the
+    /// resolver's latent derivation and the static memory planner.
+    pub fn split_z_shape(&self) -> Option<Vec<usize>> {
+        match self.kind {
+            StepKind::Split { zc } => {
+                let mut z = self.in_shape.clone();
+                *z.last_mut().expect("split input has at least one dim") = zc;
+                Some(z)
+            }
+            StepKind::Layer => None,
+        }
+    }
+}
+
 /// A network resolved against the manifest.
 #[derive(Debug, Clone)]
 pub struct NetworkDef {
@@ -78,14 +94,7 @@ impl NetworkDef {
         }
         // sanity: latent shapes = splits' z shapes + final shape
         let mut want_latents: Vec<Vec<usize>> = steps.iter()
-            .filter_map(|s| match s.kind {
-                StepKind::Split { zc } => {
-                    let mut z = s.in_shape.clone();
-                    *z.last_mut().unwrap() = zc;
-                    Some(z)
-                }
-                _ => None,
-            })
+            .filter_map(Step::split_z_shape)
             .collect();
         want_latents.push(cur.clone());
         if want_latents != net.latent_shapes {

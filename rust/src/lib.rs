@@ -35,6 +35,12 @@
 //!   `inspect`.
 //! * [`coordinator`] — schedules, the byte-exact memory ledger, and the
 //!   shape-only planner behind the paper's Figs. 1–2.
+//! * [`analysis`] — `flowcheck`: the static flow verifier (shape/split/
+//!   cond propagation + invertibility audit, structured
+//!   [`analysis::Diagnostic`]s) and the exact memory planner
+//!   ([`analysis::predict_peak`], pinned `predicted == measured` against
+//!   the ledger). Gated in `Engine::build`, the serve registry's
+//!   checkpoint loads, and the `invertnet lint` CLI verb.
 //! * [`train`], [`data`], [`profile`], [`bench_figs`] — training loop,
 //!   the data-parallel [`train::ParallelTrainer`] (`--threads N` on the
 //!   CLI), synthetic workloads, per-entry profiler, figure reproductions.
@@ -97,6 +103,13 @@
 //! # }
 //! ```
 
+// The crate is unsafe-free except for one audited FFI shim in the
+// feature-gated XLA backend (`backend::xla::to_literal`, `#[allow]`ed
+// there); without that feature the ban is total.
+#![deny(unsafe_code)]
+#![cfg_attr(not(feature = "xla"), forbid(unsafe_code))]
+
+pub mod analysis;
 pub mod api;
 pub mod app;
 pub mod backend;

@@ -18,6 +18,7 @@
 //! invertnet bench   fig1|fig2 [--budget-gb 40]
 //! invertnet inspect --net glow16
 //! invertnet profile --net glow16 [--iters 5]
+//! invertnet lint    [--net NAME | --all] [--json] [--check]
 //! invertnet list
 //! ```
 //!

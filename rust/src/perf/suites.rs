@@ -61,20 +61,40 @@ fn batch_for(flow: &crate::api::Flow, rng: &mut Pcg64) -> Tensor {
 // Memory suites (the paper's Figs. 1-2, as gated numbers)
 // ---------------------------------------------------------------------------
 
+/// The three canonical schedules every memory suite sweeps, with the
+/// short labels the metric names carry.
+const MEMORY_SCHEDULES: [(&str, &dyn ActivationSchedule); 3] = [
+    ("invertible", &ExecMode::Invertible),
+    ("stored", &ExecMode::Stored),
+    ("checkpoint4", &CheckpointEveryK(4)),
+];
+
 /// Peak training memory vs spatial image size (GLOW, 3 channels, batch 8):
 /// one measured `train_step` per (size, schedule) under the byte-exact
-/// ledger. All metrics are deterministic and gated.
+/// ledger, plus the static planner's prediction as an equality pin
+/// (`predicted_over_measured` must stay exactly 1). All metrics are
+/// deterministic and gated.
 pub fn memory_vs_size(engine: &Engine, scale: Scale) -> Result<SuiteReport> {
     let sizes: &[usize] = scale.pick(&[16usize][..], &[16, 32, 64][..]);
     let mut r = SuiteReport::new("memory_vs_size");
     for &hw in sizes {
         let net = format!("glow_fig1_{hw}");
-        let inv = measure_peak(engine, &net, ExecMode::Invertible, None)?;
-        let sto = measure_peak(engine, &net, ExecMode::Stored, None)?;
-        r.metrics.push(Metric::bytes(
-            format!("memory_vs_size/hw{hw}/invertible_peak_bytes"), inv));
-        r.metrics.push(Metric::bytes(
-            format!("memory_vs_size/hw{hw}/stored_peak_bytes"), sto));
+        let def = engine.flow(&net)?.def.clone();
+        let mut measured = [0i64; MEMORY_SCHEDULES.len()];
+        for (j, (label, sched)) in MEMORY_SCHEDULES.iter().enumerate() {
+            let m = measure_peak(engine, &net, *sched, None)?;
+            measured[j] = m;
+            r.metrics.push(Metric::bytes(
+                format!("memory_vs_size/hw{hw}/{label}_peak_bytes"), m));
+            if m > 0 {
+                let predicted = crate::analysis::predict_peak(&def, *sched);
+                r.metrics.push(Metric::pinned(
+                    format!("memory_vs_size/hw{hw}/\
+                             {label}_predicted_over_measured"),
+                    predicted as f64 / m as f64));
+            }
+        }
+        let (inv, sto) = (measured[0], measured[1]);
         if inv > 0 {
             // the paper's claim, as a number that must not shrink
             r.metrics.push(Metric::exact(
@@ -97,15 +117,24 @@ pub fn memory_vs_depth(engine: &Engine, scale: Scale) -> Result<SuiteReport> {
     let mut sto_last = 0i64;
     for &k in depths {
         let net = format!("glow_fig2_d{k}");
-        let inv = measure_peak(engine, &net, ExecMode::Invertible, None)?;
-        let sto = measure_peak(engine, &net, ExecMode::Stored, None)?;
-        r.metrics.push(Metric::bytes(
-            format!("memory_vs_depth/d{k}/invertible_peak_bytes"), inv));
-        r.metrics.push(Metric::bytes(
-            format!("memory_vs_depth/d{k}/stored_peak_bytes"), sto));
-        inv_first.get_or_insert(inv);
-        inv_last = inv;
-        sto_last = sto;
+        let def = engine.flow(&net)?.def.clone();
+        let mut measured = [0i64; MEMORY_SCHEDULES.len()];
+        for (j, (label, sched)) in MEMORY_SCHEDULES.iter().enumerate() {
+            let m = measure_peak(engine, &net, *sched, None)?;
+            measured[j] = m;
+            r.metrics.push(Metric::bytes(
+                format!("memory_vs_depth/d{k}/{label}_peak_bytes"), m));
+            if m > 0 {
+                let predicted = crate::analysis::predict_peak(&def, *sched);
+                r.metrics.push(Metric::pinned(
+                    format!("memory_vs_depth/d{k}/\
+                             {label}_predicted_over_measured"),
+                    predicted as f64 / m as f64));
+            }
+        }
+        inv_first.get_or_insert(measured[0]);
+        inv_last = measured[0];
+        sto_last = measured[1];
         engine.clear_cache();
     }
     let first = inv_first.ok_or_else(|| anyhow!("empty depth sweep"))?;
@@ -446,6 +475,16 @@ mod tests {
         assert!(sto.value > inv.value,
                 "stored {} should exceed invertible {}",
                 sto.value, inv.value);
+        // the static planner's equality pins ride along, exactly 1 for
+        // every (size, schedule) cell
+        let pins: Vec<_> = a.metrics.iter()
+            .filter(|m| m.name.ends_with("_predicted_over_measured"))
+            .collect();
+        assert_eq!(pins.len(), 3, "one pin per schedule at hw16");
+        for p in pins {
+            assert!(p.check && p.pin, "{}", p.name);
+            assert_eq!(p.value, 1.0, "{}: predicted != measured", p.name);
+        }
         // deterministic: a second run reproduces the bytes exactly
         let b = memory_vs_size(&engine, Scale::Quick).unwrap();
         for (ma, mb) in a.metrics.iter().zip(&b.metrics) {

@@ -396,6 +396,14 @@ fn nice_net(cat: &mut Catalog, name: &str, n: usize, h: usize, w: usize,
     cat.add(name, vec![n, h, w, c_in], None, pieces)
 }
 
+/// The six end-to-end example networks (the rest of the catalog is
+/// figure sweeps and bench/posterior sizings) — the set the static
+/// planner's predicted==measured pins and the checkpoint round-trips
+/// iterate over.
+pub const EXAMPLE_NETS: &[&str] = &[
+    "realnvp2d", "cond_realnvp2d", "hint8d", "glow16", "hyper16", "nice16",
+];
+
 /// The default catalog: example nets + every figure sweep, mirroring
 /// `model.py::default_networks` (plus `nice16`, builtin-only).
 ///

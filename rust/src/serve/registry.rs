@@ -103,8 +103,23 @@ impl Registry {
                            -> Result<(Flow, ParamStore)> {
         let net = Self::checkpoint_network_name(dir)?;
         let flow = engine.flow(&net)?;
-        // the checkpoint holds every parameter, so the init seed below is
-        // fully overwritten; load() validates names and shapes
+        // static shape check BEFORE any weight bytes load: the name alone
+        // proves nothing, and ParamStore::load silently keeps the random
+        // init for params the index omits — a mismatched or truncated
+        // checkpoint must be rejected here, not served
+        let issues = crate::analysis::verify_checkpoint_index(
+            engine.manifest(), &flow.def, dir)?;
+        let errors: Vec<String> = issues.iter()
+            .filter(|d| d.is_error())
+            .map(|d| d.to_string())
+            .collect();
+        if !errors.is_empty() {
+            bail!("checkpoint {dir:?} fails static validation against \
+                   network {net:?}:\n  {}", errors.join("\n  "));
+        }
+        // the checkpoint holds every parameter (verified above), so the
+        // init seed below is fully overwritten; load() validates names
+        // and shapes again as it reads
         let mut params = flow.init_params(0)?;
         params.load(dir)
             .with_context(|| format!("loading checkpoint {dir:?}"))?;
@@ -272,6 +287,56 @@ mod tests {
         assert!(r.is_empty());
         assert!(r.get(None).is_err());
         std::fs::remove_dir_all(&root).ok();
+    }
+
+    /// Regression: lazy-root loads used to verify only the network
+    /// *name* in `index.json`. A checkpoint that names `realnvp2d` but
+    /// records wrong-shaped params must fail the static shape check
+    /// before any weight loads — and before anything reaches the LRU.
+    #[test]
+    fn lazy_checkpoint_with_mismatched_shapes_is_rejected() {
+        let root = std::env::temp_dir()
+            .join(format!("reg_badshape_{}", std::process::id()));
+        let engine = Engine::native().unwrap();
+        // nice16-shaped params saved under the name realnvp2d: the name
+        // check passes, the shapes cannot
+        let flow = engine.flow("nice16").unwrap();
+        let params = flow.init_params(5).unwrap();
+        params.save(&root.join("realnvp2d"), "realnvp2d").unwrap();
+
+        let r = Registry::with_root(Engine::native().unwrap(), 2, &root);
+        let err = r.get(Some("realnvp2d")).unwrap_err();
+        assert!(format!("{err:#}").contains("static validation"), "{err:#}");
+        assert!(r.is_empty());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    /// Regression: an index.json that omits params would load "cleanly"
+    /// (`ParamStore::load` skips what the index never mentions), leaving
+    /// those params at the random init. The static check refuses it.
+    #[test]
+    fn truncated_checkpoint_is_rejected_statically() {
+        let dir = std::env::temp_dir()
+            .join(format!("reg_trunc_{}", std::process::id()));
+        let engine = Engine::native().unwrap();
+        let flow = engine.flow("realnvp2d").unwrap();
+        let params = flow.init_params(3).unwrap();
+        params.save(&dir, "realnvp2d").unwrap();
+        let text = std::fs::read_to_string(dir.join("index.json")).unwrap();
+        let mut doc = Json::parse(&text).unwrap();
+        {
+            let Json::Obj(m) = &mut doc else { panic!("index not an obj") };
+            let Some(Json::Arr(entries)) = m.get_mut("params") else {
+                panic!("no params array")
+            };
+            entries.truncate(entries.len() / 2);
+        }
+        std::fs::write(dir.join("index.json"), doc.to_string()).unwrap();
+
+        let err = Registry::load_checkpoint(&engine, &dir).unwrap_err();
+        assert!(format!("{err:#}").contains("ckpt-missing-param"),
+                "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

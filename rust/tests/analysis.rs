@@ -1,0 +1,306 @@
+//! Integration tests for the static flow verifier and the memory-peak
+//! planner (`invertnet::analysis`): every diagnostic code fires on a
+//! malformed spec, and the planner's predicted peak equals the measured
+//! ledger peak bit-for-bit for every builtin example network under all
+//! three activation schedules.
+
+mod common;
+
+use common::{batch_for, engine};
+use invertnet::analysis::{self, codes, predict_peak, verify_checkpoint_k,
+                          verify_network};
+use invertnet::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
+use invertnet::runtime::builtin::EXAMPLE_NETS;
+use invertnet::runtime::{builtin_manifest, LayerMeta, Manifest};
+use invertnet::MemoryLedger;
+
+fn manifest() -> Manifest {
+    builtin_manifest().unwrap()
+}
+
+/// The codes a verification run produced, for order-free membership asserts.
+fn codes_of(diags: &[analysis::Diagnostic]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.code).collect()
+}
+
+fn lint(m: &Manifest, net: &str) -> Vec<analysis::Diagnostic> {
+    verify_network(m, m.network(net).unwrap())
+}
+
+/// Clone an existing layer's metadata under a fresh sig, mutate it, and
+/// register it — the cheapest way to synthesize a malformed layer that is
+/// still structurally complete (params, entries, cfg).
+fn splice_layer(m: &mut Manifest, base: &str, sig: &str,
+                mutate: impl FnOnce(&mut LayerMeta)) {
+    let mut meta = m.layer(base).unwrap().clone();
+    meta.sig = sig.to_string();
+    mutate(&mut meta);
+    m.layers.insert(sig.to_string(), meta);
+}
+
+// --------------------------------------------------------------------------
+// the verifier: one test per diagnostic code, each on a malformed spec
+// --------------------------------------------------------------------------
+
+#[test]
+fn clean_catalog_yields_no_diagnostics() {
+    let m = manifest();
+    for (name, diags) in analysis::verify_manifest(&m) {
+        assert!(diags.is_empty(), "{name}: {diags:?}");
+    }
+}
+
+#[test]
+fn unknown_layer_fires() {
+    let mut m = manifest();
+    m.networks.get_mut("realnvp2d").unwrap().layers
+        .push("warp__256x2".into());
+    assert!(codes_of(&lint(&m, "realnvp2d")).contains(&codes::UNKNOWN_LAYER));
+}
+
+#[test]
+fn shape_mismatch_fires_on_a_spliced_foreign_layer() {
+    let mut m = manifest();
+    // glow16's haar squeeze expects [16,16,16,3]; realnvp2d flows [256,2]
+    m.networks.get_mut("realnvp2d").unwrap().layers[0] =
+        "haar__16x16x16x3".into();
+    let cs = codes_of(&lint(&m, "realnvp2d"));
+    assert!(cs.contains(&codes::SHAPE_MISMATCH), "{cs:?}");
+}
+
+#[test]
+fn bad_split_fires_on_degenerate_and_desynced_markers() {
+    let m0 = manifest();
+    let split_at = m0.network("glow16").unwrap().layers.iter()
+        .position(|s| s.starts_with("split_zc"))
+        .expect("glow16 has a split marker");
+    // zc = 0 and zc >= width both leave one half empty
+    for marker in ["split_zc0__16x8x8x12", "split_zc12__16x8x8x12"] {
+        let mut m = manifest();
+        m.networks.get_mut("glow16").unwrap().layers[split_at] =
+            marker.into();
+        let cs = codes_of(&lint(&m, "glow16"));
+        assert!(cs.contains(&codes::BAD_SPLIT), "{marker}: {cs:?}");
+    }
+    // marker whose recorded input shape disagrees with the flow shape
+    let mut m = manifest();
+    m.networks.get_mut("glow16").unwrap().layers[split_at] =
+        "split_zc6__16x9x9x12".into();
+    let cs = codes_of(&lint(&m, "glow16"));
+    assert!(cs.contains(&codes::BAD_SPLIT), "{cs:?}");
+}
+
+#[test]
+fn bad_squeeze_fires_on_a_non_2x2_haar() {
+    let mut m = manifest();
+    splice_layer(&mut m, "haar__16x16x16x3", "haar__bad", |meta| {
+        meta.out_shape = vec![16, 8, 8, 13]; // not [n, h/2, w/2, 4c]
+    });
+    m.networks.get_mut("glow16").unwrap().layers[0] = "haar__bad".into();
+    let cs = codes_of(&lint(&m, "glow16"));
+    assert!(cs.contains(&codes::BAD_SQUEEZE), "{cs:?}");
+}
+
+#[test]
+fn width_change_fires_outside_squeeze_points() {
+    let mut m = manifest();
+    let base = m.network("realnvp2d").unwrap().layers[0].clone();
+    splice_layer(&mut m, &base, "widened__256x2", |meta| {
+        meta.out_shape = vec![256, 3];
+    });
+    m.networks.get_mut("realnvp2d").unwrap().layers[0] =
+        "widened__256x2".into();
+    let cs = codes_of(&lint(&m, "realnvp2d"));
+    assert!(cs.contains(&codes::WIDTH_CHANGE), "{cs:?}");
+}
+
+#[test]
+fn no_inverse_fires_on_an_uninvertible_kind() {
+    let mut m = manifest();
+    let base = m.network("realnvp2d").unwrap().layers[0].clone();
+    splice_layer(&mut m, &base, "blackbox__256x2", |meta| {
+        meta.kind = "blackbox".into();
+    });
+    m.networks.get_mut("realnvp2d").unwrap().layers[0] =
+        "blackbox__256x2".into();
+    let diags = lint(&m, "realnvp2d");
+    assert!(codes_of(&diags).contains(&codes::NO_INVERSE), "{diags:?}");
+    assert!(analysis::has_errors(&diags));
+}
+
+#[test]
+fn cond_mismatch_fires_on_width_and_wiring_violations() {
+    // network declares a different cond width than its layers consume
+    let mut m = manifest();
+    m.networks.get_mut("cond_realnvp2d").unwrap().cond_shape =
+        Some(vec![256, 3]);
+    let cs = codes_of(&lint(&m, "cond_realnvp2d"));
+    assert!(cs.contains(&codes::COND_MISMATCH), "{cs:?}");
+
+    // network declares no cond at all, but layers consume one
+    let mut m = manifest();
+    m.networks.get_mut("cond_realnvp2d").unwrap().cond_shape = None;
+    let cs = codes_of(&lint(&m, "cond_realnvp2d"));
+    assert!(cs.contains(&codes::COND_MISMATCH), "{cs:?}");
+}
+
+#[test]
+fn dangling_cond_is_a_warning_not_an_error() {
+    let mut m = manifest();
+    m.networks.get_mut("realnvp2d").unwrap().cond_shape =
+        Some(vec![256, 2]);
+    let diags = lint(&m, "realnvp2d");
+    assert!(codes_of(&diags).contains(&codes::DANGLING_COND), "{diags:?}");
+    assert!(!analysis::has_errors(&diags), "{diags:?}");
+}
+
+#[test]
+fn latent_mismatch_and_not_bijective_fire_together() {
+    let mut m = manifest();
+    m.networks.get_mut("realnvp2d").unwrap().latent_shapes =
+        vec![vec![256, 3]];
+    let cs = codes_of(&lint(&m, "realnvp2d"));
+    assert!(cs.contains(&codes::LATENT_MISMATCH), "{cs:?}");
+    assert!(cs.contains(&codes::NOT_BIJECTIVE), "{cs:?}");
+}
+
+#[test]
+fn dangling_split_half_is_caught_by_the_latent_audit() {
+    // drop the declared latent for glow16's split half: the derived
+    // latents (split half + final shape) no longer match
+    let mut m = manifest();
+    let net = m.networks.get_mut("glow16").unwrap();
+    net.latent_shapes.remove(0);
+    let cs = codes_of(&lint(&m, "glow16"));
+    assert!(cs.contains(&codes::LATENT_MISMATCH), "{cs:?}");
+    assert!(cs.contains(&codes::NOT_BIJECTIVE), "{cs:?}");
+}
+
+#[test]
+fn checkpoint_k_audit_bounds() {
+    let zero = verify_checkpoint_k(26, 0);
+    assert_eq!(codes_of(&zero), vec![codes::BAD_CHECKPOINT_K]);
+    assert!(analysis::has_errors(&zero));
+    let over = verify_checkpoint_k(26, 27);
+    assert_eq!(codes_of(&over), vec![codes::BAD_CHECKPOINT_K]);
+    assert!(!analysis::has_errors(&over));
+    assert!(verify_checkpoint_k(26, 4).is_empty());
+}
+
+// --------------------------------------------------------------------------
+// checkpoint index codes (the serve-registry gate reuses these)
+// --------------------------------------------------------------------------
+
+fn temp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("analysis_it_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn checkpoint_index_codes_fire_on_a_doctored_index() {
+    use invertnet::util::json::Json;
+    let dir = temp("doctored");
+    let engine = engine();
+    let flow = engine.flow("realnvp2d").unwrap();
+    let params = flow.init_params(9).unwrap();
+    params.save(&dir, "realnvp2d").unwrap();
+
+    // rename one param (=> unknown + missing) and bend another's shape
+    let text = std::fs::read_to_string(dir.join("index.json")).unwrap();
+    let mut doc = Json::parse(&text).unwrap();
+    {
+        let Json::Obj(m) = &mut doc else { panic!("index not an obj") };
+        let Some(Json::Arr(entries)) = m.get_mut("params") else {
+            panic!("no params array")
+        };
+        assert!(entries.len() >= 2, "need two params to doctor");
+        if let Json::Obj(e) = &mut entries[0] {
+            e.insert("name".into(), Json::Str("imposter".into()));
+        }
+        if let Json::Obj(e) = &mut entries[1] {
+            e.insert("shape".into(), Json::arr_usize(&[9, 9, 9]));
+        }
+    }
+    std::fs::write(dir.join("index.json"), doc.to_string()).unwrap();
+
+    let diags = analysis::verify_checkpoint_index(
+        engine.manifest(), &flow.def, &dir).unwrap();
+    let cs = codes_of(&diags);
+    assert!(cs.contains(&codes::CKPT_UNKNOWN_PARAM), "{cs:?}");
+    assert!(cs.contains(&codes::CKPT_SHAPE_MISMATCH), "{cs:?}");
+    assert!(cs.contains(&codes::CKPT_MISSING_PARAM), "{cs:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// --------------------------------------------------------------------------
+// the planner: predicted peak == measured ledger peak, bit for bit, for
+// every builtin example net under all three schedules
+// --------------------------------------------------------------------------
+
+#[test]
+fn predicted_peak_equals_measured_for_all_nets_and_schedules() {
+    let engine = engine();
+    let schedules: [&dyn ActivationSchedule; 3] = [
+        &ExecMode::Invertible,
+        &ExecMode::Stored,
+        &CheckpointEveryK(3),
+    ];
+    for &net in EXAMPLE_NETS {
+        for sched in schedules {
+            let ledger = MemoryLedger::new();
+            let flow = engine.flow_with_ledger(net, ledger).unwrap();
+            let params = flow.init_params(5).unwrap();
+            let (x, cond) = batch_for(&flow, 6);
+            let measured = flow
+                .train_step(&x, cond.as_ref(), &params, sched)
+                .unwrap()
+                .peak_sched_bytes;
+            let predicted = predict_peak(&flow.def, sched);
+            assert_eq!(
+                measured, predicted,
+                "{net}/{}: measured {measured} != predicted {predicted}",
+                sched.label()
+            );
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// the CLI gate: a malformed manifest exits non-zero through `lint --check`
+// --------------------------------------------------------------------------
+
+#[test]
+fn lint_cli_rejects_a_malformed_manifest() {
+    let dir = temp("badmanifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    // structurally valid manifest whose network is wrong three ways:
+    // input shape mismatch, an undefined layer sig, and a latent set
+    // that is not a bijection of the input
+    let bad = r#"{
+      "backend": "bad-demo",
+      "layers": {
+        "actnorm__2x4x4x3": {
+          "sig": "actnorm__2x4x4x3", "kind": "actnorm",
+          "in_shape": [2,4,4,3], "out_shape": [2,4,4,3],
+          "cond_shape": null, "cfg": {},
+          "params": [{"name": "log_s", "shape": [3]},
+                     {"name": "b", "shape": [3]}],
+          "entries": {}
+        }
+      },
+      "heads": {},
+      "networks": {
+        "broken": {"name": "broken", "in_shape": [2,4,4,5],
+                   "cond_shape": null,
+                   "layers": ["actnorm__2x4x4x3", "missing__2x4x4x3"],
+                   "latent_shapes": [[2,4,4,3]]}
+      }
+    }"#;
+    std::fs::write(dir.join("manifest.json"), bad).unwrap();
+    let argv: Vec<String> = ["lint", "--all", "--check", "--json",
+                             "--artifacts", dir.to_str().unwrap()]
+        .iter().map(|s| s.to_string()).collect();
+    let err = invertnet::app::run(&argv).unwrap_err();
+    assert!(err.to_string().contains("lint failed"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}

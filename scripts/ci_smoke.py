@@ -5,6 +5,8 @@ Usage:
     python3 scripts/ci_smoke.py serve     /tmp/serve_out.jsonl
     python3 scripts/ci_smoke.py posterior /tmp/post_serve.jsonl
     python3 scripts/ci_smoke.py bench     BENCH_quick.json
+    python3 scripts/ci_smoke.py lint      /tmp/lint_catalog.json
+    python3 scripts/ci_smoke.py lint      /tmp/lint_bad.json expect-errors
 
 Each suite checks one kind of artifact:
 
@@ -14,6 +16,11 @@ Each suite checks one kind of artifact:
                   (mean/std/samples) + shutdown.
 * ``bench``     — a ``BENCH_<suite>.json`` document: schema tag, the
                   environment block, and at least one gated metric.
+* ``lint``      — an ``invertnet lint --json`` report: schema tag and
+                  per-network diagnostics. The default expects a clean
+                  catalog; pass ``expect-errors`` as a third argument to
+                  assert the report carries machine-readable diagnostics
+                  (the malformed-manifest smoke).
 
 Exit code 0 on success; an AssertionError message names what broke.
 (Replaces the inline ``python3 -c`` heredocs that used to live in
@@ -65,15 +72,38 @@ def check_bench(path):
         assert isinstance(m["value"], (int, float)), m
 
 
+def check_lint(path, expect="clean"):
+    assert expect in ("clean", "expect-errors"), f"bad mode {expect!r}"
+    with open(path) as fh:
+        doc = json.load(fh)
+    assert doc["schema"] == "invertnet-lint/v1", doc.get("schema")
+    nets = doc["networks"]
+    assert nets, "lint report covers no networks"
+    for n in nets:
+        for key in ("name", "ok", "diagnostics"):
+            assert key in n, f"network entry missing {key!r}: {n}"
+    if expect == "expect-errors":
+        assert doc["errors"] > 0, "malformed manifest produced no errors"
+        diags = [d for n in nets for d in n["diagnostics"]]
+        assert diags, "errors counted but no diagnostics recorded"
+        for d in diags:
+            assert d["severity"] in ("error", "warning"), d
+            assert d["code"] and d["message"], d
+    else:
+        assert doc["errors"] == 0, f"catalog lint found errors: {doc}"
+        assert all(n["ok"] for n in nets), nets
+
+
 CHECKS = {"serve": check_serve, "posterior": check_posterior,
-          "bench": check_bench}
+          "bench": check_bench, "lint": check_lint}
 
 
 def main(argv):
-    if len(argv) != 3 or argv[1] not in CHECKS:
+    ok_arity = len(argv) == 3 or (len(argv) == 4 and argv[1] == "lint")
+    if not ok_arity or argv[1] not in CHECKS:
         sys.stderr.write(__doc__)
         return 2
-    CHECKS[argv[1]](argv[2])
+    CHECKS[argv[1]](*argv[2:])
     print(f"ci_smoke {argv[1]}: {argv[2]} ok")
     return 0
 
