@@ -1,0 +1,467 @@
+"""Independent mirror of the Rust static cost model (rust/src/analysis/cost.rs).
+
+This file reimplements, from the canonical op-count table alone, the
+per-layer arithmetic/bytes cost model and the per-schedule training and
+inference totals for the six builtin example networks — without reading
+any Rust. Both implementations are pinned against the committed fixture
+``data/cost_model_pins.json`` (all 6 nets x 3 schedules), so the Rust
+model and this mirror can never drift apart silently: a change on either
+side breaks its pin until the fixture is regenerated *and the other side
+agrees*.
+
+Regenerate the fixture (after a deliberate model change on both sides):
+
+    python3 python/tests/test_cost_model.py
+
+The canonical table (1 MAC = 2 flops, elementwise = 1 flop/element,
+SAME 3x3 convs counted with clipped border taps, conditioner VJP = 3x
+its apply) is documented in full in rust/src/analysis/cost.rs.
+"""
+
+import json
+import os
+
+BYTES_PER_ELEM = 4
+HINT_MIN_D = 4
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "cost_model_pins.json")
+
+# --------------------------------------------------------------------------
+# kernel helpers
+# --------------------------------------------------------------------------
+
+
+def taps(x, k):
+    """Clipped-border tap count of a SAME conv along one length-x axis."""
+    return x if k == 1 else max(3 * x - 2, 1)
+
+
+def conv_macs(n, h, w, ci, co, k):
+    return n * taps(h, k) * taps(w, k) * ci * co
+
+
+def conv_flops(n, h, w, ci, co, k):
+    return 2 * conv_macs(n, h, w, ci, co, k) + n * h * w * co
+
+
+def cnn_flops(n, h, w, ci, hid, co):
+    """conv3 -> relu -> conv1 -> relu -> conv3, biases included."""
+    return (conv_flops(n, h, w, ci, hid, 3) + n * h * w * hid
+            + conv_flops(n, h, w, hid, hid, 1) + n * h * w * hid
+            + conv_flops(n, h, w, hid, co, 3))
+
+
+def lin_flops(n, a, b):
+    return 2 * n * a * b + n * b
+
+
+def mlp_flops(n, din, hid, dout):
+    """lin -> relu -> lin -> relu -> lin, biases included."""
+    return (lin_flops(n, din, hid) + n * hid
+            + lin_flops(n, hid, hid) + n * hid
+            + lin_flops(n, hid, dout))
+
+
+def hint_nodes(d, depth):
+    """Preorder (d1, d2) conditioner nodes of a HINT layer."""
+    out = []
+
+    def rec(d, depth):
+        if depth == 0 or d < HINT_MIN_D:
+            return
+        d1, d2 = d // 2, d - d // 2
+        out.append((d1, d2))
+        rec(d1, depth - 1)
+        rec(d2, depth - 1)
+
+    rec(d, depth)
+    return out
+
+
+# --------------------------------------------------------------------------
+# layer programs for the six builtin example nets
+# --------------------------------------------------------------------------
+# A step is a dict: kind, in_shape, out_shape, plus kind-specific cfg
+# (hidden, depth, dcond) and params (scalar parameter count).
+
+
+def numel(shape):
+    p = 1
+    for d in shape:
+        p *= d
+    return p
+
+
+def cnn_params(ci, hid, co):
+    return 9 * ci * hid + hid + hid * hid + hid + 9 * hid * co + co
+
+
+def mlp_params(din, hid, dout):
+    return din * hid + hid + hid * hid + hid + hid * dout + dout
+
+
+def step(kind, in_shape, out_shape=None, **extra):
+    s = {"kind": kind, "in_shape": in_shape,
+         "out_shape": out_shape or list(in_shape)}
+    s.update(extra)
+    return s
+
+
+def l_actnorm(n, h, w, c):
+    return step("actnorm", [n, h, w, c], params=2 * c)
+
+
+def l_conv1x1(n, h, w, c):
+    return step("conv1x1", [n, h, w, c], params=3 * c)
+
+
+def l_glowcpl(n, h, w, c, hidden):
+    c1, c2 = c // 2, c - c // 2
+    return step("glowcpl", [n, h, w, c], hidden=hidden,
+                params=cnn_params(c1, hidden, 2 * c2))
+
+
+def l_addcpl(n, h, w, c, hidden):
+    c1, c2 = c // 2, c - c // 2
+    return step("addcpl", [n, h, w, c], hidden=hidden,
+                params=cnn_params(c1, hidden, c2))
+
+
+def l_haar(n, h, w, c):
+    return step("haar", [n, h, w, c], [n, h // 2, w // 2, 4 * c], params=0)
+
+
+def l_permute(shape):
+    return step("permute", list(shape), params=0)
+
+
+def l_densecpl(n, d, hidden):
+    d1, d2 = d // 2, d - d // 2
+    return step("densecpl", [n, d], hidden=hidden,
+                params=mlp_params(d1, hidden, 2 * d2))
+
+
+def l_condcpl(n, d, dcond, hidden):
+    d1, d2 = d // 2, d - d // 2
+    return step("condcpl", [n, d], hidden=hidden, dcond=dcond,
+                params=mlp_params(d1 + dcond, hidden, 2 * d2))
+
+
+def l_hyper(n, h, w, c, hidden):
+    return step("hyper", [n, h, w, c], hidden=hidden,
+                params=9 * (c // 2) * hidden)
+
+
+def l_hint(n, d, hidden, depth):
+    p = sum(mlp_params(d1, hidden, 2 * d2)
+            for d1, d2 in hint_nodes(d, depth))
+    return step("hint", [n, d], hidden=hidden, depth=depth, params=p)
+
+
+def l_split(n, h, w, c):
+    zc = c // 2
+    return step("split", [n, h, w, c], [n, h, w, c - zc], zc=zc, params=0)
+
+
+def realnvp_dense(n, d, k, hidden):
+    steps = []
+    for _ in range(k):
+        steps += [l_densecpl(n, d, hidden), l_permute([n, d])]
+    return steps
+
+
+def cond_realnvp_dense(n, d, dcond, k, hidden):
+    steps = []
+    for _ in range(k):
+        steps += [l_condcpl(n, d, dcond, hidden), l_permute([n, d])]
+    return steps
+
+
+def hint_dense(n, d, k, hidden, depth):
+    steps = []
+    for _ in range(k):
+        steps += [l_hint(n, d, hidden, depth), l_permute([n, d])]
+    return steps
+
+
+def glow_multiscale(n, h, w, c_in, scales, k, hidden):
+    steps = []
+    ch, hh, ww = c_in, h, w
+    for s in range(scales):
+        steps.append(l_haar(n, hh, ww, ch))
+        ch, hh, ww = 4 * ch, hh // 2, ww // 2
+        for _ in range(k):
+            steps += [l_actnorm(n, hh, ww, ch), l_conv1x1(n, hh, ww, ch),
+                      l_glowcpl(n, hh, ww, ch, hidden)]
+        if s != scales - 1:
+            steps.append(l_split(n, hh, ww, ch))
+            ch -= ch // 2
+    return steps
+
+
+def hyperbolic_net(n, h, w, c_in, k, hidden):
+    steps = [l_haar(n, h, w, c_in)]
+    for _ in range(k):
+        steps.append(l_hyper(n, h // 2, w // 2, 4 * c_in, hidden))
+    return steps
+
+
+def nice_net(n, h, w, c_in, k, hidden):
+    steps = [l_haar(n, h, w, c_in)]
+    c, h2, w2 = 4 * c_in, h // 2, w // 2
+    for _ in range(k):
+        steps += [l_addcpl(n, h2, w2, c, hidden),
+                  l_permute([n, h2, w2, c])]
+    return steps
+
+
+EXAMPLE_NETS = {
+    "realnvp2d": realnvp_dense(256, 2, 8, 64),
+    "cond_realnvp2d": cond_realnvp_dense(256, 2, 2, 8, 64),
+    "hint8d": hint_dense(256, 8, 4, 64, 2),
+    "glow16": glow_multiscale(16, 16, 16, 3, 2, 4, 32),
+    "hyper16": hyperbolic_net(16, 16, 16, 3, 6, 12),
+    "nice16": nice_net(16, 16, 16, 3, 4, 32),
+}
+
+
+def latent_shapes(steps):
+    """Split z-shapes in push order, then the final activation."""
+    shapes = []
+    for s in steps:
+        if s["kind"] == "split":
+            z = list(s["in_shape"])
+            z[-1] = s["zc"]
+            shapes.append(z)
+    shapes.append(list(steps[-1]["out_shape"]))
+    return shapes
+
+
+# --------------------------------------------------------------------------
+# the cost model proper
+# --------------------------------------------------------------------------
+
+
+def layer_flops(s):
+    """(fwd, inv, vjp_stored) arithmetic ops of one layer step."""
+    kind, shape = s["kind"], s["in_shape"]
+    e, n, c = numel(shape), shape[0], shape[-1]
+    if kind == "actnorm":
+        return 2 * e + 2 * c + n, 2 * e + c, 3 * e + 2 * c
+    if kind == "conv1x1":
+        r = e // c
+        build = 6 * c * c + 6 * c
+        return (build + 2 * r * c * c + n, build + 2 * r * c * c,
+                12 * c * c * c + 4 * r * c * c)
+    if kind in ("glowcpl", "addcpl"):
+        h, w = shape[1], shape[2]
+        c1, c2 = c // 2, c - c // 2
+        p2 = n * h * w * c2
+        if kind == "glowcpl":
+            g = cnn_flops(n, h, w, c1, s["hidden"], 2 * c2)
+            return g + 8 * p2 + n, g + 6 * p2 + n, 3 * g + 10 * p2 + n
+        g = cnn_flops(n, h, w, c1, s["hidden"], c2)
+        return g + p2 + n, g + p2 + n, 3 * g + p2
+    if kind in ("densecpl", "condcpl"):
+        d = shape[1]
+        d1, d2 = d // 2, d - d // 2
+        g = mlp_flops(n, d1 + s.get("dcond", 0), s["hidden"], 2 * d2)
+        return (g + 8 * n * d2 + n, g + 6 * n * d2 + n,
+                3 * g + 10 * n * d2 + n)
+    if kind == "haar":
+        return 4 * e, 4 * e, 4 * e
+    if kind == "permute":
+        return 0, 0, 0
+    if kind == "hyper":
+        h, w = shape[1], shape[2]
+        g = 2 * conv_macs(n, h, w, c // 2, s["hidden"], 3) + n * h * w * s["hidden"]
+        pc = n * h * w * c
+        return 2 * g + pc + n, 2 * g + pc + n, 6 * g + 2 * pc
+    if kind == "hint":
+        f = i = n
+        v = n
+        for d1, d2 in hint_nodes(shape[1], s["depth"]):
+            g = mlp_flops(n, d1, s["hidden"], 2 * d2)
+            f += g + 8 * n * d2
+            i += g + 6 * n * d2
+            v += 3 * g + 10 * n * d2
+        return f, i, v
+    raise ValueError(f"no cost model for kind {kind!r}")
+
+
+def layer_bytes(s):
+    """(fwd, inv, vjp_stored) bytes moved — the kind-agnostic protocol."""
+    e_in, e_out = numel(s["in_shape"]), numel(s["out_shape"])
+    n = s["in_shape"][0]
+    params = s["params"]
+    e_cond = n * s.get("dcond", 0)
+    b = BYTES_PER_ELEM
+    return (b * (e_in + e_out + n + params + e_cond),
+            b * (e_in + e_out + params + e_cond),
+            b * (2 * e_in + e_out + 2 * params + e_cond))
+
+
+def entry_costs(s):
+    """{fwd, inv, vjp_stored, vjp} as (flops, bytes) pairs."""
+    ff, fi, fv = layer_flops(s)
+    bf, bi, bv = layer_bytes(s)
+    return {"fwd": (ff, bf), "inv": (fi, bi), "vjp_stored": (fv, bv),
+            "vjp": (fi + fv, bi + bv)}
+
+
+def split_cost(s):
+    return 0, 2 * BYTES_PER_ELEM * numel(s["in_shape"])
+
+
+def logp_cost(shape):
+    n = shape[0]
+    k = numel(shape) // n
+    return 2 * n * k + 2 * n, BYTES_PER_ELEM * (n * k + n)
+
+
+def nll_seed_cost(shape):
+    n = shape[0]
+    k = numel(shape) // n
+    return n * k + n, BYTES_PER_ELEM * (2 * n * k + n)
+
+
+def taped_pattern(steps, schedule):
+    """Which steps a schedule stores, mirroring the executor's walk."""
+    n_layers = sum(1 for s in steps if s["kind"] != "split")
+    taped = []
+    ord_ = 0
+    for s in steps:
+        if s["kind"] == "split":
+            taped.append(False)
+            continue
+        if schedule == "invertible":
+            t = False
+        elif schedule == "stored":
+            t = True
+        elif schedule.startswith("checkpoint_every_"):
+            k = max(int(schedule.rsplit("_", 1)[1]), 1)
+            t = ord_ % k == 0
+        else:
+            raise ValueError(schedule)
+        taped.append(t)
+        ord_ += 1
+    del n_layers
+    return taped
+
+
+def add(a, b):
+    return a[0] + b[0], a[1] + b[1]
+
+
+def train_cost(steps, schedule):
+    """One training step: forward + heads + the scheduled backward."""
+    taped = taped_pattern(steps, schedule)
+    total = (0, 0)
+    for s in steps:
+        total = add(total, split_cost(s) if s["kind"] == "split"
+                    else entry_costs(s)["fwd"])
+    for z in latent_shapes(steps):
+        total = add(total, logp_cost(z))
+        total = add(total, nll_seed_cost(z))
+    for s, t in zip(reversed(steps), reversed(taped)):
+        if s["kind"] == "split":
+            total = add(total, split_cost(s))
+        else:
+            total = add(total, entry_costs(s)["vjp_stored" if t else "vjp"])
+    return total
+
+
+def inference_cost(steps):
+    total = (0, 0)
+    for s in steps:
+        total = add(total, split_cost(s) if s["kind"] == "split"
+                    else entry_costs(s)["fwd"])
+    for z in latent_shapes(steps):
+        total = add(total, logp_cost(z))
+    return total
+
+
+def sample_cost(steps):
+    total = (0, 0)
+    for s in reversed(steps):
+        total = add(total, split_cost(s) if s["kind"] == "split"
+                    else entry_costs(s)["inv"])
+    return total
+
+
+SCHEDULES = ("invertible", "stored", "checkpoint_every_4")
+
+
+def compute_pins():
+    doc = {"schema": "invertnet-cost-pins/v1", "networks": {}}
+    for name, steps in EXAMPLE_NETS.items():
+        entry = {}
+        for sched in SCHEDULES:
+            flops, byt = train_cost(steps, sched)
+            entry[sched] = {"train_flops": flops, "train_bytes": byt}
+        flops, byt = inference_cost(steps)
+        entry["inference_flops"] = flops
+        entry["inference_bytes"] = byt
+        flops, byt = sample_cost(steps)
+        entry["sample_flops"] = flops
+        entry["sample_bytes"] = byt
+        doc["networks"][name] = entry
+    return doc
+
+
+# --------------------------------------------------------------------------
+# tests
+# --------------------------------------------------------------------------
+
+
+def load_fixture():
+    with open(FIXTURE) as fh:
+        return json.load(fh)
+
+
+def test_fixture_matches_this_mirror_exactly():
+    assert load_fixture() == compute_pins(), (
+        "cost model drifted from the committed fixture; if the change is "
+        "deliberate, regenerate with `python3 python/tests/test_cost_model.py` "
+        "and make sure rust/tests/analysis.rs cost pins still pass")
+
+
+def test_fixture_covers_all_nets_and_schedules():
+    doc = load_fixture()
+    assert set(doc["networks"]) == set(EXAMPLE_NETS)
+    for name, entry in doc["networks"].items():
+        for sched in SCHEDULES:
+            assert entry[sched]["train_flops"] > 0, (name, sched)
+            assert entry[sched]["train_bytes"] > 0, (name, sched)
+        assert entry["inference_flops"] > 0, name
+        assert entry["sample_flops"] > 0, name
+
+
+def test_recompute_ordering_invariants():
+    # invertible recomputes everything: strictly more expensive than
+    # stored; checkpointing lands in between (or equals an endpoint for
+    # very shallow nets); inference is always cheaper than training
+    for name, steps in EXAMPLE_NETS.items():
+        inv, _ = train_cost(steps, "invertible")
+        sto, _ = train_cost(steps, "stored")
+        mid, _ = train_cost(steps, "checkpoint_every_4")
+        assert sto < inv, name
+        assert sto <= mid <= inv, (name, sto, mid, inv)
+        assert inference_cost(steps)[0] < sto, name
+
+
+def test_hint_nodes_shape():
+    assert hint_nodes(8, 2) == [(4, 4), (2, 2), (2, 2)]
+    assert hint_nodes(2, 5) == []
+
+
+if __name__ == "__main__":
+    doc = compute_pins()
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    with open(FIXTURE, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {FIXTURE}")
+    for name, entry in sorted(doc["networks"].items()):
+        row = ", ".join(f"{s}={entry[s]['train_flops']}" for s in SCHEDULES)
+        print(f"  {name}: {row}")

@@ -1,0 +1,398 @@
+//! The static compute cost model: exact per-layer arithmetic-op and
+//! bytes-moved counts for `forward`, `inverse`, and both VJP entries of
+//! every layer kind, composed into per-schedule training-step and
+//! inference totals by replaying the executor's recompute order — the
+//! same walk [`predict_peak`](super::predict_peak) does for allocs.
+//!
+//! "Exact" means *exactly defined*: the op counts below are a canonical
+//! arithmetic model (1 MAC = 2 flops, elementwise ops = 1 flop/element,
+//! SAME-padded 3x3 convs counted with clipped border taps), implemented
+//! once here and once, independently, in the Python mirror
+//! `python/tests/test_cost_model.py`. Both implementations are pinned
+//! against the committed fixture `python/tests/data/cost_model_pins.json`
+//! for every builtin example net x three canonical schedules, so the two
+//! cost models can never drift apart silently.
+//!
+//! ## The canonical op-count table
+//!
+//! Helpers (`E` = input elements, `n` = batch, `c` = channels,
+//! `R = E/c` rows, 4D spatial `P = n*h*w`):
+//!
+//! * `taps(x, 1) = x`; `taps(x, 3) = max(3x - 2, 1)` — clipped-border
+//!   tap count of a SAME conv along one length-`x` axis.
+//! * `conv_macs(n,h,w,ci,co,k) = n * taps(h,k) * taps(w,k) * ci * co`
+//! * conv flops (with bias) `= 2*conv_macs + n*h*w*co`
+//! * `cnn(ci,hid,co)` = conv3(ci,hid) + relu + conv1(hid,hid) + relu +
+//!   conv3(hid,co); `mlp(din,hid,dout)` analogous with dense layers.
+//! * a conditioner's VJP costs `3x` its apply (forward recompute + the
+//!   dx pass + the dW pass).
+//!
+//! Per kind (fwd / inv / vjp_stored; the untaped `backward` entry is
+//! `inv + vjp_stored` because it inverse-recomputes first):
+//!
+//! | kind     | fwd                  | inv                  | vjp_stored             |
+//! |----------|----------------------|----------------------|------------------------|
+//! | actnorm  | `2E + 2c + n`        | `2E + c`             | `3E + 2c`              |
+//! | conv1x1  | `B + 2Rc^2 + n`      | `B + 2Rc^2`          | `12c^3 + 4Rc^2`        |
+//! | glowcpl  | `g + 8Pc2 + n`       | `g + 6Pc2 + n`       | `3g + 10Pc2 + n`       |
+//! | addcpl   | `g + Pc2 + n`        | `g + Pc2 + n`        | `3g + Pc2`             |
+//! | densecpl | `g + 8nd2 + n`       | `g + 6nd2 + n`       | `3g + 10nd2 + n`       |
+//! | condcpl  | like densecpl with `g = mlp(d1 + dcond, hid, 2*d2)`    |
+//! | haar     | `4E`                 | `4E`                 | `4E`                   |
+//! | permute  | `0`                  | `0`                  | `0`                    |
+//! | hyper    | `2g + Pc + n`        | `2g + Pc + n`        | `6g + 2Pc`             |
+//! | hint     | sum over `hint_nodes(d, depth)` of the densecpl terms  |
+//!
+//! where `B = 6c^2 + 6c` (the householder W build), `g` is the layer's
+//! conditioner apply cost, `c2`/`d2` the transformed half, and sigmoid2
+//! scale activations count 4 flops/element (8/6/10 = act + affine +
+//! logdet terms per entry).
+//!
+//! Bytes moved use one kind-agnostic protocol model (4 bytes/element):
+//! fwd reads x/params/cond and writes y + logdet; inv drops the logdet;
+//! vjp_stored reads x/dy/params/cond and writes dx + dtheta.
+
+use crate::coordinator::memory::BYTES_PER_ELEM;
+use crate::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
+use crate::flow::{NetworkDef, StepKind};
+use crate::runtime::builtin::hint_nodes;
+use crate::runtime::{LayerMeta, Manifest};
+use anyhow::{bail, Result};
+
+/// Arithmetic ops + bytes moved for one entry or one composed program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Cost {
+    pub flops: u64,
+    pub bytes: u64,
+}
+
+impl Cost {
+    fn add(self, other: Cost) -> Cost {
+        Cost { flops: self.flops + other.flops,
+               bytes: self.bytes + other.bytes }
+    }
+}
+
+/// The four per-layer entry costs the executor can dispatch.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCost {
+    pub fwd: Cost,
+    pub inv: Cost,
+    /// `backward_stored`: VJP from a taped input.
+    pub vjp_stored: Cost,
+    /// `backward`: inverse-recompute + VJP (`inv + vjp_stored`).
+    pub vjp: Cost,
+}
+
+fn numel(shape: &[usize]) -> u64 {
+    shape.iter().map(|&d| d as u64).product()
+}
+
+/// Clipped-border tap count of a SAME conv along one axis.
+fn taps(x: u64, k: usize) -> u64 {
+    match k {
+        1 => x,
+        3 => (3 * x).saturating_sub(2).max(1),
+        _ => unreachable!("only 1x1 and 3x3 convs exist in the catalog"),
+    }
+}
+
+fn conv_macs(n: u64, h: u64, w: u64, ci: u64, co: u64, k: usize) -> u64 {
+    n * taps(h, k) * taps(w, k) * ci * co
+}
+
+/// One SAME conv with bias: 2 flops/MAC + the bias add.
+fn conv_flops(n: u64, h: u64, w: u64, ci: u64, co: u64, k: usize) -> u64 {
+    2 * conv_macs(n, h, w, ci, co, k) + n * h * w * co
+}
+
+/// The 3-conv conditioner CNN: conv3 -> relu -> conv1 -> relu -> conv3.
+fn cnn_flops(n: u64, h: u64, w: u64, ci: u64, hid: u64, co: u64) -> u64 {
+    conv_flops(n, h, w, ci, hid, 3) + n * h * w * hid
+        + conv_flops(n, h, w, hid, hid, 1) + n * h * w * hid
+        + conv_flops(n, h, w, hid, co, 3)
+}
+
+/// One dense layer with bias.
+fn lin_flops(n: u64, a: u64, b: u64) -> u64 {
+    2 * n * a * b + n * b
+}
+
+/// The 3-layer conditioner MLP: lin -> relu -> lin -> relu -> lin.
+fn mlp_flops(n: u64, din: u64, hid: u64, dout: u64) -> u64 {
+    lin_flops(n, din, hid) + n * hid + lin_flops(n, hid, hid) + n * hid
+        + lin_flops(n, hid, dout)
+}
+
+/// Kind-agnostic bytes-moved model for the four entries (see module doc).
+fn entry_bytes(meta: &LayerMeta) -> (u64, u64, u64) {
+    let e_in = numel(&meta.in_shape);
+    let e_out = numel(&meta.out_shape);
+    let n = meta.in_shape[0] as u64;
+    let params = meta.param_count() as u64;
+    let e_cond = meta.cond_shape.as_deref().map_or(0, numel);
+    let b = BYTES_PER_ELEM as u64;
+    let fwd = b * (e_in + e_out + n + params + e_cond);
+    let inv = b * (e_in + e_out + params + e_cond);
+    let vjps = b * (2 * e_in + e_out + 2 * params + e_cond);
+    (fwd, inv, vjps)
+}
+
+fn hidden_of(meta: &LayerMeta) -> Result<u64> {
+    match meta.cfg_usize("hidden") {
+        Some(h) => Ok(h as u64),
+        None => bail!("layer {} ({}) has no `hidden` in cfg — the cost \
+                       model needs the conditioner width", meta.sig,
+                      meta.kind),
+    }
+}
+
+/// The canonical per-entry cost of one layer (see the module-level table).
+pub fn layer_entry_costs(meta: &LayerMeta) -> Result<LayerCost> {
+    let e = numel(&meta.in_shape);
+    let n = meta.in_shape[0] as u64;
+    let c = *meta.in_shape.last().unwrap_or(&1) as u64;
+    let r = e / c.max(1);
+    let (fwd, inv, vjps) = match meta.kind.as_str() {
+        "actnorm" => (2 * e + 2 * c + n, 2 * e + c, 3 * e + 2 * c),
+        "conv1x1" => {
+            let build = 6 * c * c + 6 * c;
+            (build + 2 * r * c * c + n,
+             build + 2 * r * c * c,
+             12 * c * c * c + 4 * r * c * c)
+        }
+        "glowcpl" | "addcpl" => {
+            let (h, w) = (meta.in_shape[1] as u64, meta.in_shape[2] as u64);
+            let (c1, c2) = (c / 2, c - c / 2);
+            let hid = hidden_of(meta)?;
+            let p2 = n * h * w * c2;
+            if meta.kind == "glowcpl" {
+                let g = cnn_flops(n, h, w, c1, hid, 2 * c2);
+                (g + 8 * p2 + n, g + 6 * p2 + n, 3 * g + 10 * p2 + n)
+            } else {
+                let g = cnn_flops(n, h, w, c1, hid, c2);
+                (g + p2 + n, g + p2 + n, 3 * g + p2)
+            }
+        }
+        "densecpl" | "condcpl" => {
+            let d = meta.in_shape[1] as u64;
+            let (d1, d2) = (d / 2, d - d / 2);
+            let hid = hidden_of(meta)?;
+            let dcond = meta.cond_shape.as_ref()
+                .map_or(0, |s| s[1] as u64);
+            let g = mlp_flops(n, d1 + dcond, hid, 2 * d2);
+            (g + 8 * n * d2 + n, g + 6 * n * d2 + n,
+             3 * g + 10 * n * d2 + n)
+        }
+        "haar" => (4 * e, 4 * e, 4 * e),
+        "permute" => (0, 0, 0),
+        "hyper" => {
+            let (h, w) = (meta.in_shape[1] as u64, meta.in_shape[2] as u64);
+            let hid = hidden_of(meta)?;
+            let g = 2 * conv_macs(n, h, w, c / 2, hid, 3) + n * h * w * hid;
+            let pc = n * h * w * c;
+            (2 * g + pc + n, 2 * g + pc + n, 6 * g + 2 * pc)
+        }
+        "hint" => {
+            let d = meta.in_shape[1] as u64;
+            let hid = hidden_of(meta)?;
+            let depth = meta.cfg_usize("depth").unwrap_or(1);
+            let (mut f, mut i, mut v) = (n, n, n);
+            for (_, d1, d2) in hint_nodes(d as usize, depth) {
+                let (d1, d2) = (d1 as u64, d2 as u64);
+                let g = mlp_flops(n, d1, hid, 2 * d2);
+                f += g + 8 * n * d2;
+                i += g + 6 * n * d2;
+                v += 3 * g + 10 * n * d2;
+            }
+            (f, i, v)
+        }
+        other => bail!("no cost model for layer kind {other:?}"),
+    };
+    let (bf, bi, bv) = entry_bytes(meta);
+    let fwd = Cost { flops: fwd, bytes: bf };
+    let inv = Cost { flops: inv, bytes: bi };
+    let vjp_stored = Cost { flops: vjps, bytes: bv };
+    Ok(LayerCost { fwd, inv, vjp_stored, vjp: inv.add(vjp_stored) })
+}
+
+/// A coordinator-native split/join: pure data movement, no arithmetic.
+fn split_cost(in_shape: &[usize]) -> Cost {
+    Cost { flops: 0, bytes: 2 * BYTES_PER_ELEM as u64 * numel(in_shape) }
+}
+
+/// The gaussian log-density head over one latent shape.
+fn logp_cost(shape: &[usize]) -> Cost {
+    let n = shape[0] as u64;
+    let k = numel(shape) / n.max(1);
+    Cost { flops: 2 * n * k + 2 * n,
+           bytes: BYTES_PER_ELEM as u64 * (n * k + n) }
+}
+
+/// The NLL gradient seed (`dz = z / n`) over one latent shape.
+fn nll_seed_cost(shape: &[usize]) -> Cost {
+    let n = shape[0] as u64;
+    let k = numel(shape) / n.max(1);
+    Cost { flops: n * k + n,
+           bytes: BYTES_PER_ELEM as u64 * (2 * n * k + n) }
+}
+
+/// Mirror of the planner's taped-layer computation: which steps the
+/// schedule stores.
+fn taped_steps(def: &NetworkDef, schedule: &dyn ActivationSchedule)
+               -> Vec<bool> {
+    let n_layers = def.depth();
+    let mut taped = vec![false; def.steps.len()];
+    let mut layer_ord = 0usize;
+    for (i, step) in def.steps.iter().enumerate() {
+        if step.kind == StepKind::Layer {
+            taped[i] = schedule.tape(layer_ord, n_layers);
+            layer_ord += 1;
+        }
+    }
+    taped
+}
+
+/// Predicted cost of one full training step (forward + loss heads +
+/// backward) of `def` under `schedule`, replaying the executor's
+/// entry-dispatch order: forward per step, `gaussian_logp` + the NLL
+/// seed per latent, then the reversed walk dispatching `backward_stored`
+/// for taped layers and `backward` (inverse-recompute) for untaped ones.
+pub fn train_cost(def: &NetworkDef, manifest: &Manifest,
+                  schedule: &dyn ActivationSchedule) -> Result<Cost> {
+    let taped = taped_steps(def, schedule);
+    let mut total = Cost::default();
+    for step in &def.steps {
+        total = total.add(match step.kind {
+            StepKind::Split { .. } => split_cost(&step.in_shape),
+            StepKind::Layer => {
+                layer_entry_costs(manifest.layer(&step.sig)?)?.fwd
+            }
+        });
+    }
+    for latent in &def.latent_shapes {
+        total = total.add(logp_cost(latent));
+        total = total.add(nll_seed_cost(latent));
+    }
+    for (i, step) in def.steps.iter().enumerate().rev() {
+        total = total.add(match step.kind {
+            StepKind::Split { .. } => split_cost(&step.in_shape),
+            StepKind::Layer => {
+                let lc = layer_entry_costs(manifest.layer(&step.sig)?)?;
+                if taped[i] { lc.vjp_stored } else { lc.vjp }
+            }
+        });
+    }
+    Ok(total)
+}
+
+/// Predicted cost of one log-density evaluation (forward + heads) —
+/// schedule-independent: inference never tapes.
+pub fn inference_cost(def: &NetworkDef, manifest: &Manifest)
+                      -> Result<Cost> {
+    let mut total = Cost::default();
+    for step in &def.steps {
+        total = total.add(match step.kind {
+            StepKind::Split { .. } => split_cost(&step.in_shape),
+            StepKind::Layer => {
+                layer_entry_costs(manifest.layer(&step.sig)?)?.fwd
+            }
+        });
+    }
+    for latent in &def.latent_shapes {
+        total = total.add(logp_cost(latent));
+    }
+    Ok(total)
+}
+
+/// Predicted cost of drawing one batch of samples (the reversed inverse
+/// walk).
+pub fn sample_cost(def: &NetworkDef, manifest: &Manifest) -> Result<Cost> {
+    let mut total = Cost::default();
+    for step in def.steps.iter().rev() {
+        total = total.add(match step.kind {
+            StepKind::Split { .. } => split_cost(&step.in_shape),
+            StepKind::Layer => {
+                layer_entry_costs(manifest.layer(&step.sig)?)?.inv
+            }
+        });
+    }
+    Ok(total)
+}
+
+/// Training-step costs under the three canonical schedules, labeled like
+/// [`schedule_peaks`](super::schedule_peaks) — what `inspect` and the
+/// lint `cost` block print per network.
+pub fn schedule_costs(def: &NetworkDef, manifest: &Manifest)
+                      -> Result<Vec<(String, Cost)>> {
+    let schedules: [&dyn ActivationSchedule; 3] = [
+        &ExecMode::Invertible,
+        &ExecMode::Stored,
+        &CheckpointEveryK(4),
+    ];
+    schedules.iter()
+        .map(|s| Ok((s.label(), train_cost(def, manifest, *s)?)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::builtin_manifest;
+
+    fn def_of(name: &str) -> (Manifest, NetworkDef) {
+        let m = builtin_manifest().unwrap();
+        let d = NetworkDef::resolve(&m, name).unwrap();
+        (m, d)
+    }
+
+    #[test]
+    fn stored_training_is_cheaper_than_invertible() {
+        // recompute trades flops for memory: invertible must cost more
+        for name in ["realnvp2d", "glow16", "nice16"] {
+            let (m, d) = def_of(name);
+            let inv = train_cost(&d, &m, &ExecMode::Invertible).unwrap();
+            let sto = train_cost(&d, &m, &ExecMode::Stored).unwrap();
+            assert!(inv.flops > sto.flops, "{name}: {inv:?} vs {sto:?}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_cost_interpolates_between_the_pure_schedules() {
+        let (m, d) = def_of("glow16");
+        let inv = train_cost(&d, &m, &ExecMode::Invertible).unwrap().flops;
+        let sto = train_cost(&d, &m, &ExecMode::Stored).unwrap().flops;
+        let mid = train_cost(&d, &m, &CheckpointEveryK(4)).unwrap().flops;
+        assert!(sto < mid && mid < inv, "{sto} {mid} {inv}");
+    }
+
+    #[test]
+    fn inference_is_cheaper_than_any_training_schedule() {
+        let (m, d) = def_of("hint8d");
+        let infer = inference_cost(&d, &m).unwrap().flops;
+        let sto = train_cost(&d, &m, &ExecMode::Stored).unwrap().flops;
+        assert!(infer < sto, "{infer} {sto}");
+        assert!(sample_cost(&d, &m).unwrap().flops > 0);
+    }
+
+    #[test]
+    fn schedule_costs_reports_all_three_labels() {
+        let (m, d) = def_of("hyper16");
+        let rows = schedule_costs(&d, &m).unwrap();
+        let labels: Vec<&str> =
+            rows.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels, ["invertible", "stored", "checkpoint_every_4"]);
+        assert!(rows.iter().all(|&(_, c)| c.flops > 0 && c.bytes > 0));
+    }
+
+    #[test]
+    fn every_builtin_layer_kind_has_a_cost() {
+        let m = builtin_manifest().unwrap();
+        for meta in m.layers.values() {
+            let lc = layer_entry_costs(meta).unwrap();
+            assert_eq!(lc.vjp.flops,
+                       lc.inv.flops + lc.vjp_stored.flops, "{}", meta.sig);
+            assert!(lc.fwd.bytes > 0, "{}", meta.sig);
+        }
+    }
+}

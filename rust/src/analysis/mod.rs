@@ -16,6 +16,19 @@
 //!   tests and as equality-pin metrics in the memory perf suites.
 //! * [`verify_checkpoint_index`] — checkpoint `index.json` contents
 //!   validated against the spec statically, before any weight loads.
+//! * [`train_cost`] / [`inference_cost`] / [`schedule_costs`] — the
+//!   static compute cost model: exact (canonically defined) arithmetic
+//!   op and bytes-moved counts per schedule, replaying the executor's
+//!   recompute order the same way the memory planner replays its
+//!   allocs; pinned against the independent Python mirror
+//!   `python/tests/test_cost_model.py`.
+//! * [`choose_schedule`] — automatic schedule selection (`--mode auto`):
+//!   the cheapest-compute schedule whose predicted peak fits a byte
+//!   budget, decided entirely statically.
+//! * [`numerics::check_network`] — interval propagation of activation
+//!   scale bounds, catching f32 overflow/underflow hazards
+//!   (`exp-overflow`, `actnorm-degenerate-scale`, `logdet-underflow`)
+//!   as part of the [`verify_network`] diagnostic stream.
 //!
 //! Gated everywhere a network enters the system: `Engine::build`, the
 //! serve [`Registry`](crate::serve::Registry), and the `invertnet lint`
@@ -26,11 +39,17 @@
 use std::fmt;
 
 mod checkpoint;
+mod cost;
+pub mod numerics;
 mod planner;
+mod schedule;
 mod verify;
 
 pub use checkpoint::verify_checkpoint_index;
+pub use cost::{inference_cost, layer_entry_costs, sample_cost,
+               schedule_costs, train_cost, Cost, LayerCost};
 pub use planner::{predict_peak, schedule_peaks};
+pub use schedule::{candidate_schedules, choose_schedule, ScheduleChoice};
 pub use verify::{verify_checkpoint_k, verify_manifest, verify_network,
                  INVERTIBLE_KINDS};
 
@@ -85,6 +104,16 @@ pub mod codes {
     /// A spec param the checkpoint index doesn't record — loading would
     /// silently keep the random init for it.
     pub const CKPT_MISSING_PARAM: &str = "ckpt-missing-param";
+    /// An `exp` coupling-scale activation whose declared raw bound (or
+    /// the propagated amplitude bound) exceeds f32 range: the forward
+    /// pass can overflow to `inf`.
+    pub const EXP_OVERFLOW: &str = "exp-overflow";
+    /// An actnorm scale interval that is empty, non-positive, or below
+    /// f32's smallest normal: the inverse divides by ~zero.
+    pub const ACTNORM_DEGENERATE_SCALE: &str = "actnorm-degenerate-scale";
+    /// A scale lower bound that underflows f32, so `ln(s)` in the
+    /// log-det sum can reach `-inf` while forward values stay finite.
+    pub const LOGDET_UNDERFLOW: &str = "logdet-underflow";
 }
 
 /// One structured verifier finding.

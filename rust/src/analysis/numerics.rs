@@ -1,0 +1,156 @@
+//! Static numeric-range lints: interval propagation of activation
+//! scale bounds through the layer program, catching f32 range hazards
+//! before any execution.
+//!
+//! Every scaling layer declares (or defaults) a static interval for its
+//! multiplicative scale:
+//!
+//! * affine couplings (`glowcpl`, `densecpl`, `condcpl`, `hint`) bound
+//!   their raw conditioner output by `cfg.raw_bound` (default 16) and
+//!   push it through `cfg.scale_act` (default `"sigmoid2"`, i.e.
+//!   `s = 2*sigmoid(r)`; `"exp"` means `s = exp(r)`);
+//! * `actnorm` declares `cfg.scale_min` / `cfg.scale_max` (defaults
+//!   `[0.5, 2]`, the data-dependent-init regime);
+//! * `conv1x1` (orthogonal), `haar`, `permute`, `addcpl`, and `hyper`
+//!   are volume-preserving: scale interval `[1, 1]`.
+//!
+//! Three diagnostic codes come out of the walk:
+//!
+//! * [`codes::EXP_OVERFLOW`] (error) — an `exp` scale activation whose
+//!   raw bound exceeds `ln(f32::MAX)`, or a propagated amplitude bound
+//!   that leaves double range entirely: the forward pass can overflow.
+//! * [`codes::ACTNORM_DEGENERATE_SCALE`] (error) — a declared actnorm
+//!   scale interval that is empty, non-positive, or below f32's
+//!   smallest normal: the inverse divides by (effectively) zero.
+//! * [`codes::LOGDET_UNDERFLOW`] (warning) — a scale lower bound that
+//!   underflows f32's smallest normal, so `ln(s)` in the log-det sum
+//!   can hit `-inf` while the forward values still look finite.
+//!
+//! The builtin catalog carries none of these cfg keys, so it lints
+//! clean under the defaults — the pass only fires on definitions that
+//! declare a hazardous regime (see `tests/analysis.rs`, which splices
+//! cfg overrides to trip each code).
+
+use super::{codes, Diagnostic};
+use crate::runtime::{LayerMeta, Manifest, NetworkMeta};
+
+/// `ln(f32::MAX)`: an `exp` scale with a raw bound past this overflows.
+const LN_F32_MAX: f64 = 88.722_839;
+/// f32's smallest positive normal; below this, `ln` and division are
+/// effectively operating on zero.
+const F32_MIN_NORMAL: f64 = 1.175_494_4e-38;
+/// `ln(f64::MAX)`: past this, even the propagated double-precision
+/// amplitude bound is infinite.
+const LN_F64_MAX: f64 = 709.782_712;
+
+fn cfg_f64(meta: &LayerMeta, key: &str) -> Option<f64> {
+    meta.cfg.get(key).and_then(|v| v.as_f64().ok())
+}
+
+fn cfg_str(meta: &LayerMeta, key: &str) -> Option<String> {
+    meta.cfg.get(key).and_then(|v| v.as_str().ok().map(str::to_string))
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// The static scale interval `[s_lo, s_hi]` one layer can apply, plus
+/// any local diagnostics its declaration earns.
+fn scale_interval(i: usize, meta: &LayerMeta,
+                  diags: &mut Vec<Diagnostic>) -> (f64, f64) {
+    match meta.kind.as_str() {
+        "glowcpl" | "densecpl" | "condcpl" | "hint" => {
+            let r = cfg_f64(meta, "raw_bound").unwrap_or(16.0);
+            let act = cfg_str(meta, "scale_act")
+                .unwrap_or_else(|| "sigmoid2".to_string());
+            match act.as_str() {
+                "exp" => {
+                    if r > LN_F32_MAX {
+                        diags.push(Diagnostic::error(
+                            codes::EXP_OVERFLOW, Some(i),
+                            format!("layer {}: exp scale with raw bound \
+                                     {r} > ln(f32::MAX) ~ {LN_F32_MAX:.1} \
+                                     can overflow the forward pass",
+                                    meta.sig)));
+                    }
+                    ((-r).exp(), r.exp())
+                }
+                // sigmoid2 and anything unrecognized: bounded by (0, 2)
+                _ => (2.0 * sigmoid(-r), 2.0 * sigmoid(r)),
+            }
+        }
+        "actnorm" => {
+            let lo = cfg_f64(meta, "scale_min").unwrap_or(0.5);
+            let hi = cfg_f64(meta, "scale_max").unwrap_or(2.0);
+            if lo <= 0.0 || lo < F32_MIN_NORMAL || lo > hi {
+                diags.push(Diagnostic::error(
+                    codes::ACTNORM_DEGENERATE_SCALE, Some(i),
+                    format!("layer {}: declared scale interval \
+                             [{lo:e}, {hi:e}] is degenerate — the \
+                             inverse divides by a scale at or below \
+                             f32's smallest normal", meta.sig)));
+                return (1.0, 1.0); // don't double-report downstream
+            }
+            (lo, hi)
+        }
+        // volume-preserving / orthogonal kinds
+        _ => (1.0, 1.0),
+    }
+}
+
+/// Walk one network's layer program propagating scale-amplitude bounds;
+/// returns all numeric-range findings. Unknown sigs and split markers
+/// are skipped — the shape verifier owns those.
+pub fn check_network(manifest: &Manifest, net: &NetworkMeta)
+                     -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    // cumulative log of the worst-case amplitude gain so far
+    let mut log_amp = 0.0f64;
+    let mut amp_reported = false;
+    for (i, sig) in net.layers.iter().enumerate() {
+        let Ok(meta) = manifest.layer(sig) else { continue };
+        let (s_lo, s_hi) = scale_interval(i, meta, &mut diags);
+        if s_lo > 0.0 && s_lo < F32_MIN_NORMAL {
+            diags.push(Diagnostic::warning(
+                codes::LOGDET_UNDERFLOW, Some(i),
+                format!("layer {}: scale lower bound {s_lo:e} underflows \
+                         f32's smallest normal — ln(s) in the log-det \
+                         sum can reach -inf", meta.sig)));
+        }
+        log_amp += s_hi.max(f64::MIN_POSITIVE).ln();
+        if !amp_reported && log_amp > LN_F64_MAX {
+            amp_reported = true;
+            diags.push(Diagnostic::error(
+                codes::EXP_OVERFLOW, Some(i),
+                format!("propagated activation amplitude bound becomes \
+                         non-finite at layer {} (cumulative log-gain \
+                         {log_amp:.1} > ln(f64::MAX))", meta.sig)));
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::builtin_manifest;
+
+    #[test]
+    fn builtin_catalog_is_numerically_clean() {
+        let m = builtin_manifest().unwrap();
+        for net in m.networks.values() {
+            let diags = check_network(&m, net);
+            assert!(diags.is_empty(), "{}: {diags:?}", net.name);
+        }
+    }
+
+    #[test]
+    fn default_coupling_interval_is_strictly_inside_f32_range() {
+        // sigmoid2 with the default raw bound: s in (4e-8, 2) — no
+        // overflow, no underflow, logdet finite
+        let lo = 2.0 * sigmoid(-16.0);
+        assert!(lo > F32_MIN_NORMAL && lo < 1.0);
+        assert!(2.0 * sigmoid(16.0) < 2.0 + 1e-9);
+    }
+}

@@ -1,0 +1,134 @@
+//! Automatic schedule selection: search the schedule family with the
+//! static memory planner + the static cost model and return the cheapest
+//! schedule whose predicted peak fits a byte budget.
+//!
+//! This is the `--mode auto[:BUDGET]` backend: both predicates are fully
+//! static ([`predict_peak`](super::predict_peak) is pinned
+//! predicted == measured against the executor's ledger, and
+//! [`train_cost`](super::train_cost) is pinned against the Python cost
+//! mirror), so the choice is made — and infeasible budgets are rejected —
+//! before a single tensor is allocated.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::cost::train_cost;
+use super::planner::predict_peak;
+use crate::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
+use crate::flow::NetworkDef;
+use crate::runtime::Manifest;
+
+/// One evaluated candidate: the schedule plus both static predictions.
+pub struct ScheduleChoice {
+    pub schedule: Arc<dyn ActivationSchedule>,
+    pub label: String,
+    /// Predicted training-step peak scheduling bytes (`predict_peak`).
+    pub peak_bytes: i64,
+    /// Predicted training-step arithmetic ops (`train_cost`).
+    pub train_flops: u64,
+}
+
+/// The canonical search family: `stored`, `checkpoint:K` at power-of-two
+/// intervals below the depth, and `invertible` — ordered cheapest-compute
+/// first.
+pub fn candidate_schedules(depth: usize)
+                           -> Vec<Arc<dyn ActivationSchedule>> {
+    let mut out: Vec<Arc<dyn ActivationSchedule>> =
+        vec![Arc::new(ExecMode::Stored)];
+    let mut k = 2usize;
+    while k < depth {
+        out.push(Arc::new(CheckpointEveryK(k)));
+        k *= 2;
+    }
+    out.push(Arc::new(ExecMode::Invertible));
+    out
+}
+
+/// Pick the cheapest-compute schedule whose predicted peak fits
+/// `budget` bytes (`None` = unconstrained, which always selects pure
+/// `stored`). Ties on flops break toward the lower peak. Errors when no
+/// candidate fits — the caller learns the minimum feasible budget
+/// without allocating anything.
+pub fn choose_schedule(def: &NetworkDef, manifest: &Manifest,
+                       budget: Option<i64>) -> Result<ScheduleChoice> {
+    let mut best: Option<ScheduleChoice> = None;
+    let mut min_peak = i64::MAX;
+    for schedule in candidate_schedules(def.depth()) {
+        let peak = predict_peak(def, schedule.as_ref());
+        min_peak = min_peak.min(peak);
+        if budget.is_some_and(|b| peak > b) {
+            continue;
+        }
+        let flops = train_cost(def, manifest, schedule.as_ref())?.flops;
+        let better = match &best {
+            None => true,
+            Some(b) => flops < b.train_flops
+                || (flops == b.train_flops && peak < b.peak_bytes),
+        };
+        if better {
+            let label = schedule.label();
+            best = Some(ScheduleChoice {
+                schedule, label, peak_bytes: peak, train_flops: flops,
+            });
+        }
+    }
+    match best {
+        Some(c) => Ok(c),
+        None => bail!(
+            "no schedule fits the {} budget for {}: the minimum \
+             predicted peak (invertible) is {} bytes",
+            budget.map_or("unconstrained".to_string(), |b| b.to_string()),
+            def.name, min_peak),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::builtin_manifest;
+
+    fn def_of(name: &str) -> (Manifest, NetworkDef) {
+        let m = builtin_manifest().unwrap();
+        let d = NetworkDef::resolve(&m, name).unwrap();
+        (m, d)
+    }
+
+    #[test]
+    fn unconstrained_budget_selects_stored() {
+        let (m, d) = def_of("glow16");
+        let c = choose_schedule(&d, &m, None).unwrap();
+        assert_eq!(c.label, "stored");
+    }
+
+    #[test]
+    fn tight_budget_selects_invertible() {
+        let (m, d) = def_of("glow16");
+        let inv = predict_peak(&d, &ExecMode::Invertible);
+        let c = choose_schedule(&d, &m, Some(inv)).unwrap();
+        assert_eq!(c.label, "invertible");
+        assert_eq!(c.peak_bytes, inv);
+    }
+
+    #[test]
+    fn impossible_budget_is_rejected_with_the_floor() {
+        let (m, d) = def_of("glow16");
+        let inv = predict_peak(&d, &ExecMode::Invertible);
+        let err = choose_schedule(&d, &m, Some(inv - 1)).unwrap_err();
+        assert!(err.to_string().contains("minimum predicted peak"),
+                "{err:#}");
+    }
+
+    #[test]
+    fn intermediate_budget_selects_a_checkpoint_schedule() {
+        let (m, d) = def_of("glow16");
+        let inv = predict_peak(&d, &ExecMode::Invertible);
+        let sto = predict_peak(&d, &ExecMode::Stored);
+        assert!(inv < sto);
+        // any checkpoint peak sits strictly between; budget just below
+        // stored must pick a cheaper-than-invertible hybrid
+        let c = choose_schedule(&d, &m, Some(sto - 1)).unwrap();
+        assert!(c.label.starts_with("checkpoint_every_"), "{}", c.label);
+        assert!(c.peak_bytes <= sto - 1);
+    }
+}

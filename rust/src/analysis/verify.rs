@@ -138,6 +138,10 @@ pub fn verify_network(manifest: &Manifest, net: &NetworkMeta)
                      bijection on its stated dimensions")));
     }
 
+    // numeric-range lints ride the same diagnostic stream: interval
+    // propagation of declared scale bounds (see `analysis::numerics`)
+    diags.extend(super::numerics::check_network(manifest, net));
+
     diags
 }
 

@@ -38,6 +38,13 @@ pub struct Engine {
     /// hot path ([`Flow::sample_batch`] / [`Flow::log_density`] /
     /// [`Flow::invert_flex`]); 1 = single-threaded.
     threads: usize,
+    /// Engine-wide scheduling-memory budget in bytes. Consumers treat it
+    /// as *static admission control*: the serve [`Registry`] rejects a
+    /// model at load when its minimum predicted peak
+    /// ([`predict_peak`](crate::analysis::predict_peak) under the
+    /// invertible schedule) cannot fit, before any weights are read, and
+    /// `--mode auto` uses it as the default schedule-search budget.
+    mem_budget: Option<i64>,
 }
 
 /// Builder for [`Engine`].
@@ -47,12 +54,14 @@ pub struct Engine {
 ///   and no explicit backend this also selects the XLA backend, otherwise
 ///   the RefBackend executes the same networks natively;
 /// * `.backend(b)`: explicit backend override;
-/// * `.threads(n)`: default data-parallel worker count for training.
+/// * `.threads(n)`: default data-parallel worker count for training;
+/// * `.mem_budget(bytes)`: static per-model scheduling-memory budget.
 #[derive(Default)]
 pub struct EngineBuilder {
     artifacts: Option<PathBuf>,
     backend: Option<Arc<dyn Backend>>,
     threads: Option<usize>,
+    mem_budget: Option<i64>,
 }
 
 impl EngineBuilder {
@@ -76,6 +85,15 @@ impl EngineBuilder {
     /// training overrides go through `TrainConfig::threads`.
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Static scheduling-memory budget in bytes, enforced *before*
+    /// allocation: the serve [`Registry`](crate::serve::Registry)
+    /// rejects models whose minimum predicted peak exceeds it, and
+    /// `--mode auto` searches schedules under it by default.
+    pub fn mem_budget(mut self, bytes: i64) -> Self {
+        self.mem_budget = Some(bytes);
         self
     }
 
@@ -103,7 +121,12 @@ impl EngineBuilder {
             Some(b) => b,
             None => default_backend(self.artifacts.as_deref(), &manifest)?,
         };
-        Ok(Engine { backend, manifest, threads: self.threads.unwrap_or(1) })
+        Ok(Engine {
+            backend,
+            manifest,
+            threads: self.threads.unwrap_or(1),
+            mem_budget: self.mem_budget,
+        })
     }
 }
 
@@ -144,6 +167,12 @@ impl Engine {
     /// Default data-parallel worker count configured at build time.
     pub fn default_threads(&self) -> usize {
         self.threads
+    }
+
+    /// Static scheduling-memory budget configured at build time, if any
+    /// (see [`EngineBuilder::mem_budget`]).
+    pub fn mem_budget(&self) -> Option<i64> {
+        self.mem_budget
     }
 
     /// The underlying execution backend (for tooling like the profiler).
@@ -307,9 +336,16 @@ impl Flow {
         writeln!(out, "total params: {total_params}").ok();
         writeln!(out, "predicted peak scheduling bytes (static planner):")
             .ok();
-        for (label, bytes) in crate::analysis::schedule_peaks(def) {
-            writeln!(out, "  {label:<20} {bytes:>14}").ok();
+        let costs = crate::analysis::schedule_costs(def, &self.manifest)?;
+        for ((label, bytes), (_, cost)) in
+            crate::analysis::schedule_peaks(def).iter().zip(&costs)
+        {
+            writeln!(out, "  {label:<20} {bytes:>14}  train {:>16} flops",
+                     cost.flops).ok();
         }
+        let infer = crate::analysis::inference_cost(def, &self.manifest)?;
+        writeln!(out, "predicted inference (log-density) flops: {}",
+                 infer.flops).ok();
         Ok(out)
     }
 }

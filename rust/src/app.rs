@@ -3,22 +3,26 @@
 //!
 //! ```text
 //! invertnet train   --net realnvp2d --data two-moons --steps 500
-//!                   [--mode invertible|stored|checkpoint:K]
+//!                   [--mode invertible|stored|checkpoint:K|auto[:BUDGET]]
 //!                   [--threads N] [--microbatch N]
 //! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
 //! invertnet bench   --suite quick --check --baseline baselines/quick.json
 //! invertnet bench   fig1|fig2   [--budget-gb 40]
 //! invertnet inspect --net glow16
 //! invertnet profile --net glow16 [--iters 5]
-//! invertnet lint    [--net NAME | --all] [--json] [--check]
+//! invertnet lint    [--net NAME | --all | --ckpt DIR] [--json] [--check]
 //! invertnet list
 //! ```
+//!
+//! Exit codes are uniform across the `--check` verbs: 0 = pass, 1 =
+//! check/runtime failure, 2 = usage error (see [`exit_code`]).
 //!
 //! Every subcommand accepts `--backend ref|xla` (default `ref`: the
 //! artifact-free pure-Rust backend over the builtin catalog) and
 //! `--artifacts DIR` (load a manifest produced by `python -m compile.aot`;
 //! required for `--backend xla`).
 
+use std::fmt;
 use std::net::TcpListener;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -28,7 +32,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::api::Engine;
 use crate::backend::RefBackend;
-use crate::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
+use crate::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode,
+                         MemoryLedger};
 use crate::data::{synth_images, Density2d, LinearGaussian};
 use crate::posterior::analysis::{self, chi2_crit};
 use crate::posterior::{amortized_train, calibrate, posterior_samples,
@@ -50,7 +55,7 @@ invertnet — memory-frugal normalizing flows (InvertibleNetworks.jl reproductio
 
 USAGE:
   invertnet train   --net NAME [--data two-moons|eight-gaussians|checkerboard|spiral|images|linear-gaussian]
-                    [--steps N] [--lr F] [--mode invertible|stored|checkpoint:K] [--seed N]
+                    [--steps N] [--lr F] [--mode invertible|stored|checkpoint:K|auto[:BUDGET]] [--seed N]
                     [--threads N] [--microbatch N] [--out DIR] [--clip F] [--log-every N] [--quiet]
                     [--eval-every N] [--eval-batches B]
   invertnet sample  --net NAME [--ckpt DIR] [--out FILE.npy] [--batches N] [--seed N]
@@ -78,7 +83,8 @@ USAGE:
   invertnet bench   fig1|fig2 [--budget-gb F]
   invertnet inspect --net NAME
   invertnet profile --net NAME [--iters N]
-  invertnet lint    [--net NAME | --all] [--json] [--check] [--checkpoint K]
+  invertnet lint    [--net NAME | --all | --ckpt DIR] [--json] [--check]
+                    [--checkpoint K]
   invertnet list
 
 AMORTIZED POSTERIOR INFERENCE:
@@ -129,16 +135,39 @@ STATIC ANALYSIS (no execution — see README \"Static guarantees\"):
   lint                verify every network in the manifest without running
                       it: shape/width propagation, split/concat bookkeeping,
                       squeeze factors, conditional wiring, invertibility of
-                      the composed chain; clean networks also report the
-                      planner's predicted peak bytes per activation schedule
+                      the composed chain, and numeric-range interval lints
+                      (exp-overflow, actnorm-degenerate-scale,
+                      logdet-underflow); clean networks also report the
+                      planner's predicted peak bytes AND the cost model's
+                      predicted train/inference flops per schedule
   --net NAME | --all  one network, or the whole catalog (default: all)
-  --json              machine-readable report on stdout (invertnet-lint/v1)
-  --check             exit non-zero if any error-severity diagnostic fires
+  --ckpt DIR          lint the checkpoint's network plus its index.json
+                      contents (shapes/params vs the spec) in one shot
+  --json              machine-readable report on stdout (invertnet-lint/v2,
+                      with a per-network \"cost\" block)
+  --check             exit 1 if any error-severity diagnostic fires
   --checkpoint K      also audit checkpoint-every-K against each depth
+
+  --mode auto[:BUDGET]  (train / posterior-train) pick the cheapest-compute
+                      schedule whose statically predicted peak fits BUDGET
+                      bytes (suffixes k/m/g; default budget: --mem-budget,
+                      else unconstrained => stored). The choice is logged as
+                      \"auto schedule: chose ...\" and enforced at runtime by
+                      a budgeted ledger.
+
+EXIT CODES (uniform across lint/bench/calibrate --check):
+  0  pass             the command ran and every gate passed
+  1  check failure    a --check gate tripped, or a runtime error
+  2  usage error      bad flags/arguments; nothing was run
 
 COMMON OPTIONS:
   --backend ref|xla   execution backend (default: ref — pure Rust, no artifacts)
   --artifacts DIR     manifest/artifact directory (required for --backend xla)
+  --mem-budget BYTES  engine-wide scheduling-memory budget (suffixes k/m/g):
+                      the default --mode auto budget, and static admission
+                      control in serve — a model whose minimum predicted
+                      peak exceeds it is rejected at load, before any
+                      allocation
   --threads N         worker threads (default: 1). Training shards
                       minibatches with a deterministic reduction; inference
                       (sample/score/serve/posterior-sample) chunks large
@@ -147,6 +176,47 @@ COMMON OPTIONS:
   --microbatch N      gradient-accumulation shard size (default: batch/threads);
                       smaller values tighten the activation-memory envelope
 ";
+
+/// A `--check` gate that tripped (or an equivalent pass/fail verdict):
+/// the command ran to completion and the answer is "fail". Exit code 1.
+#[derive(Debug)]
+pub struct CheckFailed(pub String);
+
+impl fmt::Display for CheckFailed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CheckFailed {}
+
+/// Bad flags or arguments: nothing was run. Exit code 2, so scripts can
+/// tell "the gate failed" (1) from "the invocation was wrong" (2).
+#[derive(Debug)]
+pub struct UsageError(pub String);
+
+impl fmt::Display for UsageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for UsageError {}
+
+fn check_failed(msg: String) -> anyhow::Error {
+    anyhow::Error::new(CheckFailed(msg))
+}
+
+fn usage_err(msg: String) -> anyhow::Error {
+    anyhow::Error::new(UsageError(msg))
+}
+
+/// The process exit code for a [`run`] error: 2 for usage errors, 1 for
+/// everything else (check failures and runtime errors alike). The
+/// contract is documented under EXIT CODES in [`USAGE`].
+pub fn exit_code(err: &anyhow::Error) -> i32 {
+    if err.downcast_ref::<UsageError>().is_some() { 2 } else { 1 }
+}
 
 /// Parse argv and dispatch. Unknown subcommands are an error; no
 /// subcommand prints the usage text.
@@ -171,7 +241,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         Some("list") => cmd_list(&args),
         Some(other) => {
             eprintln!("{USAGE}");
-            bail!("unknown subcommand {other:?}")
+            Err(usage_err(format!("unknown subcommand {other:?}")))
         }
         None => {
             eprintln!("{USAGE}");
@@ -186,6 +256,9 @@ fn engine_of(args: &Args) -> Result<Engine> {
     let mut builder = Engine::builder().threads(args.usize_or("threads", 1)?);
     if let Some(dir) = &artifacts {
         builder = builder.artifacts(dir);
+    }
+    if let Some(spec) = args.get("mem-budget") {
+        builder = builder.mem_budget(parse_bytes(spec)?);
     }
     match args.str_or("backend", "ref") {
         "ref" => Ok(builder.backend(Arc::new(RefBackend::new())).build()?),
@@ -212,21 +285,91 @@ fn xla_engine(_builder: crate::api::EngineBuilder) -> Result<Engine> {
 }
 
 /// Parse `--mode` into a schedule: `invertible`, `stored`, `checkpoint:K`.
+/// `auto` is handled one level up by [`schedule_spec`].
 fn schedule_of(args: &Args) -> Result<Arc<dyn ActivationSchedule>> {
     let spec = args.str_or("mode", "invertible");
     if let Some(k) = spec.strip_prefix("checkpoint:") {
-        let k: usize = k.parse()
-            .map_err(|e| anyhow::anyhow!("--mode checkpoint:K — bad K: {e}"))?;
+        let k: usize = k.parse().map_err(
+            |e| usage_err(format!("--mode checkpoint:K — bad K: {e}")))?;
         if k == 0 {
-            bail!("--mode checkpoint:K needs K >= 1");
+            return Err(usage_err("--mode checkpoint:K needs K >= 1".into()));
         }
         return Ok(Arc::new(CheckpointEveryK(k)));
     }
     match spec {
         "invertible" => Ok(Arc::new(ExecMode::Invertible)),
         "stored" => Ok(Arc::new(ExecMode::Stored)),
-        other => bail!("unknown --mode {other:?} \
-                        (invertible|stored|checkpoint:K)"),
+        other => Err(usage_err(format!(
+            "unknown --mode {other:?} \
+             (invertible|stored|checkpoint:K|auto[:BUDGET])"))),
+    }
+}
+
+/// A byte count with an optional binary-unit suffix: `64m`, `2g`, `900k`,
+/// or a plain integer.
+fn parse_bytes(s: &str) -> Result<i64> {
+    let (digits, mult) = match s.as_bytes().last() {
+        Some(b'k' | b'K') => (&s[..s.len() - 1], 1i64 << 10),
+        Some(b'm' | b'M') => (&s[..s.len() - 1], 1i64 << 20),
+        Some(b'g' | b'G') => (&s[..s.len() - 1], 1i64 << 30),
+        _ => (s, 1i64),
+    };
+    let v: i64 = digits.trim().parse().map_err(
+        |e| usage_err(format!("bad byte count {s:?}: {e}")))?;
+    if v <= 0 {
+        return Err(usage_err(format!(
+            "byte count must be positive, got {s:?}")));
+    }
+    Ok(v.saturating_mul(mult))
+}
+
+/// `--mode` parsed one level above [`schedule_of`]: either a fixed
+/// schedule, or `auto[:BUDGET]` deferring the choice to the static cost
+/// model once the network is known.
+enum ScheduleSpec {
+    Fixed(Arc<dyn ActivationSchedule>),
+    Auto(Option<i64>),
+}
+
+fn schedule_spec(args: &Args) -> Result<ScheduleSpec> {
+    let spec = args.str_or("mode", "invertible");
+    if spec == "auto" {
+        return Ok(ScheduleSpec::Auto(None));
+    }
+    if let Some(b) = spec.strip_prefix("auto:") {
+        return Ok(ScheduleSpec::Auto(Some(parse_bytes(b)?)));
+    }
+    Ok(ScheduleSpec::Fixed(schedule_of(args)?))
+}
+
+/// Resolve `--mode` to a `(flow, schedule)` pair. Fixed modes build the
+/// flow directly. `auto[:BUDGET]` asks [`choose_schedule`] for the
+/// cheapest-compute schedule whose statically predicted peak fits the
+/// budget (the engine's `--mem-budget` when no inline budget is given;
+/// unconstrained otherwise) and, when a budget is set, attaches a
+/// budgeted ledger so the static promise is also enforced at runtime.
+///
+/// [`choose_schedule`]: crate::analysis::choose_schedule
+fn flow_and_schedule(args: &Args, engine: &Engine, net: &str)
+    -> Result<(crate::Flow, Arc<dyn ActivationSchedule>)> {
+    match schedule_spec(args)? {
+        ScheduleSpec::Fixed(s) => Ok((engine.flow(net)?, s)),
+        ScheduleSpec::Auto(inline) => {
+            let budget = inline.or_else(|| engine.mem_budget());
+            let flow = match budget {
+                Some(b) => engine.flow_with_ledger(
+                    net, MemoryLedger::with_budget(b as u64))?,
+                None => engine.flow(net)?,
+            };
+            let choice = crate::analysis::choose_schedule(
+                &flow.def, engine.manifest(), budget)?;
+            eprintln!(
+                "auto schedule: chose {} (predicted peak {}, train flops \
+                 {})",
+                choice.label, fmt_bytes(choice.peak_bytes as u64),
+                choice.train_flops);
+            Ok((flow, choice.schedule))
+        }
     }
 }
 
@@ -302,7 +445,7 @@ fn batcher(
 fn cmd_train(args: &Args) -> Result<()> {
     let net = args.req("net")?;
     let engine = engine_of(args)?;
-    let flow = engine.flow(net)?;
+    let (flow, schedule) = flow_and_schedule(args, &engine, net)?;
     let seed = args.u64_or("seed", 42)?;
     let mut params = flow.init_params(seed)?;
     let mut opt = Adam::new(args.f64_or("lr", 1e-3)? as f32);
@@ -340,7 +483,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let cfg = TrainConfig {
         steps: args.usize_or("steps", 200)?,
-        schedule: schedule_of(args)?,
+        schedule,
         clip: Some(GradClip { max_norm: args.f64_or("clip", 50.0)? as f32 }),
         log_every: args.usize_or("log-every", 10)?,
         out_dir: args.get("out").map(PathBuf::from),
@@ -409,7 +552,7 @@ fn cmd_posterior_train(args: &Args) -> Result<()> {
     let engine = engine_of(args)?;
     let sim = Simulator::parse(args.str_or("sim", "linear-gaussian"))?;
     let net = args.get("net").unwrap_or_else(|| sim.default_net());
-    let flow = engine.flow(net)?;
+    let (flow, schedule) = flow_and_schedule(args, &engine, net)?;
     let seed = args.u64_or("seed", 42)?;
     let mut params = flow.init_params(seed)?;
     let microbatch = microbatch_of(args)?;
@@ -419,7 +562,7 @@ fn cmd_posterior_train(args: &Args) -> Result<()> {
         seed,
         eval_every: args.usize_or("eval-every", 50)?,
         eval_batches: args.usize_or("eval-batches", 1)?,
-        schedule: schedule_of(args)?,
+        schedule,
         clip: Some(GradClip { max_norm: args.f64_or("clip", 50.0)? as f32 }),
         log_every: args.usize_or("log-every", 50)?,
         out_dir: args.get("out").map(PathBuf::from),
@@ -517,7 +660,8 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     let level = args.f64_or("level", 0.9)?;
     let alpha = args.f64_or("alpha", 1e-3)?;
     if !(alpha > 0.0 && alpha < 1.0) {
-        bail!("--alpha must be in (0, 1), got {alpha}");
+        return Err(usage_err(format!(
+            "--alpha must be in (0, 1), got {alpha}")));
     }
     let tol = args.f64_or("tol", 0.1)?;
     let seed = args.u64_or("seed", 42)?;
@@ -552,9 +696,10 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         sim.name(), flow.def.name, cal.worst_chi2(), crit,
         cal.worst_coverage_gap());
     if args.flag("check") && !ok {
-        bail!("calibration check failed: worst chi2 {:.3} (crit {crit:.3}), \
-               worst coverage gap {:.3} (tol {tol})",
-              cal.worst_chi2(), cal.worst_coverage_gap());
+        return Err(check_failed(format!(
+            "calibration check failed: worst chi2 {:.3} (crit {crit:.3}), \
+             worst coverage gap {:.3} (tol {tol})",
+            cal.worst_chi2(), cal.worst_coverage_gap())));
     }
     Ok(())
 }
@@ -705,10 +850,36 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The cost model's verdict for one clean, resolved network.
+struct NetCosts {
+    /// `(schedule label, predicted train-step cost)` per builtin schedule.
+    train: Vec<(String, crate::analysis::Cost)>,
+    inference: crate::analysis::Cost,
+    sample: crate::analysis::Cost,
+}
+
+fn net_costs(def: &NetworkDef, manifest: &Manifest) -> Result<NetCosts> {
+    Ok(NetCosts {
+        train: crate::analysis::schedule_costs(def, manifest)?,
+        inference: crate::analysis::inference_cost(def, manifest)?,
+        sample: crate::analysis::sample_cost(def, manifest)?,
+    })
+}
+
+/// One lint report row: a network's diagnostics plus, when it is clean,
+/// the planner's peaks and the cost model's flop counts.
+struct LintRow {
+    name: String,
+    diags: Vec<crate::analysis::Diagnostic>,
+    peaks: Option<Vec<(String, i64)>>,
+    costs: Option<NetCosts>,
+}
+
 /// `invertnet lint` — run the static flow verifier (and, for clean
-/// networks, the peak planner) over the manifest WITHOUT building an
-/// engine, so malformed manifests produce structured diagnostics
-/// instead of a build error.
+/// networks, the peak planner and cost model) over the manifest WITHOUT
+/// building an engine, so malformed manifests produce structured
+/// diagnostics instead of a build error. With `--ckpt DIR` the
+/// checkpoint's index contents are audited in the same report.
 fn cmd_lint(args: &Args) -> Result<()> {
     let manifest: Manifest = match args.get("artifacts") {
         Some(dir) => Manifest::load(Path::new(dir))
@@ -719,14 +890,38 @@ fn cmd_lint(args: &Args) -> Result<()> {
     // K=0, and K=0 must reach the auditor (it is the error case)
     let ckpt_k: Option<usize> = match args.get("checkpoint") {
         Some(s) => Some(s.parse().map_err(
-            |e| anyhow!("--checkpoint K — bad K: {e}"))?),
+            |e| usage_err(format!("--checkpoint K — bad K: {e}")))?),
         None => None,
     };
-    let names: Vec<String> = match (args.get("net"), args.flag("all")) {
-        (Some(_), true) => bail!("pass --net NAME or --all, not both"),
-        (Some(n), false) => {
+    let ckpt_dir = args.get("ckpt").map(PathBuf::from);
+    let names: Vec<String> = match (&ckpt_dir, args.get("net"),
+                                    args.flag("all")) {
+        (Some(dir), net, _) => {
+            // checkpoint mode: the index names the network, so lint
+            // exactly that one (plus the checkpoint contents below)
+            let name = Registry::checkpoint_network_name(dir)?;
+            if let Some(n) = net {
+                if n != name {
+                    return Err(usage_err(format!(
+                        "--net {n:?} does not match checkpoint network \
+                         {name:?}")));
+                }
+            }
+            if !manifest.networks.contains_key(&name) {
+                return Err(usage_err(format!(
+                    "checkpoint names unknown network {name:?} (try \
+                     `invertnet list`)")));
+            }
+            vec![name]
+        }
+        (None, Some(_), true) => {
+            return Err(usage_err("pass --net NAME or --all, not both"
+                                 .into()));
+        }
+        (None, Some(n), false) => {
             if !manifest.networks.contains_key(n) {
-                bail!("unknown network {n:?} (try `invertnet list`)");
+                return Err(usage_err(format!(
+                    "unknown network {n:?} (try `invertnet list`)")));
             }
             vec![n.to_string()]
         }
@@ -735,9 +930,7 @@ fn cmd_lint(args: &Args) -> Result<()> {
 
     let mut total_err = 0usize;
     let mut total_warn = 0usize;
-    // (name, diagnostics, per-schedule peaks for clean networks)
-    let mut rows: Vec<(String, Vec<crate::analysis::Diagnostic>,
-                       Option<Vec<(String, i64)>>)> = Vec::new();
+    let mut rows: Vec<LintRow> = Vec::new();
     for name in &names {
         let net = manifest.network(name)?;
         let mut diags = crate::analysis::verify_network(&manifest, net);
@@ -747,11 +940,28 @@ fn cmd_lint(args: &Args) -> Result<()> {
             diags.extend(crate::analysis::verify_checkpoint_k(depth, k));
         }
         let mut peaks = None;
+        let mut costs = None;
         if !crate::analysis::has_errors(&diags) {
             // a verifier-clean network should always resolve; if it does
             // not, the gap is itself a finding, not a CLI crash
             match NetworkDef::resolve(&manifest, name) {
-                Ok(def) => peaks = Some(crate::analysis::schedule_peaks(&def)),
+                Ok(def) => {
+                    peaks = Some(crate::analysis::schedule_peaks(&def));
+                    match net_costs(&def, &manifest) {
+                        Ok(c) => costs = Some(c),
+                        Err(e) => diags.push(
+                            crate::analysis::Diagnostic::error(
+                                crate::analysis::codes::SHAPE_MISMATCH,
+                                None,
+                                format!("cost model failed on a clean \
+                                         network: {e:#}"))),
+                    }
+                    if let Some(dir) = &ckpt_dir {
+                        diags.extend(
+                            crate::analysis::verify_checkpoint_index(
+                                &manifest, &def, dir)?);
+                    }
+                }
                 Err(e) => diags.push(crate::analysis::Diagnostic::error(
                     crate::analysis::codes::SHAPE_MISMATCH, None,
                     format!("verifier passed but resolve failed: {e:#}"))),
@@ -760,13 +970,13 @@ fn cmd_lint(args: &Args) -> Result<()> {
         let errs = diags.iter().filter(|d| d.is_error()).count();
         total_err += errs;
         total_warn += diags.len() - errs;
-        rows.push((name.clone(), diags, peaks));
+        rows.push(LintRow { name: name.clone(), diags, peaks, costs });
     }
 
     if args.flag("json") {
         // stdout carries pure JSON in this mode (scripts pipe it)
-        let nets: Vec<Json> = rows.iter().map(|(name, diags, peaks)| {
-            let ds: Vec<Json> = diags.iter().map(|d| Json::obj(vec![
+        let nets: Vec<Json> = rows.iter().map(|row| {
+            let ds: Vec<Json> = row.diags.iter().map(|d| Json::obj(vec![
                 ("severity", Json::Str(
                     if d.is_error() { "error" } else { "warning" }.into())),
                 ("layer_idx", match d.layer_idx {
@@ -777,22 +987,36 @@ fn cmd_lint(args: &Args) -> Result<()> {
                 ("message", Json::Str(d.message.clone())),
             ])).collect();
             Json::obj(vec![
-                ("name", Json::Str(name.clone())),
-                ("ok", Json::Bool(!crate::analysis::has_errors(diags))),
-                ("errors", Json::Num(
-                    diags.iter().filter(|d| d.is_error()).count() as f64)),
-                ("warnings", Json::Num(
-                    diags.iter().filter(|d| !d.is_error()).count() as f64)),
+                ("name", Json::Str(row.name.clone())),
+                ("ok", Json::Bool(
+                    !crate::analysis::has_errors(&row.diags))),
+                ("errors", Json::Num(row.diags.iter()
+                    .filter(|d| d.is_error()).count() as f64)),
+                ("warnings", Json::Num(row.diags.iter()
+                    .filter(|d| !d.is_error()).count() as f64)),
                 ("diagnostics", Json::Arr(ds)),
-                ("peaks", match peaks {
+                ("peaks", match &row.peaks {
                     Some(ps) => Json::Obj(ps.iter().map(
                         |(l, b)| (l.clone(), Json::Num(*b as f64))).collect()),
+                    None => Json::Null,
+                }),
+                ("cost", match &row.costs {
+                    Some(c) => Json::obj(vec![
+                        ("train", Json::Obj(c.train.iter().map(|(l, t)| (
+                            l.clone(), Json::obj(vec![
+                                ("flops", Json::Num(t.flops as f64)),
+                                ("bytes", Json::Num(t.bytes as f64)),
+                            ]))).collect())),
+                        ("inference_flops",
+                         Json::Num(c.inference.flops as f64)),
+                        ("sample_flops", Json::Num(c.sample.flops as f64)),
+                    ]),
                     None => Json::Null,
                 }),
             ])
         }).collect();
         let doc = Json::obj(vec![
-            ("schema", Json::Str("invertnet-lint/v1".into())),
+            ("schema", Json::Str("invertnet-lint/v2".into())),
             ("backend", Json::Str(manifest.backend.clone())),
             ("networks", Json::Arr(nets)),
             ("errors", Json::Num(total_err as f64)),
@@ -800,16 +1024,24 @@ fn cmd_lint(args: &Args) -> Result<()> {
         ]);
         println!("{}", doc.to_string_pretty());
     } else {
-        for (name, diags, peaks) in &rows {
-            if diags.is_empty() {
-                let peaks = peaks.as_ref().map(|ps| ps.iter()
+        for row in &rows {
+            if row.diags.is_empty() {
+                let peaks = row.peaks.as_ref().map(|ps| ps.iter()
                     .map(|(l, b)| format!("{l} {}", fmt_bytes(*b as u64)))
                     .collect::<Vec<_>>().join("  "))
                     .unwrap_or_default();
-                println!("{name:<24} ok   peak {peaks}");
+                println!("{:<24} ok   peak {peaks}", row.name);
+                if let Some(c) = &row.costs {
+                    let flops = c.train.iter()
+                        .map(|(l, t)| format!("{l} {}", t.flops))
+                        .collect::<Vec<_>>().join("  ");
+                    println!("{:<24}      train flops {flops}  \
+                              inference flops {}", "", c.inference.flops);
+                }
             } else {
-                println!("{name:<24} {} diagnostic(s)", diags.len());
-                for d in diags {
+                println!("{:<24} {} diagnostic(s)", row.name,
+                         row.diags.len());
+                for d in &row.diags {
                     println!("  {d}");
                 }
             }
@@ -818,8 +1050,9 @@ fn cmd_lint(args: &Args) -> Result<()> {
                   {total_warn} warning(s)", rows.len());
     }
     if args.flag("check") && total_err > 0 {
-        bail!("lint failed: {total_err} error(s) across {} network(s)",
-              rows.len());
+        return Err(check_failed(format!(
+            "lint failed: {total_err} error(s) across {} network(s)",
+            rows.len())));
     }
     Ok(())
 }
@@ -882,24 +1115,29 @@ fn cmd_bench(args: &Args) -> Result<()> {
             return crate::bench_figs::fig2(&engine,
                                            args.f64_or("budget-gb", 40.0)?);
         }
-        Some(other) => bail!("unknown bench target {other:?} \
-                              (fig1|fig2, or --suite NAME)"),
+        Some(other) => {
+            return Err(usage_err(format!(
+                "unknown bench target {other:?} (fig1|fig2, or --suite \
+                 NAME)")));
+        }
         None => {}
     }
     let Some(suite) = args.get("suite") else {
-        bail!("usage: invertnet bench fig1|fig2  |  invertnet bench \
-               --suite {} [--out FILE|DIR] [--baseline FILE|DIR] \
-               [--check] [--tol PCT]",
-              crate::perf::SUITE_NAMES.join("|"));
+        return Err(usage_err(format!(
+            "usage: invertnet bench fig1|fig2  |  invertnet bench \
+             --suite {} [--out FILE|DIR] [--baseline FILE|DIR] \
+             [--check] [--tol PCT]",
+            crate::perf::SUITE_NAMES.join("|"))));
     };
     let tol = args.f64_or("tol", 5.0)?;
     if tol < 0.0 {
-        bail!("--tol must be >= 0, got {tol}");
+        return Err(usage_err(format!("--tol must be >= 0, got {tol}")));
     }
     let baseline = args.get("baseline").map(PathBuf::from);
     if args.flag("check") && baseline.is_none() {
-        bail!("--check needs --baseline FILE|DIR (e.g. \
-               baselines/quick.json)");
+        return Err(usage_err(
+            "--check needs --baseline FILE|DIR (e.g. baselines/quick.json)"
+                .into()));
     }
 
     let reports = crate::perf::run_suite(&engine, suite)?;
@@ -929,10 +1167,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     }
     if args.flag("check") && (regressions > 0 || missing > 0) {
-        bail!("perf check failed: {regressions} regression(s) beyond \
-               --tol {tol}%, {missing} gated metric(s) missing from the \
-               baseline (see CHECK lines above; regenerate baselines \
-               after intentional changes)");
+        return Err(check_failed(format!(
+            "perf check failed: {regressions} regression(s) beyond \
+             --tol {tol}%, {missing} gated metric(s) missing from the \
+             baseline (see CHECK lines above; regenerate baselines \
+             after intentional changes)")));
     }
     Ok(())
 }
@@ -1017,6 +1256,109 @@ mod tests {
                             "--checkpoint", "99"])).is_ok());
         assert!(run(&argv(&["lint", "--net", "realnvp2d", "--check",
                             "--checkpoint", "4"])).is_ok());
+    }
+
+    #[test]
+    fn exit_codes_separate_check_failures_from_usage_errors() {
+        // a tripped --check gate is exit 1, carried as CheckFailed
+        let err = run(&argv(&["lint", "--all", "--check",
+                              "--checkpoint", "0"])).unwrap_err();
+        assert!(err.downcast_ref::<CheckFailed>().is_some(), "{err:#}");
+        assert_eq!(exit_code(&err), 1);
+        // bad flags are exit 2, before anything runs
+        let err = run(&argv(&["lint", "--net", "glow16", "--all"]))
+            .unwrap_err();
+        assert_eq!(exit_code(&err), 2);
+        let err = run(&argv(&["bench", "--suite", "quick", "--check"]))
+            .unwrap_err();
+        assert_eq!(exit_code(&err), 2);
+        let err = run(&argv(&["frobnicate"])).unwrap_err();
+        assert_eq!(exit_code(&err), 2);
+        // runtime errors stay exit 1
+        let err = run(&argv(&["inspect", "--net", "nope"])).unwrap_err();
+        assert_eq!(exit_code(&err), 1);
+    }
+
+    #[test]
+    fn byte_counts_parse_with_binary_suffixes() {
+        assert_eq!(parse_bytes("123").unwrap(), 123);
+        assert_eq!(parse_bytes("64k").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("64M").unwrap(), 64 << 20);
+        assert_eq!(parse_bytes("2g").unwrap(), 2i64 << 30);
+        assert!(parse_bytes("0").is_err());
+        assert!(parse_bytes("-5m").is_err());
+        assert!(parse_bytes("lots").is_err());
+    }
+
+    #[test]
+    fn mem_budget_flag_reaches_the_engine() {
+        let a = Args::parse(&argv(&["train", "--mem-budget", "64m"]))
+            .unwrap();
+        assert_eq!(engine_of(&a).unwrap().mem_budget(), Some(64 << 20));
+        let a = Args::parse(&argv(&["train"])).unwrap();
+        assert_eq!(engine_of(&a).unwrap().mem_budget(), None);
+        let a = Args::parse(&argv(&["train", "--mem-budget", "none"]))
+            .unwrap();
+        assert_eq!(exit_code(&engine_of(&a).unwrap_err()), 2);
+    }
+
+    #[test]
+    fn auto_mode_resolves_to_the_cheapest_fitting_schedule() {
+        let engine = Engine::builder()
+            .backend(Arc::new(RefBackend::new())).build().unwrap();
+        // unconstrained auto: stored is the compute-cheapest schedule
+        let a = Args::parse(&argv(&["train", "--mode", "auto"])).unwrap();
+        let (_f, s) = flow_and_schedule(&a, &engine, "glow16").unwrap();
+        assert_eq!(s.label(), "stored");
+        // a budget between the stored and invertible peaks forces a
+        // recompute schedule, attaches a budgeted ledger, and the chosen
+        // schedule's predicted peak fits
+        let peaks = crate::analysis::schedule_peaks(
+            &engine.flow("glow16").unwrap().def);
+        let peak = |l: &str| peaks.iter().find(|(n, _)| n == l).unwrap().1;
+        let budget = (peak("invertible") + peak("stored")) / 2;
+        let a = Args::parse(&argv(&["train", "--mode",
+                                    &format!("auto:{budget}")])).unwrap();
+        let (flow, s) = flow_and_schedule(&a, &engine, "glow16").unwrap();
+        assert_ne!(s.label(), "stored");
+        assert!(crate::analysis::predict_peak(&flow.def, s.as_ref())
+                <= budget);
+        assert_eq!(flow.ledger().budget_bytes(), Some(budget as u64));
+        // --mem-budget is the default budget when auto carries none
+        let a = Args::parse(&argv(&["train", "--mode", "auto",
+                                    "--mem-budget",
+                                    &budget.to_string()])).unwrap();
+        let engine2 = engine_of(&a).unwrap();
+        let (_f, s2) = flow_and_schedule(&a, &engine2, "glow16").unwrap();
+        assert_eq!(s2.label(), s.label());
+        // an impossible budget names the minimum feasible peak
+        let a = Args::parse(&argv(&["train", "--mode", "auto:1k"]))
+            .unwrap();
+        let err = flow_and_schedule(&a, &engine, "glow16").unwrap_err();
+        assert!(err.to_string().contains("minimum predicted peak"),
+                "{err:#}");
+    }
+
+    #[test]
+    fn lint_audits_a_checkpoint_directory() {
+        let dir = std::env::temp_dir()
+            .join(format!("invertnet_lintckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let engine = Engine::builder()
+            .backend(Arc::new(RefBackend::new())).build().unwrap();
+        let flow = engine.flow("realnvp2d").unwrap();
+        let params = flow.init_params(7).unwrap();
+        params.save(&dir, "realnvp2d").unwrap();
+        // one shot: network verifier + cost model + checkpoint index
+        run(&argv(&["lint", "--ckpt", dir.to_str().unwrap(), "--check"]))
+            .unwrap();
+        run(&argv(&["lint", "--ckpt", dir.to_str().unwrap(), "--json",
+                    "--check"])).unwrap();
+        // a --net that disagrees with the index is a usage error
+        let err = run(&argv(&["lint", "--ckpt", dir.to_str().unwrap(),
+                              "--net", "glow16"])).unwrap_err();
+        assert_eq!(exit_code(&err), 2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! invertnet train   --net realnvp2d --data two-moons --steps 500
-//!                   [--mode invertible|stored|checkpoint:K]
+//!                   [--mode invertible|stored|checkpoint:K|auto[:BUDGET]]
 //!                   [--threads N] [--microbatch N] [--eval-every N]
 //! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
 //! invertnet posterior-train  --sim linear-gaussian --out runs/post
@@ -18,18 +18,21 @@
 //! invertnet bench   fig1|fig2 [--budget-gb 40]
 //! invertnet inspect --net glow16
 //! invertnet profile --net glow16 [--iters 5]
-//! invertnet lint    [--net NAME | --all] [--json] [--check]
+//! invertnet lint    [--net NAME | --all | --ckpt DIR] [--json] [--check]
 //! invertnet list
 //! ```
 //!
 //! All subcommands take `--backend ref|xla` (default `ref`, which needs no
 //! artifacts) and `--artifacts DIR`. See `invertnet` with no arguments for
 //! the full usage text.
+//!
+//! Exit codes: 0 = pass, 1 = check/runtime failure, 2 = usage error
+//! (see [`invertnet::app::exit_code`]).
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = invertnet::app::run(&argv) {
         eprintln!("error: {e:#}");
-        std::process::exit(1);
+        std::process::exit(invertnet::app::exit_code(&e));
     }
 }

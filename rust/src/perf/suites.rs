@@ -197,6 +197,17 @@ pub fn train_throughput(engine: &Engine, scale: Scale)
         r.metrics.push(Metric::observed(
             format!("train_throughput/{net}/recompute_overhead_pct"),
             (mean_s[0] / mean_s[1] - 1.0) * 100.0, false));
+        // the static cost model's version of the same trade: predicted
+        // train-step flops under invertible over stored. Exact integer
+        // arithmetic on both sides, so it's an equality pin — any drift
+        // means the cost model (or a layer's op count) changed
+        let inv_flops = crate::analysis::train_cost(
+            &flow.def, engine.manifest(), &ExecMode::Invertible)?.flops;
+        let sto_flops = crate::analysis::train_cost(
+            &flow.def, engine.manifest(), &ExecMode::Stored)?.flops;
+        r.metrics.push(Metric::pinned(
+            format!("train_throughput/{net}/recompute_flops_ratio"),
+            inv_flops as f64 / sto_flops as f64));
 
         // -- data-parallel thread scaling -------------------------------
         let mut base = 0.0f64;

@@ -103,6 +103,19 @@ impl Registry {
                            -> Result<(Flow, ParamStore)> {
         let net = Self::checkpoint_network_name(dir)?;
         let flow = engine.flow(&net)?;
+        // static admission control: with an engine-wide memory budget,
+        // even the most frugal schedule's predicted peak must fit — a
+        // model that can't is rejected here, before any weight bytes load
+        // or allocations happen
+        if let Some(budget) = engine.mem_budget() {
+            let peak = crate::analysis::predict_peak(
+                &flow.def, &crate::coordinator::ExecMode::Invertible);
+            if peak > budget {
+                bail!("checkpoint {dir:?} network {net:?} cannot fit the \
+                       {budget}-byte memory budget: its minimum predicted \
+                       peak (invertible schedule) is {peak} bytes");
+            }
+        }
         // static shape check BEFORE any weight bytes load: the name alone
         // proves nothing, and ParamStore::load silently keeps the random
         // init for params the index omits — a mismatched or truncated
@@ -336,6 +349,34 @@ mod tests {
         let err = Registry::load_checkpoint(&engine, &dir).unwrap_err();
         assert!(format!("{err:#}").contains("ckpt-missing-param"),
                 "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The memory budget is *static admission control*: a model whose
+    /// minimum predicted peak (invertible schedule) can't fit the
+    /// engine's budget is rejected at load, before any weights are read.
+    #[test]
+    fn budgeted_engine_rejects_oversized_models_at_load() {
+        use crate::backend::RefBackend;
+
+        let dir = std::env::temp_dir()
+            .join(format!("reg_budget_{}", std::process::id()));
+        let engine = Engine::native().unwrap();
+        let flow = engine.flow("realnvp2d").unwrap();
+        flow.init_params(9).unwrap().save(&dir, "realnvp2d").unwrap();
+        let min_peak = crate::analysis::predict_peak(
+            &flow.def, &crate::coordinator::ExecMode::Invertible);
+
+        let budgeted = |b: i64| Engine::builder()
+            .backend(Arc::new(RefBackend::new()))
+            .mem_budget(b)
+            .build()
+            .unwrap();
+        let err = Registry::load_checkpoint(&budgeted(min_peak - 1), &dir)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("memory budget"), "{err:#}");
+        // at exactly the minimum peak the model is admitted
+        Registry::load_checkpoint(&budgeted(min_peak), &dir).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

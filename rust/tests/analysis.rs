@@ -1,17 +1,22 @@
-//! Integration tests for the static flow verifier and the memory-peak
-//! planner (`invertnet::analysis`): every diagnostic code fires on a
-//! malformed spec, and the planner's predicted peak equals the measured
-//! ledger peak bit-for-bit for every builtin example network under all
-//! three activation schedules.
+//! Integration tests for the static flow verifier, the memory-peak
+//! planner, and the cost model (`invertnet::analysis`): every diagnostic
+//! code fires on a malformed spec; the planner's predicted peak equals
+//! the measured ledger peak bit-for-bit for every builtin example
+//! network under all three activation schedules; the cost model matches
+//! the independent Python mirror's committed pins exactly; and automatic
+//! schedule selection always returns the cheapest schedule that fits.
 
 mod common;
 
 use common::{batch_for, engine};
-use invertnet::analysis::{self, codes, predict_peak, verify_checkpoint_k,
-                          verify_network};
+use invertnet::analysis::{self, candidate_schedules, choose_schedule,
+                          codes, inference_cost, predict_peak, sample_cost,
+                          train_cost, verify_checkpoint_k, verify_network};
 use invertnet::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
+use invertnet::flow::NetworkDef;
 use invertnet::runtime::builtin::EXAMPLE_NETS;
 use invertnet::runtime::{builtin_manifest, LayerMeta, Manifest};
+use invertnet::util::json::Json;
 use invertnet::MemoryLedger;
 
 fn manifest() -> Manifest {
@@ -198,7 +203,6 @@ fn temp(tag: &str) -> std::path::PathBuf {
 
 #[test]
 fn checkpoint_index_codes_fire_on_a_doctored_index() {
-    use invertnet::util::json::Json;
     let dir = temp("doctored");
     let engine = engine();
     let flow = engine.flow("realnvp2d").unwrap();
@@ -263,6 +267,206 @@ fn predicted_peak_equals_measured_for_all_nets_and_schedules() {
             );
         }
     }
+}
+
+// --------------------------------------------------------------------------
+// the cost model: Rust must match the independent Python mirror
+// (python/tests/test_cost_model.py) exactly, via the committed fixture
+// --------------------------------------------------------------------------
+
+fn pin_u64(doc: &Json, key: &str) -> u64 {
+    doc.req(key).unwrap().as_f64().unwrap() as u64
+}
+
+#[test]
+fn cost_model_matches_the_python_mirror_pins() {
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/python/tests/data/cost_model_pins.json")).unwrap();
+    let pins = Json::parse(&text).unwrap();
+    assert_eq!(pins.req("schema").unwrap().as_str().unwrap(),
+               "invertnet-cost-pins/v1");
+    let m = manifest();
+    let schedules: [(&str, &dyn ActivationSchedule); 3] = [
+        ("invertible", &ExecMode::Invertible),
+        ("stored", &ExecMode::Stored),
+        ("checkpoint_every_4", &CheckpointEveryK(4)),
+    ];
+    let nets = pins.req("networks").unwrap();
+    let mut checked = 0usize;
+    for &net in EXAMPLE_NETS {
+        let def = NetworkDef::resolve(&m, net).unwrap();
+        let pin = nets.req(net).unwrap();
+        for (label, sched) in schedules {
+            let c = train_cost(&def, &m, sched).unwrap();
+            let p = pin.req(label).unwrap();
+            assert_eq!(c.flops, pin_u64(p, "train_flops"),
+                       "{net}/{label} train flops");
+            assert_eq!(c.bytes, pin_u64(p, "train_bytes"),
+                       "{net}/{label} train bytes");
+            checked += 1;
+        }
+        let inf = inference_cost(&def, &m).unwrap();
+        assert_eq!(inf.flops, pin_u64(pin, "inference_flops"),
+                   "{net} inference flops");
+        assert_eq!(inf.bytes, pin_u64(pin, "inference_bytes"),
+                   "{net} inference bytes");
+        let smp = sample_cost(&def, &m).unwrap();
+        assert_eq!(smp.flops, pin_u64(pin, "sample_flops"),
+                   "{net} sample flops");
+        assert_eq!(smp.bytes, pin_u64(pin, "sample_bytes"),
+                   "{net} sample bytes");
+    }
+    assert_eq!(checked, EXAMPLE_NETS.len() * 3,
+               "every builtin net x schedule cell must be pinned");
+}
+
+// --------------------------------------------------------------------------
+// automatic schedule selection: the chosen schedule always fits the
+// budget, and no other fitting candidate is compute-cheaper
+// --------------------------------------------------------------------------
+
+#[test]
+fn chosen_schedule_always_fits_and_is_never_beaten() {
+    let m = manifest();
+    for &net in EXAMPLE_NETS {
+        let def = NetworkDef::resolve(&m, net).unwrap();
+        let peaks: Vec<i64> = candidate_schedules(def.depth()).iter()
+            .map(|s| predict_peak(&def, s.as_ref())).collect();
+        let lo = *peaks.iter().min().unwrap();
+        let hi = *peaks.iter().max().unwrap();
+        let mut budgets = vec![None, Some(lo), Some(hi), Some(hi + 1)];
+        for f in [0.25f64, 0.5, 0.75] {
+            budgets.push(Some(lo + ((hi - lo) as f64 * f) as i64));
+        }
+        for b in budgets {
+            let choice = choose_schedule(&def, &m, b).unwrap();
+            if let Some(b) = b {
+                assert!(choice.peak_bytes <= b,
+                        "{net}: chose {} with peak {} over budget {b}",
+                        choice.label, choice.peak_bytes);
+            }
+            for cand in candidate_schedules(def.depth()) {
+                let peak = predict_peak(&def, cand.as_ref());
+                if peak <= b.unwrap_or(i64::MAX) {
+                    let flops =
+                        train_cost(&def, &m, cand.as_ref()).unwrap().flops;
+                    assert!(choice.train_flops <= flops,
+                            "{net}: chose {} ({} flops) but {} fits the \
+                             budget {b:?} with {} flops",
+                            choice.label, choice.train_flops, cand.label(),
+                            flops);
+                }
+            }
+        }
+        // below the minimum peak, nothing fits — the error names it
+        let err = choose_schedule(&def, &m, Some(lo - 1)).unwrap_err();
+        assert!(err.to_string().contains("minimum predicted peak"),
+                "{net}: {err:#}");
+    }
+}
+
+// --------------------------------------------------------------------------
+// numeric-range lints: each code fires on a spliced hazardous cfg and
+// rides the verify_network diagnostic stream
+// --------------------------------------------------------------------------
+
+/// Set cfg keys on a spliced layer (the builtin catalog declares none of
+/// these, so the hazard has to be spliced in).
+fn set_cfg(meta: &mut LayerMeta, entries: &[(&str, Json)]) {
+    let Json::Obj(cfg) = &mut meta.cfg else {
+        panic!("cfg is not an object")
+    };
+    for (k, v) in entries {
+        cfg.insert((*k).to_string(), v.clone());
+    }
+}
+
+/// Position and sig of the first layer of `kind` in `net`.
+fn find_kind(m: &Manifest, net: &str, kind: &str) -> (usize, String) {
+    let layers = &m.network(net).unwrap().layers;
+    let pos = layers.iter()
+        .position(|s| m.layer(s).map(|l| l.kind == kind).unwrap_or(false))
+        .unwrap_or_else(|| panic!("{net} has no {kind} layer"));
+    (pos, layers[pos].clone())
+}
+
+#[test]
+fn exp_overflow_fires_on_an_unbounded_exp_scale() {
+    let mut m = manifest();
+    let (pos, base) = find_kind(&m, "realnvp2d", "densecpl");
+    splice_layer(&mut m, &base, "hotexp__256x2", |meta| {
+        set_cfg(meta, &[("scale_act", Json::Str("exp".into())),
+                        ("raw_bound", Json::Num(100.0))]);
+    });
+    m.networks.get_mut("realnvp2d").unwrap().layers[pos] =
+        "hotexp__256x2".into();
+    let diags = lint(&m, "realnvp2d");
+    assert!(codes_of(&diags).contains(&codes::EXP_OVERFLOW), "{diags:?}");
+    assert!(analysis::has_errors(&diags));
+}
+
+#[test]
+fn exp_overflow_fires_once_on_a_propagated_amplitude_bound() {
+    // each layer's raw bound (85) is individually under ln(f32::MAX),
+    // but ten of them compound past ln(f64::MAX) — the propagated
+    // cumulative log-gain is the hazard, reported exactly once
+    let mut m = manifest();
+    let (_, base) = find_kind(&m, "realnvp2d", "densecpl");
+    splice_layer(&mut m, &base, "warmexp__256x2", |meta| {
+        set_cfg(meta, &[("scale_act", Json::Str("exp".into())),
+                        ("raw_bound", Json::Num(85.0))]);
+    });
+    {
+        let net = m.networks.get_mut("realnvp2d").unwrap();
+        for sig in net.layers.iter_mut() {
+            if sig.contains("densecpl") {
+                *sig = "warmexp__256x2".into();
+            }
+        }
+        while net.layers.iter()
+            .filter(|s| s.as_str() == "warmexp__256x2").count() < 10
+        {
+            net.layers.push("warmexp__256x2".into());
+        }
+    }
+    let diags = lint(&m, "realnvp2d");
+    let hits = diags.iter()
+        .filter(|d| d.code == codes::EXP_OVERFLOW).count();
+    assert_eq!(hits, 1, "propagated overflow reported once: {diags:?}");
+    assert!(analysis::has_errors(&diags));
+}
+
+#[test]
+fn actnorm_degenerate_scale_fires_on_a_zero_lower_bound() {
+    let mut m = manifest();
+    let (pos, base) = find_kind(&m, "glow16", "actnorm");
+    let sig = format!("deadnorm__{}", pos);
+    splice_layer(&mut m, &base, &sig, |meta| {
+        set_cfg(meta, &[("scale_min", Json::Num(0.0))]);
+    });
+    m.networks.get_mut("glow16").unwrap().layers[pos] = sig;
+    let diags = lint(&m, "glow16");
+    assert!(codes_of(&diags).contains(&codes::ACTNORM_DEGENERATE_SCALE),
+            "{diags:?}");
+    assert!(analysis::has_errors(&diags));
+}
+
+#[test]
+fn logdet_underflow_is_a_warning_not_an_error() {
+    // sigmoid2 with a huge raw bound: s_lo = 2*sigmoid(-100) ~ 7e-44 —
+    // forward stays finite, but ln(s) in the log-det sum can hit -inf
+    let mut m = manifest();
+    let (pos, base) = find_kind(&m, "realnvp2d", "densecpl");
+    splice_layer(&mut m, &base, "deepsig__256x2", |meta| {
+        set_cfg(meta, &[("raw_bound", Json::Num(100.0))]);
+    });
+    m.networks.get_mut("realnvp2d").unwrap().layers[pos] =
+        "deepsig__256x2".into();
+    let diags = lint(&m, "realnvp2d");
+    assert!(codes_of(&diags).contains(&codes::LOGDET_UNDERFLOW),
+            "{diags:?}");
+    assert!(!analysis::has_errors(&diags), "{diags:?}");
 }
 
 // --------------------------------------------------------------------------

@@ -76,11 +76,11 @@ def check_lint(path, expect="clean"):
     assert expect in ("clean", "expect-errors"), f"bad mode {expect!r}"
     with open(path) as fh:
         doc = json.load(fh)
-    assert doc["schema"] == "invertnet-lint/v1", doc.get("schema")
+    assert doc["schema"] == "invertnet-lint/v2", doc.get("schema")
     nets = doc["networks"]
     assert nets, "lint report covers no networks"
     for n in nets:
-        for key in ("name", "ok", "diagnostics"):
+        for key in ("name", "ok", "diagnostics", "peaks", "cost"):
             assert key in n, f"network entry missing {key!r}: {n}"
     if expect == "expect-errors":
         assert doc["errors"] > 0, "malformed manifest produced no errors"
@@ -92,6 +92,22 @@ def check_lint(path, expect="clean"):
     else:
         assert doc["errors"] == 0, f"catalog lint found errors: {doc}"
         assert all(n["ok"] for n in nets), nets
+        # clean networks must carry the v2 cost block: positive train
+        # flops per schedule, stored cheapest, invertible costliest
+        for n in nets:
+            cost = n["cost"]
+            assert cost, f"clean network {n['name']} has no cost block"
+            train = cost["train"]
+            assert set(train) == {"invertible", "stored",
+                                  "checkpoint_every_4"}, train
+            for label, t in train.items():
+                assert t["flops"] > 0 and t["bytes"] > 0, (label, t)
+            assert train["stored"]["flops"] <= \
+                train["checkpoint_every_4"]["flops"] <= \
+                train["invertible"]["flops"], train
+            assert 0 < cost["inference_flops"] < \
+                train["stored"]["flops"], cost
+            assert cost["sample_flops"] > 0, cost
 
 
 CHECKS = {"serve": check_serve, "posterior": check_posterior,
