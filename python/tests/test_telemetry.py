@@ -1,0 +1,137 @@
+"""Numpy mirror of the Rust telemetry histogram (rust/src/telemetry/registry.rs).
+
+The Rust side keeps 65 log2 buckets: bucket 0 holds exact zeros and bucket
+i >= 1 holds values v with 2^(i-1) <= v < 2^i. Quantiles walk the bucket
+counts to the rank ceil(q*n) (clamped to [1, n]) and interpolate linearly
+inside the owning bucket. These tests mirror that arithmetic bit-for-bit
+and pin the same constants the Rust unit tests pin, so a drift on either
+side breaks one of the two suites.
+"""
+
+import numpy as np
+
+NBUCKETS = 65
+
+
+def bucket_of(v):
+    """Bucket index of a recorded u64: its bit width (0 for 0)."""
+    return int(v).bit_length()
+
+
+def bucket_upper(i):
+    """Inclusive upper bound of bucket i."""
+    if i == 0:
+        return 0
+    if i == 64:
+        return 2**64 - 1
+    return (1 << i) - 1
+
+
+def hist_record(buckets, values):
+    for v in values:
+        buckets[bucket_of(v)] += 1
+
+
+def hist_quantile(buckets, count, q):
+    """Mirror of HistSnapshot::quantile: rank-walk + linear interpolation."""
+    if count == 0:
+        return 0.0
+    target = min(max(np.ceil(q * count), 1.0), float(count))
+    before = 0
+    for i in range(NBUCKETS):
+        c = buckets[i]
+        if c == 0:
+            continue
+        if before + c >= target:
+            if i == 0:
+                return 0.0
+            lo = 2.0 ** (i - 1)
+            hi = 2.0**i - 1.0
+            frac = (target - before) / c
+            return lo + frac * (hi - lo)
+        before += c
+    return float(bucket_upper(NBUCKETS - 1))
+
+
+def hist_quantile_u64(buckets, count, q):
+    # Rust rounds half away from zero (f64::round); values are
+    # non-negative here so floor(x + 0.5) matches.
+    return int(np.floor(hist_quantile(buckets, count, q) + 0.5))
+
+
+def test_bucket_boundaries_match_the_rust_pins():
+    # the exact table from registry.rs::bucket_index_pins
+    for v, idx in [
+        (0, 0),
+        (1, 1),
+        (2, 2),
+        (3, 2),
+        (4, 3),
+        (7, 3),
+        (8, 4),
+        (1023, 10),
+        (1024, 11),
+        (2**64 - 1, 64),
+    ]:
+        assert bucket_of(v) == idx, f"bucket_of({v})"
+        if idx > 0:
+            assert v > bucket_upper(idx - 1)
+        assert v <= bucket_upper(idx)
+
+
+def test_every_bucket_edge_is_consistent():
+    # 2^(i-1) and 2^i - 1 both land in bucket i; 2^i opens bucket i+1
+    for i in range(1, 63):
+        lo, hi = 1 << (i - 1), (1 << i) - 1
+        assert bucket_of(lo) == i
+        assert bucket_of(hi) == i
+        assert bucket_of(hi + 1) == i + 1
+        assert bucket_upper(i) == hi
+
+
+def test_quantile_pins_match_the_rust_unit_test():
+    # values 1..=8: p50 interpolates to 4.75 inside bucket [4,7]; the
+    # wire (rounded) form is 5; p99's rank-8 sample owns bucket [8,15]
+    buckets = np.zeros(NBUCKETS, dtype=np.int64)
+    values = np.arange(1, 9)
+    hist_record(buckets, values)
+    assert buckets.sum() == 8
+    assert values.sum() == 36  # the _sum cell the exposition carries
+    assert hist_quantile(buckets, 8, 0.50) == 4.75
+    assert hist_quantile_u64(buckets, 8, 0.50) == 5
+    assert hist_quantile(buckets, 8, 0.99) == 15.0
+    assert hist_quantile(buckets, 8, 0.0) == 1.0
+    assert hist_quantile(np.zeros(NBUCKETS, dtype=np.int64), 0, 0.5) == 0.0
+
+
+def test_quantiles_bound_the_true_order_statistic():
+    # the bucketed estimate can never leave the owning bucket of the true
+    # rank statistic: estimate in [2^(i-1), 2^i - 1] for the rank's bucket
+    rng = np.random.default_rng(7)
+    values = rng.integers(0, 1_000_000, size=500)
+    buckets = np.zeros(NBUCKETS, dtype=np.int64)
+    hist_record(buckets, values)
+    ordered = np.sort(values)
+    for q in (0.5, 0.9, 0.99, 0.999):
+        rank = int(min(max(np.ceil(q * len(values)), 1), len(values)))
+        true_stat = int(ordered[rank - 1])
+        est = hist_quantile(buckets, len(values), q)
+        i = bucket_of(true_stat)
+        lo = 0.0 if i == 0 else 2.0 ** (i - 1)
+        assert lo <= est <= float(bucket_upper(i)), (
+            f"q={q}: estimate {est} left bucket {i} of true {true_stat}"
+        )
+
+
+def test_merged_histograms_answer_the_pooled_quantile():
+    # mirror of registry.rs::merged_snapshots_answer_the_pooled_quantile:
+    # merging is bucket-count addition, exact wrt the bucketing
+    a = np.zeros(NBUCKETS, dtype=np.int64)
+    b = np.zeros(NBUCKETS, dtype=np.int64)
+    hist_record(a, [1, 2, 3, 4])
+    hist_record(b, [100, 200, 300, 400])
+    merged = a + b
+    pooled = np.zeros(NBUCKETS, dtype=np.int64)
+    hist_record(pooled, [1, 2, 3, 4, 100, 200, 300, 400])
+    assert (merged == pooled).all()
+    assert hist_quantile(merged, 8, 0.99) > 256.0

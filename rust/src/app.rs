@@ -9,8 +9,9 @@
 //! invertnet bench   --suite quick --check --baseline baselines/quick.json
 //! invertnet bench   fig1|fig2   [--budget-gb 40]
 //! invertnet inspect --net glow16
-//! invertnet profile --net glow16 [--iters 5]
+//! invertnet profile --net glow16 [--iters 5] [--json]
 //! invertnet lint    [--net NAME | --all | --ckpt DIR] [--json] [--check]
+//! invertnet metrics [FILE]
 //! invertnet list
 //! ```
 //!
@@ -57,14 +58,15 @@ USAGE:
   invertnet train   --net NAME [--data two-moons|eight-gaussians|checkerboard|spiral|images|linear-gaussian]
                     [--steps N] [--lr F] [--mode invertible|stored|checkpoint:K|auto[:BUDGET]] [--seed N]
                     [--threads N] [--microbatch N] [--out DIR] [--clip F] [--log-every N] [--quiet]
-                    [--eval-every N] [--eval-batches B]
+                    [--eval-every N] [--eval-batches B] [--metrics-out FILE] [--trace FILE]
   invertnet sample  --net NAME [--ckpt DIR] [--out FILE.npy] [--batches N] [--seed N]
                     [--temperature F]
   invertnet posterior-train
                     --sim linear-gaussian|denoise|deblur|inpaint [--net NAME]
                     [--steps N] [--lr F] [--seed N] [--out DIR] [--eval-every N]
                     [--eval-batches B] [--threads N] [--microbatch N] [--mode M]
-                    [--clip F] [--log-every N] [--quiet]
+                    [--clip F] [--log-every N] [--quiet] [--metrics-out FILE]
+                    [--trace FILE]
   invertnet posterior-sample
                     --ckpt DIR --y V1,V2,... | --y-file FILE.npy
                     [--n N] [--temperature F] [--seed N] [--level F]
@@ -80,11 +82,13 @@ USAGE:
                     [--net NAME] [--allow-untrained] [--seed N]
   invertnet bench   --suite all|quick|memory|throughput|serve|posterior
                     [--out FILE|DIR] [--baseline FILE|DIR] [--check] [--tol PCT]
+                    [--metrics-out FILE]
   invertnet bench   fig1|fig2 [--budget-gb F]
   invertnet inspect --net NAME
-  invertnet profile --net NAME [--iters N]
+  invertnet profile --net NAME [--iters N] [--json]
   invertnet lint    [--net NAME | --all | --ckpt DIR] [--json] [--check]
                     [--checkpoint K]
+  invertnet metrics [FILE]
   invertnet list
 
 AMORTIZED POSTERIOR INFERENCE:
@@ -147,6 +151,21 @@ STATIC ANALYSIS (no execution — see README \"Static guarantees\"):
                       with a per-network \"cost\" block)
   --check             exit 1 if any error-severity diagnostic fires
   --checkpoint K      also audit checkpoint-every-K against each depth
+
+OBSERVABILITY (see README \"Observability\" for the metric catalog):
+  --metrics-out FILE  (train / posterior-train / bench) on exit, write the
+                      process metrics registry as Prometheus text exposition
+  --trace FILE        (train / posterior-train) export span timings as a
+                      Chrome trace_event JSON — open in chrome://tracing
+                      or Perfetto
+  metrics [FILE]      no FILE: dump this process's live registry; with
+                      FILE: validate a --metrics-out dump and summarize
+                      its families (exit 1 on malformed exposition)
+  profile --json      machine-readable invertnet-profile/v1 report with
+                      histogram-derived p50/p99 per (layer, entry)
+  serve               answers {\"op\":\"metrics\"} with the exposition text
+                      on the JSON-lines protocol, and a plain-HTTP
+                      `GET /metrics` scrape on the TCP listener
 
   --mode auto[:BUDGET]  (train / posterior-train) pick the cheapest-compute
                       schedule whose statically predicted peak fits BUDGET
@@ -235,9 +254,18 @@ pub fn run(argv: &[String]) -> Result<()> {
         Some("lint") => cmd_lint(&args),
         Some("profile") => {
             let engine = engine_of(&args)?;
-            crate::profile::profile_network(
-                &engine, args.req("net")?, args.usize_or("iters", 5)?)
+            let net = args.req("net")?;
+            let iters = args.usize_or("iters", 5)?;
+            if args.flag("json") {
+                let doc = crate::profile::profile_network_json(
+                    &engine, net, iters)?;
+                println!("{}", doc.to_string_pretty());
+                Ok(())
+            } else {
+                crate::profile::profile_network(&engine, net, iters)
+            }
         }
+        Some("metrics") => cmd_metrics(&args),
         Some("list") => cmd_list(&args),
         Some(other) => {
             eprintln!("{USAGE}");
@@ -373,6 +401,57 @@ fn flow_and_schedule(args: &Args, engine: &Engine, net: &str)
     }
 }
 
+/// `--trace FILE`: start Chrome-trace span export before the workload
+/// runs (spans recorded before this point are counted but not traced).
+fn trace_setup(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("trace") {
+        crate::telemetry::enable_trace(Path::new(path))?;
+        eprintln!("span trace -> {path} (chrome://tracing format)");
+    }
+    Ok(())
+}
+
+/// After the workload: flush the span trace (if `--trace` was given) and
+/// dump the global metrics registry (if `--metrics-out FILE` was given)
+/// as Prometheus text exposition.
+fn telemetry_finish(args: &Args) -> Result<()> {
+    if args.get("trace").is_some() {
+        crate::telemetry::flush_trace();
+    }
+    if let Some(path) = args.get("metrics-out") {
+        crate::telemetry::write_metrics_file(Path::new(path))?;
+        eprintln!("metrics -> {path}");
+    }
+    Ok(())
+}
+
+/// `invertnet metrics [FILE]` — the operator-side exposition tool. Bare:
+/// dump this process's live registry (mostly a debugging aid — a fresh
+/// process has only just-registered series). With FILE: strictly parse a
+/// dump written by `--metrics-out` and summarize its families, failing
+/// (exit 1) on malformed exposition so CI can gate on it.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    match args.subcommand.get(1) {
+        None => {
+            print!("{}", crate::telemetry::render_global());
+            Ok(())
+        }
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            let families = crate::telemetry::encode::parse_exposition(&text)
+                .map_err(|e| check_failed(format!(
+                    "{path}: invalid exposition: {e:#}")))?;
+            println!("{:<48} {:>10} {:>8}", "family", "kind", "samples");
+            for f in &families {
+                println!("{:<48} {:>10} {:>8}", f.name, f.kind, f.samples);
+            }
+            println!("metrics: {path} OK ({} families)", families.len());
+            Ok(())
+        }
+    }
+}
+
 /// `--microbatch N` (0 / absent = one shard per worker).
 fn microbatch_of(args: &Args) -> Result<Option<usize>> {
     Ok(match args.usize_or("microbatch", 0)? {
@@ -503,6 +582,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         flow.backend_name(),
         cfg.threads,
     );
+    trace_setup(args)?;
     let report = train(&flow, &mut params, &mut opt, &cfg, next)?;
     println!(
         "final_loss {:.4}{}  peak_sched {}  {:.2} steps/s",
@@ -511,7 +591,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         fmt_bytes(report.peak_sched_bytes as u64),
         report.steps_per_sec
     );
-    Ok(())
+    telemetry_finish(args)
 }
 
 fn cmd_sample(args: &Args) -> Result<()> {
@@ -575,12 +655,13 @@ fn cmd_posterior_train(args: &Args) -> Result<()> {
          (x dim {}, y dim {}), {} steps, backend {}",
         params.param_count(), sim.name(), sim.x_dim(), sim.y_dim(),
         cfg.steps, flow.backend_name());
+    trace_setup(args)?;
     let report = amortized_train(&flow, &mut params, &sim, &cfg)?;
     println!("final_loss {:.4}{}  {:.2} steps/s",
              report.final_loss,
              eval_note(&report, flow.def.dims_per_sample()),
              report.steps_per_sec);
-    Ok(())
+    telemetry_finish(args)
 }
 
 /// Parse the observation row: `--y v1,v2,...` or `--y-file FILE.npy`
@@ -1166,6 +1247,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             missing += outcome.missing.len();
         }
     }
+    telemetry_finish(args)?;
     if args.flag("check") && (regressions > 0 || missing > 0) {
         return Err(check_failed(format!(
             "perf check failed: {regressions} regression(s) beyond \
@@ -1492,6 +1574,58 @@ mod tests {
                    Path::new("baselines/memory.json"));
         assert_eq!(bench_out_path(Some("baselines/"), "memory", false),
                    Path::new("baselines/memory.json"));
+    }
+
+    #[test]
+    fn metrics_verb_dumps_and_validates_exposition() {
+        // bare dump of the live registry always succeeds
+        run(&argv(&["metrics"])).unwrap();
+
+        let dir = std::env::temp_dir()
+            .join(format!("invertnet_metricsverb_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // a well-formed dump summarizes cleanly
+        let good = dir.join("good.prom");
+        std::fs::write(&good, "# TYPE demo_total counter\ndemo_total 3\n")
+            .unwrap();
+        run(&argv(&["metrics", good.to_str().unwrap()])).unwrap();
+        // malformed exposition is a CheckFailed (exit 1), not a panic
+        let bad = dir.join("bad.prom");
+        std::fs::write(&bad, "demo_total 3\n").unwrap();
+        let err = run(&argv(&["metrics", bad.to_str().unwrap()]))
+            .unwrap_err();
+        assert!(err.downcast_ref::<CheckFailed>().is_some(), "{err:#}");
+        assert_eq!(exit_code(&err), 1);
+        // a missing file is a runtime error naming the path
+        let err = run(&argv(&["metrics", "/nonexistent/x.prom"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("x.prom"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_writes_metrics_and_trace_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("invertnet_trainobs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let prom = dir.join("train.prom");
+        let trace = dir.join("train.trace.json");
+        run(&argv(&["train", "--net", "realnvp2d", "--steps", "3",
+                    "--quiet", "--eval-every", "0", "--eval-batches", "0",
+                    "--metrics-out", prom.to_str().unwrap(),
+                    "--trace", trace.to_str().unwrap()])).unwrap();
+        // the dump is valid exposition carrying the train series
+        let text = std::fs::read_to_string(&prom).unwrap();
+        crate::telemetry::encode::parse_exposition(&text).unwrap();
+        for series in ["invertnet_train_steps_total", "invertnet_train_loss",
+                       "invertnet_span_train_step_us"] {
+            assert!(text.contains(series), "{series} missing:\n{text}");
+        }
+        // the trace holds at least the train_step spans, as JSON events
+        let tr = std::fs::read_to_string(&trace).unwrap();
+        assert!(tr.starts_with("[\n"), "{tr}");
+        assert!(tr.contains("\"name\":\"train_step\""), "{tr}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -21,7 +21,9 @@ use crate::tensor::Tensor;
 /// is per-thread, so the data-parallel workers never contend on it.
 pub(crate) mod scratch {
     use std::cell::RefCell;
+    use std::sync::{Arc, OnceLock};
 
+    use crate::telemetry::Counter;
     use crate::tensor::Tensor;
 
     /// Free-list caps: buffer count for cheap scans, plus a byte budget so
@@ -32,6 +34,33 @@ pub(crate) mod scratch {
 
     thread_local! {
         static POOL: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+    }
+
+    /// Pool telemetry (this is the hottest instrumented path in the
+    /// crate: one counter bump per kernel buffer request). Handles are
+    /// cached in `OnceLock`s so steady state is a relaxed `fetch_add` —
+    /// the registry lock is taken once per process, not per event.
+    fn hits() -> &'static Arc<Counter> {
+        static C: OnceLock<Arc<Counter>> = OnceLock::new();
+        C.get_or_init(|| {
+            crate::telemetry::global().counter("invertnet_scratch_hits_total")
+        })
+    }
+
+    fn misses() -> &'static Arc<Counter> {
+        static C: OnceLock<Arc<Counter>> = OnceLock::new();
+        C.get_or_init(|| {
+            crate::telemetry::global()
+                .counter("invertnet_scratch_misses_total")
+        })
+    }
+
+    fn miss_bytes() -> &'static Arc<Counter> {
+        static C: OnceLock<Arc<Counter>> = OnceLock::new();
+        C.get_or_init(|| {
+            crate::telemetry::global()
+                .counter("invertnet_scratch_miss_bytes_total")
+        })
     }
 
     fn take_impl(len: usize, zero: bool) -> Vec<f32> {
@@ -49,6 +78,7 @@ pub(crate) mod scratch {
             }
             match best {
                 Some((i, _)) => {
+                    hits().inc();
                     let mut b = pool.swap_remove(i);
                     if zero {
                         b.clear();
@@ -60,7 +90,11 @@ pub(crate) mod scratch {
                     }
                     b
                 }
-                None => vec![0.0f32; len],
+                None => {
+                    misses().inc();
+                    miss_bytes().add(len as u64 * 4);
+                    vec![0.0f32; len]
+                }
             }
         })
     }

@@ -59,6 +59,12 @@
 //!   one batched pass (bit-identical to direct [`api::Flow::sample_batch`]
 //!   / [`api::Flow::log_density`] calls), and JSON-lines TCP/stdio fronts
 //!   (`invertnet serve`, `invertnet score`).
+//! * [`telemetry`] — the observability spine: a lock-sharded metrics
+//!   registry (relaxed-atomic counters/gauges/log2-bucket histograms),
+//!   RAII [`span!`](crate::span) timers with optional Chrome
+//!   `trace_event` export (`--trace FILE`), and a Prometheus
+//!   text-exposition encoder behind the serve `metrics` op, a plain
+//!   `GET` TCP scrape, `--metrics-out FILE`, and `invertnet metrics`.
 //! * [`posterior`] — amortized Bayesian inference: a simulator catalog of
 //!   synthetic inverse problems ([`posterior::Simulator`]), the amortized
 //!   training driver ([`posterior::amortized_train`]), posterior
@@ -122,6 +128,7 @@ pub mod posterior;
 pub mod profile;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod tensor;
 pub mod train;
 pub mod util;

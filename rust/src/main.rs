@@ -5,6 +5,7 @@
 //! invertnet train   --net realnvp2d --data two-moons --steps 500
 //!                   [--mode invertible|stored|checkpoint:K|auto[:BUDGET]]
 //!                   [--threads N] [--microbatch N] [--eval-every N]
+//!                   [--metrics-out FILE] [--trace FILE]
 //! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
 //! invertnet posterior-train  --sim linear-gaussian --out runs/post
 //! invertnet posterior-sample --ckpt runs/post/checkpoint --y 0.7,-0.4 --n 256
@@ -17,8 +18,9 @@
 //!                   [--out FILE|DIR] [--baseline FILE|DIR] [--check] [--tol 5]
 //! invertnet bench   fig1|fig2 [--budget-gb 40]
 //! invertnet inspect --net glow16
-//! invertnet profile --net glow16 [--iters 5]
+//! invertnet profile --net glow16 [--iters 5] [--json]
 //! invertnet lint    [--net NAME | --all | --ckpt DIR] [--json] [--check]
+//! invertnet metrics [FILE]
 //! invertnet list
 //! ```
 //!

@@ -209,6 +209,26 @@ pub fn train_throughput(engine: &Engine, scale: Scale)
             format!("train_throughput/{net}/recompute_flops_ratio"),
             inv_flops as f64 / sto_flops as f64));
 
+        // -- telemetry overhead gate ------------------------------------
+        // the instrumentation contract is "provably inert": per event a
+        // gated relaxed-atomic op, no allocation. Bench the same step
+        // with the runtime kill switch off and gate the relative cost
+        // against the committed baseline (BENCHMARKS.md documents the
+        // <2% budget the baseline encodes).
+        let s_on = bench(warmup, iters, || {
+            flow.train_step(&x, None, &params, &ExecMode::Invertible)
+                .unwrap();
+        });
+        crate::telemetry::set_enabled(false);
+        let s_off = bench(warmup, iters, || {
+            flow.train_step(&x, None, &params, &ExecMode::Invertible)
+                .unwrap();
+        });
+        crate::telemetry::set_enabled(true);
+        r.metrics.push(Metric::exact(
+            format!("train_throughput/{net}/telemetry_overhead_pct"),
+            (s_on.mean_s / s_off.mean_s - 1.0) * 100.0, false));
+
         // -- data-parallel thread scaling -------------------------------
         let mut base = 0.0f64;
         for &t in train_threads {
@@ -385,6 +405,9 @@ pub fn serve_latency(engine: &Engine, scale: Scale) -> Result<SuiteReport> {
         r.metrics.push(Metric::micros(
             format!("serve_latency/{op}/coalesced_p99_us"),
             snap_8.p99_us as f64));
+        r.metrics.push(Metric::micros(
+            format!("serve_latency/{op}/coalesced_p999_us"),
+            snap_8.p999_us as f64));
         r.metrics.push(Metric::observed(
             format!("serve_latency/{op}/coalesced_mean_batch"),
             snap_8.mean_batch, true));

@@ -5,6 +5,14 @@
 //! Backend-agnostic: operands are synthesized from the layer metadata
 //! (entry convention: see `backend` module docs), so the same table works
 //! for the RefBackend and the PJRT runtime.
+//!
+//! Each iteration is timed individually into a
+//! [`telemetry::Histogram`](crate::telemetry::Histogram), so the report
+//! carries percentiles, not just means. Two output modes:
+//!
+//! * default — the human table (count-weighted totals per entry);
+//! * `--json` — an `invertnet-profile/v1` document for tooling, with
+//!   per-(signature, entry) count/mean/p50/p99 in microseconds.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -13,16 +21,34 @@ use anyhow::Result;
 
 use crate::api::Engine;
 use crate::flow::StepKind;
+use crate::telemetry::{HistSnapshot, Histogram};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
+
+/// Schema tag of the `--json` report.
+pub const SCHEMA: &str = "invertnet-profile/v1";
+
+const ENTRIES: [&str; 4] = ["forward", "inverse", "backward", "backward_stored"];
 
 fn rand_t(shape: &[usize], rng: &mut Pcg64) -> Tensor {
     Tensor { shape: shape.to_vec(), data: rng.normal_vec(shape.iter().product()) }
 }
 
-/// Time every distinct (sig, entry) of `net`, `iters` times each, and print
-/// a table sorted by signature with count-weighted totals.
-pub fn profile_network(engine: &Engine, net: &str, iters: usize) -> Result<()> {
+/// Timings for one distinct layer signature: how many steps use it, and
+/// one per-iteration latency histogram per entry point.
+pub struct SigProfile {
+    pub sig: String,
+    pub count: usize,
+    /// Indexed like [`ENTRIES`]: forward, inverse, backward, backward_stored.
+    pub timings: [HistSnapshot; 4],
+}
+
+/// Run the measurement: every distinct (sig, entry) of `net`, one warmup
+/// call (compiling backends build their executable there) plus `iters`
+/// individually-timed calls each.
+pub fn measure(engine: &Engine, net: &str, iters: usize)
+               -> Result<(usize, Vec<SigProfile>)> {
     let flow = engine.flow(net)?;
     let params = flow.init_params(7)?;
     let mut rng = Pcg64::new(123);
@@ -36,23 +62,16 @@ pub fn profile_network(engine: &Engine, net: &str, iters: usize) -> Result<()> {
         }
     }
 
-    println!("# per-entry mean latency, network {net} ({} steps, x{iters} iters, \
-              backend {})",
-             flow.def.steps.len(), engine.backend_name());
-    println!("{:<44} {:>5} {:>12} {:>12} {:>12} {:>12}",
-             "signature", "count", "forward", "inverse", "backward", "bwd_stored");
-    let mut totals = [0.0f64; 4];
+    let mut out = Vec::with_capacity(sig_count.len());
     for (sig, (count, step_idx)) in &sig_count {
         let meta = engine.manifest().layer(sig)?;
         let n = meta.in_shape[0];
         let cond = meta.cond_shape.as_ref().map(|s| rand_t(s, &mut rng));
         let step_params = &params.tensors[*step_idx];
-        let mut row = [0.0f64; 4];
-        for (ei, entry) in ["forward", "inverse", "backward", "backward_stored"]
-            .iter().enumerate()
-        {
+        let mut timings: Vec<HistSnapshot> = Vec::with_capacity(ENTRIES.len());
+        for entry in ENTRIES {
             // operands per the shared entry convention
-            let acts: Vec<Tensor> = match *entry {
+            let acts: Vec<Tensor> = match entry {
                 "forward" => vec![rand_t(&meta.in_shape, &mut rng)],
                 "inverse" => vec![rand_t(&meta.out_shape, &mut rng)],
                 "backward" => vec![rand_t(&meta.out_shape, &mut rng),
@@ -63,23 +82,124 @@ pub fn profile_network(engine: &Engine, net: &str, iters: usize) -> Result<()> {
                           rand_t(&meta.in_shape, &mut rng)],
             };
             let act_refs: Vec<&Tensor> = acts.iter().collect();
-            // warmup (compiling backends build their executable here)
             engine.backend().execute_layer(
                 meta, entry, &act_refs, cond.as_ref(), step_params)?;
-            let t0 = Instant::now();
+            let hist = Histogram::new();
             for _ in 0..iters {
+                let t0 = Instant::now();
                 engine.backend().execute_layer(
                     meta, entry, &act_refs, cond.as_ref(), step_params)?;
+                hist.record(t0.elapsed().as_micros() as u64);
             }
-            row[ei] = t0.elapsed().as_secs_f64() / iters as f64;
-            totals[ei] += row[ei] * *count as f64;
+            timings.push(hist.snapshot());
         }
-        println!("{sig:<44} {count:>5} {:>9.3} ms {:>9.3} ms {:>9.3} ms {:>9.3} ms",
-                 row[0] * 1e3, row[1] * 1e3, row[2] * 1e3, row[3] * 1e3);
+        let timings: [HistSnapshot; 4] = timings.try_into()
+            .unwrap_or_else(|_| unreachable!("{} entries", ENTRIES.len()));
+        out.push(SigProfile { sig: sig.clone(), count: *count, timings });
+    }
+    Ok((flow.def.steps.len(), out))
+}
+
+/// Time every distinct (sig, entry) of `net`, `iters` times each, and print
+/// a table sorted by signature with count-weighted totals.
+pub fn profile_network(engine: &Engine, net: &str, iters: usize) -> Result<()> {
+    let (steps, profiles) = measure(engine, net, iters)?;
+    println!("# per-entry mean latency, network {net} ({steps} steps, x{iters} iters, \
+              backend {})",
+             engine.backend_name());
+    println!("{:<44} {:>5} {:>12} {:>12} {:>12} {:>12}",
+             "signature", "count", "forward", "inverse", "backward", "bwd_stored");
+    let mut totals = [0.0f64; 4];
+    for p in &profiles {
+        let row: Vec<f64> =
+            p.timings.iter().map(|h| h.mean() / 1e3).collect();
+        for (t, r) in totals.iter_mut().zip(&row) {
+            *t += r * p.count as f64;
+        }
+        println!("{:<44} {:>5} {:>9.3} ms {:>9.3} ms {:>9.3} ms {:>9.3} ms",
+                 p.sig, p.count, row[0], row[1], row[2], row[3]);
     }
     println!("{:<44} {:>5} {:>9.3} ms {:>9.3} ms {:>9.3} ms {:>9.3} ms",
              "TOTAL (weighted by count)", "-",
-             totals[0] * 1e3, totals[1] * 1e3, totals[2] * 1e3, totals[3] * 1e3);
+             totals[0], totals[1], totals[2], totals[3]);
     println!("# invertible step ~= fwd + bwd totals; stored step ~= fwd + bwd_stored");
     Ok(())
+}
+
+/// The machine-readable report (`invertnet profile --json`):
+/// per-(signature, entry) histogram-derived stats in microseconds, plus
+/// count-weighted per-entry totals.
+pub fn profile_network_json(engine: &Engine, net: &str, iters: usize)
+                            -> Result<Json> {
+    let (steps, profiles) = measure(engine, net, iters)?;
+    let hist_json = |h: &HistSnapshot| {
+        Json::obj(vec![
+            ("count", Json::Num(h.count as f64)),
+            ("sum_us", Json::Num(h.sum as f64)),
+            ("mean_us", Json::Num(h.mean())),
+            ("p50_us", Json::Num(h.quantile(0.50))),
+            ("p99_us", Json::Num(h.quantile(0.99))),
+        ])
+    };
+    let mut totals = [0.0f64; 4];
+    let entries = Json::Arr(profiles.iter().map(|p| {
+        let timings = Json::obj(
+            ENTRIES.iter().zip(&p.timings).map(|(e, h)| {
+                (*e, hist_json(h))
+            }).collect());
+        for (t, h) in totals.iter_mut().zip(&p.timings) {
+            *t += h.mean() * p.count as f64;
+        }
+        Json::obj(vec![
+            ("signature", Json::Str(p.sig.clone())),
+            ("count", Json::Num(p.count as f64)),
+            ("timings", timings),
+        ])
+    }).collect());
+    Ok(Json::obj(vec![
+        ("schema", Json::Str(SCHEMA.into())),
+        ("network", Json::Str(net.into())),
+        ("backend", Json::Str(engine.backend_name().into())),
+        ("steps", Json::Num(steps as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("entries", entries),
+        ("totals_us", Json::obj(
+            ENTRIES.iter().zip(&totals)
+                .map(|(e, t)| (*e, Json::Num(*t)))
+                .collect())),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_report_carries_schema_and_per_entry_histograms() {
+        let engine = Engine::native().unwrap();
+        let doc = profile_network_json(&engine, "realnvp2d", 2).unwrap();
+        assert_eq!(doc.req("schema").unwrap().as_str().unwrap(), SCHEMA);
+        assert_eq!(doc.req("network").unwrap().as_str().unwrap(),
+                   "realnvp2d");
+        let entries = doc.req("entries").unwrap().as_arr().unwrap();
+        assert!(!entries.is_empty());
+        for e in entries {
+            assert!(e.req("count").unwrap().as_usize().unwrap() > 0);
+            let timings = e.req("timings").unwrap();
+            for name in ENTRIES {
+                let t = timings.req(name).unwrap();
+                assert_eq!(t.req("count").unwrap().as_usize().unwrap(), 2,
+                           "{name} must time every iteration");
+                let mean = t.req("mean_us").unwrap().as_f64().unwrap();
+                let p99 = t.req("p99_us").unwrap().as_f64().unwrap();
+                assert!(mean >= 0.0 && p99 >= 0.0);
+            }
+        }
+        for name in ENTRIES {
+            assert!(doc.req("totals_us").unwrap().req(name).unwrap()
+                        .as_f64().unwrap() >= 0.0);
+        }
+        // the document is valid JSON text end-to-end
+        Json::parse(&doc.to_string()).unwrap();
+    }
 }

@@ -26,13 +26,14 @@
 //! backend parallelism.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::telemetry::{Counter, Gauge, Histogram, Sample};
 use crate::tensor::ops::{concat_rows, slice_rows};
 use crate::tensor::Tensor;
 
@@ -112,66 +113,98 @@ fn group_of(j: &Job) -> (usize, u8) {
 // Serving metrics
 // ---------------------------------------------------------------------------
 
-const LAT_RING: usize = 65_536;
-
-/// Lock-light serving counters + a latency reservoir for percentiles.
+/// Serving metrics on telemetry primitives: relaxed-atomic counters plus
+/// per-op log2-bucket latency histograms. This replaced a bounded latency
+/// ring that silently dropped samples under load and sorted a partial
+/// window for percentiles — histogram bucket merges now answer
+/// p50/p99/p99.9 over the whole serving history, per op and pooled.
+/// Instruments are embedded (not registered globally) so each
+/// server/test gets isolated counts; [`ServeStats::samples`] contributes
+/// them to the scrape surface under the `invertnet_serve_*` names.
 #[derive(Default)]
 pub struct ServeStats {
-    requests: AtomicU64,
-    batches: AtomicU64,
-    items: AtomicU64,
-    errors: AtomicU64,
-    lat_us: Mutex<VecDeque<u64>>,
+    requests: Counter,
+    batches: Counter,
+    items: Counter,
+    errors: Counter,
+    /// Queue-to-reply latency, indexed by `Work::op_tag()` (0 = sample,
+    /// 1 = score; the `posterior` op rides the sample path).
+    lat_us: [Histogram; 2],
+    batch_jobs: Histogram,
+    batch_rows: Histogram,
+    queue_depth: Gauge,
+    models: Gauge,
 }
 
 impl ServeStats {
     fn record_batch(&self, jobs: usize, rows: usize) {
-        self.requests.fetch_add(jobs as u64, Ordering::Relaxed);
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.items.fetch_add(rows as u64, Ordering::Relaxed);
+        self.requests.add(jobs as u64);
+        self.batches.inc();
+        self.items.add(rows as u64);
+        self.batch_jobs.record(jobs as u64);
+        self.batch_rows.record(rows as u64);
     }
 
-    fn record_latency(&self, us: u64) {
-        let mut ring = self.lat_us.lock().unwrap();
-        if ring.len() == LAT_RING {
-            ring.pop_front();
-        }
-        ring.push_back(us);
+    fn record_latency(&self, op: u8, us: u64) {
+        self.lat_us[(op as usize).min(1)].record(us);
     }
 
     pub fn record_error(&self) {
-        self.errors.fetch_add(1, Ordering::Relaxed);
+        self.errors.inc();
     }
 
     /// Snapshot with queue/registry gauges supplied by the caller.
+    /// Percentiles come from the merge of both per-op histograms, so
+    /// they describe every request ever answered, not a recent window.
     pub fn snapshot(&self, queue_depth: u64, models: u64) -> StatsSnapshot {
-        let mut lats: Vec<u64> =
-            self.lat_us.lock().unwrap().iter().copied().collect();
-        lats.sort_unstable();
-        let pct = |p: usize| -> u64 {
-            if lats.is_empty() {
-                0
-            } else {
-                lats[(lats.len() * p / 100).min(lats.len() - 1)]
-            }
-        };
-        let requests = self.requests.load(Ordering::Relaxed);
-        let batches = self.batches.load(Ordering::Relaxed);
-        let items = self.items.load(Ordering::Relaxed);
+        self.queue_depth.set(queue_depth as f64);
+        self.models.set(models as f64);
+        let mut lat = self.lat_us[0].snapshot();
+        lat.merge(&self.lat_us[1].snapshot());
+        let requests = self.requests.get();
+        let batches = self.batches.get();
+        let items = self.items.get();
         StatsSnapshot {
             requests,
             batches,
             items,
-            errors: self.errors.load(Ordering::Relaxed),
+            errors: self.errors.get(),
             mean_batch: if batches == 0 { 0.0 }
                         else { requests as f64 / batches as f64 },
             mean_items: if batches == 0 { 0.0 }
                         else { items as f64 / batches as f64 },
-            p50_us: pct(50),
-            p99_us: pct(99),
+            p50_us: lat.quantile_u64(0.50),
+            p99_us: lat.quantile_u64(0.99),
+            p999_us: lat.quantile_u64(0.999),
             queue_depth,
             models,
         }
+    }
+
+    /// This instance's series for the metrics scrape, sorted by name.
+    pub fn samples(&self) -> Vec<(String, Sample)> {
+        vec![
+            ("invertnet_serve_batch_jobs".to_string(),
+             Sample::Histogram(self.batch_jobs.snapshot())),
+            ("invertnet_serve_batch_rows".to_string(),
+             Sample::Histogram(self.batch_rows.snapshot())),
+            ("invertnet_serve_batches_total".to_string(),
+             Sample::Counter(self.batches.get())),
+            ("invertnet_serve_errors_total".to_string(),
+             Sample::Counter(self.errors.get())),
+            ("invertnet_serve_items_total".to_string(),
+             Sample::Counter(self.items.get())),
+            ("invertnet_serve_models".to_string(),
+             Sample::Gauge(self.models.get())),
+            ("invertnet_serve_queue_depth".to_string(),
+             Sample::Gauge(self.queue_depth.get())),
+            ("invertnet_serve_requests_total".to_string(),
+             Sample::Counter(self.requests.get())),
+            ("invertnet_serve_sample_latency_us".to_string(),
+             Sample::Histogram(self.lat_us[0].snapshot())),
+            ("invertnet_serve_score_latency_us".to_string(),
+             Sample::Histogram(self.lat_us[1].snapshot())),
+        ]
     }
 }
 
@@ -354,13 +387,17 @@ fn execute_batch(jobs: Vec<Job>, stats: &ServeStats) {
     }
     let rows: Vec<usize> = jobs.iter().map(|j| j.work.rows()).collect();
     let total: usize = rows.iter().sum();
-    let result = run_batch(&jobs, &rows);
+    let op = jobs[0].work.op_tag();
+    let result = {
+        let _sp = crate::span!("serve_batch");
+        run_batch(&jobs, &rows)
+    };
     stats.record_batch(jobs.len(), total);
     match result {
         Ok(replies) => {
             for (job, reply) in jobs.into_iter().zip(replies) {
                 let us = job.t_enq.elapsed().as_micros() as u64;
-                stats.record_latency(us);
+                stats.record_latency(op, us);
                 let _ = job.tx.send(Ok(reply)); // receiver may have left
             }
         }

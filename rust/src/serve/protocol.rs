@@ -11,6 +11,7 @@
 //! {"op":"posterior","y":[0.7,-0.4],"n":64,"seed":1,"samples":true}
 //!                                              n(64) seed(0) temperature(1)
 //! {"op":"stats"}
+//! {"op":"metrics"}
 //! {"op":"shutdown"}
 //! ```
 //!
@@ -22,6 +23,7 @@
 //! {"ok":true,"op":"posterior","n":64,"mean":[...],"std":[...],
 //!  "x":{"shape":[64,2],"data":[...]}}          x only with "samples":true
 //! {"ok":true,"op":"stats","stats":{...}}
+//! {"ok":true,"op":"metrics","text":"# TYPE ...\n..."}
 //! {"ok":true,"op":"shutdown"}
 //! {"ok":false,"error":"..."}
 //! ```
@@ -82,6 +84,8 @@ pub enum Request {
     },
     /// Serving metrics snapshot.
     Stats,
+    /// Full telemetry scrape as Prometheus text exposition.
+    Metrics,
     /// Stop the server after responding.
     Shutdown,
 }
@@ -100,6 +104,8 @@ pub enum Response {
         samples: Option<Tensor>,
     },
     Stats(StatsSnapshot),
+    /// Prometheus text exposition of every series the server exports.
+    Metrics { text: String },
     Shutdown,
     Error { error: String },
 }
@@ -123,6 +129,8 @@ pub struct StatsSnapshot {
     pub p50_us: u64,
     /// 99th-percentile request latency, microseconds.
     pub p99_us: u64,
+    /// 99.9th-percentile request latency, microseconds.
+    pub p999_us: u64,
     /// Jobs waiting in the queue at snapshot time.
     pub queue_depth: u64,
     /// Models resident in the registry.
@@ -283,9 +291,10 @@ impl Request {
                 })
             }
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
             "shutdown" => Ok(Request::Shutdown),
             other => bail!("unknown op {other:?} \
-                            (sample|score|posterior|stats|shutdown)"),
+                            (sample|score|posterior|stats|metrics|shutdown)"),
         }
     }
 
@@ -338,6 +347,9 @@ impl Request {
                 Json::obj(pairs)
             }
             Request::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
+            Request::Metrics => {
+                Json::obj(vec![("op", Json::Str("metrics".into()))])
+            }
             Request::Shutdown => {
                 Json::obj(vec![("op", Json::Str("shutdown".into()))])
             }
@@ -395,9 +407,15 @@ impl Response {
                     ("mean_items", Json::Num(s.mean_items)),
                     ("p50_us", Json::Num(s.p50_us as f64)),
                     ("p99_us", Json::Num(s.p99_us as f64)),
+                    ("p999_us", Json::Num(s.p999_us as f64)),
                     ("queue_depth", Json::Num(s.queue_depth as f64)),
                     ("models", Json::Num(s.models as f64)),
                 ])),
+            ]),
+            Response::Metrics { text } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("metrics".into())),
+                ("text", Json::Str(text.clone())),
             ]),
             Response::Shutdown => Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -458,10 +476,14 @@ impl Response {
                     mean_items: s.req("mean_items")?.as_f64()?,
                     p50_us: u("p50_us")?,
                     p99_us: u("p99_us")?,
+                    p999_us: u("p999_us")?,
                     queue_depth: u("queue_depth")?,
                     models: u("models")?,
                 }))
             }
+            "metrics" => Ok(Response::Metrics {
+                text: j.req("text")?.as_str()?.to_string(),
+            }),
             other => Err(anyhow!("unknown response op {other:?}")),
         }
     }
@@ -606,7 +628,8 @@ mod tests {
         let s = StatsSnapshot {
             requests: 10, batches: 3, items: 24, errors: 1,
             mean_batch: 10.0 / 3.0, mean_items: 8.0,
-            p50_us: 120, p99_us: 900, queue_depth: 0, models: 2,
+            p50_us: 120, p99_us: 900, p999_us: 2100, queue_depth: 0,
+            models: 2,
         };
         let back = Response::parse_line(&Response::Stats(s.clone()).to_line())
             .unwrap();
@@ -616,5 +639,21 @@ mod tests {
             Response::Shutdown);
         let e = Response::err("boom");
         assert!(Response::parse_line(&e.to_line()).unwrap().is_error());
+    }
+
+    #[test]
+    fn metrics_op_roundtrips_exposition_text() {
+        assert_eq!(Request::parse_line(r#"{"op":"metrics"}"#).unwrap(),
+                   Request::Metrics);
+        assert_eq!(
+            Request::from_json(&Request::Metrics.to_json()).unwrap(),
+            Request::Metrics);
+        // newlines and quotes in the exposition body must survive the
+        // JSON string escaping on the wire
+        let r = Response::Metrics {
+            text: "# TYPE a_total counter\na_total 1\n\
+                   a_bucket{le=\"3\"} 2\n".to_string(),
+        };
+        assert_eq!(Response::parse_line(&r.to_line()).unwrap(), r);
     }
 }

@@ -17,6 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::api::Engine;
 use crate::flow::ParamStore;
+use crate::telemetry::{Counter, Sample};
 use crate::util::json::Json;
 use crate::Flow;
 
@@ -49,6 +50,13 @@ pub struct Registry {
     cap: usize,
     root: Option<PathBuf>,
     inner: Mutex<Inner>,
+    /// Models admitted (registered or lazily loaded), LRU victims, and
+    /// checkpoints refused by admission control (budget/static checks).
+    /// Embedded so each registry/test gets isolated counts; exported at
+    /// scrape time via [`Registry::samples`].
+    loads: Counter,
+    evictions: Counter,
+    rejects: Counter,
 }
 
 impl Registry {
@@ -63,6 +71,9 @@ impl Registry {
                 lru: Vec::new(),
                 default_name: None,
             }),
+            loads: Counter::new(),
+            evictions: Counter::new(),
+            rejects: Counter::new(),
         }
     }
 
@@ -140,8 +151,16 @@ impl Registry {
     }
 
     /// Load a checkpoint directory and register it under its network name.
+    /// A load refused by admission control (memory budget, static
+    /// checkpoint validation) counts toward the rejects series.
     pub fn register_checkpoint(&self, dir: &Path) -> Result<Arc<ServedModel>> {
-        let (flow, params) = Self::load_checkpoint(&self.engine, dir)?;
+        let (flow, params) = match Self::load_checkpoint(&self.engine, dir) {
+            Ok(pair) => pair,
+            Err(e) => {
+                self.rejects.inc();
+                return Err(e);
+            }
+        };
         self.insert(ServedModel {
             name: flow.def.name.clone(),
             flow,
@@ -183,11 +202,25 @@ impl Registry {
         while inner.map.len() > self.cap {
             let victim = inner.lru.remove(0);
             inner.map.remove(&victim);
+            self.evictions.inc();
             if inner.default_name.as_deref() == Some(victim.as_str()) {
                 inner.default_name = inner.lru.last().cloned();
             }
         }
+        self.loads.inc();
         Ok(model)
+    }
+
+    /// This registry's series for the metrics scrape, sorted by name.
+    pub fn samples(&self) -> Vec<(String, Sample)> {
+        vec![
+            ("invertnet_registry_evictions_total".to_string(),
+             Sample::Counter(self.evictions.get())),
+            ("invertnet_registry_loads_total".to_string(),
+             Sample::Counter(self.loads.get())),
+            ("invertnet_registry_rejects_total".to_string(),
+             Sample::Counter(self.rejects.get())),
+        ]
     }
 
     /// Look up a model by name (`None` = the default model), touching the
@@ -377,6 +410,32 @@ mod tests {
         assert!(format!("{err:#}").contains("memory budget"), "{err:#}");
         // at exactly the minimum peak the model is admitted
         Registry::load_checkpoint(&budgeted(min_peak), &dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn telemetry_counters_track_loads_evictions_rejects() {
+        let counts = |r: &Registry| -> Vec<u64> {
+            r.samples().iter().map(|(_, s)| match s {
+                Sample::Counter(v) => *v,
+                other => panic!("registry exports counters only: {other:?}"),
+            }).collect()
+        };
+        let r = registry(2);
+        assert_eq!(counts(&r), vec![0, 0, 0]);
+        r.register_untrained("realnvp2d", 1).unwrap();
+        r.register_untrained("hint8d", 1).unwrap();
+        r.register_untrained("nice16", 1).unwrap(); // evicts realnvp2d
+        // samples() is sorted by name: evictions, loads, rejects
+        assert_eq!(counts(&r), vec![1, 3, 0]);
+
+        // a bad checkpoint dir is an admission reject, not a load
+        let dir = std::env::temp_dir()
+            .join(format!("reg_telem_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("index.json"), "{").unwrap();
+        assert!(r.register_checkpoint(&dir).is_err());
+        assert_eq!(counts(&r), vec![1, 3, 1]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

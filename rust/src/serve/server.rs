@@ -8,6 +8,11 @@
 //!   lightweight thread per connection.
 //!
 //! Both exit after a `shutdown` request (in-flight work drains first).
+//!
+//! The TCP front additionally answers plain `GET /metrics` lines
+//! (`curl http://127.0.0.1:7878/metrics`) with a minimal HTTP response
+//! carrying the same Prometheus text exposition as the JSON `metrics`
+//! op, so a stock Prometheus scraper needs no protocol adapter.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -18,6 +23,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::posterior::analysis;
+use crate::telemetry;
 use crate::util::rng::Pcg64;
 
 use super::batcher::{BatchConfig, Batcher, Reply, ServeStats, Work};
@@ -176,6 +182,9 @@ impl Server {
                 self.batcher.queue_depth() as u64,
                 self.registry.len() as u64,
             ))),
+            Request::Metrics => Ok(Response::Metrics {
+                text: self.metrics_text(),
+            }),
             Request::Shutdown => {
                 self.shutdown.store(true, Ordering::Relaxed);
                 Ok(Response::Shutdown)
@@ -193,6 +202,41 @@ impl Server {
                  models explicitly allowed", m.name);
         }
         Ok(m)
+    }
+
+    /// Full telemetry scrape: the process-global registry (span
+    /// histograms, train/scratch series if this process also trains)
+    /// merged with the serve-local instruments embedded in `ServeStats`
+    /// and the model registry, rendered as Prometheus text exposition.
+    pub fn metrics_text(&self) -> String {
+        // refresh the point-in-time gauges before sampling them
+        let _ = self.stats.snapshot(self.batcher.queue_depth() as u64,
+                                    self.registry.len() as u64);
+        let mut all: std::collections::BTreeMap<String, telemetry::Sample> =
+            telemetry::global().snapshot().into_iter().collect();
+        for (name, s) in self.stats.samples() {
+            all.insert(name, s);
+        }
+        for (name, s) in self.registry.samples() {
+            all.insert(name, s);
+        }
+        telemetry::encode::render(&all.into_iter().collect::<Vec<_>>())
+    }
+
+    /// Minimal HTTP reply for a plain `GET` on the TCP front: the
+    /// metrics exposition on `/metrics` (or `/`), 404 otherwise.
+    fn http_scrape(&self, path: &str) -> String {
+        let (status, body) = if path == "/metrics" || path == "/" {
+            ("200 OK", self.metrics_text())
+        } else {
+            ("404 Not Found", "scrape /metrics\n".to_string())
+        };
+        format!(
+            "HTTP/1.0 {status}\r\n\
+             Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len())
     }
 
     /// Parse-handle-serialize one wire line.
@@ -268,8 +312,20 @@ impl Server {
             match reader.read_line(&mut buf) {
                 Ok(0) => return Ok(()), // client closed
                 Ok(_) => {
-                    if !buf.trim().is_empty() {
-                        let resp = self.handle_line(buf.trim_end());
+                    let line = buf.trim_end().to_string();
+                    if let Some(rest) = line.strip_prefix("GET ") {
+                        // plain HTTP scrape: answer and close (the
+                        // Connection: close contract lets curl and
+                        // Prometheus treat us as a one-shot endpoint)
+                        let path = rest.split_whitespace().next()
+                            .unwrap_or("");
+                        writer.write_all(
+                            self.http_scrape(path).as_bytes())?;
+                        writer.flush()?;
+                        return Ok(());
+                    }
+                    if !line.trim().is_empty() {
+                        let resp = self.handle_line(&line);
                         writeln!(writer, "{}", resp.to_line())?;
                         writer.flush()?;
                     }
@@ -343,6 +399,56 @@ mod tests {
 
         assert_eq!(s.handle(Request::Shutdown), Response::Shutdown);
         assert!(s.is_shutdown());
+    }
+
+    #[test]
+    fn metrics_op_covers_batcher_registry_and_per_op_series() {
+        let s = server();
+        let Response::Sample { x } = s.handle(Request::Sample {
+            model: None, n: 2, temperature: 1.0, seed: 4, cond: None,
+        }) else { panic!("sample failed") };
+        let _ = s.handle(Request::Score { model: None, x, cond: None });
+
+        let Response::Metrics { text } = s.handle(Request::Metrics) else {
+            panic!("metrics op failed")
+        };
+        let fams = telemetry::encode::parse_exposition(&text).unwrap();
+        let names: Vec<&str> =
+            fams.iter().map(|f| f.name.as_str()).collect();
+        for required in [
+            "invertnet_serve_requests_total",
+            "invertnet_serve_batches_total",
+            "invertnet_serve_errors_total",
+            "invertnet_serve_queue_depth",
+            "invertnet_serve_batch_rows",
+            "invertnet_serve_sample_latency_us",
+            "invertnet_serve_score_latency_us",
+            "invertnet_registry_loads_total",
+            "invertnet_registry_evictions_total",
+            "invertnet_registry_rejects_total",
+        ] {
+            assert!(names.contains(&required),
+                    "metrics text is missing {required}: {names:?}");
+        }
+        // the two answered requests must be visible in the text
+        assert!(text.contains("invertnet_serve_requests_total 2"),
+                "{text}");
+    }
+
+    #[test]
+    fn get_scrape_answers_minimal_http() {
+        let s = server();
+        let resp = s.http_scrape("/metrics");
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("Content-Type: text/plain"), "{resp}");
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        let len: usize = resp.lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap().trim().parse().unwrap();
+        assert_eq!(body.len(), len);
+        telemetry::encode::parse_exposition(body).unwrap();
+        assert!(s.http_scrape("/nope").starts_with("HTTP/1.0 404"),
+                "unknown paths must 404");
     }
 
     #[test]

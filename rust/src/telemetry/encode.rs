@@ -1,0 +1,205 @@
+//! Prometheus text-exposition encoding (and a small validating parser).
+//!
+//! [`render`] turns a sorted registry snapshot into text-exposition
+//! format (version 0.0.4): a `# TYPE` line per family, plain
+//! `name value` samples for counters and gauges, and the conventional
+//! `_bucket{le=...}` / `_sum` / `_count` triple for histograms. Bucket
+//! counts are emitted cumulatively, as Prometheus requires; empty
+//! trailing buckets above the highest populated one are elided (the
+//! mandatory `le="+Inf"` bucket always closes the series).
+//!
+//! [`parse_exposition`] is the inverse used by `invertnet metrics FILE`
+//! and the CI smoke: it does not reconstruct values, it validates shape
+//! (every sample parses, every sample belongs to a declared family,
+//! every family has at least one sample) and summarizes the families.
+
+use anyhow::{bail, Result};
+
+use super::registry::{bucket_upper, HistSnapshot, Sample, NBUCKETS};
+
+/// Render a snapshot (as produced by `Registry::snapshot`, already
+/// sorted by name) to Prometheus text exposition.
+pub fn render(entries: &[(String, Sample)]) -> String {
+    let mut out = String::new();
+    for (name, sample) in entries {
+        match sample {
+            Sample::Counter(v) => {
+                out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+            }
+            Sample::Gauge(v) => {
+                out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+            }
+            Sample::Histogram(h) => render_hist(&mut out, name, h),
+        }
+    }
+    out
+}
+
+fn render_hist(out: &mut String, name: &str, h: &HistSnapshot) {
+    out.push_str(&format!("# TYPE {name} histogram\n"));
+    let top = (0..NBUCKETS).rev().find(|&i| h.buckets[i] > 0);
+    let mut cum = 0u64;
+    if let Some(top) = top {
+        for i in 0..=top {
+            cum += h.buckets[i];
+            let le = bucket_upper(i);
+            out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+    out.push_str(&format!("{name}_sum {}\n", h.sum));
+    out.push_str(&format!("{name}_count {}\n", h.count));
+}
+
+/// One metric family seen by [`parse_exposition`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Family {
+    pub name: String,
+    pub kind: String,
+    pub samples: usize,
+}
+
+/// Validate exposition text and summarize its families. Errors name the
+/// offending line. Accepts exactly what [`render`] produces (plus any
+/// conforming exposition: extra `#` comments are ignored).
+pub fn parse_exposition(text: &str) -> Result<Vec<Family>> {
+    let mut families: Vec<Family> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (name, kind) = match (it.next(), it.next(), it.next()) {
+                (Some(n), Some(k), None) => (n, k),
+                _ => bail!("line {}: malformed TYPE line {line:?}", lineno + 1),
+            };
+            if !matches!(kind, "counter" | "gauge" | "histogram") {
+                bail!("line {}: unknown metric kind {kind:?}", lineno + 1);
+            }
+            if families.iter().any(|f| f.name == name) {
+                bail!("line {}: duplicate family {name:?}", lineno + 1);
+            }
+            families.push(Family { name: name.to_string(), kind: kind.to_string(), samples: 0 });
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let Some((series, value)) = line.rsplit_once(' ') else {
+            bail!("line {}: sample line has no value: {line:?}", lineno + 1);
+        };
+        if value.parse::<f64>().is_err() {
+            bail!("line {}: unparsable sample value {value:?}", lineno + 1);
+        }
+        let series_name = series.split('{').next().unwrap_or(series);
+        let Some(fam) = families.last_mut() else {
+            bail!("line {}: sample before any TYPE line: {line:?}", lineno + 1);
+        };
+        let belongs = series_name == fam.name
+            || (fam.kind == "histogram"
+                && [
+                    format!("{}_bucket", fam.name),
+                    format!("{}_sum", fam.name),
+                    format!("{}_count", fam.name),
+                ]
+                .iter()
+                .any(|s| *s == series_name));
+        if !belongs {
+            bail!(
+                "line {}: sample {series_name:?} does not belong to family {:?}",
+                lineno + 1,
+                fam.name
+            );
+        }
+        fam.samples += 1;
+    }
+    for fam in &families {
+        if fam.samples == 0 {
+            bail!("family {:?} declares no samples", fam.name);
+        }
+    }
+    if families.is_empty() {
+        bail!("no metric families found");
+    }
+    Ok(families)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::Histogram;
+    use super::*;
+
+    fn demo_snapshot() -> Vec<(String, Sample)> {
+        let h = Histogram::new();
+        for v in [1u64, 2, 3, 4, 5, 6, 7, 8] {
+            h.record(v);
+        }
+        vec![
+            ("demo_gauge".to_string(), Sample::Gauge(-1.5)),
+            ("demo_lat_us".to_string(), Sample::Histogram(h.snapshot())),
+            ("demo_total".to_string(), Sample::Counter(42)),
+        ]
+    }
+
+    #[test]
+    fn renders_cumulative_buckets_in_exposition_format() {
+        let text = render(&demo_snapshot());
+        let expected = "\
+# TYPE demo_gauge gauge
+demo_gauge -1.5
+# TYPE demo_lat_us histogram
+demo_lat_us_bucket{le=\"0\"} 0
+demo_lat_us_bucket{le=\"1\"} 1
+demo_lat_us_bucket{le=\"3\"} 3
+demo_lat_us_bucket{le=\"7\"} 7
+demo_lat_us_bucket{le=\"15\"} 8
+demo_lat_us_bucket{le=\"+Inf\"} 8
+demo_lat_us_sum 36
+demo_lat_us_count 8
+# TYPE demo_total counter
+demo_total 42
+";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn parser_roundtrips_rendered_output() {
+        let fams = parse_exposition(&render(&demo_snapshot())).unwrap();
+        assert_eq!(
+            fams,
+            vec![
+                Family { name: "demo_gauge".into(), kind: "gauge".into(), samples: 1 },
+                Family { name: "demo_lat_us".into(), kind: "histogram".into(), samples: 8 },
+                Family { name: "demo_total".into(), kind: "counter".into(), samples: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn parser_rejects_malformed_text() {
+        assert!(parse_exposition("").is_err());
+        assert!(parse_exposition("orphan 1\n").is_err(), "sample before TYPE");
+        assert!(parse_exposition("# TYPE a counter\n").is_err(), "family with no samples");
+        assert!(parse_exposition("# TYPE a counter\na notanumber\n").is_err());
+        assert!(parse_exposition("# TYPE a counter\nb 1\n").is_err(), "foreign sample");
+        assert!(parse_exposition("# TYPE a summary\na 1\n").is_err(), "unknown kind");
+        assert!(
+            parse_exposition("# TYPE a counter\na 1\n# TYPE a counter\na 2\n").is_err(),
+            "duplicate family"
+        );
+    }
+
+    #[test]
+    fn empty_histogram_still_exposes_inf_bucket() {
+        let h = Histogram::new();
+        let text =
+            render(&[("h_us".to_string(), Sample::Histogram(h.snapshot()))]);
+        assert_eq!(
+            text,
+            "# TYPE h_us histogram\nh_us_bucket{le=\"+Inf\"} 0\nh_us_sum 0\nh_us_count 0\n"
+        );
+        parse_exposition(&text).unwrap();
+    }
+}

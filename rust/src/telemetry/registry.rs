@@ -1,0 +1,416 @@
+//! Metric primitives and the lock-sharded name registry.
+//!
+//! Three instrument kinds, all built on relaxed `AtomicU64` cells so the
+//! hot-path cost of an event is a handful of uncontended atomic adds —
+//! no locks, no allocation, no syscalls:
+//!
+//! * [`Counter`] — monotonic event count (`_total` series).
+//! * [`Gauge`] — last-write-wins `f64` (stored as IEEE-754 bits).
+//! * [`Histogram`] — fixed log2 bucket bounds. Because every histogram in
+//!   the process shares the same 65 bucket edges, percentiles of a *merge*
+//!   of histograms are computed by adding bucket counts — never by sorting
+//!   samples. This is what lets serve `stats` report p50/p99/p99.9 over
+//!   per-op histograms without keeping a sample ring.
+//!
+//! The [`Registry`] maps names to instruments behind a small fixed set of
+//! mutex shards. The lock is taken only at registration and scrape time;
+//! callers hold `Arc` handles (or embed instruments directly in their own
+//! structs) so steady-state recording never touches the registry.
+//!
+//! All recording methods are gated on the process-wide
+//! [`enabled`](super::enabled) switch, which is how the bench harness
+//! measures instrumentation overhead without a second build.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Bucket count for every [`Histogram`]: bucket 0 holds exact zeros and
+/// bucket `i >= 1` holds values `v` with `2^(i-1) <= v < 2^i`.
+pub const NBUCKETS: usize = 65;
+
+const NSHARDS: usize = 8;
+
+/// Bucket index for a recorded value: its bit width (0 for 0).
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `i` (`0`, then `2^i - 1`).
+pub fn bucket_upper(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        64 => u64::MAX,
+        _ => (1u64 << i) - 1,
+    }
+}
+
+/// Monotonic counter. `inc`/`add` are single relaxed `fetch_add`s.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if super::enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins `f64` gauge stored as raw bits in an `AtomicU64`.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if super::enabled() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Log2-bucketed histogram of `u64` observations (typically microseconds
+/// or row counts). Recording is three relaxed `fetch_add`s.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; NBUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if super::enabled() {
+            self.count.fetch_add(1, Ordering::Relaxed);
+            self.sum.fetch_add(v, Ordering::Relaxed);
+            self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Point-in-time copy of a histogram's cells. Snapshots from histograms
+/// with the same (fixed) bucket bounds merge by adding counts, so the
+/// quantiles of a merge are exact with respect to the bucketing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; NBUCKETS],
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self { count: 0, sum: 0, buckets: [0; NBUCKETS] }
+    }
+}
+
+impl HistSnapshot {
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += *o;
+        }
+    }
+
+    /// Mean of the recorded values (exact — from `sum`/`count`).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate by rank-walk over the buckets with linear
+    /// interpolation inside the owning bucket. The rank of quantile `q`
+    /// over `n` samples is `ceil(q*n)` clamped to `[1, n]`; bucket `i`
+    /// spans `[2^(i-1), 2^i - 1]`. Mirrored bit-for-bit by
+    /// `python/tests/test_telemetry.py`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil().max(1.0) as u64).min(self.count);
+        let mut before = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if before + c >= target {
+                if i == 0 {
+                    return 0.0;
+                }
+                let lo = 2f64.powi(i as i32 - 1);
+                let hi = 2f64.powi(i as i32) - 1.0;
+                let frac = (target - before) as f64 / c as f64;
+                return lo + frac * (hi - lo);
+            }
+            before += c;
+        }
+        bucket_upper(NBUCKETS - 1) as f64
+    }
+
+    /// `quantile` rounded to the nearest integer (wire-friendly µs).
+    pub fn quantile_u64(&self, q: f64) -> u64 {
+        self.quantile(q).round() as u64
+    }
+}
+
+/// One scraped series: the value side of a registry snapshot entry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Sample {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistSnapshot),
+}
+
+enum Entry {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Name → instrument map behind `NSHARDS` mutex shards. Shard choice is an
+/// FNV-1a hash of the name, so unrelated subsystems registering at startup
+/// do not serialize on one lock. Instruments are created on first use and
+/// live for the life of the registry; `snapshot` walks every shard.
+pub struct Registry {
+    shards: Vec<Mutex<BTreeMap<String, Entry>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn shard_of(name: &str) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h as usize) % NSHARDS
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self { shards: (0..NSHARDS).map(|_| Mutex::new(BTreeMap::new())).collect() }
+    }
+
+    /// Get-or-create the counter `name`. A kind collision (the name is
+    /// already a gauge or histogram) returns a detached instrument that
+    /// records but is never exported — collisions indicate a naming bug,
+    /// and the fixed metric catalog avoids them.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut shard = self.shards[shard_of(name)].lock().unwrap();
+        if let Some(Entry::Counter(c)) = shard.get(name) {
+            return Arc::clone(c);
+        }
+        if shard.contains_key(name) {
+            return Arc::new(Counter::new());
+        }
+        let c = Arc::new(Counter::new());
+        shard.insert(name.to_string(), Entry::Counter(Arc::clone(&c)));
+        c
+    }
+
+    /// Get-or-create the gauge `name` (collision policy as [`counter`](Self::counter)).
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut shard = self.shards[shard_of(name)].lock().unwrap();
+        if let Some(Entry::Gauge(g)) = shard.get(name) {
+            return Arc::clone(g);
+        }
+        if shard.contains_key(name) {
+            return Arc::new(Gauge::new());
+        }
+        let g = Arc::new(Gauge::new());
+        shard.insert(name.to_string(), Entry::Gauge(Arc::clone(&g)));
+        g
+    }
+
+    /// Get-or-create the histogram `name` (collision policy as [`counter`](Self::counter)).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut shard = self.shards[shard_of(name)].lock().unwrap();
+        if let Some(Entry::Histogram(h)) = shard.get(name) {
+            return Arc::clone(h);
+        }
+        if shard.contains_key(name) {
+            return Arc::new(Histogram::new());
+        }
+        let h = Arc::new(Histogram::new());
+        shard.insert(name.to_string(), Entry::Histogram(Arc::clone(&h)));
+        h
+    }
+
+    /// Point-in-time copy of every registered series, sorted by name so
+    /// encoder output (and the golden test pinning it) is deterministic.
+    pub fn snapshot(&self) -> Vec<(String, Sample)> {
+        let mut all = BTreeMap::new();
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            for (name, entry) in shard.iter() {
+                let sample = match entry {
+                    Entry::Counter(c) => Sample::Counter(c.get()),
+                    Entry::Gauge(g) => Sample::Gauge(g.get()),
+                    Entry::Histogram(h) => Sample::Histogram(h.snapshot()),
+                };
+                all.insert(name.clone(), sample);
+            }
+        }
+        all.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_pins() {
+        // Bucket of v is its bit width: 0 stays in bucket 0, powers of
+        // two open a new bucket.
+        for (v, idx) in [
+            (0u64, 0usize),
+            (1, 1),
+            (2, 2),
+            (3, 2),
+            (4, 3),
+            (7, 3),
+            (8, 4),
+            (1023, 10),
+            (1024, 11),
+            (u64::MAX, 64),
+        ] {
+            assert_eq!(bucket_of(v), idx, "bucket_of({v})");
+            if idx > 0 {
+                assert!(v > bucket_upper(idx - 1), "lower edge of bucket {idx}");
+            }
+            assert!(v <= bucket_upper(idx), "upper edge of bucket {idx}");
+        }
+    }
+
+    #[test]
+    fn quantiles_interpolate_inside_the_owning_bucket() {
+        let h = Histogram::new();
+        for v in 1..=8u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 8);
+        assert_eq!(s.sum, 36);
+        // rank ceil(.5*8)=4 lands in bucket 3 ([4,7]) as its first of
+        // four samples: 4 + 1/4 * 3 = 4.75.
+        assert_eq!(s.quantile(0.50), 4.75);
+        assert_eq!(s.quantile_u64(0.50), 5);
+        // rank 8 is the only sample of bucket 4 ([8,15]): 8 + 7 = 15.
+        assert_eq!(s.quantile(0.99), 15.0);
+        assert_eq!(s.quantile(0.0), 1.0);
+        assert_eq!(HistSnapshot::default().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn merged_snapshots_answer_the_pooled_quantile() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in [1u64, 2, 3, 4] {
+            a.record(v);
+        }
+        for v in [100u64, 200, 300, 400] {
+            b.record(v);
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 8);
+        assert_eq!(m.sum, 1010);
+        let pooled = Histogram::new();
+        for v in [1u64, 2, 3, 4, 100, 200, 300, 400] {
+            pooled.record(v);
+        }
+        assert_eq!(m, pooled.snapshot());
+        assert!(m.quantile(0.99) > 256.0, "p99 must come from b's buckets");
+    }
+
+    #[test]
+    fn registry_hands_out_shared_handles() {
+        let r = Registry::new();
+        let c1 = r.counter("a_total");
+        let c2 = r.counter("a_total");
+        assert!(Arc::ptr_eq(&c1, &c2));
+        c1.inc();
+        c2.add(2);
+        assert_eq!(c1.get(), 3);
+        // Kind collision yields a detached instrument, not a panic and
+        // not a silently shared cell of the wrong type.
+        let g = r.gauge("a_total");
+        g.set(9.0);
+        let snap = r.snapshot();
+        assert_eq!(snap, vec![("a_total".into(), Sample::Counter(3))]);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let r = Registry::new();
+        r.gauge("z_gauge").set(-1.5);
+        r.counter("m_total").inc();
+        r.histogram("a_us").record(7);
+        let names: Vec<&str> = r.snapshot().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a_us", "m_total", "z_gauge"]);
+        match &r.snapshot()[2].1 {
+            Sample::Gauge(v) => assert_eq!(*v, -1.5),
+            other => panic!("expected gauge, got {other:?}"),
+        }
+    }
+}

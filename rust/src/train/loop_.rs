@@ -111,10 +111,20 @@ pub fn train(
         None
     };
 
+    // telemetry handles, resolved once (the per-step cost is a few
+    // relaxed atomic stores; posterior training rides this same loop)
+    let telem = crate::telemetry::global();
+    let m_steps = telem.counter("invertnet_train_steps_total");
+    let m_loss = telem.gauge("invertnet_train_loss");
+    let m_gnorm = telem.gauge("invertnet_train_grad_norm");
+    let m_eval = telem.gauge("invertnet_train_eval_nll");
+    let m_peak = telem.gauge("invertnet_train_peak_sched_bytes");
+
     let mut last_eval: Option<f32> = None;
     let dims = flow.def.dims_per_sample();
     let t0 = Instant::now();
     for step in 0..cfg.steps {
+        let step_span = crate::span!("train_step");
         let ts = Instant::now();
         let (x, cond) = next_batch(step)?;
         if step == 0 && !cfg.quiet {
@@ -140,6 +150,10 @@ pub fn train(
         opt.step(params, &result.grads)?;
         peak = peak.max(result.peak_sched_bytes);
         losses.push(result.loss);
+        m_steps.inc();
+        m_loss.set(result.loss as f64);
+        m_gnorm.set(grad_norm as f64);
+        m_peak.set(peak as f64);
 
         // eval-split NLL on the (post-update) parameters, at the
         // configured cadence plus always at the final step
@@ -148,14 +162,17 @@ pub fn train(
             let due = step + 1 == cfg.steps
                 || (cfg.eval_every > 0 && step % cfg.eval_every == 0);
             if due {
+                let _eval_span = crate::span!("train_eval");
                 let scores = flow.log_density(ex, ec.as_ref(), params)
                     .with_context(|| format!("eval split at step {step}"))?;
                 let nll = -(scores.iter().map(|&v| v as f64).sum::<f64>()
                             / scores.len().max(1) as f64) as f32;
                 last_eval = Some(nll);
+                m_eval.set(nll as f64);
                 eval_cell = format!("{nll}");
             }
         }
+        drop(step_span); // close the span before the logging I/O
 
         let ms = ts.elapsed().as_secs_f64() * 1e3;
         if let Some(f) = &mut csv {

@@ -37,6 +37,8 @@
 //! ≲ 2e-6 absolute; asserted at 1e-5 in `tests/parallel_train.rs`), and
 //! one worker with one microbatch is bit-exact.
 
+use std::time::Instant;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::api::Flow;
@@ -129,11 +131,21 @@ impl ParallelTrainer {
         // (peak_sched, peak_total) per worker: max over its microbatches
         let mut worker_peaks = vec![(0i64, 0i64); threads];
 
+        // per-worker wall time and reduction time feed global histograms;
+        // timers and atomics only — the numeric path is untouched, so the
+        // parallel-vs-solo bit-exactness pins hold with telemetry on
+        let worker_hist =
+            crate::telemetry::global().histogram("invertnet_train_worker_us");
+        let reduce_hist =
+            crate::telemetry::global().histogram("invertnet_train_reduce_us");
+
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::with_capacity(threads);
             for w in 0..threads {
                 let worker_flow = flow.fork();
+                let worker_hist = worker_hist.clone();
                 handles.push(scope.spawn(move || -> Result<Vec<(usize, StepResult)>> {
+                    let t_w = Instant::now();
                     let mut done = Vec::new();
                     let mut j = w;
                     while j < n_micro {
@@ -148,6 +160,7 @@ impl ParallelTrainer {
                         done.push((j, r));
                         j += threads;
                     }
+                    worker_hist.record(t_w.elapsed().as_micros() as u64);
                     Ok(done)
                 }));
             }
@@ -187,6 +200,7 @@ impl ParallelTrainer {
         })?;
 
         // ---- deterministic slot-ordered reduction (f64 accumulators) ----
+        let t_reduce = Instant::now();
         let total = n as f64;
         let mut loss = 0.0f64;
         let mut logp = 0.0f64;
@@ -248,6 +262,8 @@ impl ParallelTrainer {
                 Some(Tensor::new(shape, data)?)
             }
         };
+
+        reduce_hist.record(t_reduce.elapsed().as_micros() as u64);
 
         Ok(StepResult {
             loss: loss as f32,

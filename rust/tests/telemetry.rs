@@ -1,0 +1,198 @@
+//! Integration tests for the telemetry spine.
+//!
+//! Contracts under test (see `telemetry` module docs):
+//! * concurrent increments are lossless — counter totals and histogram
+//!   cells are exact under contention, not sampled;
+//! * the Prometheus encoder's output is pinned against a committed
+//!   golden file (`tests/data/metrics_golden.txt`);
+//! * the runtime kill switch makes every instrument inert;
+//! * instrumentation is provably inert numerically: `train_step`,
+//!   `ParallelTrainer`, and threaded `log_density` are bit-identical
+//!   with telemetry enabled and disabled;
+//! * the serve stack answers the `metrics` op with valid exposition
+//!   covering batcher, registry, and per-op latency series.
+
+mod common;
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use common::{batch_for, flow};
+use invertnet::coordinator::ExecMode;
+use invertnet::serve::{BatchConfig, Registry as ServeRegistry, Request,
+                       Response, Server};
+use invertnet::telemetry::{self, bucket_of, Histogram, Registry, Sample};
+use invertnet::train::ParallelTrainer;
+
+/// `telemetry::set_enabled` is process-global and cargo runs the tests in
+/// this binary on parallel threads, so every test that flips the switch
+/// (or asserts exact counts that the switch could suppress) serializes
+/// here.
+static ENABLED_LOCK: Mutex<()> = Mutex::new(());
+
+#[test]
+fn concurrent_increments_sum_exactly() {
+    let _g = ENABLED_LOCK.lock().unwrap();
+    let r = Registry::new();
+    let c = r.counter("contended_total");
+    let h = r.histogram("contended_us");
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 10_000;
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            let c = c.clone();
+            let h = h.clone();
+            s.spawn(move || {
+                for _ in 0..PER_THREAD {
+                    c.inc();
+                    h.record(3);
+                }
+            });
+        }
+    });
+    let total = THREADS as u64 * PER_THREAD;
+    assert_eq!(c.get(), total, "counter dropped increments");
+    let snap = h.snapshot();
+    assert_eq!(snap.count, total);
+    assert_eq!(snap.sum, 3 * total);
+    assert_eq!(snap.buckets[bucket_of(3)], total,
+               "every record lands in one bucket");
+}
+
+#[test]
+fn encoder_matches_the_committed_golden_file() {
+    let _g = ENABLED_LOCK.lock().unwrap();
+    let h = Histogram::new();
+    for v in [0u64, 1, 3, 6] {
+        h.record(v);
+    }
+    let snap = vec![
+        ("golden_gauge".to_string(), Sample::Gauge(2.5)),
+        ("golden_lat_us".to_string(), Sample::Histogram(h.snapshot())),
+        ("golden_total".to_string(), Sample::Counter(7)),
+    ];
+    let text = telemetry::encode::render(&snap);
+    assert_eq!(text, include_str!("data/metrics_golden.txt"),
+               "encoder output drifted from the committed golden file");
+    let fams = telemetry::encode::parse_exposition(&text).unwrap();
+    assert_eq!(fams.len(), 3);
+    assert_eq!(fams[1].kind, "histogram");
+    assert_eq!(fams[1].samples, 7, "5 buckets + sum + count");
+}
+
+#[test]
+fn kill_switch_makes_instruments_inert() {
+    let _g = ENABLED_LOCK.lock().unwrap();
+    let r = Registry::new();
+    let c = r.counter("killed_total");
+    let h = r.histogram("killed_us");
+    let g = r.gauge("killed_gauge");
+    telemetry::set_enabled(false);
+    c.inc();
+    c.add(5);
+    h.record(9);
+    g.set(1.25);
+    telemetry::set_enabled(true);
+    assert_eq!(c.get(), 0);
+    assert_eq!(h.snapshot().count, 0);
+    assert_eq!(g.get(), 0.0);
+    // and the switch is a switch, not a latch
+    c.inc();
+    h.record(2);
+    assert_eq!(c.get(), 1);
+    assert_eq!(h.snapshot().count, 1);
+}
+
+/// The overhead gate's premise: telemetry never touches numeric state.
+/// The same fixed-seed step must be bit-identical with instruments on
+/// and off — single-threaded, data-parallel, and threaded inference.
+#[test]
+fn numeric_pins_hold_with_telemetry_toggled() {
+    let _g = ENABLED_LOCK.lock().unwrap();
+    let flow = flow("realnvp2d");
+    let params = flow.init_params(5).unwrap();
+    let (x, _) = batch_for(&flow, 9);
+
+    let solo_on = flow
+        .train_step(&x, None, &params, &ExecMode::Invertible)
+        .unwrap();
+    let par_on = ParallelTrainer::new(2)
+        .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
+        .unwrap();
+    let tflow = flow.clone().with_threads(2);
+    let ld_on = tflow.log_density(&x, None, &params).unwrap();
+
+    telemetry::set_enabled(false);
+    let solo_off = flow
+        .train_step(&x, None, &params, &ExecMode::Invertible)
+        .unwrap();
+    let par_off = ParallelTrainer::new(2)
+        .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
+        .unwrap();
+    let ld_off = tflow.log_density(&x, None, &params).unwrap();
+    telemetry::set_enabled(true);
+
+    for (on, off, what) in [(&solo_on, &solo_off, "solo"),
+                            (&par_on, &par_off, "parallel")] {
+        assert_eq!(on.loss.to_bits(), off.loss.to_bits(), "{what}: loss");
+        assert_eq!(on.logp_mean.to_bits(), off.logp_mean.to_bits(),
+                   "{what}: logp");
+        assert_eq!(on.peak_sched_bytes, off.peak_sched_bytes,
+                   "{what}: peak");
+        for (si, (ga, gb)) in on.grads.iter().zip(&off.grads).enumerate() {
+            for (pi, (ta, tb)) in ga.iter().zip(gb).enumerate() {
+                assert_eq!(ta.max_abs_diff(tb), 0.0,
+                           "{what}: step {si} param {pi} grads drifted");
+            }
+        }
+    }
+    assert_eq!(ld_on.len(), ld_off.len());
+    for (a, b) in ld_on.iter().zip(&ld_off) {
+        assert_eq!(a.to_bits(), b.to_bits(), "threaded log_density drifted");
+    }
+}
+
+#[test]
+fn serve_answers_the_metrics_op_with_valid_exposition() {
+    let _g = ENABLED_LOCK.lock().unwrap();
+    let registry = ServeRegistry::new(common::engine(), 2);
+    registry.register_untrained("realnvp2d", 3).unwrap();
+    let server = Server::new(registry, BatchConfig {
+        max_batch: 4,
+        max_delay: Duration::from_micros(200),
+        workers: 1,
+        queue_cap: 64,
+    })
+    .allow_untrained();
+
+    // populate both per-op latency histograms before scraping
+    let resp = server.handle(Request::Sample {
+        model: None, n: 1, temperature: 1.0, seed: 1, cond: None,
+    });
+    assert!(!resp.is_error(), "{resp:?}");
+    let resp = server.handle(Request::Score {
+        model: None,
+        x: invertnet::Tensor { shape: vec![1, 2], data: vec![0.1, -0.2] },
+        cond: None,
+    });
+    assert!(!resp.is_error(), "{resp:?}");
+
+    let Response::Metrics { text } = server.handle(Request::Metrics) else {
+        panic!("metrics op did not answer with Response::Metrics");
+    };
+    telemetry::encode::parse_exposition(&text).unwrap();
+    for series in [
+        "invertnet_serve_requests_total",
+        "invertnet_serve_batches_total",
+        "invertnet_serve_queue_depth",
+        "invertnet_serve_batch_rows",
+        "invertnet_serve_sample_latency_us",
+        "invertnet_serve_score_latency_us",
+        "invertnet_registry_loads_total",
+        "invertnet_registry_evictions_total",
+    ] {
+        assert!(text.contains(series), "{series} missing from:\n{text}");
+    }
+    assert!(text.contains("invertnet_serve_requests_total 2"),
+            "exact request count missing from:\n{text}");
+}

@@ -7,11 +7,14 @@ Usage:
     python3 scripts/ci_smoke.py bench     BENCH_quick.json
     python3 scripts/ci_smoke.py lint      /tmp/lint_catalog.json
     python3 scripts/ci_smoke.py lint      /tmp/lint_bad.json expect-errors
+    python3 scripts/ci_smoke.py metrics   /tmp/train_metrics.prom
 
 Each suite checks one kind of artifact:
 
 * ``serve``     — a stdio serve session transcript: sample + score +
-                  stats + shutdown, all ok, with the expected shapes.
+                  stats + metrics + shutdown, all ok, with the expected
+                  shapes and the batcher/queue series in the metrics
+                  reply.
 * ``posterior`` — a posterior-op serve transcript: one posterior reply
                   (mean/std/samples) + shutdown.
 * ``bench``     — a ``BENCH_<suite>.json`` document: schema tag, the
@@ -21,6 +24,9 @@ Each suite checks one kind of artifact:
                   catalog; pass ``expect-errors`` as a third argument to
                   assert the report carries machine-readable diagnostics
                   (the malformed-manifest smoke).
+* ``metrics``   — a ``--metrics-out`` dump from ``train``: well-formed
+                  Prometheus text exposition carrying the required train
+                  and span series.
 
 Exit code 0 on success; an AssertionError message names what broke.
 (Replaces the inline ``python3 -c`` heredocs that used to live in
@@ -37,13 +43,80 @@ def load_lines(path):
         return [json.loads(line) for line in fh if line.strip()]
 
 
+def parse_exposition(text):
+    """Validate Prometheus text exposition; return {family: kind}.
+
+    Mirrors the shape rules of the Rust parser
+    (rust/src/telemetry/encode.rs::parse_exposition): every sample
+    belongs to a declared family, every value parses, every family has
+    at least one sample.
+    """
+    families = {}
+    counts = {}
+    current = None
+    for lineno, line in enumerate(text.splitlines(), 1):
+        line = line.rstrip()
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            parts = line[len("# TYPE "):].split()
+            assert len(parts) == 2, f"line {lineno}: bad TYPE line {line!r}"
+            name, kind = parts
+            assert kind in ("counter", "gauge", "histogram"), (lineno, kind)
+            assert name not in families, f"line {lineno}: dup family {name}"
+            families[name] = kind
+            counts[name] = 0
+            current = name
+            continue
+        if line.startswith("#"):
+            continue
+        series, _, value = line.rpartition(" ")
+        assert series, f"line {lineno}: sample has no value: {line!r}"
+        float(value)  # raises on malformed values
+        name = series.split("{")[0]
+        assert current is not None, f"line {lineno}: sample before TYPE"
+        ok = name == current or (
+            families[current] == "histogram"
+            and name in (f"{current}_bucket", f"{current}_sum",
+                         f"{current}_count"))
+        assert ok, f"line {lineno}: {name!r} outside family {current!r}"
+        counts[current] += 1
+    assert families, "no metric families found"
+    empties = [n for n, c in counts.items() if c == 0]
+    assert not empties, f"families with no samples: {empties}"
+    return families
+
+
 def check_serve(path):
     resp = load_lines(path)
-    assert len(resp) == 4, f"expected 4 replies, got {len(resp)}: {resp}"
+    assert len(resp) == 5, f"expected 5 replies, got {len(resp)}: {resp}"
     assert all(r["ok"] for r in resp), resp
     assert resp[0]["x"]["shape"] == [2, 2], resp[0]
     assert len(resp[1]["log_density"]) == 2, resp[1]
     assert resp[2]["stats"]["requests"] == 2, resp[2]
+    assert "p999_us" in resp[2]["stats"], resp[2]
+    scrape = resp[3]["text"]
+    families = parse_exposition(scrape)
+    for series in ("invertnet_serve_requests_total",
+                   "invertnet_serve_batches_total",
+                   "invertnet_serve_queue_depth",
+                   "invertnet_serve_batch_rows",
+                   "invertnet_serve_sample_latency_us",
+                   "invertnet_serve_score_latency_us"):
+        assert series in families, f"{series} missing from metrics reply"
+
+
+def check_metrics(path):
+    with open(path) as fh:
+        families = parse_exposition(fh.read())
+    for series in ("invertnet_train_steps_total",
+                   "invertnet_train_loss",
+                   "invertnet_train_grad_norm",
+                   "invertnet_train_peak_sched_bytes",
+                   "invertnet_span_train_step_us"):
+        assert series in families, f"{series} missing from {path}"
+    assert families["invertnet_train_steps_total"] == "counter", families
+    assert families["invertnet_span_train_step_us"] == "histogram", families
 
 
 def check_posterior(path):
@@ -111,7 +184,8 @@ def check_lint(path, expect="clean"):
 
 
 CHECKS = {"serve": check_serve, "posterior": check_posterior,
-          "bench": check_bench, "lint": check_lint}
+          "bench": check_bench, "lint": check_lint,
+          "metrics": check_metrics}
 
 
 def main(argv):
