@@ -8,9 +8,26 @@ and pin the same constants the Rust unit tests pin, so a drift on either
 side breaks one of the two suites.
 """
 
+import importlib.util
+import pathlib
+
 import numpy as np
+import pytest
 
 NBUCKETS = 65
+
+
+def _load_ci_smoke():
+    """Import scripts/ci_smoke.py (not a package) by path."""
+    root = pathlib.Path(__file__).resolve().parents[2]
+    spec = importlib.util.spec_from_file_location(
+        "ci_smoke", root / "scripts" / "ci_smoke.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+ci_smoke = _load_ci_smoke()
 
 
 def bucket_of(v):
@@ -135,3 +152,113 @@ def test_merged_histograms_answer_the_pooled_quantile():
     hist_record(pooled, [1, 2, 3, 4, 100, 200, 300, 400])
     assert (merged == pooled).all()
     assert hist_quantile(merged, 8, 0.99) > 256.0
+
+
+def test_exposition_parser_accepts_the_rendered_shape():
+    # the exact shape rust/src/telemetry/encode.rs::render produces
+    text = (
+        '# TYPE demo_gauge gauge\n'
+        'demo_gauge -1.5\n'
+        '# TYPE demo_lat_us histogram\n'
+        'demo_lat_us_bucket{le="0"} 0\n'
+        'demo_lat_us_bucket{le="1"} 1\n'
+        'demo_lat_us_bucket{le="3"} 3\n'
+        'demo_lat_us_bucket{le="+Inf"} 4\n'
+        'demo_lat_us_sum 6\n'
+        'demo_lat_us_count 4\n'
+        '# TYPE demo_total counter\n'
+        'demo_total 42\n'
+    )
+    fams = ci_smoke.parse_exposition(text)
+    assert fams == {"demo_gauge": "gauge", "demo_lat_us": "histogram",
+                    "demo_total": "counter"}
+    labeled = (
+        '# TYPE invertnet_serve_model_requests_total counter\n'
+        'invertnet_serve_model_requests_total{model="realnvp2d"} 2\n'
+        'invertnet_serve_model_requests_total{model="glow16"} 1\n'
+    )
+    assert ci_smoke.parse_exposition(labeled) == {
+        "invertnet_serve_model_requests_total": "counter"}
+
+
+# each case mirrors a pinned rejection in the Rust strict parser
+# (rust/tests/telemetry.rs::exposition_parser_rejects_malformed_inputs
+# _with_pinned_messages) — the two readers must reject the same shapes
+MALFORMED_EXPOSITIONS = [
+    ("truncated-bucket-line",
+     '# TYPE h histogram\nh_bucket{le="1"\n',
+     "sample line has no value"),
+    ("unparsable-bucket-bound",
+     '# TYPE h histogram\nh_bucket{le="one"} 1\n'
+     'h_bucket{le="+Inf"} 1\nh_sum 1\nh_count 1\n',
+     "malformed bucket line"),
+    ("non-cumulative-le-counts",
+     '# TYPE h histogram\nh_bucket{le="1"} 5\nh_bucket{le="2"} 3\n'
+     'h_bucket{le="+Inf"} 5\nh_sum 9\nh_count 5\n',
+     "non-cumulative bucket counts"),
+    ("bucket-bounds-out-of-order",
+     '# TYPE h histogram\nh_bucket{le="2"} 1\nh_bucket{le="1"} 2\n'
+     'h_bucket{le="+Inf"} 2\nh_sum 3\nh_count 2\n',
+     "bucket bounds out of order"),
+    ("count-disagrees-with-inf-bucket",
+     '# TYPE h histogram\nh_bucket{le="1"} 2\n'
+     'h_bucket{le="+Inf"} 2\nh_sum 2\nh_count 3\n',
+     "disagrees"),
+    ("missing-sum",
+     '# TYPE h histogram\nh_bucket{le="1"} 1\n'
+     'h_bucket{le="+Inf"} 1\nh_count 1\n',
+     "_sum or _count"),
+    ("missing-inf-bucket",
+     '# TYPE h histogram\nh_bucket{le="1"} 1\nh_sum 1\nh_count 1\n',
+     'le="+Inf"'),
+    ("nan-sample-value",
+     '# TYPE c counter\nc NaN\n',
+     "NaN sample value"),
+    ("infinite-counter",
+     '# TYPE c counter\nc Inf\n',
+     "non-finite counter value"),
+    ("negative-counter",
+     '# TYPE c counter\nc -4\n',
+     "negative counter value"),
+    ("negative-bucket-count",
+     '# TYPE h histogram\nh_bucket{le="1"} -1\n'
+     'h_bucket{le="+Inf"} 1\nh_sum 1\nh_count 1\n',
+     "negative or non-finite bucket count"),
+    ("sample-before-type",
+     'c 4\n',
+     "sample before any TYPE line"),
+    ("duplicate-family",
+     '# TYPE c counter\nc 1\n# TYPE c counter\nc 2\n',
+     "duplicate family"),
+    ("duplicate-series",
+     '# TYPE c counter\nc 1\nc 2\n',
+     "duplicate series"),
+    ("stray-sample",
+     '# TYPE c counter\nc 1\nd 2\n',
+     "does not belong to family"),
+    ("family-without-samples",
+     '# TYPE c counter\n',
+     "no samples"),
+    ("empty-exposition",
+     '',
+     "no metric families found"),
+    ("bucket-after-inf",
+     '# TYPE h histogram\nh_bucket{le="+Inf"} 1\nh_bucket{le="2"} 1\n'
+     'h_sum 1\nh_count 1\n',
+     'bucket after the le="+Inf" bucket'),
+    ("duplicate-inf-bucket",
+     '# TYPE h histogram\nh_bucket{le="+Inf"} 1\nh_bucket{le="+Inf"} 1\n'
+     'h_sum 1\nh_count 1\n',
+     'duplicate le="+Inf" bucket'),
+]
+
+
+@pytest.mark.parametrize(
+    "text,needle",
+    [case[1:] for case in MALFORMED_EXPOSITIONS],
+    ids=[case[0] for case in MALFORMED_EXPOSITIONS])
+def test_exposition_parser_rejects_malformed_inputs(text, needle):
+    with pytest.raises(AssertionError) as exc:
+        ci_smoke.parse_exposition(text)
+    assert needle in str(exc.value), (
+        f"rejection {exc.value!r} does not mention {needle!r}")

@@ -6,6 +6,8 @@
 //!                   [--mode invertible|stored|checkpoint:K|auto[:BUDGET]]
 //!                   [--threads N] [--microbatch N]
 //! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
+//! invertnet serve   --ckpt runs/x/checkpoint [--log-json F] [--slow-ms MS]
+//! invertnet top     [--url http://127.0.0.1:7878/metrics] [--once]
 //! invertnet bench   --suite quick --check --baseline baselines/quick.json
 //! invertnet bench   fig1|fig2   [--budget-gb 40]
 //! invertnet inspect --net glow16
@@ -59,6 +61,7 @@ USAGE:
                     [--steps N] [--lr F] [--mode invertible|stored|checkpoint:K|auto[:BUDGET]] [--seed N]
                     [--threads N] [--microbatch N] [--out DIR] [--clip F] [--log-every N] [--quiet]
                     [--eval-every N] [--eval-batches B] [--metrics-out FILE] [--trace FILE]
+                    [--log-json FILE|stderr] [--slow-ms MS]
   invertnet sample  --net NAME [--ckpt DIR] [--out FILE.npy] [--batches N] [--seed N]
                     [--temperature F]
   invertnet posterior-train
@@ -78,6 +81,9 @@ USAGE:
   invertnet serve   --ckpt DIR | --net NAME --allow-untrained
                     [--port P | --stdio] [--max-batch N] [--max-delay-us U]
                     [--workers N] [--queue-cap N] [--models N] [--root DIR]
+                    [--log-json FILE|stderr] [--slow-ms MS]
+  invertnet top     [--url http://HOST:PORT/metrics | --file FILE.prom]
+                    [--interval SECS] [--once]
   invertnet score   --ckpt DIR --data FILE.npy [--out FILE.npy] [--cond FILE.npy]
                     [--net NAME] [--allow-untrained] [--seed N]
   invertnet bench   --suite all|quick|memory|throughput|serve|posterior
@@ -124,6 +130,12 @@ SERVING (see README for the JSON-lines protocol):
   --root DIR          lazily load models from DIR/<name>[/checkpoint] on
                       first request for <name>
   --allow-untrained   serve/score randomly initialized weights (loudly)
+  --slow-ms MS        emit a slow_request event for any request whose
+                      end-to-end handling exceeds MS milliseconds
+  requests may carry \"trace_id\" (echoed verbatim on the reply; assigned
+  srv-N otherwise) and \"timing\": true (per-phase microseconds on the
+  reply); {\"op\":\"debug-dump\"} returns the flight-recorder ring; the TCP
+  front also answers GET /healthz (liveness) and GET /readyz (readiness)
 
 BENCH SUITES (see BENCHMARKS.md for the schema and baseline procedure):
   --suite NAME        quick (CI-sized union of all suites), memory,
@@ -157,15 +169,28 @@ OBSERVABILITY (see README \"Observability\" for the metric catalog):
                       process metrics registry as Prometheus text exposition
   --trace FILE        (train / posterior-train) export span timings as a
                       Chrome trace_event JSON — open in chrome://tracing
-                      or Perfetto
+                      or Perfetto; finalized (strictly valid JSON) on
+                      every exit path, including check failures
+  --log-json T        (train / posterior-train / serve) structured event
+                      log (invertnet-event/v1 JSON lines) to T = a file
+                      path or the literal \"stderr\"; rate-limited per
+                      event kind, errors always written
+  --slow-ms MS        (train: slow steps / serve: slow requests) emit a
+                      warn event when a step/request exceeds MS ms
   metrics [FILE]      no FILE: dump this process's live registry; with
                       FILE: validate a --metrics-out dump and summarize
                       its families (exit 1 on malformed exposition)
   profile --json      machine-readable invertnet-profile/v1 report with
                       histogram-derived p50/p99 per (layer, entry)
   serve               answers {\"op\":\"metrics\"} with the exposition text
-                      on the JSON-lines protocol, and a plain-HTTP
-                      `GET /metrics` scrape on the TCP listener
+                      on the JSON-lines protocol, and plain-HTTP
+                      `GET /metrics` + /healthz + /readyz on the TCP
+                      listener; {\"op\":\"debug-dump\"} returns the last
+                      256 events as an invertnet-dump/v1 report
+  top                 live operator dashboard over the /metrics scrape
+                      (or a --metrics-out file): QPS, latency quantiles,
+                      realized batch size, queue depth, per-model rows;
+                      --once prints a single snapshot and exits
 
   --mode auto[:BUDGET]  (train / posterior-train) pick the cheapest-compute
                       schedule whose statically predicted peak fits BUDGET
@@ -249,6 +274,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         Some("calibrate") => cmd_calibrate(&args),
         Some("serve") => cmd_serve(&args),
         Some("score") => cmd_score(&args),
+        Some("top") => cmd_top(&args),
         Some("bench") => cmd_bench(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("lint") => cmd_lint(&args),
@@ -411,16 +437,27 @@ fn trace_setup(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// After the workload: flush the span trace (if `--trace` was given) and
-/// dump the global metrics registry (if `--metrics-out FILE` was given)
-/// as Prometheus text exposition.
+/// After the workload: finalize the span trace (if `--trace` was given;
+/// idempotent, so the unconditional hook in `main.rs` covering error
+/// exits is free to run it again) and dump the global metrics registry
+/// (if `--metrics-out FILE` was given) as Prometheus text exposition.
 fn telemetry_finish(args: &Args) -> Result<()> {
     if args.get("trace").is_some() {
-        crate::telemetry::flush_trace();
+        crate::telemetry::finish_trace();
     }
     if let Some(path) = args.get("metrics-out") {
         crate::telemetry::write_metrics_file(Path::new(path))?;
         eprintln!("metrics -> {path}");
+    }
+    Ok(())
+}
+
+/// `--log-json FILE|stderr`: route the structured event stream
+/// (invertnet-event/v1 JSON lines) before the workload runs.
+fn events_setup(args: &Args) -> Result<()> {
+    if let Some(target) = args.get("log-json") {
+        crate::telemetry::events::configure(target)?;
+        eprintln!("event log -> {target} (invertnet-event/v1)");
     }
     Ok(())
 }
@@ -571,6 +608,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         microbatch,
         eval_set,
         eval_every,
+        slow_step_ms: args.get("slow-ms")
+            .map(|_| args.u64_or("slow-ms", 0)).transpose()?,
     };
 
     eprintln!(
@@ -583,6 +622,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.threads,
     );
     trace_setup(args)?;
+    events_setup(args)?;
     let report = train(&flow, &mut params, &mut opt, &cfg, next)?;
     println!(
         "final_loss {:.4}{}  peak_sched {}  {:.2} steps/s",
@@ -656,6 +696,7 @@ fn cmd_posterior_train(args: &Args) -> Result<()> {
         params.param_count(), sim.name(), sim.x_dim(), sim.y_dim(),
         cfg.steps, flow.backend_name());
     trace_setup(args)?;
+    events_setup(args)?;
     let report = amortized_train(&flow, &mut params, &sim, &cfg)?;
     println!("final_loss {:.4}{}  {:.2} steps/s",
              report.final_loss,
@@ -866,9 +907,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     eprintln!(
         "micro-batching: max-batch {}, max-delay {}us, {} workers",
         cfg.max_batch, cfg.max_delay.as_micros(), cfg.workers);
+    events_setup(args)?;
     let mut server = Server::new(registry, cfg);
     if allow_untrained {
         server = server.allow_untrained();
+    }
+    if let Some(ms) = args.get("slow-ms") {
+        let ms: u64 = ms.parse().map_err(
+            |e| usage_err(format!("--slow-ms MS — bad MS: {e}")))?;
+        server = server.slow_ms(ms);
     }
 
     if args.flag("stdio") {
@@ -922,6 +969,156 @@ fn cmd_score(args: &Args) -> Result<()> {
     npy::save(Path::new(out), &Tensor::new(vec![n], scores)?)?;
     println!("scored {n} samples  mean log-density {mean:.4}  -> {out}");
     Ok(())
+}
+
+/// One-shot HTTP/1.0 GET against the serve front (one request per
+/// connection, no keep-alive — exactly what [`Server::http_scrape`]
+/// speaks). Returns the body of a 200 response.
+fn http_get(url: &str) -> Result<String> {
+    use std::io::{Read, Write};
+    let rest = url.strip_prefix("http://").ok_or_else(|| usage_err(
+        format!("--url must start with http://, got {url:?}")))?;
+    let (host, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, "/metrics"),
+    };
+    let mut stream = std::net::TcpStream::connect(host)
+        .with_context(|| format!("connecting to {host}"))?;
+    write!(stream, "GET {path} HTTP/1.0\r\n\r\n")?;
+    stream.flush()?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)
+        .with_context(|| format!("reading response from {url}"))?;
+    let (head, body) = resp.split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow!("malformed HTTP response from {url}"))?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains(" 200 ") {
+        bail!("{url} answered {status:?}: {}", body.trim());
+    }
+    Ok(body.to_string())
+}
+
+/// Render one `invertnet top` frame from a parsed exposition. `prev`
+/// carries the previous scrape's request counter and its age, turning
+/// two snapshots into a QPS rate.
+fn top_frame(vals: &std::collections::BTreeMap<String, crate::telemetry::encode::Value>,
+             prev: Option<(f64, f64)>) -> String {
+    use crate::telemetry::encode::Value;
+    use std::fmt::Write as _;
+    let num = |name: &str| match vals.get(name) {
+        Some(Value::Counter(v)) | Some(Value::Gauge(v)) => *v,
+        _ => 0.0,
+    };
+    let hist = |name: &str| match vals.get(name) {
+        Some(Value::Histogram(h)) => Some(h),
+        _ => None,
+    };
+    let requests = num("invertnet_serve_requests_total");
+    let batches = num("invertnet_serve_batches_total");
+    let errors = num("invertnet_serve_errors_total");
+    let depth = num("invertnet_serve_queue_depth");
+    let models = num("invertnet_serve_models");
+    let qps = match prev {
+        Some((prev_requests, dt)) if dt > 0.0 =>
+            format!("{:8.1}", (requests - prev_requests).max(0.0) / dt),
+        _ => format!("{:>8}", "-"),
+    };
+    let realized = if batches > 0.0 { requests / batches } else { 0.0 };
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "invertnet top  requests {requests:.0}  errors {errors:.0}  \
+         qps {qps}  queue {depth:.0}  models {models:.0}  \
+         realized_batch {realized:.2}");
+    let _ = writeln!(
+        out, "{:<34} {:>8} {:>10} {:>10} {:>10}",
+        "latency (us)", "count", "p50", "p99", "p99.9");
+    for (label, family) in [
+        ("sample", "invertnet_serve_sample_latency_us"),
+        ("score", "invertnet_serve_score_latency_us"),
+        ("phase: queue_wait", "invertnet_serve_phase_queue_wait_us"),
+        ("phase: batch_assembly", "invertnet_serve_phase_batch_assembly_us"),
+        ("phase: execute", "invertnet_serve_phase_execute_us"),
+        ("phase: encode", "invertnet_serve_phase_encode_us"),
+    ] {
+        if let Some(h) = hist(family) {
+            let _ = writeln!(
+                out, "{label:<34} {:>8.0} {:>10.0} {:>10.0} {:>10.0}",
+                h.count, h.quantile(0.5), h.quantile(0.99),
+                h.quantile(0.999));
+        }
+    }
+    // per-model rows come from the labeled counter series
+    let model_prefix = "invertnet_serve_model_requests_total{model=\"";
+    let mut wrote_header = false;
+    for (series, value) in vals.range::<str, _>((
+        std::ops::Bound::Included(model_prefix),
+        std::ops::Bound::Unbounded,
+    )) {
+        let Some(rest) = series.strip_prefix(model_prefix) else { break };
+        let Some(model) = rest.strip_suffix("\"}") else { continue };
+        if !wrote_header {
+            let _ = writeln!(out, "{:<34} {:>8} {:>10}",
+                             "model", "requests", "rows");
+            wrote_header = true;
+        }
+        let (Value::Counter(reqs) | Value::Gauge(reqs)) = value else {
+            continue;
+        };
+        let rows = num(&format!(
+            "invertnet_serve_model_rows_total{{model=\"{model}\"}}"));
+        let _ = writeln!(out, "{model:<34} {reqs:>8.0} {rows:>10.0}");
+    }
+    out
+}
+
+/// `invertnet top` — live operator view over the Prometheus exposition,
+/// scraped from a running server (`--url`) or read from a `--metrics-out`
+/// style file (`--file`). Default: clear-and-redraw every `--interval`
+/// seconds; `--once` prints a single plain snapshot and exits (CI).
+fn cmd_top(args: &Args) -> Result<()> {
+    let file = args.get("file");
+    let url = args.str_or("url", "http://127.0.0.1:7878/metrics");
+    if file.is_some() && args.get("url").is_some() {
+        return Err(usage_err("pass --url or --file, not both".into()));
+    }
+    let interval = args.f64_or("interval", 2.0)?;
+    if !(interval > 0.0) {
+        return Err(usage_err(format!(
+            "--interval must be positive, got {interval}")));
+    }
+    let scrape = || -> Result<String> {
+        match file {
+            Some(path) => std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}")),
+            None => http_get(url),
+        }
+    };
+    let frame = |prev: Option<(f64, f64)>| -> Result<(String, f64)> {
+        let text = scrape()?;
+        let vals = crate::telemetry::encode::parse_values(&text)
+            .map_err(|e| anyhow!("invalid exposition: {e:#}"))?;
+        let requests = match vals.get("invertnet_serve_requests_total") {
+            Some(crate::telemetry::encode::Value::Counter(v)) => *v,
+            _ => 0.0,
+        };
+        Ok((top_frame(&vals, prev), requests))
+    };
+    if args.flag("once") {
+        let (text, _) = frame(None)?;
+        print!("{text}");
+        return Ok(());
+    }
+    let mut prev: Option<(f64, f64)> = None;
+    loop {
+        let (text, requests) = frame(prev)?;
+        // clear screen + home, then the frame (plain ANSI, no deps)
+        print!("\x1b[2J\x1b[H{text}");
+        use std::io::Write;
+        std::io::stdout().flush()?;
+        std::thread::sleep(Duration::from_secs_f64(interval));
+        prev = Some((requests, interval));
+    }
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
@@ -1452,6 +1649,66 @@ mod tests {
         assert!(err.to_string().contains("--ckpt"), "{err:#}");
     }
 
+    /// A serve-flavored exposition, as `/metrics` would answer it.
+    const TOP_SCRAPE: &str = "\
+# TYPE invertnet_serve_requests_total counter
+invertnet_serve_requests_total 12
+# TYPE invertnet_serve_batches_total counter
+invertnet_serve_batches_total 4
+# TYPE invertnet_serve_errors_total counter
+invertnet_serve_errors_total 1
+# TYPE invertnet_serve_queue_depth gauge
+invertnet_serve_queue_depth 2
+# TYPE invertnet_serve_models gauge
+invertnet_serve_models 1
+# TYPE invertnet_serve_sample_latency_us histogram
+invertnet_serve_sample_latency_us_bucket{le=\"127\"} 8
+invertnet_serve_sample_latency_us_bucket{le=\"255\"} 12
+invertnet_serve_sample_latency_us_bucket{le=\"+Inf\"} 12
+invertnet_serve_sample_latency_us_sum 1200
+invertnet_serve_sample_latency_us_count 12
+# TYPE invertnet_serve_model_requests_total counter
+invertnet_serve_model_requests_total{model=\"realnvp2d\"} 12
+# TYPE invertnet_serve_model_rows_total counter
+invertnet_serve_model_rows_total{model=\"realnvp2d\"} 24
+";
+
+    #[test]
+    fn top_renders_a_frame_and_rejects_conflicting_sources() {
+        let vals =
+            crate::telemetry::encode::parse_values(TOP_SCRAPE).unwrap();
+        // cold frame: no previous scrape, so QPS is a dash
+        let cold = top_frame(&vals, None);
+        assert!(cold.contains("requests 12"), "{cold}");
+        assert!(cold.contains("realized_batch 3.00"), "{cold}");
+        assert!(cold.contains("sample"), "{cold}");
+        assert!(cold.contains("realnvp2d"), "{cold}");
+        assert!(cold.contains("24"), "per-model rows column: {cold}");
+        // warm frame: 12 requests total, 2 seen last frame, 5s apart
+        let warm = top_frame(&vals, Some((2.0, 5.0)));
+        assert!(warm.contains("2.0  queue"), "(12-2)/5 qps: {warm}");
+        // the CLI path renders the same frame off --file --once
+        let path = std::env::temp_dir()
+            .join(format!("invertnet_top_{}.prom", std::process::id()));
+        std::fs::write(&path, TOP_SCRAPE).unwrap();
+        run(&argv(&["top", "--file", path.to_str().unwrap(), "--once"]))
+            .unwrap();
+        // conflicting sources and degenerate intervals are usage errors
+        let err = run(&argv(&["top", "--file", path.to_str().unwrap(),
+                              "--url", "http://x/", "--once"]))
+            .unwrap_err();
+        assert_eq!(exit_code(&err), 2, "{err:#}");
+        let err = run(&argv(&["top", "--file", path.to_str().unwrap(),
+                              "--interval", "0", "--once"]))
+            .unwrap_err();
+        assert_eq!(exit_code(&err), 2, "{err:#}");
+        std::fs::remove_file(&path).ok();
+        // an unreadable --file is a runtime error, not a panic
+        let err = run(&argv(&["top", "--file", "/nonexistent.prom",
+                              "--once"])).unwrap_err();
+        assert_eq!(exit_code(&err), 1, "{err:#}");
+    }
+
     #[test]
     fn score_refuses_untrained_weights_without_opt_in() {
         let err = run(&argv(&["score", "--net", "realnvp2d",
@@ -1621,10 +1878,16 @@ mod tests {
                        "invertnet_span_train_step_us"] {
             assert!(text.contains(series), "{series} missing:\n{text}");
         }
-        // the trace holds at least the train_step spans, as JSON events
+        // the trace holds at least the train_step spans — and because
+        // telemetry_finish routes through finish_trace, the array is
+        // closed: the file is strictly valid JSON, not just Chrome's
+        // comma-tolerant dialect
         let tr = std::fs::read_to_string(&trace).unwrap();
         assert!(tr.starts_with("[\n"), "{tr}");
         assert!(tr.contains("\"name\":\"train_step\""), "{tr}");
+        let doc = Json::parse(&tr).unwrap();
+        let Json::Arr(events) = doc else { panic!("not an array: {tr}") };
+        assert!(!events.is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

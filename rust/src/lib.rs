@@ -62,9 +62,14 @@
 //! * [`telemetry`] — the observability spine: a lock-sharded metrics
 //!   registry (relaxed-atomic counters/gauges/log2-bucket histograms),
 //!   RAII [`span!`](crate::span) timers with optional Chrome
-//!   `trace_event` export (`--trace FILE`), and a Prometheus
+//!   `trace_event` export (`--trace FILE`, finalized on every exit
+//!   path), a leveled JSON-lines event log with a flight-recorder ring
+//!   ([`telemetry::events`], `--log-json`), and a Prometheus
 //!   text-exposition encoder behind the serve `metrics` op, a plain
-//!   `GET` TCP scrape, `--metrics-out FILE`, and `invertnet metrics`.
+//!   `GET` TCP scrape (`/metrics`, `/healthz`, `/readyz`),
+//!   `--metrics-out FILE`, `invertnet metrics`, and the `invertnet top`
+//!   live operator view. Serve requests are trace-scoped end to end
+//!   (client `trace_id` echo, per-phase timing histograms).
 //! * [`posterior`] — amortized Bayesian inference: a simulator catalog of
 //!   synthetic inverse problems ([`posterior::Simulator`]), the amortized
 //!   training driver ([`posterior::amortized_train`]), posterior

@@ -5,7 +5,8 @@
 //! invertnet train   --net realnvp2d --data two-moons --steps 500
 //!                   [--mode invertible|stored|checkpoint:K|auto[:BUDGET]]
 //!                   [--threads N] [--microbatch N] [--eval-every N]
-//!                   [--metrics-out FILE] [--trace FILE]
+//!                   [--metrics-out FILE] [--trace FILE] [--log-json FILE]
+//!                   [--slow-ms MS]
 //! invertnet sample  --net realnvp2d --ckpt runs/x/checkpoint --out samples.npy
 //! invertnet posterior-train  --sim linear-gaussian --out runs/post
 //! invertnet posterior-sample --ckpt runs/post/checkpoint --y 0.7,-0.4 --n 256
@@ -13,7 +14,10 @@
 //!                            [--datasets 128] [--draws 63] [--check]
 //! invertnet serve   --ckpt runs/x/checkpoint [--port 7878 | --stdio]
 //!                   [--max-batch 8] [--max-delay-us 500] [--workers 2]
+//!                   [--log-json FILE|stderr] [--slow-ms MS]
 //! invertnet score   --ckpt runs/x/checkpoint --data x.npy --out scores.npy
+//! invertnet top     [--url http://127.0.0.1:7878/metrics | --file F.prom]
+//!                   [--interval SECS] [--once]
 //! invertnet bench   --suite all|quick|memory|throughput|serve|posterior
 //!                   [--out FILE|DIR] [--baseline FILE|DIR] [--check] [--tol 5]
 //! invertnet bench   fig1|fig2 [--budget-gb 40]
@@ -33,7 +37,12 @@
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = invertnet::app::run(&argv) {
+    let result = invertnet::app::run(&argv);
+    // the single exit hook, on EVERY path — success, check failure, usage
+    // error, runtime error: finalize the Chrome trace (if one is open) so
+    // the emitted file is valid JSON even when the verb bailed early
+    invertnet::telemetry::finish_trace();
+    if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(invertnet::app::exit_code(&e));
     }

@@ -120,6 +120,7 @@ pub fn amortized_train(
         microbatch: cfg.microbatch,
         eval_set,
         eval_every: cfg.eval_every,
+        slow_step_ms: None,
     };
 
     let mut rng = Pcg64::new(cfg.seed ^ TRAIN_STREAM);

@@ -33,9 +33,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::telemetry::events::{self, Level};
 use crate::telemetry::{Counter, Gauge, Histogram, Sample};
 use crate::tensor::ops::{concat_rows, slice_rows};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 
 use super::protocol::StatsSnapshot;
 use super::registry::ServedModel;
@@ -92,9 +94,28 @@ impl Work {
 }
 
 /// What comes back: one batch row-slice per job.
-pub enum Reply {
+pub enum ReplyPayload {
     Samples(Tensor),
     Scores(Vec<f32>),
+}
+
+/// Batch-side phase timings attached to every reply so the server can
+/// assemble the request's `timing` block and feed the phase histograms.
+/// `queue_wait_us` is per-job (enqueue → the worker taking its group);
+/// `assembly_us`/`execute_us` are shared by every job of the batch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchTimes {
+    pub queue_wait_us: u64,
+    pub assembly_us: u64,
+    pub execute_us: u64,
+    pub batch_jobs: u64,
+    pub batch_rows: u64,
+}
+
+/// One coalesced answer: the payload slice plus its batch timings.
+pub struct Reply {
+    pub payload: ReplyPayload,
+    pub times: BatchTimes,
 }
 
 struct Job {
@@ -102,6 +123,10 @@ struct Job {
     work: Work,
     tx: Sender<Result<Reply>>,
     t_enq: Instant,
+    /// Request trace id, carried front → queue → worker so events fired
+    /// from the batch side can name the requests they served. Empty for
+    /// untraced internal callers.
+    trace_id: String,
 }
 
 /// Jobs batch together iff same resident model instance + same op.
@@ -112,6 +137,21 @@ fn group_of(j: &Job) -> (usize, u8) {
 // ---------------------------------------------------------------------------
 // Serving metrics
 // ---------------------------------------------------------------------------
+
+/// Indices into [`ServeStats`]' per-phase histograms. One histogram per
+/// request-lifecycle phase, exported as `invertnet_serve_phase_<p>_us`.
+/// The server records `parse`/`validate`/`encode` (front-side), the
+/// batcher records `queue_wait`/`batch_assembly`/`execute` (batch-side).
+pub mod phase {
+    pub const PARSE: usize = 0;
+    pub const VALIDATE: usize = 1;
+    pub const QUEUE_WAIT: usize = 2;
+    pub const BATCH_ASSEMBLY: usize = 3;
+    pub const EXECUTE: usize = 4;
+    pub const ENCODE: usize = 5;
+    pub const NAMES: [&str; 6] =
+        ["parse", "validate", "queue_wait", "batch_assembly", "execute", "encode"];
+}
 
 /// Serving metrics on telemetry primitives: relaxed-atomic counters plus
 /// per-op log2-bucket latency histograms. This replaced a bounded latency
@@ -134,6 +174,12 @@ pub struct ServeStats {
     batch_rows: Histogram,
     queue_depth: Gauge,
     models: Gauge,
+    /// Per-phase request-lifecycle timings, indexed by [`phase`].
+    phases: [Histogram; 6],
+    /// Per-model request/row totals, exported as the labeled counter
+    /// families `invertnet_serve_model_{requests,rows}_total`. Touched
+    /// once per *batch* (not per request), so the lock is cold.
+    per_model: Mutex<std::collections::BTreeMap<String, (u64, u64)>>,
 }
 
 impl ServeStats {
@@ -147,6 +193,21 @@ impl ServeStats {
 
     fn record_latency(&self, op: u8, us: u64) {
         self.lat_us[(op as usize).min(1)].record(us);
+    }
+
+    /// Record one request-lifecycle phase duration (see [`phase`]).
+    pub fn record_phase(&self, p: usize, us: u64) {
+        self.phases[p.min(phase::NAMES.len() - 1)].record(us);
+    }
+
+    fn record_model(&self, model: &str, jobs: u64, rows: u64) {
+        if !crate::telemetry::enabled() {
+            return;
+        }
+        let mut m = self.per_model.lock().unwrap();
+        let e = m.entry(model.to_string()).or_insert((0, 0));
+        e.0 += jobs;
+        e.1 += rows;
     }
 
     pub fn record_error(&self) {
@@ -183,7 +244,7 @@ impl ServeStats {
 
     /// This instance's series for the metrics scrape, sorted by name.
     pub fn samples(&self) -> Vec<(String, Sample)> {
-        vec![
+        let mut out = vec![
             ("invertnet_serve_batch_jobs".to_string(),
              Sample::Histogram(self.batch_jobs.snapshot())),
             ("invertnet_serve_batch_rows".to_string(),
@@ -204,7 +265,28 @@ impl ServeStats {
              Sample::Histogram(self.lat_us[0].snapshot())),
             ("invertnet_serve_score_latency_us".to_string(),
              Sample::Histogram(self.lat_us[1].snapshot())),
-        ]
+        ];
+        for (i, name) in phase::NAMES.iter().enumerate() {
+            out.push((format!("invertnet_serve_phase_{name}_us"),
+                      Sample::Histogram(self.phases[i].snapshot())));
+        }
+        // per-model breakdowns; a family with zero rows would render no
+        // samples (which the parser rejects), so skip them before any
+        // traffic has been served
+        let per_model = self.per_model.lock().unwrap();
+        if !per_model.is_empty() {
+            let reqs: Vec<(String, u64)> =
+                per_model.iter().map(|(m, (j, _))| (m.clone(), *j)).collect();
+            let rows: Vec<(String, u64)> =
+                per_model.iter().map(|(m, (_, r))| (m.clone(), *r)).collect();
+            out.push(("invertnet_serve_model_requests_total".to_string(),
+                      Sample::LabeledCounter { label: "model", values: reqs }));
+            out.push(("invertnet_serve_model_rows_total".to_string(),
+                      Sample::LabeledCounter { label: "model", values: rows }));
+        }
+        drop(per_model);
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 }
 
@@ -262,17 +344,42 @@ impl Batcher {
         self.shared.queue.lock().unwrap().len()
     }
 
+    /// The configured queue bound (readiness checks compare depth to it).
+    pub fn queue_cap(&self) -> usize {
+        self.shared.cfg.queue_cap
+    }
+
+    /// True while the full worker pool is running — a panicked or joined
+    /// worker flips this, and `readyz` reports the daemon unready.
+    pub fn workers_alive(&self) -> bool {
+        !self.workers.is_empty() && self.workers.iter().all(|h| !h.is_finished())
+    }
+
     /// Enqueue one job and return the receiver its reply will land on.
     /// Blocks while the queue is at capacity (bounded backpressure); gives
     /// up with an error after 30s so a wedged server can't strand clients.
     pub fn submit(&self, model: Arc<ServedModel>, work: Work)
                   -> Result<Receiver<Result<Reply>>> {
+        self.submit_traced(model, work, String::new())
+    }
+
+    /// [`submit`](Self::submit) with the request's trace id attached to
+    /// the job, so batch-side events can name the requests they served.
+    pub fn submit_traced(&self, model: Arc<ServedModel>, work: Work,
+                         trace_id: String)
+                         -> Result<Receiver<Result<Reply>>> {
         if work.rows() == 0 {
             bail!("empty request (0 rows)");
         }
         let (tx, rx) = channel();
-        let job = Job { model, work, tx, t_enq: Instant::now() };
+        let job = Job { model, work, tx, t_enq: Instant::now(), trace_id };
         let mut q = self.shared.queue.lock().unwrap();
+        if q.len() >= self.shared.cfg.queue_cap {
+            events::emit(Level::Warn, "queue_saturated", vec![
+                ("depth", Json::Num(q.len() as f64)),
+                ("cap", Json::Num(self.shared.cfg.queue_cap as f64)),
+            ]);
+        }
         while q.len() >= self.shared.cfg.queue_cap {
             if self.shared.stop.load(Ordering::Relaxed) {
                 bail!("server is shutting down");
@@ -385,24 +492,59 @@ fn execute_batch(jobs: Vec<Job>, stats: &ServeStats) {
     if jobs.is_empty() {
         return;
     }
+    let t_taken = Instant::now();
     let rows: Vec<usize> = jobs.iter().map(|j| j.work.rows()).collect();
     let total: usize = rows.iter().sum();
     let op = jobs[0].work.op_tag();
+    let n_jobs = jobs.len();
+    let model_name = jobs[0].model.name.clone();
+    let oldest = jobs
+        .iter()
+        .max_by_key(|j| t_taken.duration_since(j.t_enq))
+        .expect("non-empty batch");
+    let oldest_wait_us = t_taken.duration_since(oldest.t_enq).as_micros() as u64;
+    let oldest_trace = oldest.trace_id.clone();
     let result = {
         let _sp = crate::span!("serve_batch");
         run_batch(&jobs, &rows)
     };
-    stats.record_batch(jobs.len(), total);
+    stats.record_batch(n_jobs, total);
+    stats.record_model(&model_name, n_jobs as u64, total as u64);
     match result {
-        Ok(replies) => {
-            for (job, reply) in jobs.into_iter().zip(replies) {
+        Ok((payloads, assembly_us, execute_us)) => {
+            stats.record_phase(phase::BATCH_ASSEMBLY, assembly_us);
+            stats.record_phase(phase::EXECUTE, execute_us);
+            events::emit(Level::Info, "batch_fired", vec![
+                ("model", Json::Str(model_name)),
+                ("jobs", Json::Num(n_jobs as f64)),
+                ("rows", Json::Num(total as f64)),
+                ("oldest_wait_us", Json::Num(oldest_wait_us as f64)),
+                ("oldest_trace_id", Json::Str(oldest_trace)),
+            ]);
+            for (job, payload) in jobs.into_iter().zip(payloads) {
+                let queue_wait_us =
+                    t_taken.duration_since(job.t_enq).as_micros() as u64;
+                stats.record_phase(phase::QUEUE_WAIT, queue_wait_us);
                 let us = job.t_enq.elapsed().as_micros() as u64;
                 stats.record_latency(op, us);
-                let _ = job.tx.send(Ok(reply)); // receiver may have left
+                let times = BatchTimes {
+                    queue_wait_us,
+                    assembly_us,
+                    execute_us,
+                    batch_jobs: n_jobs as u64,
+                    batch_rows: total as u64,
+                };
+                // receiver may have left
+                let _ = job.tx.send(Ok(Reply { payload, times }));
             }
         }
         Err(e) => {
             let msg = format!("{e:#}");
+            events::emit(Level::Error, "batch_error", vec![
+                ("model", Json::Str(model_name)),
+                ("jobs", Json::Num(n_jobs as f64)),
+                ("error", Json::Str(msg.clone())),
+            ]);
             for job in jobs {
                 stats.record_error();
                 let _ = job.tx.send(Err(anyhow!("{msg}")));
@@ -418,11 +560,13 @@ fn execute_batch(jobs: Vec<Job>, stats: &ServeStats) {
 /// fork inherits the engine's inference thread count, so a pass larger
 /// than the network's canonical batch additionally chunks across the
 /// intra-pass worker pool (see the module docs), still bit-identically.
-fn run_batch(jobs: &[Job], rows: &[usize]) -> Result<Vec<Reply>> {
+fn run_batch(jobs: &[Job], rows: &[usize])
+             -> Result<(Vec<ReplyPayload>, u64, u64)> {
     let model = &jobs[0].model;
     let flow = model.flow.fork();
     match &jobs[0].work {
         Work::Sample { .. } => {
+            let t_asm = Instant::now();
             let n_sites = flow.def.latent_shapes.len();
             let mut cat_sites = Vec::with_capacity(n_sites);
             for site in 0..n_sites {
@@ -433,31 +577,36 @@ fn run_batch(jobs: &[Job], rows: &[usize]) -> Result<Vec<Reply>> {
                 cat_sites.push(concat_rows(&parts)?);
             }
             let cond = batch_cond(jobs)?;
+            let assembly_us = t_asm.elapsed().as_micros() as u64;
+            let t_exec = Instant::now();
             let x = flow.invert_flex(&cat_sites, cond.as_ref(),
                                      &model.params, true)?;
             let mut out = Vec::with_capacity(jobs.len());
             let mut off = 0;
             for &n in rows {
-                out.push(Reply::Samples(slice_rows(&x, off, n)?));
+                out.push(ReplyPayload::Samples(slice_rows(&x, off, n)?));
                 off += n;
             }
-            Ok(out)
+            Ok((out, assembly_us, t_exec.elapsed().as_micros() as u64))
         }
         Work::Score { .. } => {
+            let t_asm = Instant::now();
             let parts: Vec<&Tensor> = jobs.iter().map(|j| match &j.work {
                 Work::Score { x, .. } => x,
                 Work::Sample { .. } => unreachable!("mixed batch group"),
             }).collect();
             let x = concat_rows(&parts)?;
             let cond = batch_cond(jobs)?;
+            let assembly_us = t_asm.elapsed().as_micros() as u64;
+            let t_exec = Instant::now();
             let scores = flow.log_density(&x, cond.as_ref(), &model.params)?;
             let mut out = Vec::with_capacity(jobs.len());
             let mut off = 0;
             for &n in rows {
-                out.push(Reply::Scores(scores[off..off + n].to_vec()));
+                out.push(ReplyPayload::Scores(scores[off..off + n].to_vec()));
                 off += n;
             }
-            Ok(out)
+            Ok((out, assembly_us, t_exec.elapsed().as_micros() as u64))
         }
     }
 }
@@ -518,7 +667,10 @@ mod tests {
         }).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
             let i = i as u64;
-            let Reply::Scores(got) = rx.recv().unwrap().unwrap() else {
+            let reply = rx.recv().unwrap().unwrap();
+            assert!(reply.times.batch_jobs >= 1, "{:?}", reply.times);
+            assert!(reply.times.batch_rows as usize >= 1, "{:?}", reply.times);
+            let ReplyPayload::Scores(got) = reply.payload else {
                 panic!("wrong reply kind")
             };
             let Work::Score { x, .. } = score_work(&m, 100 + i,
@@ -534,6 +686,28 @@ mod tests {
         let snap = stats.snapshot(0, 1);
         assert_eq!(snap.requests, 6);
         assert!(snap.batches <= 6);
+
+        // batch-side phase histograms and per-model counters rode along
+        let samples = stats.samples();
+        let (_, qw) = samples
+            .iter()
+            .find(|(n, _)| n == "invertnet_serve_phase_queue_wait_us")
+            .expect("phase histogram exported");
+        match qw {
+            Sample::Histogram(h) => assert_eq!(h.count, 6, "one per job"),
+            other => panic!("expected histogram, got {other:?}"),
+        }
+        let (_, pm) = samples
+            .iter()
+            .find(|(n, _)| n == "invertnet_serve_model_requests_total")
+            .expect("per-model counter exported");
+        match pm {
+            Sample::LabeledCounter { label, values } => {
+                assert_eq!(*label, "model");
+                assert_eq!(values, &[("realnvp2d".to_string(), 6)]);
+            }
+            other => panic!("expected labeled counter, got {other:?}"),
+        }
     }
 
     #[test]

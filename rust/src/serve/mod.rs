@@ -43,7 +43,7 @@ pub mod protocol;
 pub mod registry;
 pub mod server;
 
-pub use batcher::{BatchConfig, Batcher, ServeStats};
-pub use protocol::{Request, Response, StatsSnapshot};
+pub use batcher::{BatchConfig, BatchTimes, Batcher, ReplyPayload, ServeStats};
+pub use protocol::{decorate, ReqMeta, Request, Response, StatsSnapshot, Timing};
 pub use registry::{Registry, ServedModel};
 pub use server::Server;

@@ -12,8 +12,16 @@
 //!                                              n(64) seed(0) temperature(1)
 //! {"op":"stats"}
 //! {"op":"metrics"}
+//! {"op":"debug-dump"}
 //! {"op":"shutdown"}
 //! ```
+//!
+//! Any request may additionally carry two meta fields ([`ReqMeta`]):
+//! `"trace_id":"..."` names the request in phase histograms and events
+//! (assigned by the server when absent), and `"timing":true` asks the
+//! server to echo the per-phase [`Timing`] block. Both are additive —
+//! they add response keys but never change payload fields, so
+//! micro-batching stays bit-invisible with tracing on.
 //!
 //! Responses always carry `"ok"`:
 //!
@@ -24,6 +32,7 @@
 //!  "x":{"shape":[64,2],"data":[...]}}          x only with "samples":true
 //! {"ok":true,"op":"stats","stats":{...}}
 //! {"ok":true,"op":"metrics","text":"# TYPE ...\n..."}
+//! {"ok":true,"op":"debug-dump","report":{...}}  invertnet-dump/v1 report
 //! {"ok":true,"op":"shutdown"}
 //! {"ok":false,"error":"..."}
 //! ```
@@ -86,8 +95,99 @@ pub enum Request {
     Stats,
     /// Full telemetry scrape as Prometheus text exposition.
     Metrics,
+    /// Flight-recorder dump: the last N structured events as an
+    /// `invertnet-dump/v1` incident report.
+    DebugDump,
     /// Stop the server after responding.
     Shutdown,
+}
+
+/// Request metadata that rides alongside any op: an optional
+/// client-supplied `"trace_id"` (the server assigns one when absent) and
+/// the `"timing":true` flag asking for the per-phase [`Timing`] block in
+/// the response. Parsed from the same JSON object as the [`Request`] but
+/// kept separate so the op payloads (and their bit-exactness contracts)
+/// are untouched by tracing.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReqMeta {
+    pub trace_id: Option<String>,
+    pub timing: bool,
+}
+
+impl ReqMeta {
+    pub fn from_json(j: &Json) -> Result<ReqMeta> {
+        let trace_id = match j.get("trace_id") {
+            None => None,
+            Some(v) => {
+                let s = v.as_str()?;
+                if s.is_empty() || s.len() > 128 {
+                    bail!("trace_id must be 1..=128 characters, \
+                           got {} bytes", s.len());
+                }
+                if s.chars().any(|c| c.is_control()) {
+                    bail!("trace_id must not contain control characters");
+                }
+                Some(s.to_string())
+            }
+        };
+        let timing = match j.get("timing") {
+            None => false,
+            Some(Json::Bool(b)) => *b,
+            Some(other) => bail!("timing flag must be a bool, got {other:?}"),
+        };
+        Ok(ReqMeta { trace_id, timing })
+    }
+}
+
+/// Per-phase request timing echoed when the request set `"timing":true`.
+/// All microseconds. `queue_wait`/`batch_assembly`/`execute` come from
+/// the batch side ([`super::batcher::BatchTimes`]) and are zero for ops
+/// that never queue (`stats`, `metrics`, ...). There is deliberately no
+/// `encode_us` field: the block is serialized *inside* the encode phase,
+/// so that phase is observable only through its histogram
+/// (`invertnet_serve_phase_encode_us`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Timing {
+    pub parse_us: u64,
+    pub validate_us: u64,
+    pub queue_wait_us: u64,
+    pub batch_assembly_us: u64,
+    pub execute_us: u64,
+    pub total_us: u64,
+    pub batch_jobs: u64,
+    pub batch_rows: u64,
+}
+
+impl Timing {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("parse_us", Json::Num(self.parse_us as f64)),
+            ("validate_us", Json::Num(self.validate_us as f64)),
+            ("queue_wait_us", Json::Num(self.queue_wait_us as f64)),
+            ("batch_assembly_us", Json::Num(self.batch_assembly_us as f64)),
+            ("execute_us", Json::Num(self.execute_us as f64)),
+            ("total_us", Json::Num(self.total_us as f64)),
+            ("batch_jobs", Json::Num(self.batch_jobs as f64)),
+            ("batch_rows", Json::Num(self.batch_rows as f64)),
+        ])
+    }
+}
+
+/// Attach response extras (`trace_id`, `timing`) to an encoded response
+/// object. Kept outside `Response::to_json` so the response enum — and
+/// the payload bytes every bit-identity test pins — never varies with
+/// tracing: extras only *add* keys.
+pub fn decorate(mut j: Json, trace_id: Option<&str>, timing: Option<&Timing>)
+                -> Json {
+    if let Json::Obj(m) = &mut j {
+        if let Some(t) = trace_id {
+            m.insert("trace_id".to_string(), Json::Str(t.to_string()));
+        }
+        if let Some(t) = timing {
+            m.insert("timing".to_string(), t.to_json());
+        }
+    }
+    j
 }
 
 /// A server response, ready to serialize as one JSON line.
@@ -106,6 +206,8 @@ pub enum Response {
     Stats(StatsSnapshot),
     /// Prometheus text exposition of every series the server exports.
     Metrics { text: String },
+    /// Flight-recorder dump (`invertnet-dump/v1`), already assembled.
+    DebugDump { report: Json },
     Shutdown,
     Error { error: String },
 }
@@ -292,9 +394,10 @@ impl Request {
             }
             "stats" => Ok(Request::Stats),
             "metrics" => Ok(Request::Metrics),
+            "debug-dump" => Ok(Request::DebugDump),
             "shutdown" => Ok(Request::Shutdown),
-            other => bail!("unknown op {other:?} \
-                            (sample|score|posterior|stats|metrics|shutdown)"),
+            other => bail!("unknown op {other:?} (sample|score|posterior\
+                            |stats|metrics|debug-dump|shutdown)"),
         }
     }
 
@@ -349,6 +452,9 @@ impl Request {
             Request::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
             Request::Metrics => {
                 Json::obj(vec![("op", Json::Str("metrics".into()))])
+            }
+            Request::DebugDump => {
+                Json::obj(vec![("op", Json::Str("debug-dump".into()))])
             }
             Request::Shutdown => {
                 Json::obj(vec![("op", Json::Str("shutdown".into()))])
@@ -417,6 +523,11 @@ impl Response {
                 ("op", Json::Str("metrics".into())),
                 ("text", Json::Str(text.clone())),
             ]),
+            Response::DebugDump { report } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("debug-dump".into())),
+                ("report", report.clone()),
+            ]),
             Response::Shutdown => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("op", Json::Str("shutdown".into())),
@@ -483,6 +594,9 @@ impl Response {
             }
             "metrics" => Ok(Response::Metrics {
                 text: j.req("text")?.as_str()?.to_string(),
+            }),
+            "debug-dump" => Ok(Response::DebugDump {
+                report: j.req("report")?.clone(),
             }),
             other => Err(anyhow!("unknown response op {other:?}")),
         }
@@ -639,6 +753,68 @@ mod tests {
             Response::Shutdown);
         let e = Response::err("boom");
         assert!(Response::parse_line(&e.to_line()).unwrap().is_error());
+    }
+
+    #[test]
+    fn req_meta_parses_trace_id_and_timing_flag() {
+        let j = Json::parse(r#"{"op":"stats"}"#).unwrap();
+        assert_eq!(ReqMeta::from_json(&j).unwrap(), ReqMeta::default());
+
+        let j = Json::parse(
+            r#"{"op":"sample","trace_id":"cli-42","timing":true}"#).unwrap();
+        let m = ReqMeta::from_json(&j).unwrap();
+        assert_eq!(m.trace_id.as_deref(), Some("cli-42"));
+        assert!(m.timing);
+        // meta fields never confuse the op parser
+        Request::from_json(&j).unwrap();
+
+        for bad in [
+            r#"{"trace_id":""}"#,
+            r#"{"trace_id":7}"#,
+            r#"{"trace_id":"a\nb"}"#,
+            r#"{"timing":"yes"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ReqMeta::from_json(&j).is_err(), "{bad}");
+        }
+        let long = format!(r#"{{"trace_id":"{}"}}"#, "x".repeat(129));
+        assert!(ReqMeta::from_json(&Json::parse(&long).unwrap()).is_err());
+    }
+
+    #[test]
+    fn debug_dump_op_roundtrips() {
+        assert_eq!(Request::parse_line(r#"{"op":"debug-dump"}"#).unwrap(),
+                   Request::DebugDump);
+        assert_eq!(
+            Request::from_json(&Request::DebugDump.to_json()).unwrap(),
+            Request::DebugDump);
+        let r = Response::DebugDump {
+            report: Json::obj(vec![
+                ("schema", Json::Str("invertnet-dump/v1".into())),
+                ("events", Json::Arr(vec![])),
+            ]),
+        };
+        assert_eq!(Response::parse_line(&r.to_line()).unwrap(), r);
+    }
+
+    #[test]
+    fn decorate_adds_keys_without_touching_payload_fields() {
+        let resp = Response::Score { log_density: vec![1.5, -2.25] };
+        let plain = resp.to_json();
+        let timing = Timing { parse_us: 3, total_us: 40, ..Timing::default() };
+        let deco = decorate(resp.to_json(), Some("t-1"), Some(&timing));
+        assert_eq!(deco.req("trace_id").unwrap().as_str().unwrap(), "t-1");
+        let t = deco.req("timing").unwrap();
+        assert_eq!(t.req("parse_us").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(t.req("total_us").unwrap().as_f64().unwrap(), 40.0);
+        // every payload field serializes to the same bytes with and
+        // without decoration — the tracing bit-invisibility contract
+        for key in ["ok", "op", "log_density"] {
+            assert_eq!(plain.req(key).unwrap().to_string(),
+                       deco.req(key).unwrap().to_string(), "{key}");
+        }
+        // decorated lines still parse as the same response
+        assert_eq!(Response::parse_line(&deco.to_string()).unwrap(), resp);
     }
 
     #[test]

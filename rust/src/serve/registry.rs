@@ -17,6 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::api::Engine;
 use crate::flow::ParamStore;
+use crate::telemetry::events::{self, Level};
 use crate::telemetry::{Counter, Sample};
 use crate::util::json::Json;
 use crate::Flow;
@@ -158,6 +159,10 @@ impl Registry {
             Ok(pair) => pair,
             Err(e) => {
                 self.rejects.inc();
+                events::emit(Level::Error, "model_reject", vec![
+                    ("dir", Json::Str(format!("{dir:?}"))),
+                    ("error", Json::Str(format!("{e:#}"))),
+                ]);
                 return Err(e);
             }
         };
@@ -203,11 +208,18 @@ impl Registry {
             let victim = inner.lru.remove(0);
             inner.map.remove(&victim);
             self.evictions.inc();
+            events::emit(Level::Info, "model_evict", vec![
+                ("model", Json::Str(victim.clone())),
+            ]);
             if inner.default_name.as_deref() == Some(victim.as_str()) {
                 inner.default_name = inner.lru.last().cloned();
             }
         }
         self.loads.inc();
+        events::emit(Level::Info, "model_load", vec![
+            ("model", Json::Str(model.name.clone())),
+            ("trained", Json::Bool(model.trained)),
+        ]);
         Ok(model)
     }
 

@@ -7,28 +7,47 @@
 //! * [`Server::serve_tcp`] — a JSON-lines loopback TCP listener with one
 //!   lightweight thread per connection.
 //!
-//! Both exit after a `shutdown` request (in-flight work drains first).
+//! Both exit after a `shutdown` request (in-flight work drains first),
+//! and both answer through [`Server::answer_line`], which wraps the core
+//! with per-request tracing: every line gets a trace id (the client's
+//! `"trace_id"` if supplied, else a server-assigned `srv-<seq>`), its
+//! parse/validate/encode phases are timed into the
+//! `invertnet_serve_phase_*_us` histograms (the batch side contributes
+//! queue_wait/batch_assembly/execute), and a `"timing":true` request
+//! gets the per-phase block echoed back. Tracing only *adds* response
+//! keys — payload fields are byte-identical with it on or off, so the
+//! bit-invisibility contract of micro-batching is untouched.
 //!
-//! The TCP front additionally answers plain `GET /metrics` lines
-//! (`curl http://127.0.0.1:7878/metrics`) with a minimal HTTP response
-//! carrying the same Prometheus text exposition as the JSON `metrics`
-//! op, so a stock Prometheus scraper needs no protocol adapter.
+//! The TCP front additionally answers plain `GET` lines with minimal
+//! HTTP: `/metrics` (the same Prometheus text exposition as the JSON
+//! `metrics` op, so a stock scraper needs no adapter), `/healthz`
+//! (liveness: the process answers), and `/readyz` (readiness: registry
+//! warm, queue under half capacity, worker pool alive, not shutting
+//! down — 503 with a per-check JSON body otherwise).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::posterior::analysis;
 use crate::telemetry;
+use crate::telemetry::events::{self, Level};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
-use super::batcher::{BatchConfig, Batcher, Reply, ServeStats, Work};
-use super::protocol::{Request, Response};
+use super::batcher::{phase, BatchConfig, BatchTimes, Batcher, ReplyPayload,
+                     ServeStats, Work};
+use super::protocol::{decorate, ReqMeta, Request, Response, Timing};
 use super::registry::{Registry, ServedModel};
+
+/// `answer_line` dumps the flight recorder when this many error
+/// responses land within [`ERROR_BURST_WINDOW`] on one server.
+const ERROR_BURST_LEN: usize = 8;
+const ERROR_BURST_WINDOW: Duration = Duration::from_secs(5);
 
 /// Per-request conditioning check, run before a job may enter the batch
 /// queue: a request with a missing/extra/mis-shaped cond fails alone
@@ -59,6 +78,18 @@ fn check_cond_request(m: &ServedModel, rows: usize, cond: Option<&crate::Tensor>
     }
 }
 
+/// Phase timings gathered while one request is handled; the front
+/// assembles them (plus its own parse/encode clocks) into the optional
+/// [`Timing`] echo.
+#[derive(Default)]
+struct HandleTimes {
+    /// Pre-queue request work: model resolution, shape/cond validation,
+    /// and (for sample/posterior) the per-request latent draw.
+    validate_us: u64,
+    /// Batch-side timings from the reply (zero for ops that never queue).
+    batch: BatchTimes,
+}
+
 /// A long-lived inference service over a model [`Registry`].
 pub struct Server {
     registry: Arc<Registry>,
@@ -68,6 +99,14 @@ pub struct Server {
     /// Allow serving models whose weights are a random init (off by
     /// default so a missing checkpoint cannot silently serve noise).
     allow_untrained: bool,
+    /// Source of server-assigned trace ids (`srv-<seq>`).
+    req_seq: AtomicU64,
+    /// Requests slower than this emit a `slow_request` event
+    /// (CLI: `--slow-ms`). `None` disables the check.
+    slow_us: Option<u64>,
+    /// Error-response timestamps inside the burst window; a full window
+    /// triggers a flight-recorder dump.
+    recent_errors: Mutex<std::collections::VecDeque<Instant>>,
 }
 
 impl Server {
@@ -79,12 +118,22 @@ impl Server {
             stats,
             shutdown: AtomicBool::new(false),
             allow_untrained: false,
+            req_seq: AtomicU64::new(0),
+            slow_us: None,
+            recent_errors: Mutex::new(std::collections::VecDeque::new()),
         }
     }
 
     /// Opt in to serving untrained (randomly initialized) models.
     pub fn allow_untrained(mut self) -> Server {
         self.allow_untrained = true;
+        self
+    }
+
+    /// Emit a `slow_request` event for any request that takes longer
+    /// than `ms` milliseconds end to end (CLI: `--slow-ms`).
+    pub fn slow_ms(mut self, ms: u64) -> Server {
+        self.slow_us = Some(ms.saturating_mul(1000));
         self
     }
 
@@ -103,15 +152,29 @@ impl Server {
     /// Answer one request. Never panics on bad input — protocol and
     /// execution errors come back as [`Response::Error`].
     pub fn handle(&self, req: Request) -> Response {
-        match self.try_handle(req) {
-            Ok(resp) => resp,
-            Err(e) => Response::err(format!("{e:#}")),
-        }
+        self.handle_traced(req, "").0
     }
 
-    fn try_handle(&self, req: Request) -> Result<Response> {
+    /// [`handle`](Self::handle) with the request's trace id threaded to
+    /// the batch queue, returning the phase timings alongside.
+    fn handle_traced(&self, req: Request, trace_id: &str)
+                     -> (Response, HandleTimes) {
+        let mut times = HandleTimes::default();
+        let resp = match self.try_handle(req, trace_id, &mut times) {
+            Ok(resp) => resp,
+            Err(e) => {
+                self.note_error();
+                Response::err(format!("{e:#}"))
+            }
+        };
+        (resp, times)
+    }
+
+    fn try_handle(&self, req: Request, trace_id: &str, t: &mut HandleTimes)
+                  -> Result<Response> {
         match req {
             Request::Sample { model, n, temperature, seed, cond } => {
+                let t_val = Instant::now();
                 let m = self.model(model.as_deref())?;
                 // validate BEFORE queueing: a bad request must fail alone,
                 // never poison the valid requests it would coalesce with
@@ -122,14 +185,21 @@ impl Server {
                 // no matter what it batches with
                 let latents = m.flow.sample_latents(
                     n, temperature, &mut Pcg64::new(seed))?;
-                let rx = self.batcher.submit(
-                    m, Work::Sample { latents, cond })?;
-                match rx.recv().context("serve worker hung up")?? {
-                    Reply::Samples(x) => Ok(Response::Sample { x }),
-                    Reply::Scores(_) => unreachable!("sample got scores"),
+                t.validate_us = t_val.elapsed().as_micros() as u64;
+                self.stats.record_phase(phase::VALIDATE, t.validate_us);
+                let rx = self.batcher.submit_traced(
+                    m, Work::Sample { latents, cond }, trace_id.to_string())?;
+                let reply = rx.recv().context("serve worker hung up")??;
+                t.batch = reply.times;
+                match reply.payload {
+                    ReplyPayload::Samples(x) => Ok(Response::Sample { x }),
+                    ReplyPayload::Scores(_) => {
+                        unreachable!("sample got scores")
+                    }
                 }
             }
             Request::Score { model, x, cond } => {
+                let t_val = Instant::now();
                 let m = self.model(model.as_deref())?;
                 let want = &m.flow.def.in_shape;
                 if x.batch() == 0 {
@@ -142,16 +212,24 @@ impl Server {
                         x.shape, m.name, &want[1..]);
                 }
                 check_cond_request(&m, x.batch(), cond.as_ref())?;
-                let rx = self.batcher.submit(m, Work::Score { x, cond })?;
-                match rx.recv().context("serve worker hung up")?? {
-                    Reply::Scores(log_density) => {
+                t.validate_us = t_val.elapsed().as_micros() as u64;
+                self.stats.record_phase(phase::VALIDATE, t.validate_us);
+                let rx = self.batcher.submit_traced(
+                    m, Work::Score { x, cond }, trace_id.to_string())?;
+                let reply = rx.recv().context("serve worker hung up")??;
+                t.batch = reply.times;
+                match reply.payload {
+                    ReplyPayload::Scores(log_density) => {
                         Ok(Response::Score { log_density })
                     }
-                    Reply::Samples(_) => unreachable!("score got samples"),
+                    ReplyPayload::Samples(_) => {
+                        unreachable!("score got samples")
+                    }
                 }
             }
             Request::Posterior { model, y, n, temperature, seed,
                                  return_samples } => {
+                let t_val = Instant::now();
                 let m = self.model(model.as_deref())?;
                 // tile the observation across the conditioning batch and
                 // validate it exactly like a sample request, BEFORE
@@ -163,10 +241,15 @@ impl Server {
                 // what this job coalesces with
                 let latents = m.flow.sample_latents(
                     n, temperature, &mut Pcg64::new(seed))?;
-                let rx = self.batcher.submit(
-                    m, Work::Sample { latents, cond: Some(cond) })?;
-                match rx.recv().context("serve worker hung up")?? {
-                    Reply::Samples(x) => {
+                t.validate_us = t_val.elapsed().as_micros() as u64;
+                self.stats.record_phase(phase::VALIDATE, t.validate_us);
+                let rx = self.batcher.submit_traced(
+                    m, Work::Sample { latents, cond: Some(cond) },
+                    trace_id.to_string())?;
+                let reply = rx.recv().context("serve worker hung up")??;
+                t.batch = reply.times;
+                match reply.payload {
+                    ReplyPayload::Samples(x) => {
                         let s = analysis::summarize(&x);
                         Ok(Response::Posterior {
                             n,
@@ -175,7 +258,9 @@ impl Server {
                             samples: return_samples.then_some(x),
                         })
                     }
-                    Reply::Scores(_) => unreachable!("posterior got scores"),
+                    ReplyPayload::Scores(_) => {
+                        unreachable!("posterior got scores")
+                    }
                 }
             }
             Request::Stats => Ok(Response::Stats(self.stats.snapshot(
@@ -185,8 +270,24 @@ impl Server {
             Request::Metrics => Ok(Response::Metrics {
                 text: self.metrics_text(),
             }),
+            Request::DebugDump => {
+                let snap = self.stats.snapshot(
+                    self.batcher.queue_depth() as u64,
+                    self.registry.len() as u64);
+                Ok(Response::DebugDump {
+                    report: events::dump_report("debug-dump op", vec![
+                        ("requests_total", Json::Num(snap.requests as f64)),
+                        ("errors_total", Json::Num(snap.errors as f64)),
+                        ("queue_depth", Json::Num(snap.queue_depth as f64)),
+                    ]),
+                })
+            }
             Request::Shutdown => {
                 self.shutdown.store(true, Ordering::Relaxed);
+                events::emit(Level::Info, "shutdown", vec![
+                    ("queue_depth",
+                     Json::Num(self.batcher.queue_depth() as f64)),
+                ]);
                 Ok(Response::Shutdown)
             }
         }
@@ -202,6 +303,29 @@ impl Server {
                  models explicitly allowed", m.name);
         }
         Ok(m)
+    }
+
+    /// Count one error response toward the burst window; a full window
+    /// dumps the flight recorder (then resets, so a sustained error
+    /// storm produces periodic dumps instead of one per request).
+    fn note_error(&self) {
+        let now = Instant::now();
+        let mut errs = self.recent_errors.lock().unwrap();
+        errs.push_back(now);
+        while errs.front()
+            .is_some_and(|t| now.duration_since(*t) > ERROR_BURST_WINDOW)
+        {
+            errs.pop_front();
+        }
+        if errs.len() >= ERROR_BURST_LEN {
+            errs.clear();
+            drop(errs);
+            events::emit_dump("error burst", vec![
+                ("burst_len", Json::Num(ERROR_BURST_LEN as f64)),
+                ("window_s",
+                 Json::Num(ERROR_BURST_WINDOW.as_secs() as f64)),
+            ]);
+        }
     }
 
     /// Full telemetry scrape: the process-global registry (span
@@ -223,28 +347,128 @@ impl Server {
         telemetry::encode::render(&all.into_iter().collect::<Vec<_>>())
     }
 
+    /// Readiness verdict plus its JSON body: ready iff the registry has
+    /// at least one resident model, the batch queue is under half its
+    /// capacity, the worker pool is fully alive, and no shutdown has
+    /// been requested. The body reports every check so an operator can
+    /// see *which* gate failed from the 503 alone.
+    pub fn readiness(&self) -> (bool, String) {
+        let warm = !self.registry.is_empty();
+        let depth = self.batcher.queue_depth();
+        let cap = self.batcher.queue_cap();
+        let queue_ok = depth * 2 < cap;
+        let workers_ok = self.batcher.workers_alive();
+        let shutting_down = self.is_shutdown();
+        let ready = warm && queue_ok && workers_ok && !shutting_down;
+        let body = Json::obj(vec![
+            ("ready", Json::Bool(ready)),
+            ("registry_warm", Json::Bool(warm)),
+            ("queue_ok", Json::Bool(queue_ok)),
+            ("queue_depth", Json::Num(depth as f64)),
+            ("queue_cap", Json::Num(cap as f64)),
+            ("workers_alive", Json::Bool(workers_ok)),
+            ("shutting_down", Json::Bool(shutting_down)),
+        ]).to_string();
+        (ready, body + "\n")
+    }
+
     /// Minimal HTTP reply for a plain `GET` on the TCP front: the
-    /// metrics exposition on `/metrics` (or `/`), 404 otherwise.
+    /// metrics exposition on `/metrics` (or `/`), liveness on
+    /// `/healthz`, readiness on `/readyz` (503 + per-check JSON when
+    /// unready), 404 otherwise.
     fn http_scrape(&self, path: &str) -> String {
-        let (status, body) = if path == "/metrics" || path == "/" {
-            ("200 OK", self.metrics_text())
-        } else {
-            ("404 Not Found", "scrape /metrics\n".to_string())
+        const PROM: &str = "text/plain; version=0.0.4; charset=utf-8";
+        const TEXT: &str = "text/plain; charset=utf-8";
+        let (status, ctype, body) = match path {
+            "/metrics" | "/" => ("200 OK", PROM, self.metrics_text()),
+            "/healthz" => ("200 OK", TEXT, "ok\n".to_string()),
+            "/readyz" => {
+                let (ready, body) = self.readiness();
+                (if ready { "200 OK" } else { "503 Service Unavailable" },
+                 "application/json; charset=utf-8", body)
+            }
+            _ => ("404 Not Found", TEXT,
+                  "scrape /metrics, /healthz or /readyz\n".to_string()),
         };
         format!(
             "HTTP/1.0 {status}\r\n\
-             Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Type: {ctype}\r\n\
              Content-Length: {}\r\n\
              Connection: close\r\n\r\n{body}",
             body.len())
     }
 
-    /// Parse-handle-serialize one wire line.
+    /// Parse-handle-serialize one wire line, without tracing (kept for
+    /// in-process callers and tests that want the bare protocol).
     pub fn handle_line(&self, line: &str) -> Response {
         match Request::parse_line(line) {
             Ok(req) => self.handle(req),
             Err(e) => Response::err(format!("bad request: {e:#}")),
         }
+    }
+
+    /// Answer one wire line with full request tracing — what both fronts
+    /// run. Parses request + [`ReqMeta`], assigns a trace id when the
+    /// client didn't send one, records the parse/validate/encode phase
+    /// histograms, emits `slow_request` events past the `--slow-ms`
+    /// threshold, and decorates the response with `trace_id`/`timing`
+    /// when asked. Decoration only adds keys: payload fields are
+    /// byte-identical to the untraced [`Server::handle_line`] path.
+    pub fn answer_line(&self, line: &str) -> String {
+        let t0 = Instant::now();
+        let parsed = Json::parse(line).and_then(|j| {
+            let meta = ReqMeta::from_json(&j)?;
+            let req = Request::from_json(&j)?;
+            Ok((req, meta))
+        });
+        let parse_us = t0.elapsed().as_micros() as u64;
+        self.stats.record_phase(phase::PARSE, parse_us);
+        let (req, meta) = match parsed {
+            Ok(ok) => ok,
+            Err(e) => {
+                self.note_error();
+                return Response::err(format!("bad request: {e:#}"))
+                    .to_line();
+            }
+        };
+        let assigned;
+        let trace_id: &str = match &meta.trace_id {
+            Some(t) => t,
+            None => {
+                assigned = format!(
+                    "srv-{}", self.req_seq.fetch_add(1, Ordering::Relaxed));
+                &assigned
+            }
+        };
+        let (resp, ht) = self.handle_traced(req, trace_id);
+        let total_us = t0.elapsed().as_micros() as u64;
+        if self.slow_us.is_some_and(|limit| total_us > limit) {
+            events::emit(Level::Warn, "slow_request", vec![
+                ("trace_id", Json::Str(trace_id.to_string())),
+                ("total_us", Json::Num(total_us as f64)),
+                ("queue_wait_us", Json::Num(ht.batch.queue_wait_us as f64)),
+                ("execute_us", Json::Num(ht.batch.execute_us as f64)),
+            ]);
+        }
+        let timing = meta.timing.then(|| Timing {
+            parse_us,
+            validate_us: ht.validate_us,
+            queue_wait_us: ht.batch.queue_wait_us,
+            batch_assembly_us: ht.batch.assembly_us,
+            execute_us: ht.batch.execute_us,
+            total_us,
+            batch_jobs: ht.batch.batch_jobs,
+            batch_rows: ht.batch.batch_rows,
+        });
+        // echo the trace id iff the client supplied one or asked for
+        // timing — plain requests get plain responses, byte for byte
+        let echo = (meta.trace_id.is_some() || meta.timing)
+            .then_some(trace_id);
+        let t_enc = Instant::now();
+        let out = decorate(resp.to_json(), echo, timing.as_ref()).to_string();
+        self.stats.record_phase(
+            phase::ENCODE, t_enc.elapsed().as_micros() as u64);
+        out
     }
 
     // ------------------------------------------------------------------
@@ -261,8 +485,8 @@ impl Server {
             if line.trim().is_empty() {
                 continue;
             }
-            let resp = self.handle_line(&line);
-            writeln!(out, "{}", resp.to_line())?;
+            let reply = self.answer_line(&line);
+            writeln!(out, "{reply}")?;
             out.flush()?;
             if self.is_shutdown() {
                 break;
@@ -325,8 +549,8 @@ impl Server {
                         return Ok(());
                     }
                     if !line.trim().is_empty() {
-                        let resp = self.handle_line(&line);
-                        writeln!(writer, "{}", resp.to_line())?;
+                        let reply = self.answer_line(&line);
+                        writeln!(writer, "{reply}")?;
                         writer.flush()?;
                     }
                     buf.clear();
@@ -423,6 +647,10 @@ mod tests {
             "invertnet_serve_batch_rows",
             "invertnet_serve_sample_latency_us",
             "invertnet_serve_score_latency_us",
+            "invertnet_serve_phase_queue_wait_us",
+            "invertnet_serve_phase_execute_us",
+            "invertnet_serve_model_requests_total",
+            "invertnet_serve_model_rows_total",
             "invertnet_registry_loads_total",
             "invertnet_registry_evictions_total",
             "invertnet_registry_rejects_total",
@@ -433,6 +661,10 @@ mod tests {
         // the two answered requests must be visible in the text
         assert!(text.contains("invertnet_serve_requests_total 2"),
                 "{text}");
+        // ...and attributed to the model that served them
+        assert!(text.contains(
+            "invertnet_serve_model_requests_total{model=\"realnvp2d\"} 2"),
+                "{text}");
     }
 
     #[test]
@@ -441,6 +673,9 @@ mod tests {
         let resp = s.http_scrape("/metrics");
         assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
         assert!(resp.contains("Content-Type: text/plain"), "{resp}");
+        // one-shot endpoint contract: the scrape reply must close the
+        // connection and say so
+        assert!(resp.contains("Connection: close\r\n"), "{resp}");
         let body = resp.split("\r\n\r\n").nth(1).unwrap();
         let len: usize = resp.lines()
             .find_map(|l| l.strip_prefix("Content-Length: "))
@@ -449,6 +684,143 @@ mod tests {
         telemetry::encode::parse_exposition(body).unwrap();
         assert!(s.http_scrape("/nope").starts_with("HTTP/1.0 404"),
                 "unknown paths must 404");
+    }
+
+    #[test]
+    fn health_surfaces_report_liveness_and_readiness() {
+        let s = server();
+        let live = s.http_scrape("/healthz");
+        assert!(live.starts_with("HTTP/1.0 200 OK\r\n"), "{live}");
+        assert!(live.ends_with("ok\n"), "{live}");
+
+        // warm registry + empty queue + live workers => ready
+        let ready = s.http_scrape("/readyz");
+        assert!(ready.starts_with("HTTP/1.0 200 OK\r\n"), "{ready}");
+        let body = ready.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(body).unwrap();
+        assert_eq!(j.req("ready").unwrap(), &Json::Bool(true), "{body}");
+
+        // an empty registry is not ready (and says which check failed)
+        let cold = Server::new(
+            Registry::new(Engine::native().unwrap(), 4),
+            BatchConfig::default());
+        let resp = cold.http_scrape("/readyz");
+        assert!(resp.starts_with("HTTP/1.0 503"), "{resp}");
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(body).unwrap();
+        assert_eq!(j.req("ready").unwrap(), &Json::Bool(false), "{body}");
+        assert_eq!(j.req("registry_warm").unwrap(), &Json::Bool(false));
+        assert_eq!(j.req("workers_alive").unwrap(), &Json::Bool(true));
+
+        // shutdown flips readiness (liveness stays up for the drain)
+        s.handle(Request::Shutdown);
+        assert!(s.http_scrape("/readyz").starts_with("HTTP/1.0 503"));
+        assert!(s.http_scrape("/healthz").starts_with("HTTP/1.0 200"));
+    }
+
+    /// The readyz queue gate, deterministically: one worker, a huge
+    /// coalescing window, and max_batch == queue_cap == 100 means 50
+    /// queued single-row jobs *cannot* fire (the group is neither full
+    /// nor past its deadline), so depth sits at exactly 50 — at half
+    /// capacity, unready. Filling the group to 100 fires it, the queue
+    /// drains, and readiness comes back.
+    #[test]
+    fn readyz_flips_under_queue_saturation_and_recovers() {
+        let registry = Registry::new(Engine::native().unwrap(), 4);
+        registry.register_untrained("realnvp2d", 3).unwrap();
+        let s = Server::new(registry, BatchConfig {
+            max_batch: 100,
+            max_delay: Duration::from_secs(60),
+            workers: 1,
+            queue_cap: 100,
+        }).allow_untrained();
+        let (ready, body) = s.readiness();
+        assert!(ready, "{body}");
+
+        let m = s.registry.get(None).unwrap();
+        let job = || Work::Score { x: Tensor::zeros(&[1, 2]), cond: None };
+        let mut rxs = Vec::new();
+        for _ in 0..50 {
+            rxs.push(s.batcher.submit(m.clone(), job()).unwrap());
+        }
+        let (ready, body) = s.readiness();
+        assert!(!ready, "50/100 queued must be unready: {body}");
+        assert!(body.contains("\"queue_ok\":false"), "{body}");
+        assert!(s.http_scrape("/readyz").starts_with("HTTP/1.0 503"));
+
+        for _ in 0..50 {
+            rxs.push(s.batcher.submit(m.clone(), job()).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let (ready, body) = s.readiness();
+        assert!(ready, "drained queue must be ready again: {body}");
+        assert!(s.http_scrape("/readyz").starts_with("HTTP/1.0 200"));
+    }
+
+    #[test]
+    fn answer_line_echoes_trace_id_and_timing_on_request() {
+        let s = server();
+        // plain requests get plain responses: no extras
+        let line = s.answer_line(r#"{"op":"stats"}"#);
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("trace_id").is_none(), "{line}");
+        assert!(j.get("timing").is_none(), "{line}");
+
+        // a client-supplied trace id is echoed verbatim
+        let line = s.answer_line(
+            r#"{"op":"sample","n":2,"seed":3,"trace_id":"req-abc-123"}"#);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.req("trace_id").unwrap().as_str().unwrap(),
+                   "req-abc-123", "{line}");
+        assert!(j.get("timing").is_none(), "{line}");
+        assert!(matches!(Response::parse_line(&line).unwrap(),
+                         Response::Sample { .. }));
+
+        // timing:true gets the phase block and a server-assigned id
+        let line = s.answer_line(
+            r#"{"op":"sample","n":2,"seed":3,"timing":true}"#);
+        let j = Json::parse(&line).unwrap();
+        let tid = j.req("trace_id").unwrap().as_str().unwrap();
+        assert!(tid.starts_with("srv-"), "{tid}");
+        let t = j.req("timing").unwrap();
+        for key in ["parse_us", "validate_us", "queue_wait_us",
+                    "batch_assembly_us", "execute_us", "total_us",
+                    "batch_jobs", "batch_rows"] {
+            assert!(t.get(key).is_some(), "timing missing {key}: {line}");
+        }
+        assert_eq!(t.req("batch_jobs").unwrap(), &Json::Num(1.0), "{line}");
+        assert_eq!(t.req("batch_rows").unwrap(), &Json::Num(2.0), "{line}");
+        assert!(matches!(Response::parse_line(&line).unwrap(),
+                         Response::Sample { .. }));
+
+        // a bad trace id is a protocol error, not a silent drop
+        let line = s.answer_line(r#"{"op":"stats","trace_id":""}"#);
+        assert!(Response::parse_line(&line).unwrap().is_error(), "{line}");
+    }
+
+    #[test]
+    fn debug_dump_op_returns_flight_recorder_report() {
+        let s = server();
+        let _ = s.handle(Request::Sample {
+            model: None, n: 1, temperature: 1.0, seed: 1, cond: None,
+        });
+        let Response::DebugDump { report } = s.handle(Request::DebugDump)
+        else { panic!("debug-dump failed") };
+        assert_eq!(report.req("schema").unwrap().as_str().unwrap(),
+                   events::DUMP_SCHEMA);
+        assert!(matches!(report.req("events").unwrap(), Json::Arr(_)));
+        assert_eq!(report.req("requests_total").unwrap(), &Json::Num(1.0));
+        assert_eq!(report.req("reason").unwrap().as_str().unwrap(),
+                   "debug-dump op");
+        // and it survives the wire roundtrip
+        let line = s.answer_line(r#"{"op":"debug-dump"}"#);
+        let Response::DebugDump { report } =
+            Response::parse_line(&line).unwrap()
+        else { panic!("wire debug-dump failed: {line}") };
+        assert_eq!(report.req("schema").unwrap().as_str().unwrap(),
+                   events::DUMP_SCHEMA);
     }
 
     #[test]

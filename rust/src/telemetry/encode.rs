@@ -30,6 +30,12 @@ pub fn render(entries: &[(String, Sample)]) -> String {
                 out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
             }
             Sample::Histogram(h) => render_hist(&mut out, name, h),
+            Sample::LabeledCounter { label, values } => {
+                out.push_str(&format!("# TYPE {name} counter\n"));
+                for (value, count) in values {
+                    out.push_str(&format!("{name}{{{label}=\"{value}\"}} {count}\n"));
+                }
+            }
         }
     }
     out
@@ -59,62 +65,246 @@ pub struct Family {
     pub samples: usize,
 }
 
-/// Validate exposition text and summarize its families. Errors name the
-/// offending line. Accepts exactly what [`render`] produces (plus any
-/// conforming exposition: extra `#` comments are ignored).
-pub fn parse_exposition(text: &str) -> Result<Vec<Family>> {
+/// A reconstructed histogram from exposition text: cumulative
+/// `(le, count)` buckets in declared order, plus `_sum`/`_count`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistValue {
+    pub buckets: Vec<(f64, f64)>,
+    pub sum: f64,
+    pub count: f64,
+}
+
+impl HistValue {
+    /// Quantile estimate by rank-walk over the cumulative buckets with
+    /// linear interpolation inside the owning bucket — the scrape-side
+    /// mirror of `HistSnapshot::quantile`, used by `invertnet top`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count <= 0.0 {
+            return 0.0;
+        }
+        let target = (q * self.count).ceil().clamp(1.0, self.count);
+        let mut lower = 0.0f64; // upper bound of the previous bucket
+        let mut before = 0.0f64; // cumulative count below this bucket
+        for &(le, cum) in &self.buckets {
+            if cum >= target {
+                if !le.is_finite() {
+                    return lower;
+                }
+                let in_bucket = cum - before;
+                let frac = if in_bucket > 0.0 { (target - before) / in_bucket } else { 1.0 };
+                return lower + frac * (le - lower);
+            }
+            before = cum;
+            lower = le;
+        }
+        lower
+    }
+}
+
+/// One reconstructed series value, keyed by its full series name (so
+/// labeled counters like `x_total{model="a"}` stay distinct).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Counter(f64),
+    Gauge(f64),
+    Histogram(HistValue),
+}
+
+/// Per-family validation state while a histogram's samples stream in.
+struct HistState {
+    buckets: Vec<(f64, f64)>,
+    inf: Option<f64>,
+    sum: Option<f64>,
+    count: Option<f64>,
+}
+
+fn finalize_hist(fam: &str, h: &HistState) -> Result<HistValue> {
+    let Some(inf) = h.inf else {
+        bail!("histogram {fam:?} is missing its le=\"+Inf\" bucket");
+    };
+    let (Some(sum), Some(count)) = (h.sum, h.count) else {
+        bail!("histogram {fam:?} is missing _sum or _count");
+    };
+    if inf != count {
+        bail!(
+            "histogram {fam:?}: le=\"+Inf\" bucket {inf} disagrees with _count {count}"
+        );
+    }
+    if let Some(&(_, last_cum)) = h.buckets.last() {
+        if last_cum > inf {
+            bail!(
+                "histogram {fam:?}: bucket count {last_cum} exceeds le=\"+Inf\" count {inf}"
+            );
+        }
+    }
+    Ok(HistValue { buckets: h.buckets.clone(), sum, count })
+}
+
+fn parse_sample_value(lineno: usize, value: &str) -> Result<f64> {
+    let Ok(v) = value.parse::<f64>() else {
+        bail!("line {lineno}: unparsable sample value {value:?}");
+    };
+    if v.is_nan() {
+        bail!("line {lineno}: NaN sample value");
+    }
+    Ok(v)
+}
+
+/// Shared parse/validate core behind [`parse_exposition`] and
+/// [`parse_values`]. Beyond the shape rules (every sample parses and
+/// belongs to a declared family, every family has samples), it enforces
+/// the value contracts [`render`] guarantees: counters and histogram
+/// cells are finite and non-negative, gauges are finite (negative is
+/// fine), bucket lines carry a well-formed `le` label with strictly
+/// increasing bounds and non-decreasing cumulative counts, and every
+/// histogram closes with a `+Inf` bucket agreeing with `_count`.
+fn parse_core(text: &str) -> Result<(Vec<Family>, std::collections::BTreeMap<String, Value>)> {
+    use std::collections::BTreeMap;
     let mut families: Vec<Family> = Vec::new();
+    let mut values: BTreeMap<String, Value> = BTreeMap::new();
+    let mut hist: Option<HistState> = None;
+
+    // Runs when the current family ends (next TYPE line or EOF).
+    fn close_family(
+        families: &mut [Family],
+        hist: &mut Option<HistState>,
+        values: &mut BTreeMap<String, Value>,
+    ) -> Result<()> {
+        if let (Some(fam), Some(h)) = (families.last(), hist.take()) {
+            values.insert(fam.name.clone(), Value::Histogram(finalize_hist(&fam.name, &h)?));
+        }
+        Ok(())
+    }
+
     for (lineno, line) in text.lines().enumerate() {
+        let lineno = lineno + 1;
         let line = line.trim_end();
         if line.is_empty() {
             continue;
         }
         if let Some(rest) = line.strip_prefix("# TYPE ") {
+            close_family(&mut families, &mut hist, &mut values)?;
             let mut it = rest.split_whitespace();
             let (name, kind) = match (it.next(), it.next(), it.next()) {
                 (Some(n), Some(k), None) => (n, k),
-                _ => bail!("line {}: malformed TYPE line {line:?}", lineno + 1),
+                _ => bail!("line {lineno}: malformed TYPE line {line:?}"),
             };
             if !matches!(kind, "counter" | "gauge" | "histogram") {
-                bail!("line {}: unknown metric kind {kind:?}", lineno + 1);
+                bail!("line {lineno}: unknown metric kind {kind:?}");
             }
             if families.iter().any(|f| f.name == name) {
-                bail!("line {}: duplicate family {name:?}", lineno + 1);
+                bail!("line {lineno}: duplicate family {name:?}");
             }
             families.push(Family { name: name.to_string(), kind: kind.to_string(), samples: 0 });
+            if kind == "histogram" {
+                hist = Some(HistState { buckets: Vec::new(), inf: None, sum: None, count: None });
+            }
             continue;
         }
         if line.starts_with('#') {
             continue;
         }
         let Some((series, value)) = line.rsplit_once(' ') else {
-            bail!("line {}: sample line has no value: {line:?}", lineno + 1);
+            bail!("line {lineno}: sample line has no value: {line:?}");
         };
-        if value.parse::<f64>().is_err() {
-            bail!("line {}: unparsable sample value {value:?}", lineno + 1);
-        }
         let series_name = series.split('{').next().unwrap_or(series);
         let Some(fam) = families.last_mut() else {
-            bail!("line {}: sample before any TYPE line: {line:?}", lineno + 1);
+            bail!("line {lineno}: sample before any TYPE line: {line:?}");
         };
-        let belongs = series_name == fam.name
-            || (fam.kind == "histogram"
-                && [
-                    format!("{}_bucket", fam.name),
-                    format!("{}_sum", fam.name),
-                    format!("{}_count", fam.name),
-                ]
-                .iter()
-                .any(|s| *s == series_name));
-        if !belongs {
-            bail!(
-                "line {}: sample {series_name:?} does not belong to family {:?}",
-                lineno + 1,
-                fam.name
-            );
+        let v = parse_sample_value(lineno, value)?;
+        match fam.kind.as_str() {
+            "counter" | "gauge" => {
+                if series_name != fam.name {
+                    bail!(
+                        "line {lineno}: sample {series_name:?} does not belong to family {:?}",
+                        fam.name
+                    );
+                }
+                if !v.is_finite() {
+                    bail!("line {lineno}: non-finite {} value {v}", fam.kind);
+                }
+                if fam.kind == "counter" && v < 0.0 {
+                    bail!("line {lineno}: negative counter value {v}");
+                }
+                let val =
+                    if fam.kind == "counter" { Value::Counter(v) } else { Value::Gauge(v) };
+                if values.insert(series.to_string(), val).is_some() {
+                    bail!("line {lineno}: duplicate series {series:?}");
+                }
+            }
+            _ => {
+                // histogram family: only _bucket / _sum / _count samples
+                let h = hist.as_mut().expect("histogram family without state");
+                let bucket_prefix = format!("{}_bucket", fam.name);
+                if series_name == bucket_prefix {
+                    // the full series must be exactly name_bucket{le="..."}
+                    let rest = &series[bucket_prefix.len()..];
+                    let le_str = rest
+                        .strip_prefix("{le=\"")
+                        .and_then(|s| s.strip_suffix("\"}"))
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("line {lineno}: malformed bucket line {line:?}")
+                        })?;
+                    let le = if le_str == "+Inf" {
+                        f64::INFINITY
+                    } else {
+                        let Ok(le) = le_str.parse::<f64>() else {
+                            bail!("line {lineno}: malformed bucket line {line:?}");
+                        };
+                        le
+                    };
+                    if !v.is_finite() || v < 0.0 {
+                        bail!("line {lineno}: negative or non-finite bucket count {v}");
+                    }
+                    if le.is_finite() {
+                        if h.inf.is_some() {
+                            bail!("line {lineno}: bucket after the le=\"+Inf\" bucket");
+                        }
+                        if let Some(&(prev_le, prev_cum)) = h.buckets.last() {
+                            if le <= prev_le {
+                                bail!("line {lineno}: bucket bounds out of order");
+                            }
+                            if v < prev_cum {
+                                bail!("line {lineno}: non-cumulative bucket counts");
+                            }
+                        }
+                        h.buckets.push((le, v));
+                    } else {
+                        if h.inf.is_some() {
+                            bail!("line {lineno}: duplicate le=\"+Inf\" bucket");
+                        }
+                        if let Some(&(_, prev_cum)) = h.buckets.last() {
+                            if v < prev_cum {
+                                bail!("line {lineno}: non-cumulative bucket counts");
+                            }
+                        }
+                        h.inf = Some(v);
+                    }
+                } else if series == format!("{}_sum", fam.name) {
+                    if !v.is_finite() || v < 0.0 {
+                        bail!("line {lineno}: negative or non-finite histogram _sum {v}");
+                    }
+                    if h.sum.replace(v).is_some() {
+                        bail!("line {lineno}: duplicate series {series:?}");
+                    }
+                } else if series == format!("{}_count", fam.name) {
+                    if !v.is_finite() || v < 0.0 {
+                        bail!("line {lineno}: negative or non-finite histogram _count {v}");
+                    }
+                    if h.count.replace(v).is_some() {
+                        bail!("line {lineno}: duplicate series {series:?}");
+                    }
+                } else {
+                    bail!(
+                        "line {lineno}: sample {series_name:?} does not belong to family {:?}",
+                        fam.name
+                    );
+                }
+            }
         }
         fam.samples += 1;
     }
+    close_family(&mut families, &mut hist, &mut values)?;
     for fam in &families {
         if fam.samples == 0 {
             bail!("family {:?} declares no samples", fam.name);
@@ -123,7 +313,22 @@ pub fn parse_exposition(text: &str) -> Result<Vec<Family>> {
     if families.is_empty() {
         bail!("no metric families found");
     }
-    Ok(families)
+    Ok((families, values))
+}
+
+/// Validate exposition text and summarize its families. Errors name the
+/// offending line. Accepts exactly what [`render`] produces (plus any
+/// conforming exposition: extra `#` comments are ignored).
+pub fn parse_exposition(text: &str) -> Result<Vec<Family>> {
+    parse_core(text).map(|(fams, _)| fams)
+}
+
+/// Validate exposition text and reconstruct every series value —
+/// counters and gauges keyed by their full series name (labels
+/// included), histograms keyed by family name. This is the read side
+/// `invertnet top` renders its dashboard from.
+pub fn parse_values(text: &str) -> Result<std::collections::BTreeMap<String, Value>> {
+    parse_core(text).map(|(_, vals)| vals)
 }
 
 #[cfg(test)]

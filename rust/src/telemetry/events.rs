@@ -1,0 +1,309 @@
+//! Structured operational event log + in-memory flight recorder.
+//!
+//! Events are the narrative counterpart to the metrics registry: discrete,
+//! leveled, machine-parseable JSON-lines records of the moments an operator
+//! cares about — a model loaded or evicted, a batch fired, a request ran
+//! slow, the queue saturated, the process shut down. Schema
+//! `invertnet-event/v1`: every line carries `schema`, `seq` (process-wide,
+//! monotonic), `ts_ms` (unix millis), `level` (`info|warn|error`), `kind`,
+//! and flat kind-specific fields.
+//!
+//! Two consumers see each event:
+//!
+//! * an optional **sink** (`--log-json FILE|stderr`) — one JSON line per
+//!   event, rate-limited per kind (info/warn capped at
+//!   [`RATE_LIMIT_PER_SEC`] lines per second per kind; error-level events
+//!   are never dropped). Dropped lines are counted, not silently lost:
+//!   the count is exported as `invertnet_events_dropped_total` and echoed
+//!   in every dump report.
+//! * the **flight recorder** — a fixed-capacity ring of the last
+//!   [`RING_CAP`] events, kept regardless of whether a sink is configured
+//!   and *not* rate-limited. [`dump_report`] serializes the ring as an
+//!   `invertnet-dump/v1` incident report; the serve stack emits one on
+//!   request-error bursts and answers the `{"op":"debug-dump"}` protocol
+//!   op with it.
+//!
+//! Recording is gated on the process-wide [`enabled`](super::enabled)
+//! switch, like every other instrument, so the telemetry-overhead bench
+//! gate measures the event path too. The steady-state cost of an emitted
+//! event is one mutex lock plus a small allocation — acceptable because
+//! events fire per batch / per incident, never per tensor op.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Schema tag carried by every event line.
+pub const EVENT_SCHEMA: &str = "invertnet-event/v1";
+/// Schema tag carried by flight-recorder dump reports.
+pub const DUMP_SCHEMA: &str = "invertnet-dump/v1";
+/// Flight-recorder capacity (last N events, oldest evicted first).
+pub const RING_CAP: usize = 256;
+/// Per-kind sink budget: info/warn lines per second before dropping.
+pub const RATE_LIMIT_PER_SEC: u64 = 32;
+
+/// Event severity. `Error` bypasses the sink rate limit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Level {
+    fn as_str(self) -> &'static str {
+        match self {
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+enum Sink {
+    Stderr,
+    File(BufWriter<File>),
+}
+
+impl Sink {
+    fn write_line(&mut self, line: &str) {
+        match self {
+            Sink::Stderr => eprintln!("{line}"),
+            Sink::File(f) => {
+                let _ = writeln!(f, "{line}");
+                let _ = f.flush();
+            }
+        }
+    }
+}
+
+struct State {
+    sink: Option<Sink>,
+    ring: VecDeque<Json>,
+    /// kind -> (window start, lines written to the sink this window).
+    windows: BTreeMap<&'static str, (Instant, u64)>,
+    seq: u64,
+    emitted: u64,
+    dropped: u64,
+}
+
+fn state() -> &'static Mutex<State> {
+    static STATE: OnceLock<Mutex<State>> = OnceLock::new();
+    STATE.get_or_init(|| {
+        Mutex::new(State {
+            sink: None,
+            ring: VecDeque::with_capacity(RING_CAP),
+            windows: BTreeMap::new(),
+            seq: 0,
+            emitted: 0,
+            dropped: 0,
+        })
+    })
+}
+
+/// Point the event sink at `target`: the literal `"stderr"`, or a file
+/// path (created/truncated). Reconfiguring replaces the previous sink —
+/// last writer wins — so tests and re-exec'ed daemons need no teardown.
+/// The flight recorder is untouched either way.
+pub fn configure(target: &str) -> Result<()> {
+    let sink = if target == "stderr" {
+        Sink::Stderr
+    } else {
+        let f = File::create(Path::new(target))
+            .with_context(|| format!("creating event log {target:?}"))?;
+        Sink::File(BufWriter::new(f))
+    };
+    state().lock().unwrap().sink = Some(sink);
+    Ok(())
+}
+
+fn unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Record one event. `kind` is a static identifier from the fixed event
+/// catalog (`model_load`, `batch_fired`, `slow_request`, ...); `fields`
+/// are flat kind-specific keys merged into the line. No-op while the
+/// telemetry kill switch is off.
+pub fn emit(level: Level, kind: &'static str, fields: Vec<(&str, Json)>) {
+    if !super::enabled() {
+        return;
+    }
+    let mut st = state().lock().unwrap();
+    st.seq += 1;
+    st.emitted += 1;
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("schema".into(), Json::Str(EVENT_SCHEMA.into()));
+    obj.insert("seq".into(), Json::Num(st.seq as f64));
+    obj.insert("ts_ms".into(), Json::Num(unix_ms() as f64));
+    obj.insert("level".into(), Json::Str(level.as_str().into()));
+    obj.insert("kind".into(), Json::Str(kind.into()));
+    for (k, v) in fields {
+        obj.insert(k.to_string(), v);
+    }
+    let event = Json::Obj(obj);
+
+    // Flight recorder sees everything, rate limit or not.
+    if st.ring.len() == RING_CAP {
+        st.ring.pop_front();
+    }
+    st.ring.push_back(event.clone());
+    super::global().counter("invertnet_events_total").inc();
+
+    if st.sink.is_none() {
+        return;
+    }
+    // Per-kind 1-second token window; error level always goes through.
+    let now = Instant::now();
+    let allowed = level == Level::Error || {
+        let (start, n) = st.windows.entry(kind).or_insert((now, 0));
+        if now.duration_since(*start).as_secs() >= 1 {
+            *start = now;
+            *n = 0;
+        }
+        *n += 1;
+        *n <= RATE_LIMIT_PER_SEC
+    };
+    if !allowed {
+        st.dropped += 1;
+        super::global().counter("invertnet_events_dropped_total").inc();
+        return;
+    }
+    let line = event.to_string();
+    if let Some(sink) = st.sink.as_mut() {
+        sink.write_line(&line);
+    }
+}
+
+/// Serialize the flight recorder as an `invertnet-dump/v1` incident
+/// report: the ring contents (oldest first), emit/drop totals, and any
+/// caller-supplied `extra` context (the serve stack attaches its stats
+/// snapshot). Read-only — the ring keeps its contents.
+pub fn dump_report(reason: &str, extra: Vec<(&str, Json)>) -> Json {
+    let st = state().lock().unwrap();
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("schema".into(), Json::Str(DUMP_SCHEMA.into()));
+    obj.insert("reason".into(), Json::Str(reason.into()));
+    obj.insert("ts_ms".into(), Json::Num(unix_ms() as f64));
+    obj.insert("events".into(), Json::Arr(st.ring.iter().cloned().collect()));
+    obj.insert("emitted_total".into(), Json::Num(st.emitted as f64));
+    obj.insert("dropped_total".into(), Json::Num(st.dropped as f64));
+    for (k, v) in extra {
+        obj.insert(k.to_string(), v);
+    }
+    Json::Obj(obj)
+}
+
+/// Write a dump report straight to the sink (one line, never
+/// rate-limited). Used for request-error bursts; no-op without a sink.
+pub fn emit_dump(reason: &str, extra: Vec<(&str, Json)>) {
+    let report = dump_report(reason, extra);
+    let line = report.to_string();
+    let mut st = state().lock().unwrap();
+    if let Some(sink) = st.sink.as_mut() {
+        sink.write_line(&line);
+    }
+}
+
+/// Number of events currently held by the flight recorder.
+pub fn ring_len() -> usize {
+    state().lock().unwrap().ring.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One sequential test: the sink and ring are process-global, so
+    /// splitting these stages across parallel `#[test]` functions would
+    /// race (a reconfigured sink steals another stage's lines; a ring
+    /// flood evicts another stage's probe). Other suites' events may
+    /// interleave, so every assertion filters by kinds unique to this
+    /// module. (Kill-switch behavior is covered in
+    /// `tests/telemetry.rs` under its `ENABLED_LOCK`.)
+    #[test]
+    fn event_log_end_to_end() {
+        // -- envelope + flight recorder --------------------------------
+        emit(Level::Warn, "events_unit_probe", vec![
+            ("model", Json::Str("realnvp2d".into())),
+            ("rows", Json::Num(8.0)),
+        ]);
+        let report = dump_report("unit test", vec![("ctx", Json::Num(7.0))]);
+        assert_eq!(report.req("schema").unwrap().as_str().unwrap(), DUMP_SCHEMA);
+        assert_eq!(report.req("ctx").unwrap().as_f64().unwrap(), 7.0);
+        let events = report.req("events").unwrap().as_arr().unwrap();
+        let e = events
+            .iter()
+            .rev()
+            .find(|e| {
+                e.get("kind").and_then(|k| k.as_str().ok()) == Some("events_unit_probe")
+            })
+            .expect("probe event missing from ring");
+        assert_eq!(e.req("schema").unwrap().as_str().unwrap(), EVENT_SCHEMA);
+        assert_eq!(e.req("level").unwrap().as_str().unwrap(), "warn");
+        assert_eq!(e.req("rows").unwrap().as_f64().unwrap(), 8.0);
+        assert!(e.req("seq").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(e.req("ts_ms").unwrap().as_f64().unwrap() > 0.0);
+        // the dump itself reparses as JSON
+        Json::parse(&report.to_string()).unwrap();
+
+        // -- file sink -------------------------------------------------
+        let dir = std::env::temp_dir().join("invertnet_events_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        configure(path.to_str().unwrap()).unwrap();
+        emit(Level::Info, "events_unit_sink", vec![("k", Json::Num(1.0))]);
+        let sink_text = std::fs::read_to_string(&path).unwrap();
+        let mine: Vec<&str> = sink_text
+            .lines()
+            .filter(|l| l.contains("\"events_unit_sink\""))
+            .collect();
+        assert_eq!(mine.len(), 1, "expected exactly one sink line: {sink_text}");
+        let parsed = Json::parse(mine[0]).unwrap();
+        assert_eq!(parsed.req("schema").unwrap().as_str().unwrap(), EVENT_SCHEMA);
+        assert_eq!(parsed.req("k").unwrap().as_f64().unwrap(), 1.0);
+
+        // -- per-kind rate limit ---------------------------------------
+        let n = RATE_LIMIT_PER_SEC + 20;
+        for _ in 0..n {
+            emit(Level::Info, "events_unit_ratelimited", vec![]);
+        }
+        for _ in 0..n {
+            emit(Level::Error, "events_unit_errors", vec![]);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let infos = text.lines().filter(|l| l.contains("events_unit_ratelimited")).count();
+        let errors = text.lines().filter(|l| l.contains("events_unit_errors")).count();
+        assert_eq!(infos as u64, RATE_LIMIT_PER_SEC, "info lines past the cap must drop");
+        assert_eq!(errors as u64, n, "error lines must never drop");
+        let report = dump_report("rate limit test", vec![]);
+        assert!(report.req("dropped_total").unwrap().as_f64().unwrap() >= 20.0);
+
+        // -- emit_dump writes one report line to the sink --------------
+        emit_dump("events_unit_dump_reason", vec![]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let dumps: Vec<&str> = text
+            .lines()
+            .filter(|l| l.contains("events_unit_dump_reason"))
+            .collect();
+        assert_eq!(dumps.len(), 1, "expected exactly one dump line");
+        let d = Json::parse(dumps[0]).unwrap();
+        assert_eq!(d.req("schema").unwrap().as_str().unwrap(), DUMP_SCHEMA);
+
+        // -- ring stays bounded ----------------------------------------
+        for _ in 0..(RING_CAP + 10) {
+            emit(Level::Info, "events_unit_flood", vec![]);
+        }
+        assert_eq!(ring_len(), RING_CAP);
+    }
+}

@@ -21,6 +21,7 @@
 //! state, so all bit-exactness pins hold with it enabled.
 
 pub mod encode;
+pub mod events;
 mod registry;
 mod span;
 
@@ -33,7 +34,7 @@ use anyhow::{Context, Result};
 pub use registry::{
     bucket_of, bucket_upper, Counter, Gauge, HistSnapshot, Histogram, Registry, Sample, NBUCKETS,
 };
-pub use span::{enable_trace, flush_trace, trace_enabled, SpanTimer};
+pub use span::{enable_trace, finish_trace, flush_trace, trace_enabled, SpanTimer};
 
 static ENABLED: AtomicBool = AtomicBool::new(true);
 

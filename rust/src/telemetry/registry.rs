@@ -214,6 +214,13 @@ pub enum Sample {
     Counter(u64),
     Gauge(f64),
     Histogram(HistSnapshot),
+    /// A counter family broken out by one label key — e.g. per-model
+    /// request counts: `label` is the key, `values` the
+    /// `(label_value, count)` rows, rendered as `name{key="value"} n`
+    /// lines under a single `# TYPE name counter` declaration. Label
+    /// values come from our own model-name catalog (no quotes or
+    /// backslashes), so rendering needs no escaping.
+    LabeledCounter { label: &'static str, values: Vec<(String, u64)> },
 }
 
 enum Entry {

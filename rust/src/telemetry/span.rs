@@ -87,6 +87,7 @@ thread_local! {
 struct TraceSink {
     out: BufWriter<File>,
     epoch: Instant,
+    closed: bool,
 }
 
 /// Start exporting completed spans to `path` in Chrome `trace_event`
@@ -97,7 +98,7 @@ pub fn enable_trace(path: &Path) -> Result<()> {
         File::create(path).with_context(|| format!("creating trace file {path:?}"))?,
     );
     out.write_all(b"[\n").context("writing trace header")?;
-    if TRACE.set(Mutex::new(TraceSink { out, epoch })).is_err() {
+    if TRACE.set(Mutex::new(TraceSink { out, epoch, closed: false })).is_err() {
         bail!("trace export is already enabled for this process");
     }
     TRACE_ON.store(true, Ordering::Relaxed);
@@ -116,10 +117,33 @@ pub fn flush_trace() {
     }
 }
 
+/// Finalize the trace file: append a terminating `{}` element (which
+/// absorbs the trailing comma every event line carries), close the JSON
+/// array, and flush. After this the file is strictly valid JSON, not
+/// just Chrome's comma-tolerant dialect. Idempotent, and a no-op when
+/// tracing was never enabled; further spans are dropped rather than
+/// written past the closing bracket. Every `main.rs` exit path —
+/// success, `CheckFailed`, `UsageError` — runs through this exactly
+/// once.
+pub fn finish_trace() {
+    let Some(sink) = TRACE.get() else { return };
+    let mut sink = sink.lock().unwrap();
+    if sink.closed {
+        return;
+    }
+    sink.closed = true;
+    TRACE_ON.store(false, Ordering::Relaxed);
+    let _ = sink.out.write_all(b"{}\n]\n");
+    let _ = sink.out.flush();
+}
+
 fn emit_trace(name: &str, t0: Instant, dur_us: u64) {
     let Some(sink) = TRACE.get() else { return };
     let tid = TID.with(|t| *t);
     let mut sink = sink.lock().unwrap();
+    if sink.closed {
+        return;
+    }
     let ts = t0.duration_since(sink.epoch).as_micros() as u64;
     // Complete event ("ph":"X"): name, start, duration. Span names are
     // static identifiers from the code base, so no JSON escaping is

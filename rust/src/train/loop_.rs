@@ -42,6 +42,9 @@ pub struct TrainConfig {
     pub eval_set: Option<(Tensor, Option<Tensor>)>,
     /// Cadence of eval-split scoring (steps); 0 scores only the last step.
     pub eval_every: usize,
+    /// Emit a `train_slow_step` warn event (structured event log) for any
+    /// step whose wall clock exceeds this many milliseconds.
+    pub slow_step_ms: Option<u64>,
 }
 
 impl Default for TrainConfig {
@@ -57,6 +60,7 @@ impl Default for TrainConfig {
             microbatch: None,
             eval_set: None,
             eval_every: 50,
+            slow_step_ms: None,
         }
     }
 }
@@ -91,8 +95,12 @@ pub fn train(
         Some(dir) => {
             std::fs::create_dir_all(dir)?;
             let mut f = std::fs::File::create(dir.join("metrics.csv"))?;
+            // ms = the step's compute+eval time; wall_ms = row-to-row
+            // wall clock (includes logging/IO between rows); ts_unix_ms
+            // = absolute write time, for correlating rows with the
+            // event log and span trace
             writeln!(f, "step,loss,logp_mean,logdet_mean,grad_norm,\
-                         peak_sched_bytes,ms,eval_nll")?;
+                         peak_sched_bytes,ms,wall_ms,ts_unix_ms,eval_nll")?;
             Some(f)
         }
         None => None,
@@ -123,6 +131,7 @@ pub fn train(
     let mut last_eval: Option<f32> = None;
     let dims = flow.def.dims_per_sample();
     let t0 = Instant::now();
+    let mut last_row = Instant::now();
     for step in 0..cfg.steps {
         let step_span = crate::span!("train_step");
         let ts = Instant::now();
@@ -175,10 +184,31 @@ pub fn train(
         drop(step_span); // close the span before the logging I/O
 
         let ms = ts.elapsed().as_secs_f64() * 1e3;
+        if let Some(limit) = cfg.slow_step_ms {
+            if ms > limit as f64 {
+                crate::telemetry::events::emit(
+                    crate::telemetry::events::Level::Warn,
+                    "train_slow_step",
+                    vec![
+                        ("step", crate::util::json::Json::Num(step as f64)),
+                        ("ms", crate::util::json::Json::Num(ms)),
+                        ("limit_ms",
+                         crate::util::json::Json::Num(limit as f64)),
+                    ],
+                );
+            }
+        }
         if let Some(f) = &mut csv {
+            let wall_ms = last_row.elapsed().as_secs_f64() * 1e3;
+            last_row = Instant::now();
+            let ts_unix_ms = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_millis())
+                .unwrap_or(0);
             writeln!(
                 f,
-                "{step},{},{},{},{grad_norm},{},{ms:.1},{eval_cell}",
+                "{step},{},{},{},{grad_norm},{},{ms:.1},{wall_ms:.1},\
+                 {ts_unix_ms},{eval_cell}",
                 result.loss, result.logp_mean, result.logdet_mean,
                 result.peak_sched_bytes
             )?;

@@ -282,6 +282,47 @@ fn burst_through_tiny_queue_loses_nothing() {
     assert_eq!(snap.errors, 0, "{snap:?}");
 }
 
+/// Tracing is bit-invisible: the same request answered with and without
+/// `trace_id`/`timing` carries byte-identical payload fields — the
+/// decorated reply only ever *adds* keys, never changes the answer.
+#[test]
+fn tracing_and_timing_leave_the_payload_bit_identical() {
+    use invertnet::util::json::Json;
+    let server = boot_server(8, Duration::from_micros(200), 2);
+    for (plain_req, traced_req) in [
+        (
+            r#"{"op":"sample","n":3,"seed":9,"temperature":0.7}"#.to_string(),
+            r#"{"op":"sample","n":3,"seed":9,"temperature":0.7,"trace_id":"t-1","timing":true}"#.to_string(),
+        ),
+        (
+            r#"{"op":"score","x":{"shape":[2,2],"data":[0.1,-0.2,1.5,0.3]}}"#.to_string(),
+            r#"{"op":"score","x":{"shape":[2,2],"data":[0.1,-0.2,1.5,0.3]},"trace_id":"t-2","timing":true}"#.to_string(),
+        ),
+    ] {
+        let plain = Json::parse(&server.answer_line(&plain_req)).unwrap();
+        let traced = Json::parse(&server.answer_line(&traced_req)).unwrap();
+        let (Json::Obj(p), Json::Obj(t)) = (&plain, &traced) else {
+            panic!("{plain:?} / {traced:?}")
+        };
+        // every payload key of the plain reply appears byte-identically
+        // in the traced reply
+        for (key, value) in p {
+            assert_eq!(
+                Some(&value.to_string()),
+                t.get(key).map(|v| v.to_string()).as_ref(),
+                "payload key {key:?} changed under tracing"
+            );
+        }
+        // and the traced reply adds exactly the decoration keys
+        let extras: Vec<&str> = t.keys()
+            .filter(|k| !p.contains_key(*k))
+            .map(|k| k.as_str())
+            .collect();
+        assert_eq!(extras, vec!["timing", "trace_id"], "{traced:?}");
+        assert_eq!(plain.req("ok").unwrap(), &Json::Bool(true));
+    }
+}
+
 /// Conditional serving: cond rows ride along with each request and are
 /// coalesced with the batch.
 #[test]

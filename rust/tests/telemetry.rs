@@ -152,6 +152,102 @@ fn numeric_pins_hold_with_telemetry_toggled() {
     }
 }
 
+/// Table-driven rejection coverage for the exposition parser: every
+/// malformed shape the strict reader guards against, each pinned to its
+/// diagnostic (mirrored in `scripts/ci_smoke.py`'s Python parser).
+#[test]
+fn exposition_parser_rejects_malformed_inputs_with_pinned_messages() {
+    let cases: &[(&str, &str, &str)] = &[
+        ("truncated bucket line",
+         "# TYPE h histogram\nh_bucket{le=\"1\"\n",
+         "sample line has no value"),
+        ("bucket with unparsable bound",
+         "# TYPE h histogram\nh_bucket{le=\"one\"} 1\n\
+          h_bucket{le=\"+Inf\"} 1\nh_sum 1\nh_count 1\n",
+         "malformed bucket line"),
+        ("non-cumulative le counts",
+         "# TYPE h histogram\nh_bucket{le=\"1\"} 5\nh_bucket{le=\"2\"} 3\n\
+          h_bucket{le=\"+Inf\"} 5\nh_sum 9\nh_count 5\n",
+         "non-cumulative bucket counts"),
+        ("bucket bounds out of order",
+         "# TYPE h histogram\nh_bucket{le=\"2\"} 1\nh_bucket{le=\"1\"} 2\n\
+          h_bucket{le=\"+Inf\"} 2\nh_sum 3\nh_count 2\n",
+         "bucket bounds out of order"),
+        ("count disagrees with +Inf bucket",
+         "# TYPE h histogram\nh_bucket{le=\"1\"} 2\n\
+          h_bucket{le=\"+Inf\"} 2\nh_sum 2\nh_count 3\n",
+         "disagree"),
+        ("histogram missing _sum",
+         "# TYPE h histogram\nh_bucket{le=\"1\"} 1\n\
+          h_bucket{le=\"+Inf\"} 1\nh_count 1\n",
+         "_sum or _count"),
+        ("histogram missing +Inf bucket",
+         "# TYPE h histogram\nh_bucket{le=\"1\"} 1\nh_sum 1\nh_count 1\n",
+         "le=\"+Inf\""),
+        ("NaN sample value",
+         "# TYPE c counter\nc NaN\n",
+         "NaN sample value"),
+        ("infinite counter value",
+         "# TYPE c counter\nc Inf\n",
+         "non-finite counter value"),
+        ("negative counter value",
+         "# TYPE c counter\nc -4\n",
+         "negative counter value"),
+        ("infinite histogram sum",
+         "# TYPE h histogram\nh_bucket{le=\"1\"} 1\n\
+          h_bucket{le=\"+Inf\"} 1\nh_sum Inf\nh_count 1\n",
+         "non-finite histogram _sum"),
+        ("negative bucket count",
+         "# TYPE h histogram\nh_bucket{le=\"1\"} -1\n\
+          h_bucket{le=\"+Inf\"} 1\nh_sum 1\nh_count 1\n",
+         "negative or non-finite bucket count"),
+        ("sample before any TYPE line",
+         "c 4\n",
+         "sample before any TYPE line"),
+        ("duplicate family",
+         "# TYPE c counter\nc 1\n# TYPE c counter\nc 2\n",
+         "duplicate family"),
+        ("duplicate series",
+         "# TYPE c counter\nc 1\nc 2\n",
+         "duplicate series"),
+        ("stray sample in another family",
+         "# TYPE c counter\nc 1\nd 2\n",
+         "does not belong to family"),
+        ("family with no samples",
+         "# TYPE c counter\n",
+         "declares no samples"),
+        ("empty exposition",
+         "",
+         "no metric families found"),
+    ];
+    for (what, text, needle) in cases {
+        let err = telemetry::encode::parse_exposition(text)
+            .expect_err(&format!("{what}: parser accepted:\n{text}"));
+        assert!(format!("{err:#}").contains(needle),
+                "{what}: error {err:#} does not mention {needle:?}");
+    }
+}
+
+/// The event stream honors the same process-wide kill switch as the
+/// metric instruments: with telemetry disabled, `emit` records nothing —
+/// not in the counters and not in the flight-recorder ring.
+#[test]
+fn kill_switch_silences_the_event_stream() {
+    use invertnet::telemetry::events::{self, Level};
+    use invertnet::util::json::Json;
+    let _g = ENABLED_LOCK.lock().unwrap();
+    let before = events::ring_len();
+    telemetry::set_enabled(false);
+    events::emit(Level::Warn, "killed_event",
+                 vec![("k", Json::Num(1.0))]);
+    telemetry::set_enabled(true);
+    assert_eq!(events::ring_len(), before,
+               "emit must be a no-op while telemetry is disabled");
+    // and the switch is a switch: the next emit lands in the ring
+    events::emit(Level::Info, "revived_event", vec![]);
+    assert_eq!(events::ring_len(), before + 1);
+}
+
 #[test]
 fn serve_answers_the_metrics_op_with_valid_exposition() {
     let _g = ENABLED_LOCK.lock().unwrap();

@@ -170,6 +170,49 @@ fn metrics_report_true_grad_norm_without_clip() {
     assert_eq!(rows, 3);
 }
 
+/// metrics.csv carries per-row wall-clock columns: `wall_ms`
+/// (row-to-row elapsed, including logging I/O) and `ts_unix_ms`
+/// (absolute write time, for correlating rows with the event log and
+/// span trace).
+#[test]
+fn metrics_csv_carries_wall_clock_columns() {
+    let flow = flow("realnvp2d");
+    let mut params = flow.init_params(23).unwrap();
+    let mut opt = Adam::new(1e-3);
+    let mut rng = Pcg64::new(56);
+    let dir = std::env::temp_dir()
+        .join(format!("invertnet_wallcsv_{}", std::process::id()));
+    let mut cfg = quick_cfg(3, Arc::new(ExecMode::Invertible));
+    cfg.out_dir = Some(dir.clone());
+    train(&flow, &mut params, &mut opt, &cfg, |_| {
+        Ok((Density2d::TwoMoons.sample(64, &mut rng), None))
+    })
+    .unwrap();
+    let csv = std::fs::read_to_string(dir.join("metrics.csv")).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let mut lines = csv.lines();
+    let header: Vec<&str> = lines.next().unwrap().split(',').collect();
+    let wall = header.iter().position(|h| *h == "wall_ms").unwrap();
+    let ts = header.iter().position(|h| *h == "ts_unix_ms").unwrap();
+    // eval_nll stays the last column (downstream scripts key on it)
+    assert_eq!(header.last(), Some(&"eval_nll"), "header: {header:?}");
+    let mut prev_ts = 0u64;
+    let mut rows = 0;
+    for line in lines {
+        let cells: Vec<&str> = line.split(',').collect();
+        assert_eq!(cells.len(), header.len(), "row: {line}");
+        let wall_ms: f64 = cells[wall].parse().unwrap();
+        assert!(wall_ms >= 0.0, "wall_ms: {line}");
+        let ts_ms: u64 = cells[ts].parse().unwrap();
+        // sanity: a real unix timestamp (after 2020), non-decreasing
+        assert!(ts_ms > 1_577_836_800_000, "ts_unix_ms: {line}");
+        assert!(ts_ms >= prev_ts, "timestamps went backwards: {line}");
+        prev_ts = ts_ms;
+        rows += 1;
+    }
+    assert_eq!(rows, 3);
+}
+
 #[test]
 fn rejects_wrong_shapes() {
     let flow = flow("realnvp2d");

@@ -8,13 +8,18 @@ Usage:
     python3 scripts/ci_smoke.py lint      /tmp/lint_catalog.json
     python3 scripts/ci_smoke.py lint      /tmp/lint_bad.json expect-errors
     python3 scripts/ci_smoke.py metrics   /tmp/train_metrics.prom
+    python3 scripts/ci_smoke.py dump      /tmp/debug_dump.json
+    python3 scripts/ci_smoke.py events    /tmp/events.jsonl
+    python3 scripts/ci_smoke.py rpc       127.0.0.1:7878 '{"op":"stats"}'
+    python3 scripts/ci_smoke.py http      127.0.0.1:7878 /readyz 503
 
 Each suite checks one kind of artifact:
 
-* ``serve``     — a stdio serve session transcript: sample + score +
-                  stats + metrics + shutdown, all ok, with the expected
-                  shapes and the batcher/queue series in the metrics
-                  reply.
+* ``serve``     — a stdio serve session transcript: traced sample +
+                  score + stats + metrics + debug-dump + shutdown, all
+                  ok, with the trace-id echoed verbatim, the timing
+                  block present, and the batcher/queue/phase series in
+                  the metrics reply.
 * ``posterior`` — a posterior-op serve transcript: one posterior reply
                   (mean/std/samples) + shutdown.
 * ``bench``     — a ``BENCH_<suite>.json`` document: schema tag, the
@@ -27,6 +32,16 @@ Each suite checks one kind of artifact:
 * ``metrics``   — a ``--metrics-out`` dump from ``train``: well-formed
                   Prometheus text exposition carrying the required train
                   and span series.
+* ``dump``      — an ``{"op":"debug-dump"}`` reply (or a bare
+                  ``invertnet-dump/v1`` report): schema tag, event list,
+                  emit/drop totals.
+* ``events``    — a ``--log-json`` file: every line a well-formed
+                  ``invertnet-event/v1`` record (dump lines allowed).
+* ``rpc``       — connect to a JSON-lines TCP server, send one request
+                  line, print the reply to stdout (the CI TCP smoke's
+                  transport; asserts the reply is one JSON line).
+* ``http``      — issue ``GET PATH`` against the serve front, assert
+                  the status code matches, print the body.
 
 Exit code 0 on success; an AssertionError message names what broke.
 (Replaces the inline ``python3 -c`` heredocs that used to live in
@@ -35,6 +50,8 @@ and shared between the smoke steps.)
 """
 
 import json
+import math
+import socket
 import sys
 
 
@@ -48,51 +65,157 @@ def parse_exposition(text):
 
     Mirrors the shape rules of the Rust parser
     (rust/src/telemetry/encode.rs::parse_exposition): every sample
-    belongs to a declared family, every value parses, every family has
-    at least one sample.
+    belongs to a declared family, every value is finite (NaN rejected),
+    counters are non-negative, series are unique, histogram buckets are
+    well-formed — ``le`` bounds strictly increasing, counts cumulative,
+    the ``le="+Inf"`` bucket present, last, and equal to ``_count`` —
+    and every family has at least one sample.
     """
     families = {}
     counts = {}
+    seen_series = set()
     current = None
+    hist = None  # {"buckets": [(le, cum)], "inf": .., "sum": .., "count": ..}
+
+    def close_hist():
+        if hist is None:
+            return
+        name, h = hist["name"], hist
+        assert h["inf"] is not None, \
+            f'histogram {name}: missing le="+Inf" bucket'
+        assert h["sum"] is not None and h["count"] is not None, \
+            f"histogram {name}: missing _sum or _count"
+        assert h["inf"] == h["count"], (
+            f'histogram {name}: le="+Inf" bucket {h["inf"]} disagrees '
+            f'with _count {h["count"]}')
+        if h["buckets"]:
+            last = h["buckets"][-1][1]
+            assert last <= h["inf"], (
+                f'histogram {name}: bucket count {last} exceeds '
+                f'le="+Inf" count {h["inf"]}')
+
+    def sample_value(lineno, raw):
+        try:
+            v = float(raw)
+        except ValueError:
+            raise AssertionError(
+                f"line {lineno}: unparsable sample value {raw!r}")
+        assert not math.isnan(v), f"line {lineno}: NaN sample value"
+        return v
+
     for lineno, line in enumerate(text.splitlines(), 1):
         line = line.rstrip()
         if not line:
             continue
         if line.startswith("# TYPE "):
+            close_hist()
+            hist = None
             parts = line[len("# TYPE "):].split()
             assert len(parts) == 2, f"line {lineno}: bad TYPE line {line!r}"
             name, kind = parts
-            assert kind in ("counter", "gauge", "histogram"), (lineno, kind)
-            assert name not in families, f"line {lineno}: dup family {name}"
+            assert kind in ("counter", "gauge", "histogram"), \
+                f"line {lineno}: unknown metric kind {kind!r}"
+            assert name not in families, \
+                f"line {lineno}: duplicate family {name!r}"
             families[name] = kind
             counts[name] = 0
             current = name
+            if kind == "histogram":
+                hist = {"name": name, "buckets": [], "inf": None,
+                        "sum": None, "count": None}
             continue
         if line.startswith("#"):
             continue
-        series, _, value = line.rpartition(" ")
-        assert series, f"line {lineno}: sample has no value: {line!r}"
-        float(value)  # raises on malformed values
+        series, sep, value = line.rpartition(" ")
+        assert series and sep, \
+            f"line {lineno}: sample line has no value: {line!r}"
+        assert current is not None, \
+            f"line {lineno}: sample before any TYPE line: {line!r}"
+        v = sample_value(lineno, value)
         name = series.split("{")[0]
-        assert current is not None, f"line {lineno}: sample before TYPE"
-        ok = name == current or (
-            families[current] == "histogram"
-            and name in (f"{current}_bucket", f"{current}_sum",
-                         f"{current}_count"))
-        assert ok, f"line {lineno}: {name!r} outside family {current!r}"
+        if families[current] != "histogram":
+            assert name == current, (
+                f"line {lineno}: sample {name!r} does not belong to "
+                f"family {current!r}")
+            assert math.isfinite(v), \
+                f"line {lineno}: non-finite {families[current]} value {v}"
+            if families[current] == "counter":
+                assert v >= 0, f"line {lineno}: negative counter value {v}"
+            assert series not in seen_series, \
+                f"line {lineno}: duplicate series {series!r}"
+            seen_series.add(series)
+        elif name == f"{current}_bucket":
+            rest = series[len(name):]
+            assert rest.startswith('{le="') and rest.endswith('"}'), \
+                f"line {lineno}: malformed bucket line {line!r}"
+            le_str = rest[len('{le="'):-len('"}')]
+            assert math.isfinite(v) and v >= 0, \
+                f"line {lineno}: negative or non-finite bucket count {v}"
+            if le_str == "+Inf":
+                assert hist["inf"] is None, \
+                    f'line {lineno}: duplicate le="+Inf" bucket'
+                if hist["buckets"]:
+                    assert v >= hist["buckets"][-1][1], \
+                        f"line {lineno}: non-cumulative bucket counts"
+                hist["inf"] = v
+            else:
+                try:
+                    le = float(le_str)
+                except ValueError:
+                    raise AssertionError(
+                        f"line {lineno}: malformed bucket line {line!r}")
+                assert hist["inf"] is None, \
+                    f'line {lineno}: bucket after the le="+Inf" bucket'
+                if hist["buckets"]:
+                    prev_le, prev_cum = hist["buckets"][-1]
+                    assert le > prev_le, \
+                        f"line {lineno}: bucket bounds out of order"
+                    assert v >= prev_cum, \
+                        f"line {lineno}: non-cumulative bucket counts"
+                hist["buckets"].append((le, v))
+        elif series == f"{current}_sum":
+            assert math.isfinite(v) and v >= 0, \
+                f"line {lineno}: negative or non-finite histogram _sum {v}"
+            assert hist["sum"] is None, \
+                f"line {lineno}: duplicate series {series!r}"
+            hist["sum"] = v
+        elif series == f"{current}_count":
+            assert math.isfinite(v) and v >= 0, \
+                f"line {lineno}: negative or non-finite histogram _count {v}"
+            assert hist["count"] is None, \
+                f"line {lineno}: duplicate series {series!r}"
+            hist["count"] = v
+        else:
+            raise AssertionError(
+                f"line {lineno}: sample {name!r} does not belong to "
+                f"family {current!r}")
         counts[current] += 1
+    close_hist()
     assert families, "no metric families found"
     empties = [n for n, c in counts.items() if c == 0]
     assert not empties, f"families with no samples: {empties}"
     return families
 
 
+TIMING_KEYS = ("parse_us", "validate_us", "queue_wait_us",
+               "batch_assembly_us", "execute_us", "total_us",
+               "batch_jobs", "batch_rows")
+
+
 def check_serve(path):
     resp = load_lines(path)
-    assert len(resp) == 5, f"expected 5 replies, got {len(resp)}: {resp}"
+    assert len(resp) == 6, f"expected 6 replies, got {len(resp)}: {resp}"
     assert all(r["ok"] for r in resp), resp
+    # reply 0: traced sample — trace id echoed verbatim, timing attached
     assert resp[0]["x"]["shape"] == [2, 2], resp[0]
+    assert resp[0]["trace_id"] == "ci-trace-1", resp[0]
+    timing = resp[0]["timing"]
+    for key in TIMING_KEYS:
+        assert key in timing, f"timing block missing {key!r}: {timing}"
+    assert timing["batch_rows"] >= 2, timing
+    # reply 1: plain score — no decoration on an undecorated request
     assert len(resp[1]["log_density"]) == 2, resp[1]
+    assert "trace_id" not in resp[1] and "timing" not in resp[1], resp[1]
     assert resp[2]["stats"]["requests"] == 2, resp[2]
     assert "p999_us" in resp[2]["stats"], resp[2]
     scrape = resp[3]["text"]
@@ -102,8 +225,13 @@ def check_serve(path):
                    "invertnet_serve_queue_depth",
                    "invertnet_serve_batch_rows",
                    "invertnet_serve_sample_latency_us",
-                   "invertnet_serve_score_latency_us"):
+                   "invertnet_serve_score_latency_us",
+                   "invertnet_serve_phase_parse_us",
+                   "invertnet_serve_phase_queue_wait_us",
+                   "invertnet_serve_phase_execute_us"):
         assert series in families, f"{series} missing from metrics reply"
+    check_dump_doc(resp[4]["report"])
+    assert resp[5].get("op") == "shutdown", resp[5]
 
 
 def check_metrics(path):
@@ -183,18 +311,95 @@ def check_lint(path, expect="clean"):
             assert cost["sample_flops"] > 0, cost
 
 
+def check_event_doc(e):
+    assert e["schema"] == "invertnet-event/v1", e
+    assert e["level"] in ("info", "warn", "error"), e
+    assert e["kind"], e
+    assert e["seq"] >= 1 and e["ts_ms"] > 0, e
+
+
+def check_dump_doc(doc):
+    assert doc["schema"] == "invertnet-dump/v1", doc.get("schema")
+    assert doc["reason"], doc
+    assert isinstance(doc["events"], list), doc
+    for e in doc["events"]:
+        check_event_doc(e)
+    assert doc["emitted_total"] >= len(doc["events"]), doc
+    assert doc["dropped_total"] >= 0, doc
+
+
+def check_dump(path):
+    with open(path) as fh:
+        doc = json.loads(fh.readline())
+    # accept either a protocol reply carrying the report, or a bare report
+    if "report" in doc:
+        assert doc["ok"] and doc.get("op") == "debug-dump", doc
+        doc = doc["report"]
+    check_dump_doc(doc)
+
+
+def check_events(path):
+    lines = load_lines(path)
+    assert lines, f"{path} holds no events"
+    kinds = set()
+    for e in lines:
+        if e.get("schema") == "invertnet-dump/v1":
+            check_dump_doc(e)  # emit_dump lines ride the same file
+            continue
+        check_event_doc(e)
+        kinds.add(e["kind"])
+    assert kinds, f"{path} holds only dump lines"
+
+
+def rpc(addr, request):
+    json.loads(request)  # the request itself must be valid JSON
+    host, _, port = addr.rpartition(":")
+    with socket.create_connection((host, int(port)), timeout=30) as s:
+        s.sendall(request.encode() + b"\n")
+        fh = s.makefile("r", encoding="utf-8")
+        line = fh.readline().strip()
+    assert line, f"no reply from {addr}"
+    json.loads(line)  # reply must be one valid JSON line
+    print(line)
+
+
+def http(addr, path, expect_status):
+    host, _, port = addr.rpartition(":")
+    with socket.create_connection((host, int(port)), timeout=30) as s:
+        s.sendall(f"GET {path} HTTP/1.0\r\n\r\n".encode())
+        raw = b""
+        while True:
+            chunk = s.recv(65536)
+            if not chunk:
+                break
+            raw += chunk
+    head, sep, body = raw.decode().partition("\r\n\r\n")
+    assert sep, f"malformed HTTP response from {addr}{path}: {raw!r}"
+    status = head.splitlines()[0]
+    assert f" {expect_status} " in status + " ", \
+        f"{addr}{path}: expected {expect_status}, got {status!r}"
+    assert "Connection: close" in head, head
+    sys.stdout.write(body)
+
+
 CHECKS = {"serve": check_serve, "posterior": check_posterior,
           "bench": check_bench, "lint": check_lint,
-          "metrics": check_metrics}
+          "metrics": check_metrics, "dump": check_dump,
+          "events": check_events, "rpc": rpc, "http": http}
+
+# mode -> (min args after the mode, max args after the mode)
+ARITY = {"lint": (1, 2), "rpc": (2, 2), "http": (3, 3)}
 
 
 def main(argv):
-    ok_arity = len(argv) == 3 or (len(argv) == 4 and argv[1] == "lint")
-    if not ok_arity or argv[1] not in CHECKS:
+    mode = argv[1] if len(argv) > 1 else ""
+    lo, hi = ARITY.get(mode, (1, 1))
+    if mode not in CHECKS or not lo <= len(argv) - 2 <= hi:
         sys.stderr.write(__doc__)
         return 2
-    CHECKS[argv[1]](*argv[2:])
-    print(f"ci_smoke {argv[1]}: {argv[2]} ok")
+    CHECKS[mode](*argv[2:])
+    if mode not in ("rpc", "http"):
+        print(f"ci_smoke {mode}: {argv[2]} ok")
     return 0
 
 
