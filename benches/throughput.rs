@@ -3,8 +3,8 @@
 //! Thin wrapper over the library suite [`invertnet::perf::train_throughput`]
 //! (full scale): train-step latency per activation schedule, the
 //! recompute-overhead trade, the data-parallel thread-scaling curve, and
-//! the threaded inference hot path (`log_density` / `sample_batch`
-//! rows/sec vs thread count).
+//! the threaded inference hot path (relaxed-batch `log_density` /
+//! `sample` rows/sec vs thread count).
 //!
 //!     cargo bench --bench throughput
 //!

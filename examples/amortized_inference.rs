@@ -17,7 +17,7 @@ use invertnet::coordinator::ExecMode;
 use invertnet::data::LinearGaussian;
 use invertnet::train::{train, Adam, GradClip, TrainConfig};
 use invertnet::util::rng::Pcg64;
-use invertnet::{Engine, Tensor};
+use invertnet::{Engine, SampleOpts, Tensor};
 
 fn mean_cov(points: &Tensor) -> ([f64; 2], [[f64; 2]; 2]) {
     let n = points.batch();
@@ -86,7 +86,9 @@ fn main() -> Result<()> {
         let mut all = Vec::new();
         for _ in 0..32 {
             all.extend_from_slice(
-                &flow.sample(&params, Some(&cond), &mut smp_rng)?.data);
+                &flow.sample(&params,
+                             SampleOpts::new(256, &mut smp_rng)
+                                 .cond(&cond))?.data);
         }
         let pts = Tensor::new(vec![32 * 256, 2], all)?;
         let (mu, cov) = mean_cov(&pts);

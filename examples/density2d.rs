@@ -16,7 +16,7 @@ use invertnet::data::Density2d;
 use invertnet::train::loop_::tail_mean;
 use invertnet::train::{train, Adam, GradClip, TrainConfig};
 use invertnet::util::rng::Pcg64;
-use invertnet::{Engine, Tensor};
+use invertnet::{Engine, InferOpts, SampleOpts, Tensor};
 
 /// 2-D histogram over [-3,3]^2 as a flat row-major grid.
 fn hist2d(points: &Tensor, bins: usize) -> Vec<f64> {
@@ -73,7 +73,7 @@ fn main() -> Result<()> {
     let eval_batches = 8;
     for _ in 0..eval_batches {
         let x = density.sample(256, &mut eval_rng);
-        let ll = flow.log_likelihood(&x, None, &params)?;
+        let ll = flow.log_density(&x, &params, InferOpts::strict())?;
         nll -= ll.iter().sum::<f32>() as f64 / ll.len() as f64;
     }
     nll /= eval_batches as f64;
@@ -84,7 +84,9 @@ fn main() -> Result<()> {
     let mut smp_rng = Pcg64::new(77);
     let mut samples = Vec::new();
     for _ in 0..16 {
-        samples.extend_from_slice(&flow.sample(&params, None, &mut smp_rng)?.data);
+        samples.extend_from_slice(
+            &flow.sample(&params,
+                         SampleOpts::new(flow.batch(), &mut smp_rng))?.data);
     }
     let model_pts = Tensor::new(vec![16 * 256, 2], samples)?;
     let target_pts = density.sample(16 * 256, &mut eval_rng);

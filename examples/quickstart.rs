@@ -18,7 +18,7 @@ use invertnet::train::loop_::tail_mean;
 use invertnet::train::{train, Adam, GradClip, TrainConfig};
 use invertnet::util::bench::fmt_bytes;
 use invertnet::util::rng::Pcg64;
-use invertnet::Engine;
+use invertnet::{Engine, SampleOpts};
 
 const LN2: f32 = std::f32::consts::LN_2;
 
@@ -87,7 +87,8 @@ fn main() -> Result<()> {
     );
 
     // draw a batch of samples from the trained model
-    let samples = flow.sample(&params, None, &mut rng)?;
+    let samples = flow.sample(&params,
+                              SampleOpts::new(flow.batch(), &mut rng))?;
     invertnet::tensor::npy::save(
         &PathBuf::from("runs/quickstart/samples.npy"), &samples)?;
     println!("samples -> runs/quickstart/samples.npy  {:?}", samples.shape);

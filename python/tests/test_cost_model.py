@@ -2,9 +2,10 @@
 
 This file reimplements, from the canonical op-count table alone, the
 per-layer arithmetic/bytes cost model and the per-schedule training and
-inference totals for the six builtin example networks — without reading
-any Rust. Both implementations are pinned against the committed fixture
-``data/cost_model_pins.json`` (all 6 nets x 3 schedules), so the Rust
+inference totals for the builtin example networks plus the large-image
+catalog nets (glow64, hint64deep) — without reading any Rust. Both
+implementations are pinned against the committed fixture
+``data/cost_model_pins.json`` (all 8 nets x 3 schedules), so the Rust
 model and this mirror can never drift apart silently: a change on either
 side breaks its pin until the fixture is regenerated *and the other side
 agrees*.
@@ -15,7 +16,12 @@ Regenerate the fixture (after a deliberate model change on both sides):
 
 The canonical table (1 MAC = 2 flops, elementwise = 1 flop/element,
 SAME 3x3 convs counted with clipped border taps, conditioner VJP = 3x
-its apply) is documented in full in rust/src/analysis/cost.rs.
+its apply) is documented in full in rust/src/analysis/cost.rs. Bytes
+additionally price the vectorized kernels' packed-GEMM panel traffic:
+every GEMM weight matrix W (k x m) is repacked into 8-wide column
+panels once per entry call (k * ceil8(m) elements written); fwd and inv
+pack once, vjp_stored twice (recompute + dx; the scalar order-pinned dW
+kernel never packs).
 """
 
 import json
@@ -222,6 +228,9 @@ EXAMPLE_NETS = {
     "glow16": glow_multiscale(16, 16, 16, 3, 2, 4, 32),
     "hyper16": hyperbolic_net(16, 16, 16, 3, 6, 12),
     "nice16": nice_net(16, 16, 16, 3, 4, 32),
+    # large-image catalog nets (vectorized-kernel showcase)
+    "glow64": glow_multiscale(4, 64, 64, 3, 3, 12, 64),
+    "hint64deep": hint_dense(64, 64, 4, 128, 4),
 }
 
 
@@ -289,16 +298,57 @@ def layer_flops(s):
     raise ValueError(f"no cost model for kind {kind!r}")
 
 
+def ceil8(m):
+    """GEMM column count rounded up to the kernels' 8-wide panel."""
+    return (m + 7) // 8 * 8
+
+
+def cnn_pack(ci, hid, co):
+    return 9 * ci * ceil8(hid) + hid * ceil8(hid) + 9 * hid * ceil8(co)
+
+
+def mlp_pack(din, hid, dout):
+    return din * ceil8(hid) + hid * ceil8(hid) + hid * ceil8(dout)
+
+
+def pack_elems(s):
+    """Elements written into 8-wide GEMM panels per entry call."""
+    kind = s["kind"]
+    c = s["in_shape"][-1]
+    if kind in ("actnorm", "haar", "permute", "split"):
+        return 0
+    if kind == "conv1x1":
+        return c * ceil8(c)
+    if kind == "glowcpl":
+        c1, c2 = c // 2, c - c // 2
+        return cnn_pack(c1, s["hidden"], 2 * c2)
+    if kind == "addcpl":
+        c1, c2 = c // 2, c - c // 2
+        return cnn_pack(c1, s["hidden"], c2)
+    if kind in ("densecpl", "condcpl"):
+        d = s["in_shape"][1]
+        d1, d2 = d // 2, d - d // 2
+        return mlp_pack(d1 + s.get("dcond", 0), s["hidden"], 2 * d2)
+    if kind == "hyper":
+        return 9 * (c // 2) * ceil8(s["hidden"])
+    if kind == "hint":
+        return sum(mlp_pack(d1, s["hidden"], 2 * d2)
+                   for d1, d2 in hint_nodes(s["in_shape"][1], s["depth"]))
+    raise ValueError(f"no pack model for kind {kind!r}")
+
+
 def layer_bytes(s):
-    """(fwd, inv, vjp_stored) bytes moved — the kind-agnostic protocol."""
+    """(fwd, inv, vjp_stored) bytes moved — the kind-agnostic protocol
+    plus the packed-GEMM panel traffic (1x fwd/inv, 2x vjp_stored)."""
     e_in, e_out = numel(s["in_shape"]), numel(s["out_shape"])
     n = s["in_shape"][0]
     params = s["params"]
     e_cond = n * s.get("dcond", 0)
     b = BYTES_PER_ELEM
-    return (b * (e_in + e_out + n + params + e_cond),
-            b * (e_in + e_out + params + e_cond),
-            b * (2 * e_in + e_out + 2 * params + e_cond))
+    pack = pack_elems(s)
+    return (b * (e_in + e_out + n + params + e_cond + pack),
+            b * (e_in + e_out + params + e_cond + pack),
+            b * (2 * e_in + e_out + 2 * params + e_cond + 2 * pack))
 
 
 def entry_costs(s):

@@ -1,0 +1,147 @@
+"""Numpy mirror of the Rust kernel-equivalence suite (rust/tests/kernels.rs).
+
+The Rust side pins its vectorized GEMM / im2col / conv kernels against
+scalar references; this file pins the *same mathematical contracts*
+against an independent numpy implementation, so a shared misconception
+(e.g. a wrong SAME-padding convention baked into both the fast kernel and
+its scalar reference) cannot survive:
+
+  * im2col lowering of a stride-1 SAME conv, followed by a plain GEMM,
+    equals the direct convolution — including odd channel counts and
+    non-multiple-of-8 row/column tails;
+  * bf16 round-to-nearest-even storage rounding (the exact bit
+    manipulation `backend::math::half::f32_to_bf16` uses) obeys the
+    2^-8 relative-error contract and is idempotent;
+  * f16 storage rounding matches numpy's IEEE binary16 cast bit-for-bit
+    and obeys the 2^-11 relative-error contract over the normal range.
+"""
+
+import numpy as np
+
+
+# -- reference conv / im2col (mirrors rust/src/backend/math.rs) -----------
+
+def conv2d_same(x, w):
+    """Direct stride-1 SAME conv: x (n,h,w,ci), w (kh,kw,ci,co) -> NHWC."""
+    n, h, wd, ci = x.shape
+    kh, kw, wci, co = w.shape
+    assert ci == wci
+    ph, pw = kh // 2, kw // 2
+    out = np.zeros((n, h, wd, co), dtype=np.float32)
+    for di in range(kh):
+        for dj in range(kw):
+            lo_i, hi_i = max(0, ph - di), min(h, h + ph - di)
+            lo_j, hi_j = max(0, pw - dj), min(wd, wd + pw - dj)
+            xs = x[:, lo_i - ph + di:hi_i - ph + di,
+                   lo_j - pw + dj:hi_j - pw + dj, :]
+            out[:, lo_i:hi_i, lo_j:hi_j, :] += np.einsum(
+                "nhwc,co->nhwo", xs, w[di, dj], dtype=np.float32,
+            ).astype(np.float32)
+    return out
+
+
+def im2col_same(x, kh, kw):
+    """(n,h,w,ci) -> (n*h*w, kh*kw*ci) patch matrix, zero-padded SAME."""
+    n, h, wd, ci = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = np.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    rows = np.empty((n, h, wd, kh, kw, ci), dtype=np.float32)
+    for di in range(kh):
+        for dj in range(kw):
+            rows[:, :, :, di, dj, :] = xp[:, di:di + h, dj:dj + wd, :]
+    return rows.reshape(n * h * wd, kh * kw * ci)
+
+
+CONV_SHAPES = [
+    (1, 1, 1, 1, 1),
+    (2, 4, 5, 3, 4),
+    (1, 3, 3, 7, 9),
+    (2, 2, 6, 5, 8),
+    (1, 8, 8, 12, 64),  # the glow64 coupling shape, scaled down
+    (3, 5, 7, 2, 13),
+]
+
+
+def test_im2col_gemm_equals_direct_conv(rng):
+    for n, h, w, ci, co in CONV_SHAPES:
+        x = rng.normal(size=(n, h, w, ci)).astype(np.float32)
+        wt = rng.normal(size=(3, 3, ci, co)).astype(np.float32)
+        lowered = im2col_same(x, 3, 3) @ wt.reshape(9 * ci, co)
+        direct = conv2d_same(x, wt)
+        np.testing.assert_allclose(
+            lowered.reshape(n, h, w, co), direct, rtol=2e-5, atol=1e-5,
+            err_msg=f"shape ({n},{h},{w},{ci},{co})")
+
+
+def test_conv_1x1_is_a_pointwise_gemm(rng):
+    n, h, w, ci, co = 2, 5, 3, 4, 6
+    x = rng.normal(size=(n, h, w, ci)).astype(np.float32)
+    w1 = rng.normal(size=(1, 1, ci, co)).astype(np.float32)
+    pointwise = x.reshape(-1, ci) @ w1.reshape(ci, co)
+    np.testing.assert_allclose(
+        pointwise.reshape(n, h, w, co), conv2d_same(x, w1),
+        rtol=2e-5, atol=1e-5)
+
+
+def test_conv_identity_kernel_is_identity(rng):
+    x = rng.normal(size=(2, 3, 3, 2)).astype(np.float32)
+    w = np.eye(2, dtype=np.float32).reshape(1, 1, 2, 2)
+    np.testing.assert_allclose(conv2d_same(x, w), x, rtol=1e-6, atol=1e-6)
+
+
+def test_conv_all_ones_kernel_sums_the_neighborhood():
+    # hand-computed pin shared with the Rust unit test: 2x2 image,
+    # 3x3 ones kernel, SAME padding -> every output is the full sum
+    x = np.array([1.0, 2.0, 3.0, 4.0], np.float32).reshape(1, 2, 2, 1)
+    w = np.ones((3, 3, 1, 1), np.float32)
+    np.testing.assert_array_equal(conv2d_same(x, w).ravel(),
+                                  [10.0, 10.0, 10.0, 10.0])
+
+
+# -- half-precision storage rounding (mirrors math::half) ------------------
+
+def round_bf16(x):
+    """f32 -> bf16 -> f32, round-to-nearest-even: the exact bit
+    manipulation the Rust side applies at weight load."""
+    bits = np.asarray(x, np.float32).view(np.uint32)
+    rounded = (bits + (((bits >> 16) & 1) + 0x7FFF)) & 0xFFFF0000
+    return rounded.view(np.float32)
+
+
+def test_bf16_roundtrip_error_bound(rng):
+    v = rng.normal(size=4096).astype(np.float32)
+    r = round_bf16(v)
+    np.testing.assert_array_less(
+        np.abs(r - v), np.abs(v) * (1 / 256) + np.finfo(np.float32).tiny)
+
+
+def test_bf16_rounding_is_idempotent_and_ties_to_even(rng):
+    v = rng.normal(size=256).astype(np.float32)
+    r = round_bf16(v)
+    np.testing.assert_array_equal(r, round_bf16(r))
+    # exact halfway case rounds to the even bf16 neighbour: with a 7-bit
+    # mantissa the bf16 step in [1, 2) is 2^-7, so 1 + 2^-8 sits exactly
+    # between bf16(1.0) (even) and bf16(1 + 2^-7) (odd)
+    halfway = np.float32(1.0 + 2.0 ** -8)
+    assert round_bf16(halfway) == np.float32(1.0)
+    # just above halfway rounds up
+    above = np.float32(1.0 + 2.0 ** -8 + 2.0 ** -16)
+    assert round_bf16(above) == np.float32(1.0 + 2.0 ** -7)
+
+
+def test_f16_roundtrip_matches_numpy_ieee_cast(rng):
+    # normals, subnormal-range values, overflow-range values
+    v = np.concatenate([
+        rng.normal(size=2048),
+        rng.normal(size=64) * 1e-6,
+        rng.normal(size=64) * 1e5,
+    ]).astype(np.float32)
+    with np.errstate(over="ignore"):  # overflow-to-inf is the point
+        r = v.astype(np.float16).astype(np.float32)
+    # the contract the Rust converter promises (and kernels.rs checks on
+    # its side): <= 2^-11 relative over the normal range
+    normal = (np.abs(v) >= 2.0 ** -14) & (np.abs(v) <= 65504.0)
+    np.testing.assert_array_less(
+        np.abs(r[normal] - v[normal]), np.abs(v[normal]) * (1 / 2048) + 1e-30)
+    # overflow saturates to inf, in IEEE and in the mirror alike
+    assert np.all(np.isinf(r[np.abs(v) > 65520.0]))

@@ -51,6 +51,25 @@
 //! Bytes moved use one kind-agnostic protocol model (4 bytes/element):
 //! fwd reads x/params/cond and writes y + logdet; inv drops the logdet;
 //! vjp_stored reads x/dy/params/cond and writes dx + dtheta.
+//!
+//! On top of the protocol bytes, the model prices the **packed-GEMM
+//! traffic** of the vectorized kernels (`backend::math`): every GEMM
+//! operand `W (k x m)` is repacked once per entry call into 8-wide
+//! column panels, a write of `k * ceil8(m)` elements (tail columns are
+//! zero-padded up to the panel width). Per kind the packed matrices are
+//! the conditioner weight matrices (conv weights as their `9*ci x co`
+//! im2col form), plus the built `c x c` householder matrix for conv1x1.
+//! fwd and inv pack once; vjp_stored packs twice (the forward recompute
+//! and the dx backprop — the dW pass is the deliberately scalar,
+//! order-pinned kernel and never packs):
+//!
+//! | kind     | packed elements per call                                  |
+//! |----------|-----------------------------------------------------------|
+//! | cnn g    | `9*ci*ceil8(hid) + hid*ceil8(hid) + 9*hid*ceil8(co)`      |
+//! | mlp g    | `din*ceil8(hid) + hid*ceil8(hid) + hid*ceil8(dout)`       |
+//! | conv1x1  | `c * ceil8(c)`                                            |
+//! | hyper    | `9*(c/2)*ceil8(hid)`                                      |
+//! | others   | conditioner table above; actnorm/haar/permute/split: `0`  |
 
 use crate::coordinator::memory::BYTES_PER_ELEM;
 use crate::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode};
@@ -138,6 +157,55 @@ fn entry_bytes(meta: &LayerMeta) -> (u64, u64, u64) {
     (fwd, inv, vjps)
 }
 
+/// Round a GEMM column count up to the vectorized kernels' 8-wide panel.
+fn ceil8(m: u64) -> u64 {
+    m.div_ceil(8) * 8
+}
+
+/// Packed-panel write of the CNN conditioner's three weight matrices
+/// (convs in their im2col `taps x co` form).
+fn cnn_pack(ci: u64, hid: u64, co: u64) -> u64 {
+    9 * ci * ceil8(hid) + hid * ceil8(hid) + 9 * hid * ceil8(co)
+}
+
+/// Packed-panel write of the MLP conditioner's three weight matrices.
+fn mlp_pack(din: u64, hid: u64, dout: u64) -> u64 {
+    din * ceil8(hid) + hid * ceil8(hid) + hid * ceil8(dout)
+}
+
+/// Elements written into 8-wide GEMM panels per entry call (module doc).
+fn pack_elems(meta: &LayerMeta) -> Result<u64> {
+    let c = *meta.in_shape.last().unwrap_or(&1) as u64;
+    Ok(match meta.kind.as_str() {
+        "actnorm" | "haar" | "permute" => 0,
+        "conv1x1" => c * ceil8(c),
+        "glowcpl" => {
+            let (c1, c2) = (c / 2, c - c / 2);
+            cnn_pack(c1, hidden_of(meta)?, 2 * c2)
+        }
+        "addcpl" => {
+            let (c1, c2) = (c / 2, c - c / 2);
+            cnn_pack(c1, hidden_of(meta)?, c2)
+        }
+        "densecpl" | "condcpl" => {
+            let d = meta.in_shape[1] as u64;
+            let (d1, d2) = (d / 2, d - d / 2);
+            let dcond = meta.cond_shape.as_ref().map_or(0, |s| s[1] as u64);
+            mlp_pack(d1 + dcond, hidden_of(meta)?, 2 * d2)
+        }
+        "hyper" => 9 * (c / 2) * ceil8(hidden_of(meta)?),
+        "hint" => {
+            let d = meta.in_shape[1] as usize;
+            let hid = hidden_of(meta)?;
+            let depth = meta.cfg_usize("depth").unwrap_or(1);
+            hint_nodes(d, depth).iter()
+                .map(|(_, d1, d2)| mlp_pack(*d1 as u64, hid, 2 * *d2 as u64))
+                .sum()
+        }
+        other => bail!("no pack model for layer kind {other:?}"),
+    })
+}
+
 fn hidden_of(meta: &LayerMeta) -> Result<u64> {
     match meta.cfg_usize("hidden") {
         Some(h) => Ok(h as u64),
@@ -210,9 +278,13 @@ pub fn layer_entry_costs(meta: &LayerMeta) -> Result<LayerCost> {
         other => bail!("no cost model for layer kind {other:?}"),
     };
     let (bf, bi, bv) = entry_bytes(meta);
-    let fwd = Cost { flops: fwd, bytes: bf };
-    let inv = Cost { flops: inv, bytes: bi };
-    let vjp_stored = Cost { flops: vjps, bytes: bv };
+    // packed-GEMM panel traffic on top of the protocol bytes: fwd/inv
+    // pack once, vjp_stored twice (recompute + dx; the dW kernel is
+    // scalar and order-pinned, it never packs)
+    let pack = BYTES_PER_ELEM as u64 * pack_elems(meta)?;
+    let fwd = Cost { flops: fwd, bytes: bf + pack };
+    let inv = Cost { flops: inv, bytes: bi + pack };
+    let vjp_stored = Cost { flops: vjps, bytes: bv + 2 * pack };
     Ok(LayerCost { fwd, inv, vjp_stored, vjp: inv.add(vjp_stored) })
 }
 

@@ -18,10 +18,33 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::{Backend, RefBackend};
+use crate::backend::{Backend, RefBackend, WeightDtype};
 use crate::coordinator::memory::MemoryLedger;
 use crate::flow::{NetworkDef, ParamStore, StepKind};
 use crate::runtime::{builtin_manifest, Manifest};
+
+/// The resolved engine configuration: every knob [`EngineBuilder`] accepts,
+/// after defaulting. One inspectable struct ([`Engine::config`]) instead of
+/// scattered getters, so tools (bench headers, `serve` boot logs, tests)
+/// can report exactly what an engine was built with.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Resolved backend name ("ref", "xla", ...).
+    pub backend: String,
+    /// Data-parallel worker count for training and the threaded inference
+    /// hot path (>= 1).
+    pub threads: usize,
+    /// Intra-kernel fan-out for the GEMM/conv row-split paths (>= 1);
+    /// bit-invisible to results (see `backend::math::par`).
+    pub kernel_threads: usize,
+    /// Static scheduling-memory budget in bytes, if any.
+    pub mem_budget: Option<i64>,
+    /// Weight *storage* precision applied at load ([`Engine::load_weights`]);
+    /// compute stays f32.
+    pub weight_dtype: WeightDtype,
+    /// AOT artifact directory the manifest came from (None = builtin).
+    pub artifacts: Option<PathBuf>,
+}
 
 /// Backend + manifest pair; cheap to clone flows out of.
 ///
@@ -33,18 +56,14 @@ use crate::runtime::{builtin_manifest, Manifest};
 pub struct Engine {
     backend: Arc<dyn Backend>,
     manifest: Arc<Manifest>,
-    /// Default worker-thread count for data-parallel training
-    /// ([`crate::train::ParallelTrainer`]) and for the threaded inference
-    /// hot path ([`Flow::sample_batch`] / [`Flow::log_density`] /
-    /// [`Flow::invert_flex`]); 1 = single-threaded.
-    threads: usize,
-    /// Engine-wide scheduling-memory budget in bytes. Consumers treat it
-    /// as *static admission control*: the serve [`Registry`] rejects a
-    /// model at load when its minimum predicted peak
+    /// The resolved build-time configuration (threads, kernel threads,
+    /// memory budget, weight dtype, artifact source). The mem budget is
+    /// *static admission control*: the serve [`Registry`] rejects a model
+    /// at load when its minimum predicted peak
     /// ([`predict_peak`](crate::analysis::predict_peak) under the
     /// invertible schedule) cannot fit, before any weights are read, and
     /// `--mode auto` uses it as the default schedule-search budget.
-    mem_budget: Option<i64>,
+    config: EngineConfig,
 }
 
 /// Builder for [`Engine`].
@@ -55,13 +74,20 @@ pub struct Engine {
 ///   the RefBackend executes the same networks natively;
 /// * `.backend(b)`: explicit backend override;
 /// * `.threads(n)`: default data-parallel worker count for training;
-/// * `.mem_budget(bytes)`: static per-model scheduling-memory budget.
+/// * `.kernel_threads(n)`: intra-kernel GEMM/conv row-split fan-out;
+/// * `.mem_budget(bytes)`: static per-model scheduling-memory budget;
+/// * `.weight_dtype(d)`: bf16/f16 weight-storage precision at load.
+///
+/// This builder is the single configuration front: the resolved knobs come
+/// back as one [`EngineConfig`] via [`Engine::config`].
 #[derive(Default)]
 pub struct EngineBuilder {
     artifacts: Option<PathBuf>,
     backend: Option<Arc<dyn Backend>>,
     threads: Option<usize>,
+    kernel_threads: Option<usize>,
     mem_budget: Option<i64>,
+    weight_dtype: Option<WeightDtype>,
 }
 
 impl EngineBuilder {
@@ -79,8 +105,8 @@ impl EngineBuilder {
 
     /// Default worker-thread count (clamped to at least 1) for both
     /// data-parallel training and the threaded inference hot path: flows
-    /// handed out by [`Engine::flow`] chunk large `sample_batch` /
-    /// `log_density` / `invert_flex` batches across this many workers.
+    /// handed out by [`Engine::flow`] chunk large relaxed-batch `sample` /
+    /// `log_density` / `invert` calls across this many workers.
     /// Consumers read it back via [`Engine::default_threads`]; per-run
     /// training overrides go through `TrainConfig::threads`.
     pub fn threads(mut self, n: usize) -> Self {
@@ -94,6 +120,24 @@ impl EngineBuilder {
     /// `--mode auto` searches schedules under it by default.
     pub fn mem_budget(mut self, bytes: i64) -> Self {
         self.mem_budget = Some(bytes);
+        self
+    }
+
+    /// Intra-kernel thread fan-out (clamped to at least 1) for the
+    /// GEMM/conv row-split paths inside a single layer call. Orthogonal to
+    /// [`threads`](Self::threads): that one splits *batches* across
+    /// forked flows; this one splits *output rows* inside one kernel, and
+    /// is bitwise invisible to results. Default 1.
+    pub fn kernel_threads(mut self, n: usize) -> Self {
+        self.kernel_threads = Some(n.max(1));
+        self
+    }
+
+    /// Weight *storage* precision: non-f32 dtypes round every weight
+    /// tensor through bf16/f16 at load time ([`Engine::load_weights`]);
+    /// compute stays f32. Default [`WeightDtype::F32`] (no-op).
+    pub fn weight_dtype(mut self, dtype: WeightDtype) -> Self {
+        self.weight_dtype = Some(dtype);
         self
     }
 
@@ -117,33 +161,38 @@ impl EngineBuilder {
                    run `invertnet lint` for the full report):\n  {}",
                   bad.len(), bad.join("\n  "));
         }
+        let kernel_threads = self.kernel_threads.unwrap_or(1);
         let backend: Arc<dyn Backend> = match self.backend {
             Some(b) => b,
-            None => default_backend(self.artifacts.as_deref(), &manifest)?,
+            None => default_backend(self.artifacts.as_deref(), &manifest,
+                                    kernel_threads)?,
         };
-        Ok(Engine {
-            backend,
-            manifest,
+        let config = EngineConfig {
+            backend: backend.name().to_string(),
             threads: self.threads.unwrap_or(1),
+            kernel_threads,
             mem_budget: self.mem_budget,
-        })
+            weight_dtype: self.weight_dtype.unwrap_or_default(),
+            artifacts: self.artifacts,
+        };
+        Ok(Engine { backend, manifest, config })
     }
 }
 
 #[cfg(feature = "xla")]
-fn default_backend(artifacts: Option<&Path>, manifest: &Arc<Manifest>)
-                   -> Result<Arc<dyn Backend>> {
+fn default_backend(artifacts: Option<&Path>, manifest: &Arc<Manifest>,
+                   kernel_threads: usize) -> Result<Arc<dyn Backend>> {
     match artifacts {
         Some(dir) => Ok(Arc::new(
             crate::backend::XlaBackend::with_manifest(dir, manifest.clone())?)),
-        None => Ok(Arc::new(RefBackend::new())),
+        None => Ok(Arc::new(RefBackend::with_kernel_threads(kernel_threads))),
     }
 }
 
 #[cfg(not(feature = "xla"))]
-fn default_backend(_artifacts: Option<&Path>, _manifest: &Arc<Manifest>)
-                   -> Result<Arc<dyn Backend>> {
-    Ok(Arc::new(RefBackend::new()))
+fn default_backend(_artifacts: Option<&Path>, _manifest: &Arc<Manifest>,
+                   kernel_threads: usize) -> Result<Arc<dyn Backend>> {
+    Ok(Arc::new(RefBackend::with_kernel_threads(kernel_threads)))
 }
 
 impl Engine {
@@ -164,15 +213,37 @@ impl Engine {
         self.backend.name()
     }
 
+    /// The resolved build-time configuration.
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
     /// Default data-parallel worker count configured at build time.
+    /// Shorthand for `config().threads`.
     pub fn default_threads(&self) -> usize {
-        self.threads
+        self.config.threads
     }
 
     /// Static scheduling-memory budget configured at build time, if any
-    /// (see [`EngineBuilder::mem_budget`]).
+    /// (see [`EngineBuilder::mem_budget`]). Shorthand for
+    /// `config().mem_budget`.
     pub fn mem_budget(&self) -> Option<i64> {
-        self.mem_budget
+        self.config.mem_budget
+    }
+
+    /// Apply the configured weight-storage dtype to a parameter store, one
+    /// tensor at a time through [`Backend::load_weight`]. Call once after
+    /// loading inference weights; a no-op under [`WeightDtype::F32`].
+    pub fn load_weights(&self, params: &mut ParamStore) {
+        let dtype = self.config.weight_dtype;
+        if dtype == WeightDtype::F32 {
+            return;
+        }
+        for step in &mut params.tensors {
+            for t in step {
+                self.backend.load_weight(t, dtype);
+            }
+        }
     }
 
     /// The underlying execution backend (for tooling like the profiler).
@@ -200,7 +271,7 @@ impl Engine {
             manifest: self.manifest.clone(),
             def,
             ledger,
-            threads: self.threads,
+            threads: self.config.threads,
         })
     }
 }
@@ -214,7 +285,7 @@ pub struct Flow {
     pub def: NetworkDef,
     pub(crate) ledger: Arc<MemoryLedger>,
     /// Worker count for the threaded inference hot path (chunked
-    /// `sample_batch` / `log_density` / `invert_flex`); inherited from
+    /// relaxed-batch `sample` / `log_density` / `invert`); inherited from
     /// [`EngineBuilder::threads`], overridable via [`Flow::with_threads`].
     pub(crate) threads: usize,
 }
@@ -429,6 +500,70 @@ mod tests {
         let e2 = engine.clone();
         assert_eq!(e2.default_threads(), 4);
         assert!(e2.flow("realnvp2d").is_ok());
+    }
+
+    #[test]
+    fn resolved_config_is_inspectable() {
+        let engine = Engine::builder()
+            .threads(3)
+            .kernel_threads(2)
+            .mem_budget(1 << 20)
+            .weight_dtype(WeightDtype::Bf16)
+            .build()
+            .unwrap();
+        let cfg = engine.config();
+        assert_eq!(cfg.backend, "ref");
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.kernel_threads, 2);
+        assert_eq!(cfg.mem_budget, Some(1 << 20));
+        assert_eq!(cfg.weight_dtype, WeightDtype::Bf16);
+        assert!(cfg.artifacts.is_none());
+        // the shorthand getters agree with the config
+        assert_eq!(engine.default_threads(), 3);
+        assert_eq!(engine.mem_budget(), Some(1 << 20));
+        // defaults: everything off / single-threaded
+        let plain = Engine::native().unwrap().config().clone();
+        assert_eq!(plain.threads, 1);
+        assert_eq!(plain.kernel_threads, 1);
+        assert_eq!(plain.weight_dtype, WeightDtype::F32);
+        assert_eq!(plain.mem_budget, None);
+    }
+
+    #[test]
+    fn load_weights_applies_storage_dtype() {
+        let engine = Engine::builder()
+            .weight_dtype(WeightDtype::F16)
+            .build()
+            .unwrap();
+        let flow = engine.flow("realnvp2d").unwrap();
+        let mut params = flow.init_params(11).unwrap();
+        let before = params.clone();
+        engine.load_weights(&mut params);
+        let mut changed = false;
+        for (sa, sb) in params.tensors.iter().zip(&before.tensors) {
+            for (ta, tb) in sa.iter().zip(sb) {
+                for (&a, &b) in ta.data.iter().zip(&tb.data) {
+                    if a != b {
+                        changed = true;
+                    }
+                    // error contract: rel 2^-11 over the normal range,
+                    // abs 2^-25 in the subnormal tail
+                    assert!((a - b).abs()
+                                <= b.abs() * 0.00048828125 + 3.1e-8,
+                            "f16 storage error contract violated: \
+                             {b} -> {a}");
+                }
+            }
+        }
+        assert!(changed, "f16 rounding should perturb random weights");
+        // quantization is idempotent: loading twice changes nothing
+        let once = params.clone();
+        engine.load_weights(&mut params);
+        for (sa, sb) in params.tensors.iter().zip(&once.tensors) {
+            for (ta, tb) in sa.iter().zip(sb) {
+                assert_eq!(ta.data, tb.data);
+            }
+        }
     }
 
     #[test]

@@ -36,7 +36,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::api::Engine;
 use crate::backend::RefBackend;
 use crate::coordinator::{ActivationSchedule, CheckpointEveryK, ExecMode,
-                         MemoryLedger};
+                         InferOpts, MemoryLedger, SampleOpts};
 use crate::data::{synth_images, Density2d, LinearGaussian};
 use crate::posterior::analysis::{self, chi2_crit};
 use crate::posterior::{amortized_train, calibrate, posterior_samples,
@@ -217,6 +217,15 @@ COMMON OPTIONS:
                       (sample/score/serve/posterior-sample) chunks large
                       batches across the same pool — both bit-identical to
                       the single-threaded run
+  --kernel-threads N  intra-kernel fan-out (default: 1): the vectorized
+                      GEMM/conv kernels split output rows across N threads
+                      inside one layer call. Orthogonal to --threads and
+                      bit-identical at any N (fixed accumulation order)
+  --weight-dtype D    weight STORAGE precision for inference paths
+                      (f32|bf16|f16, default f32): checkpoint weights are
+                      rounded through D once at load; compute stays f32.
+                      Applies to sample/score/serve/posterior-sample, not
+                      training
   --microbatch N      gradient-accumulation shard size (default: batch/threads);
                       smaller values tighten the activation-memory envelope
 ";
@@ -304,18 +313,34 @@ pub fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-/// Build the engine a subcommand asked for (`--backend`, `--artifacts`).
+/// Build the engine a subcommand asked for. Every engine-level knob
+/// (`--backend`, `--artifacts`, `--threads`, `--kernel-threads`,
+/// `--mem-budget`, `--weight-dtype`) funnels through [`EngineBuilder`] —
+/// the single configuration front — so `Engine::config()` reports exactly
+/// what this invocation was built with.
 fn engine_of(args: &Args) -> Result<Engine> {
     let artifacts = args.get("artifacts").map(PathBuf::from);
-    let mut builder = Engine::builder().threads(args.usize_or("threads", 1)?);
+    let kernel_threads = args.usize_or("kernel-threads", 1)?;
+    let mut builder = Engine::builder()
+        .threads(args.usize_or("threads", 1)?)
+        .kernel_threads(kernel_threads);
     if let Some(dir) = &artifacts {
         builder = builder.artifacts(dir);
     }
     if let Some(spec) = args.get("mem-budget") {
         builder = builder.mem_budget(parse_bytes(spec)?);
     }
+    if let Some(spec) = args.get("weight-dtype") {
+        let dtype = crate::backend::WeightDtype::parse(spec).ok_or_else(
+            || usage_err(format!(
+                "unknown --weight-dtype {spec:?} (f32|bf16|f16)")))?;
+        builder = builder.weight_dtype(dtype);
+    }
     match args.str_or("backend", "ref") {
-        "ref" => Ok(builder.backend(Arc::new(RefBackend::new())).build()?),
+        "ref" => Ok(builder
+            .backend(Arc::new(
+                RefBackend::with_kernel_threads(kernel_threads)))
+            .build()?),
         "xla" => {
             if artifacts.is_none() {
                 bail!("--backend xla requires --artifacts DIR");
@@ -647,6 +672,7 @@ fn cmd_sample(args: &Args) -> Result<()> {
              initialized, seed {seed}) weights; pass --ckpt DIR for samples \
              from a trained model"),
     }
+    engine.load_weights(&mut params);
     if flow.def.cond_shape.is_some() {
         bail!("use `invertnet serve` (cond-carrying sample requests) or the \
                amortized_inference example for conditional sampling");
@@ -657,8 +683,8 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let mut all: Vec<f32> = Vec::new();
     let mut shape = flow.def.in_shape.clone();
     for _ in 0..batches {
-        let x = flow.sample_batch(&params, flow.batch(), None, temperature,
-                                  &mut rng)?;
+        let x = flow.sample(&params, SampleOpts::new(flow.batch(), &mut rng)
+                                         .temperature(temperature))?;
         all.extend_from_slice(&x.data);
     }
     shape[0] *= batches;
@@ -792,7 +818,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     let cal = calibrate(&sim, datasets, draws, level, bins, &mut rng,
                         |y, l, r| {
         let cond = analysis::tile_observation(y, l)?;
-        flow.sample_batch(&params, l, Some(&cond), 1.0, r)
+        flow.sample(&params, SampleOpts::new(l, r).cond(&cond))
     })?;
 
     let crit = chi2_crit(cal.df(), alpha);
@@ -962,7 +988,8 @@ fn cmd_score(args: &Args) -> Result<()> {
     // activation memory on arbitrarily large score files) and fans the
     // chunks across the engine's worker pool (`--threads N`) —
     // bit-identical to the sequential walk at any thread count
-    let scores = flow.log_density(&x, cond.as_ref(), &params)?;
+    let scores = flow.log_density(
+        &x, &params, InferOpts::relaxed().cond_opt(cond.as_ref()))?;
 
     let mean = scores.iter().sum::<f32>() / n as f32;
     let out = args.str_or("out", "scores.npy");
@@ -1504,6 +1531,24 @@ mod tests {
         // absent flag -> single-threaded default
         let a = Args::parse(&argv(&["train"])).unwrap();
         assert_eq!(engine_of(&a).unwrap().default_threads(), 1);
+    }
+
+    #[test]
+    fn kernel_threads_and_weight_dtype_reach_the_engine_config() {
+        let a = Args::parse(&argv(&["score", "--kernel-threads", "4",
+                                    "--weight-dtype", "bf16"])).unwrap();
+        let cfg = engine_of(&a).unwrap().config().clone();
+        assert_eq!(cfg.kernel_threads, 4);
+        assert_eq!(cfg.weight_dtype, crate::backend::WeightDtype::Bf16);
+        // defaults: serial kernels, full-precision storage
+        let a = Args::parse(&argv(&["score"])).unwrap();
+        let cfg = engine_of(&a).unwrap().config().clone();
+        assert_eq!(cfg.kernel_threads, 1);
+        assert_eq!(cfg.weight_dtype, crate::backend::WeightDtype::F32);
+        // a bad dtype is a usage error (exit 2), caught before anything runs
+        let a = Args::parse(&argv(&["score", "--weight-dtype", "f8"]))
+            .unwrap();
+        assert_eq!(exit_code(&engine_of(&a).unwrap_err()), 2);
     }
 
     #[test]

@@ -1,11 +1,27 @@
 //! Dense math kernels for the pure-Rust [`super::RefBackend`]: SAME-padded
-//! NHWC convolution with its input/weight VJPs, small matmuls, conditioner
-//! networks (CNN/MLP) with hand-written pullbacks, and the Householder
-//! orthogonal parameterization used by Conv1x1.
+//! NHWC convolution (im2col + packed GEMM) with its input/weight VJPs,
+//! a cache-tiled packed GEMM built on hand-unrolled 8-wide microkernels,
+//! conditioner networks (CNN/MLP) with hand-written pullbacks, the
+//! Householder orthogonal parameterization used by Conv1x1, and the
+//! bf16/f16 weight-storage conversions.
 //!
 //! Every routine here was cross-validated against the JAX reference layers
 //! in `python/compile/layers/` before being transcribed (forward, inverse
-//! and gradient paths all agree to f32 precision).
+//! and gradient paths all agree to f32 precision), and the vectorized
+//! kernels are pinned against the scalar references in [`naive`] by the
+//! kernel-equivalence suite (`rust/tests/kernels.rs`).
+//!
+//! # Kernel architecture
+//!
+//! The GEMM packs B once per call into column panels of width [`NR`]=8
+//! (zero-padded tails), then sweeps 4-row blocks of A against the packed
+//! panels with a 4x8 register-accumulator microkernel ([`fma8`]). Each
+//! output cell is a single serial k-ascending sum — the 32 in-flight
+//! accumulators give the ILP, not split sums — so results are bitwise
+//! independent of the blocking and of [`par::kernel_threads`] (threads
+//! split disjoint row ranges; no cross-thread reduction exists).
+//! Convolutions lower to the same GEMM through a SAME-padded im2col whose
+//! column order matches the HWIO weight row order.
 
 use crate::tensor::Tensor;
 
@@ -15,25 +31,33 @@ use crate::tensor::Tensor;
 
 /// The training inner loop executes the same layer shapes thousands of
 /// times; allocating a fresh `Vec` per matmul/conv dominated allocator
-/// traffic. Kernels take their output and transpose buffers from this
-/// thread-local pool, and callers `recycle` dead intermediates so the
+/// traffic. Kernels take their output, packing and im2col buffers from
+/// this thread-local pool, and callers `recycle` dead intermediates so the
 /// buffers cycle instead of round-tripping through the allocator. The pool
 /// is per-thread, so the data-parallel workers never contend on it.
-pub(crate) mod scratch {
-    use std::cell::RefCell;
+pub mod scratch {
+    use std::cell::{Cell, RefCell};
     use std::sync::{Arc, OnceLock};
 
     use crate::telemetry::Counter;
     use crate::tensor::Tensor;
 
-    /// Free-list caps: buffer count for cheap scans, plus a byte budget so
-    /// a pass over a large image net cannot pin tens of MB of dead
-    /// buffers per thread for the process lifetime.
-    const MAX_POOLED: usize = 16;
-    const MAX_POOLED_BYTES: usize = 8 << 20; // 8 MiB per thread
+    /// Free-list count cap (cheap scans).
+    const MAX_POOLED: usize = 32;
+    /// Floor of the per-thread byte budget. Large-image nets (64x64+)
+    /// produce multi-MiB im2col slabs; the old fixed 8 MiB cap made every
+    /// layer call on such nets a fresh allocation.
+    const BASE_POOLED_BYTES: usize = 32 << 20; // 32 MiB
+    /// Hard ceiling on the adaptive budget so a pass over a pathological
+    /// net cannot pin unbounded dead memory per thread.
+    const HARD_CAP_BYTES: usize = 256 << 20; // 256 MiB
 
     thread_local! {
         static POOL: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+        /// Largest single request seen on this thread, in bytes. The pool
+        /// budget scales with it so the working set of the biggest planned
+        /// activation (plus its GEMM-side buffers) always fits.
+        static HIGH_WATER: Cell<usize> = const { Cell::new(0) };
     }
 
     /// Pool telemetry (this is the hottest instrumented path in the
@@ -63,10 +87,26 @@ pub(crate) mod scratch {
         })
     }
 
+    /// Current per-thread byte budget: max(32 MiB, 4x the largest single
+    /// request seen on this thread), capped at 256 MiB. Exposed so the
+    /// throughput suite's scratch-miss regression check can report it.
+    pub fn pool_budget_bytes() -> usize {
+        HIGH_WATER.with(|h| {
+            BASE_POOLED_BYTES
+                .max(h.get().saturating_mul(4))
+                .min(HARD_CAP_BYTES)
+        })
+    }
+
     fn take_impl(len: usize, zero: bool) -> Vec<f32> {
         if len == 0 {
             return Vec::new();
         }
+        HIGH_WATER.with(|h| {
+            if len * 4 > h.get() {
+                h.set(len * 4);
+            }
+        });
         POOL.with(|pool| {
             let mut pool = pool.borrow_mut();
             let mut best: Option<(usize, usize)> = None; // (idx, capacity)
@@ -119,11 +159,12 @@ pub(crate) mod scratch {
         if buf.capacity() == 0 {
             return;
         }
+        let budget = pool_budget_bytes();
         POOL.with(|pool| {
             let mut pool = pool.borrow_mut();
             let held: usize = pool.iter().map(|b| b.capacity() * 4).sum();
             if pool.len() < MAX_POOLED
-                && held + buf.capacity() * 4 <= MAX_POOLED_BYTES
+                && held + buf.capacity() * 4 <= budget
             {
                 pool.push(buf);
             }
@@ -133,6 +174,146 @@ pub(crate) mod scratch {
     /// Recycle a dead intermediate tensor's storage.
     pub fn recycle(t: Tensor) {
         put(t.data);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-internal parallelism knob
+// ---------------------------------------------------------------------------
+
+/// Intra-kernel thread count for the GEMM/conv row-split paths. This is a
+/// per-thread setting (default 1 = serial) so the data-parallel outer
+/// loops (ParallelTrainer workers, `infer_parallel` forks) never nest
+/// thread pools unless explicitly asked to. Because the kernels split
+/// disjoint output-row ranges and every cell keeps its serial k-ascending
+/// accumulation order, results are bit-identical at *any* thread count.
+pub mod par {
+    use std::cell::Cell;
+
+    thread_local! {
+        static KERNEL_THREADS: Cell<usize> = const { Cell::new(1) };
+    }
+
+    /// Threads the current thread's kernel calls may fan out to.
+    pub fn kernel_threads() -> usize {
+        KERNEL_THREADS.with(|c| c.get().max(1))
+    }
+
+    /// Set the intra-kernel thread count for the current thread.
+    pub fn set_kernel_threads(n: usize) {
+        KERNEL_THREADS.with(|c| c.set(n.max(1)));
+    }
+
+    /// Run `f` with the intra-kernel thread count set to `n`, restoring
+    /// the previous value afterwards (RAII-style for backend dispatch).
+    pub fn with_kernel_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+        let prev = kernel_threads();
+        set_kernel_threads(n);
+        let r = f();
+        set_kernel_threads(prev);
+        r
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reduced-precision weight storage (bf16 / IEEE f16)
+// ---------------------------------------------------------------------------
+
+/// Conversions for the `Backend`-level reduced-precision *storage* mode:
+/// inference weights are rounded through bf16 or f16 once at load time and
+/// widened straight back, so all compute stays f32 while the stored values
+/// carry the half-width precision contract (bf16: 8 significand bits,
+/// relative error <= 2^-8; f16: 11 significand bits, <= 2^-11 over the
+/// normal range, subnormal below 2^-14, overflow to inf above 65504).
+/// Rounding is IEEE round-to-nearest-even in both directions of interest.
+pub mod half {
+    /// f32 -> bf16 bits, round-to-nearest-even. NaN payloads are quieted.
+    pub fn f32_to_bf16(x: f32) -> u16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            return ((bits >> 16) as u16) | 0x0040;
+        }
+        let round = ((bits >> 16) & 1) + 0x7FFF;
+        ((bits.wrapping_add(round)) >> 16) as u16
+    }
+
+    /// bf16 bits -> f32 (exact: bf16 is a truncated f32).
+    pub fn bf16_to_f32(h: u16) -> f32 {
+        f32::from_bits((h as u32) << 16)
+    }
+
+    /// f32 -> IEEE binary16 bits, round-to-nearest-even, with subnormal
+    /// and overflow-to-infinity handling.
+    pub fn f32_to_f16(x: f32) -> u16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp32 = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x007F_FFFF;
+        if exp32 == 255 {
+            // inf / nan: keep nan-ness, quiet the payload
+            return if man == 0 { sign | 0x7C00 } else { sign | 0x7E00 };
+        }
+        let exp = exp32 - 127 + 15;
+        if exp >= 31 {
+            return sign | 0x7C00; // overflow -> inf
+        }
+        if exp <= 0 {
+            if exp < -10 {
+                return sign; // underflow -> signed zero
+            }
+            // subnormal: shift the (implicit-1) significand into place
+            let full = man | 0x0080_0000;
+            let shift = (14 - exp) as u32; // 14..=24
+            let half_man = full >> shift;
+            let rem = full & ((1u32 << shift) - 1);
+            let halfway = 1u32 << (shift - 1);
+            let up = rem > halfway || (rem == halfway && (half_man & 1) == 1);
+            return sign | (half_man + up as u32) as u16;
+        }
+        let half_man = man >> 13;
+        let rem = man & 0x1FFF;
+        let mut h = ((exp as u32) << 10) | half_man;
+        if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+            h += 1; // carry may roll into the exponent; that is correct
+        }
+        sign | h as u16
+    }
+
+    /// IEEE binary16 bits -> f32 (exact).
+    pub fn f16_to_f32(h: u16) -> f32 {
+        let neg = h & 0x8000 != 0;
+        let exp = (h >> 10) & 0x1F;
+        let man = (h & 0x3FF) as f32;
+        let mag = match exp {
+            0 => man * (-24f32).exp2(),
+            31 => {
+                if man == 0.0 {
+                    f32::INFINITY
+                } else {
+                    return f32::NAN;
+                }
+            }
+            e => (1.0 + man * (-10f32).exp2()) * ((e as i32 - 15) as f32).exp2(),
+        };
+        if neg {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Round a buffer through bf16 storage precision in place.
+    pub fn round_bf16_slice(data: &mut [f32]) {
+        for v in data {
+            *v = bf16_to_f32(f32_to_bf16(*v));
+        }
+    }
+
+    /// Round a buffer through f16 storage precision in place.
+    pub fn round_f16_slice(data: &mut [f32]) {
+        for v in data {
+            *v = f16_to_f32(f32_to_f16(*v));
+        }
     }
 }
 
@@ -147,58 +328,246 @@ fn dims2(t: &Tensor) -> (usize, usize) {
 }
 
 // ---------------------------------------------------------------------------
+// Packed GEMM: NR=8 column panels, 4x8 register microkernel
+// ---------------------------------------------------------------------------
+
+/// Panel width: one microkernel column tile, matching an 8-lane f32 SIMD
+/// register on the targets we care about.
+const NR: usize = 8;
+/// Row-block height: rows of A held live against one packed panel.
+const MR: usize = 4;
+
+/// The 8-wide accumulate: acc += a * b[0..8], hand-unrolled so the
+/// optimizer sees eight independent lane updates (one vfmadd on AVX2).
+#[inline(always)]
+fn fma8(acc: &mut [f32; NR], a: f32, b: &[f32]) {
+    acc[0] += a * b[0];
+    acc[1] += a * b[1];
+    acc[2] += a * b[2];
+    acc[3] += a * b[3];
+    acc[4] += a * b[4];
+    acc[5] += a * b[5];
+    acc[6] += a * b[6];
+    acc[7] += a * b[7];
+}
+
+fn panels_of(m: usize) -> usize {
+    (m + NR - 1) / NR
+}
+
+/// Pack row-major B (k x m) into column panels: panel `pj` holds columns
+/// `pj*NR .. pj*NR+8` contiguously by k, tail columns zero-padded. Packed
+/// once per layer call and reused across every row block of A.
+fn pack_b_panels(b: &[f32], k: usize, m: usize) -> Vec<f32> {
+    let panels = panels_of(m);
+    let mut packed = scratch::take_any(panels * k * NR);
+    for pj in 0..panels {
+        let j0 = pj * NR;
+        let w = NR.min(m - j0);
+        let dst = &mut packed[pj * k * NR..][..k * NR];
+        for p in 0..k {
+            let d = &mut dst[p * NR..][..NR];
+            d[..w].copy_from_slice(&b[p * m + j0..][..w]);
+            d[w..].fill(0.0);
+        }
+    }
+    packed
+}
+
+/// Pack transposed-layout B (m x k row-major, i.e. `bt[j*k + p]`) into the
+/// same panel layout as [`pack_b_panels`].
+fn pack_bt_panels(bt: &[f32], k: usize, m: usize) -> Vec<f32> {
+    let panels = panels_of(m);
+    let mut packed = scratch::take_any(panels * k * NR);
+    for pj in 0..panels {
+        let j0 = pj * NR;
+        let w = NR.min(m - j0);
+        let dst = &mut packed[pj * k * NR..][..k * NR];
+        for jj in 0..w {
+            let src = &bt[(j0 + jj) * k..][..k];
+            for p in 0..k {
+                dst[p * NR + jj] = src[p];
+            }
+        }
+        if w < NR {
+            for p in 0..k {
+                dst[p * NR + w..p * NR + NR].fill(0.0);
+            }
+        }
+    }
+    packed
+}
+
+/// out[r, j] = sum_p a[r, p] * B[p, j] over packed panels; every output
+/// cell is a single serial k-ascending sum written exactly once. Main loop
+/// is the 4x8 microkernel (32 live accumulators); row tails fall back to a
+/// 1x8 kernel; column tails are zero-padded in the panels and trimmed on
+/// store.
+fn gemm_packed(a: &[f32], packed: &[f32], rows: usize, k: usize, m: usize,
+               out: &mut [f32]) {
+    let panels = panels_of(m);
+    let mut r = 0;
+    while r + MR <= rows {
+        let a0 = &a[r * k..][..k];
+        let a1 = &a[(r + 1) * k..][..k];
+        let a2 = &a[(r + 2) * k..][..k];
+        let a3 = &a[(r + 3) * k..][..k];
+        for pj in 0..panels {
+            let bp = &packed[pj * k * NR..][..k * NR];
+            let mut acc = [[0.0f32; NR]; MR];
+            for p in 0..k {
+                let b8 = &bp[p * NR..][..NR];
+                fma8(&mut acc[0], a0[p], b8);
+                fma8(&mut acc[1], a1[p], b8);
+                fma8(&mut acc[2], a2[p], b8);
+                fma8(&mut acc[3], a3[p], b8);
+            }
+            let j0 = pj * NR;
+            let w = NR.min(m - j0);
+            for (i, accr) in acc.iter().enumerate() {
+                out[(r + i) * m + j0..][..w].copy_from_slice(&accr[..w]);
+            }
+        }
+        r += MR;
+    }
+    while r < rows {
+        let ar = &a[r * k..][..k];
+        for pj in 0..panels {
+            let bp = &packed[pj * k * NR..][..k * NR];
+            let mut acc = [0.0f32; NR];
+            for p in 0..k {
+                fma8(&mut acc, ar[p], &bp[p * NR..][..NR]);
+            }
+            let j0 = pj * NR;
+            let w = NR.min(m - j0);
+            out[r * m + j0..][..w].copy_from_slice(&acc[..w]);
+        }
+        r += 1;
+    }
+}
+
+/// Minimum per-thread multiply count before the row-split parallel path
+/// engages (thread spawn + im2col slab setup must amortize).
+const PAR_MIN_WORK: usize = 1 << 18;
+
+/// Row-split parallel GEMM: output rows are partitioned into contiguous
+/// disjoint chunks, one scoped thread each. No cross-thread reduction, so
+/// the result is bitwise identical to the serial kernel.
+fn gemm_rows_parallel(a: &[f32], packed: &[f32], rows: usize, k: usize,
+                      m: usize, out: &mut [f32]) {
+    let mut t = par::kernel_threads().min(rows.max(1));
+    while t > 1 && rows * k * m / t < PAR_MIN_WORK {
+        t -= 1;
+    }
+    if t <= 1 {
+        return gemm_packed(a, packed, rows, k, m, out);
+    }
+    let chunk = (rows + t - 1) / t;
+    std::thread::scope(|s| {
+        for (ti, o) in out.chunks_mut(chunk * m).enumerate() {
+            let r0 = ti * chunk;
+            let nr = o.len() / m;
+            let ar = &a[r0 * k..][..nr * k];
+            s.spawn(move || gemm_packed(ar, packed, nr, k, m, o));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Convolution (stride 1, SAME, NHWC x HWIO) + VJPs
 // ---------------------------------------------------------------------------
 
-/// y[b,i,j,o] = sum_{di,dj,c} x[b, i+di-ph, j+dj-pw, c] * w[di,dj,c,o]
-/// with zero padding (odd kernels: 1x1 or 3x3 here).
-pub fn conv2d_same(x: &Tensor, w: &Tensor) -> Tensor {
-    let (n, h, wd, ci) = dims4(x);
-    let (kh, kw, wci, co) = dims4(w);
-    assert_eq!(ci, wci, "conv channel mismatch: {ci} vs {wci}");
-    if kh == 1 && kw == 1 {
-        // pointwise conv == one matmul over the flattened pixel rows;
-        // the blocked transposed-W kernel beats the scatter loop below
-        let rows = n * h * wd;
-        let mut wt = scratch::take_any(ci * co);
-        transpose_into(&w.data, ci, co, &mut wt);
-        let mut out = scratch::take_any(rows * co);
-        matmul_rows_into(&x.data, &wt, rows, ci, co, &mut out);
-        scratch::put(wt);
-        return Tensor { shape: vec![n, h, wd, co], data: out };
-    }
+/// Write `nrows` im2col rows starting at flattened pixel row `r0` into
+/// `dst` (each row is kh*kw*ci wide, column order (di, dj, ci) matching
+/// the HWIO weight row order; out-of-bounds taps are zero).
+fn im2col_into(x: &Tensor, kh: usize, kw: usize, r0: usize, nrows: usize,
+               dst: &mut [f32]) {
+    let (_, h, wd, ci) = dims4(x);
     let (ph, pw) = (kh / 2, kw / 2);
-    let mut out = scratch::take(n * h * wd * co);
-    for b in 0..n {
-        for i in 0..h {
-            for j in 0..wd {
-                let orow = &mut out[((b * h + i) * wd + j) * co..][..co];
-                for di in 0..kh {
-                    let si = (i + di).wrapping_sub(ph);
-                    if si >= h {
-                        continue;
-                    }
-                    for dj in 0..kw {
-                        let sj = (j + dj).wrapping_sub(pw);
-                        if sj >= wd {
-                            continue;
-                        }
-                        let xrow = &x.data[((b * h + si) * wd + sj) * ci..][..ci];
-                        let wblk = &w.data[(di * kw + dj) * ci * co..][..ci * co];
-                        for (ii, &xv) in xrow.iter().enumerate() {
-                            if xv == 0.0 {
-                                continue;
-                            }
-                            let wrow = &wblk[ii * co..][..co];
-                            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                                *o += xv * wv;
-                            }
-                        }
-                    }
+    let kk = kh * kw * ci;
+    for rr in 0..nrows {
+        let r = r0 + rr;
+        let b = r / (h * wd);
+        let rem = r % (h * wd);
+        let i = rem / wd;
+        let j = rem % wd;
+        let drow = &mut dst[rr * kk..][..kk];
+        for di in 0..kh {
+            let si = (i + di).wrapping_sub(ph);
+            for dj in 0..kw {
+                let sj = (j + dj).wrapping_sub(pw);
+                let d = &mut drow[(di * kw + dj) * ci..][..ci];
+                if si >= h || sj >= wd {
+                    d.fill(0.0);
+                } else {
+                    d.copy_from_slice(
+                        &x.data[((b * h + si) * wd + sj) * ci..][..ci]);
                 }
             }
         }
     }
+}
+
+/// The full im2col matrix for a stride-1 SAME conv: (n*h*w, kh*kw*ci).
+/// `conv2d_same(x, w) == im2col_same(x, kh, kw) @ w.reshape(kh*kw*ci, co)`.
+pub fn im2col_same(x: &Tensor, kh: usize, kw: usize) -> Tensor {
+    let (n, h, wd, ci) = dims4(x);
+    let rows = n * h * wd;
+    let kk = kh * kw * ci;
+    let mut out = scratch::take_any(rows * kk);
+    im2col_into(x, kh, kw, 0, rows, &mut out);
+    Tensor { shape: vec![rows, kk], data: out }
+}
+
+/// y[b,i,j,o] = sum_{di,dj,c} x[b, i+di-ph, j+dj-pw, c] * w[di,dj,c,o]
+/// with zero padding (odd kernels: 1x1 or 3x3 here).
+///
+/// 1x1 kernels run as one pointwise GEMM over the flattened pixel rows;
+/// general kernels lower through im2col into the same packed GEMM. Both
+/// paths split output rows across [`par::kernel_threads`] when the work
+/// amortizes a spawn (each thread builds its own im2col slab — the im2col
+/// is parallel, not just the GEMM).
+pub fn conv2d_same(x: &Tensor, w: &Tensor) -> Tensor {
+    let (n, h, wd, ci) = dims4(x);
+    let (kh, kw, wci, co) = dims4(w);
+    assert_eq!(ci, wci, "conv channel mismatch: {ci} vs {wci}");
+    let rows = n * h * wd;
+    if kh == 1 && kw == 1 {
+        let packed = pack_b_panels(&w.data, ci, co);
+        let mut out = scratch::take_any(rows * co);
+        gemm_rows_parallel(&x.data, &packed, rows, ci, co, &mut out);
+        scratch::put(packed);
+        return Tensor { shape: vec![n, h, wd, co], data: out };
+    }
+    let kk = kh * kw * ci;
+    let packed = pack_b_panels(&w.data, kk, co);
+    let mut out = scratch::take_any(rows * co);
+    let mut t = par::kernel_threads().min(rows.max(1));
+    while t > 1 && rows * kk * co / t < PAR_MIN_WORK {
+        t -= 1;
+    }
+    if t <= 1 {
+        let mut cols = scratch::take_any(rows * kk);
+        im2col_into(x, kh, kw, 0, rows, &mut cols);
+        gemm_packed(&cols, &packed, rows, kk, co, &mut out);
+        scratch::put(cols);
+    } else {
+        let chunk = (rows + t - 1) / t;
+        let packed = &packed[..];
+        std::thread::scope(|s| {
+            for (ti, o) in out.chunks_mut(chunk * co).enumerate() {
+                let r0 = ti * chunk;
+                let nr = o.len() / co;
+                s.spawn(move || {
+                    let mut cols = scratch::take_any(nr * kk);
+                    im2col_into(x, kh, kw, r0, nr, &mut cols);
+                    gemm_packed(&cols, packed, nr, kk, co, o);
+                    scratch::put(cols);
+                });
+            }
+        });
+    }
+    scratch::put(packed);
     Tensor { shape: vec![n, h, wd, co], data: out }
 }
 
@@ -233,6 +602,11 @@ pub fn conv2d_vjp_x(dy: &Tensor, w: &Tensor) -> Tensor {
 
 /// dL/dw of `conv2d_same(x, w)` given dL/dy:
 /// dw[di,dj,c,o] = sum_{b,i,j} x[b, i+di-ph, j+dj-pw, c] * dy[b,i,j,o].
+///
+/// Deliberately scalar and row-serial: the accumulation order over samples
+/// (b, i, j ascending) is the canonical one the data-parallel gradient
+/// reduction is compared against (`train::parallel`), so this kernel is a
+/// numerics contract, not a throughput path.
 pub fn conv2d_vjp_w(x: &Tensor, dy: &Tensor, kh: usize, kw: usize) -> Tensor {
     let (n, h, wd, ci) = dims4(x);
     let (_, _, _, co) = dims4(dy);
@@ -293,11 +667,12 @@ pub fn conv2d_vjp_w(x: &Tensor, dy: &Tensor, kh: usize, kw: usize) -> Tensor {
 }
 
 // ---------------------------------------------------------------------------
-// Small matmuls (row-major, blocked over a transposed-B layout)
+// Small matmuls (row-major, over the packed-panel GEMM)
 // ---------------------------------------------------------------------------
 
 /// Dot product with four independent accumulators (ILP/SIMD friendly;
 /// the serial-dependency chain of a naive fold defeats vectorization).
+/// Used by the Householder path, where operands are short rows.
 #[inline]
 fn dot(a: &[f32], b: &[f32]) -> f32 {
     let n = a.len().min(b.len());
@@ -318,36 +693,6 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-/// out[r, j] = sum_p x[r, p] * wt[j, p] with `wt` in transposed (m, k)
-/// layout: every output cell is one contiguous dot product, written once
-/// (no read-modify-write). Row-blocked by 4 so each streamed `wt` row is
-/// reused across four x rows.
-fn matmul_rows_into(x: &[f32], wt: &[f32], rows: usize, k: usize, m: usize,
-                    out: &mut [f32]) {
-    let mut r = 0;
-    while r + 4 <= rows {
-        let x0 = &x[r * k..][..k];
-        let x1 = &x[(r + 1) * k..][..k];
-        let x2 = &x[(r + 2) * k..][..k];
-        let x3 = &x[(r + 3) * k..][..k];
-        for j in 0..m {
-            let wj = &wt[j * k..][..k];
-            out[r * m + j] = dot(x0, wj);
-            out[(r + 1) * m + j] = dot(x1, wj);
-            out[(r + 2) * m + j] = dot(x2, wj);
-            out[(r + 3) * m + j] = dot(x3, wj);
-        }
-        r += 4;
-    }
-    while r < rows {
-        let xr = &x[r * k..][..k];
-        for j in 0..m {
-            out[r * m + j] = dot(xr, &wt[j * k..][..k]);
-        }
-        r += 1;
-    }
-}
-
 /// (rows, cols) row-major -> (cols, rows) row-major.
 fn transpose_into(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
     for i in 0..rows {
@@ -359,19 +704,18 @@ fn transpose_into(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
 
 /// (n,k) x (k,m) -> (n,m)
 ///
-/// B is transposed into scratch on every call; at O(k*m) against the
-/// O(n*k*m) kernel this is <1% for the shapes here, which is why there is
-/// no per-weight transposed cache (that would need weight identity
-/// tracking across ParamStore updates).
+/// B is packed into panels on every call; at O(k*m) against the O(n*k*m)
+/// kernel this is <1% for the shapes here, which is why there is no
+/// per-weight packed cache (that would need weight identity tracking
+/// across ParamStore updates).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, k) = dims2(a);
     let (k2, m) = dims2(b);
     assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
-    let mut bt = scratch::take_any(k * m);
-    transpose_into(&b.data, k, m, &mut bt);
+    let packed = pack_b_panels(&b.data, k, m);
     let mut out = scratch::take_any(n * m);
-    matmul_rows_into(&a.data, &bt, n, k, m, &mut out);
-    scratch::put(bt);
+    gemm_rows_parallel(&a.data, &packed, n, k, m, &mut out);
+    scratch::put(packed);
     Tensor { shape: vec![n, m], data: out }
 }
 
@@ -401,14 +745,16 @@ pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor { shape: vec![k, m], data: out }
 }
 
-/// a bᵀ: (n,m) x (k,m) -> (n,k). `b` is already in the transposed layout
-/// the blocked kernel wants, so this runs without a transpose pass.
+/// a bᵀ: (n,m) x (k,m) -> (n,k). `b` arrives in the transposed layout, so
+/// it packs through [`pack_bt_panels`] without a materialized transpose.
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, m) = dims2(a);
     let (k, m2) = dims2(b);
     assert_eq!(m, m2, "matmul_bt inner dim: {m} vs {m2}");
+    let packed = pack_bt_panels(&b.data, m, k);
     let mut out = scratch::take_any(n * k);
-    matmul_rows_into(&a.data, &b.data, n, m, k, &mut out);
+    gemm_rows_parallel(&a.data, &packed, n, m, k, &mut out);
+    scratch::put(packed);
     Tensor { shape: vec![n, k], data: out }
 }
 
@@ -649,10 +995,12 @@ pub fn householder_vjp(vs: &[&Tensor], dw: &Tensor) -> Vec<Tensor> {
 pub fn apply_mat(x: &Tensor, w: &Tensor) -> Tensor {
     let c = *x.shape.last().unwrap();
     let rows = x.len() / c;
+    // W's rows are contiguous dot operands, i.e. already the transposed
+    // layout: out[r, i] = dot(x_r, w_i)
+    let packed = pack_bt_panels(&w.data, c, c);
     let mut out = scratch::take_any(x.len());
-    // W's rows are contiguous, so this is already a transposed-layout
-    // matmul: out[r, i] = dot(x_r, w_i)
-    matmul_rows_into(&x.data, &w.data, rows, c, c, &mut out);
+    gemm_rows_parallel(&x.data, &packed, rows, c, c, &mut out);
+    scratch::put(packed);
     Tensor { shape: x.shape.clone(), data: out }
 }
 
@@ -675,6 +1023,108 @@ pub fn apply_mat_t(y: &Tensor, w: &Tensor) -> Tensor {
         }
     }
     Tensor { shape: y.shape.clone(), data: out }
+}
+
+// ---------------------------------------------------------------------------
+// Naive scalar references
+// ---------------------------------------------------------------------------
+
+/// Unblocked, unpacked scalar kernels: the ground truth the vectorized
+/// paths are pinned against (kernel-equivalence suite) and the baseline
+/// the throughput suite's gated speedup metrics are measured from. Not
+/// used on any production path.
+pub mod naive {
+    use super::{dims2, dims4};
+    use crate::tensor::Tensor;
+
+    /// Scalar triple-loop (n,k) x (k,m) -> (n,m).
+    pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (n, k) = dims2(a);
+        let (k2, m) = dims2(b);
+        assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            for j in 0..m {
+                let mut s = 0.0f32;
+                for p in 0..k {
+                    s += a.data[i * k + p] * b.data[p * m + j];
+                }
+                out[i * m + j] = s;
+            }
+        }
+        Tensor { shape: vec![n, m], data: out }
+    }
+
+    /// Scalar scatter-loop SAME conv (the pre-vectorization kernel; no
+    /// 1x1 fast path, no im2col).
+    pub fn conv2d_same(x: &Tensor, w: &Tensor) -> Tensor {
+        let (n, h, wd, ci) = dims4(x);
+        let (kh, kw, wci, co) = dims4(w);
+        assert_eq!(ci, wci, "conv channel mismatch: {ci} vs {wci}");
+        let (ph, pw) = (kh / 2, kw / 2);
+        let mut out = vec![0.0f32; n * h * wd * co];
+        for b in 0..n {
+            for i in 0..h {
+                for j in 0..wd {
+                    let orow = &mut out[((b * h + i) * wd + j) * co..][..co];
+                    for di in 0..kh {
+                        let si = (i + di).wrapping_sub(ph);
+                        if si >= h {
+                            continue;
+                        }
+                        for dj in 0..kw {
+                            let sj = (j + dj).wrapping_sub(pw);
+                            if sj >= wd {
+                                continue;
+                            }
+                            let xrow =
+                                &x.data[((b * h + si) * wd + sj) * ci..][..ci];
+                            let wblk =
+                                &w.data[(di * kw + dj) * ci * co..][..ci * co];
+                            for (ii, &xv) in xrow.iter().enumerate() {
+                                let wrow = &wblk[ii * co..][..co];
+                                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                    *o += xv * wv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Tensor { shape: vec![n, h, wd, co], data: out }
+    }
+
+    /// Direct-indexing im2col reference (one scalar gather per cell).
+    pub fn im2col_same(x: &Tensor, kh: usize, kw: usize) -> Tensor {
+        let (n, h, wd, ci) = dims4(x);
+        let (ph, pw) = (kh / 2, kw / 2);
+        let rows = n * h * wd;
+        let kk = kh * kw * ci;
+        let mut out = vec![0.0f32; rows * kk];
+        for b in 0..n {
+            for i in 0..h {
+                for j in 0..wd {
+                    let r = (b * h + i) * wd + j;
+                    for di in 0..kh {
+                        for dj in 0..kw {
+                            for c in 0..ci {
+                                let si = (i + di).wrapping_sub(ph);
+                                let sj = (j + dj).wrapping_sub(pw);
+                                let v = if si < h && sj < wd {
+                                    x.data[((b * h + si) * wd + sj) * ci + c]
+                                } else {
+                                    0.0
+                                };
+                                out[r * kk + (di * kw + dj) * ci + c] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Tensor { shape: vec![rows, kk], data: out }
+    }
 }
 
 #[cfg(test)]
@@ -723,34 +1173,47 @@ mod tests {
         assert!((lhs - via_w).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} {via_w}");
     }
 
-    /// The blocked transposed-B kernel must agree with a naive triple loop
-    /// on shapes around the 4-row blocking boundary.
+    /// The packed-panel GEMM must agree with the naive triple loop on
+    /// shapes around both blocking boundaries: the 4-row block and the
+    /// 8-column panel (1x1, ragged rows, odd columns, exact multiples).
     #[test]
-    fn blocked_matmul_matches_naive() {
+    fn packed_gemm_matches_naive() {
         let mut rng = Pcg64::new(71);
         for (n, k, m) in [(1, 1, 1), (3, 5, 7), (4, 8, 16), (5, 3, 2),
-                          (7, 66, 9), (8, 4, 4)] {
+                          (7, 66, 9), (8, 4, 4), (9, 13, 17), (4, 1, 8),
+                          (13, 7, 25), (16, 32, 8)] {
             let a = rand_t(&[n, k], &mut rng);
             let b = rand_t(&[k, m], &mut rng);
             let fast = matmul(&a, &b);
-            let mut naive = vec![0.0f32; n * m];
-            for i in 0..n {
-                for j in 0..m {
-                    let mut s = 0.0f32;
-                    for p in 0..k {
-                        s += a.data[i * k + p] * b.data[p * m + j];
-                    }
-                    naive[i * m + j] = s;
-                }
-            }
-            let want = Tensor { shape: vec![n, m], data: naive };
+            let want = naive::matmul(&a, &b);
             assert!(fast.max_abs_diff(&want) < 1e-5,
                     "({n},{k},{m}): {}", fast.max_abs_diff(&want));
         }
     }
 
-    /// 1x1 convs take the pointwise-matmul fast path; it must agree with
-    /// the general scatter loop (exercised via a 1x1 kernel padded to 3x3
+    /// im2col columns must match the direct-indexing reference, and the
+    /// lowered conv must match the scalar scatter loop, including odd
+    /// channel counts and non-multiple-of-8 output widths.
+    #[test]
+    fn im2col_conv_matches_naive() {
+        let mut rng = Pcg64::new(73);
+        for (n, h, w, ci, co) in [(1, 1, 1, 1, 1), (2, 4, 5, 3, 4),
+                                  (1, 3, 3, 7, 9), (2, 2, 6, 5, 8)] {
+            let x = rand_t(&[n, h, w, ci], &mut rng);
+            let cols = im2col_same(&x, 3, 3);
+            let want_cols = naive::im2col_same(&x, 3, 3);
+            assert_eq!(cols.shape, want_cols.shape);
+            assert!(cols.max_abs_diff(&want_cols) == 0.0, "im2col mismatch");
+            let wt = rand_t(&[3, 3, ci, co], &mut rng);
+            let fast = conv2d_same(&x, &wt);
+            let want = naive::conv2d_same(&x, &wt);
+            assert!(fast.max_abs_diff(&want) < 1e-5,
+                    "({n},{h},{w},{ci},{co}): {}", fast.max_abs_diff(&want));
+        }
+    }
+
+    /// 1x1 convs take the pointwise-GEMM fast path; it must agree with
+    /// the general im2col path (exercised via a 1x1 kernel padded to 3x3
     /// with zeros, which routes through the general path).
     #[test]
     fn conv_1x1_fast_path_matches_general() {
@@ -764,6 +1227,26 @@ mod tests {
         w3.data[center..center + 4 * 6].copy_from_slice(&w1.data);
         let general = conv2d_same(&x, &w3);
         assert!(fast.max_abs_diff(&general) < 1e-5);
+    }
+
+    /// Kernel-thread row splitting must be bitwise invisible: disjoint
+    /// output ranges, serial per-cell accumulation.
+    #[test]
+    fn kernel_threads_are_bit_exact() {
+        let mut rng = Pcg64::new(74);
+        let a = rand_t(&[67, 33], &mut rng);
+        let b = rand_t(&[33, 29], &mut rng);
+        let x = rand_t(&[2, 9, 9, 5], &mut rng);
+        let w = rand_t(&[3, 3, 5, 11], &mut rng);
+        let (mm1, cv1) = (matmul(&a, &b), conv2d_same(&x, &w));
+        for t in [2, 3, 4] {
+            let (mm, cv) = par::with_kernel_threads(t, || {
+                (matmul(&a, &b), conv2d_same(&x, &w))
+            });
+            assert_eq!(mm.data, mm1.data, "matmul differs at {t} threads");
+            assert_eq!(cv.data, cv1.data, "conv differs at {t} threads");
+        }
+        assert_eq!(par::kernel_threads(), 1, "guard must restore");
     }
 
     #[test]
@@ -788,6 +1271,24 @@ mod tests {
         assert!(scratch::take(0).is_empty());
     }
 
+    /// The pool byte budget scales with the largest request seen, so a
+    /// 64x64-scale im2col slab still pools instead of thrashing.
+    #[test]
+    fn scratch_budget_tracks_high_water() {
+        assert!(scratch::pool_budget_bytes() >= 32 << 20);
+        let big = 10 << 20; // 10M floats = 40 MB request
+        let b = scratch::take_any(big);
+        assert!(scratch::pool_budget_bytes() >= 4 * big * 4,
+                "budget should scale to 4x the high-water request");
+        let ptr = b.as_ptr();
+        scratch::put(b);
+        let b2 = scratch::take_any(big);
+        assert_eq!(b2.as_ptr(), ptr, "large buffer should pool under the \
+                                      scaled budget");
+        // do not pool a 40 MB buffer back into the shared test thread
+        drop(b2);
+    }
+
     #[test]
     fn matmul_variants_consistent() {
         let mut rng = Pcg64::new(3);
@@ -802,6 +1303,48 @@ mod tests {
         let lhs = matmul_at(&a, &ab);
         let rhs = matmul(&mat_t(&a), &ab);
         assert!(lhs.max_abs_diff(&rhs) < 1e-4);
+    }
+
+    #[test]
+    fn half_roundtrip_error_bounds() {
+        let mut rng = Pcg64::new(75);
+        let xs = rng.normal_vec(4096);
+        for &x in &xs {
+            let qb = half::bf16_to_f32(half::f32_to_bf16(x));
+            let qh = half::f16_to_f32(half::f32_to_f16(x));
+            let ax = x.abs().max(f32::MIN_POSITIVE);
+            assert!((qb - x).abs() <= ax * 0.00390625, // 2^-8
+                    "bf16 {x} -> {qb}");
+            assert!((qh - x).abs() <= ax * 0.00048828125 + 6e-8, // 2^-11 + sub
+                    "f16 {x} -> {qh}");
+        }
+        // powers of two and zero are exact in both formats
+        for x in [0.0f32, 1.0, -2.0, 0.25, 1024.0, -0.5] {
+            assert_eq!(half::bf16_to_f32(half::f32_to_bf16(x)), x);
+            assert_eq!(half::f16_to_f32(half::f32_to_f16(x)), x);
+        }
+        // f16 saturates to inf past 65504; bf16 keeps the f32 range
+        assert_eq!(half::f16_to_f32(half::f32_to_f16(1.0e6)), f32::INFINITY);
+        assert!(half::bf16_to_f32(half::f32_to_bf16(1.0e6)).is_finite());
+        // nan stays nan, sign survives
+        assert!(half::f16_to_f32(half::f32_to_f16(f32::NAN)).is_nan());
+        assert!(half::bf16_to_f32(half::f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(half::f16_to_f32(half::f32_to_f16(-0.0)).to_bits(),
+                   (-0.0f32).to_bits());
+    }
+
+    /// Round-to-nearest-even at the exact halfway point (f16 has 10
+    /// mantissa bits: 1 + 2^-11 is halfway between 1.0 and 1 + 2^-10).
+    #[test]
+    fn half_rounds_to_nearest_even() {
+        let halfway = 1.0f32 + (-11f32).exp2();
+        assert_eq!(half::f16_to_f32(half::f32_to_f16(halfway)), 1.0);
+        let above = 1.0f32 + (-11f32).exp2() + (-20f32).exp2();
+        assert_eq!(half::f16_to_f32(half::f32_to_f16(above)),
+                   1.0 + (-10f32).exp2());
+        // bf16: 1 + 2^-8 is halfway between 1.0 and 1 + 2^-7
+        let bhalf = 1.0f32 + (-8f32).exp2();
+        assert_eq!(half::bf16_to_f32(half::f32_to_bf16(bhalf)), 1.0);
     }
 
     #[test]

@@ -36,11 +36,57 @@ pub use reference::RefBackend;
 #[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;
 
+/// Reduced-precision *storage* formats for inference weights. Compute is
+/// always f32: a non-f32 dtype means weights are rounded through the
+/// half-width format exactly once at load time ([`Backend::load_weight`])
+/// and widened straight back, so what the kernels see is an f32 tensor
+/// carrying the storage format's precision contract (bf16: relative error
+/// <= 2^-8; f16: <= 2^-11 over the normal range, saturating past 65504).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WeightDtype {
+    #[default]
+    F32,
+    Bf16,
+    F16,
+}
+
+impl WeightDtype {
+    /// Parse a CLI-style dtype name ("f32" | "bf16" | "f16").
+    pub fn parse(s: &str) -> Option<WeightDtype> {
+        match s {
+            "f32" => Some(WeightDtype::F32),
+            "bf16" => Some(WeightDtype::Bf16),
+            "f16" => Some(WeightDtype::F16),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WeightDtype::F32 => "f32",
+            WeightDtype::Bf16 => "bf16",
+            WeightDtype::F16 => "f16",
+        }
+    }
+}
+
 /// A program-execution substrate. `Send + Sync` so owned flow handles can
 /// cross threads.
 pub trait Backend: Send + Sync {
     /// Short backend identifier ("ref", "xla", ...).
     fn name(&self) -> &'static str;
+
+    /// Import one weight tensor under the engine's weight-storage dtype.
+    /// The default rounds the buffer through the requested half format in
+    /// place (compute stays f32); backends with genuinely typed device
+    /// buffers may override to keep the narrow representation resident.
+    fn load_weight(&self, t: &mut Tensor, dtype: WeightDtype) {
+        match dtype {
+            WeightDtype::F32 => {}
+            WeightDtype::Bf16 => math::half::round_bf16_slice(&mut t.data),
+            WeightDtype::F16 => math::half::round_f16_slice(&mut t.data),
+        }
+    }
 
     /// Execute one layer entry. `acts` follows the entry's activation
     /// convention (see module docs); `cond` is present exactly when

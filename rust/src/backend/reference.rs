@@ -26,21 +26,37 @@ use super::Backend;
 const HYPER_ALPHA: f32 = 0.2;
 
 /// The default backend: per-layer math executed natively on host f32.
-#[derive(Debug, Default, Clone, Copy)]
-pub struct RefBackend;
+///
+/// `kernel_threads` is the intra-kernel fan-out the GEMM/conv row-split
+/// paths may use (see `math::par`); it is bit-invisible to results and
+/// defaults to 1 so the data-parallel outer loops never nest pools.
+#[derive(Debug, Clone, Copy)]
+pub struct RefBackend {
+    kernel_threads: usize,
+}
 
-impl RefBackend {
-    pub fn new() -> RefBackend {
-        RefBackend
+impl Default for RefBackend {
+    fn default() -> RefBackend {
+        RefBackend::new()
     }
 }
 
-impl Backend for RefBackend {
-    fn name(&self) -> &'static str {
-        "ref"
+impl RefBackend {
+    pub fn new() -> RefBackend {
+        RefBackend { kernel_threads: 1 }
     }
 
-    fn execute_layer(
+    /// A backend whose kernels may split output rows across `n` scoped
+    /// threads when a layer's work amortizes the spawns.
+    pub fn with_kernel_threads(n: usize) -> RefBackend {
+        RefBackend { kernel_threads: n.max(1) }
+    }
+
+    pub fn kernel_threads(&self) -> usize {
+        self.kernel_threads
+    }
+
+    fn dispatch(
         &self,
         meta: &LayerMeta,
         entry: &str,
@@ -81,6 +97,29 @@ impl Backend for RefBackend {
                  (sig {}); use the xla backend with compiled artifacts",
                 meta.sig
             ),
+        }
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn execute_layer(
+        &self,
+        meta: &LayerMeta,
+        entry: &str,
+        acts: &[&Tensor],
+        cond: Option<&Tensor>,
+        params: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        if self.kernel_threads > 1 {
+            super::math::par::with_kernel_threads(self.kernel_threads, || {
+                self.dispatch(meta, entry, acts, cond, params)
+            })
+        } else {
+            self.dispatch(meta, entry, acts, cond, params)
         }
     }
 

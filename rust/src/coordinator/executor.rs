@@ -92,6 +92,111 @@ impl ActivationSchedule for CheckpointEveryK {
     }
 }
 
+/// Leading-dim policy for the unified inference entry points
+/// ([`Flow::log_density`], [`Flow::invert`], [`Flow::sample`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchMode {
+    /// The input batch must equal the network's canonical batch size;
+    /// shape bugs fail loudly. The default.
+    #[default]
+    Strict,
+    /// Any leading batch `n >= 1` (per-sample dims still validated).
+    /// Batches larger than [`Flow::infer_chunk`] chunk across the
+    /// inference worker pool, bit-identically to the one-pass walk.
+    Relaxed,
+}
+
+/// Options for [`Flow::log_density`] and [`Flow::invert`]: batch policy,
+/// conditioning input, and an optional per-call worker-count override.
+/// `InferOpts::default()` is strict, unconditioned, engine-default threads.
+#[derive(Default)]
+pub struct InferOpts<'a> {
+    pub batch: BatchMode,
+    pub cond: Option<&'a Tensor>,
+    /// Replaces the flow's worker count for this call only (clamped >= 1).
+    pub threads_override: Option<usize>,
+}
+
+impl<'a> InferOpts<'a> {
+    /// Strict canonical-batch options (same as `default()`).
+    pub fn strict() -> Self {
+        InferOpts::default()
+    }
+
+    /// Relaxed-batch options (the serving / large-batch path).
+    pub fn relaxed() -> Self {
+        InferOpts { batch: BatchMode::Relaxed, ..InferOpts::default() }
+    }
+
+    /// Attach a conditioning tensor.
+    pub fn cond(mut self, c: &'a Tensor) -> Self {
+        self.cond = Some(c);
+        self
+    }
+
+    /// Attach an optional conditioning tensor (for call sites that carry
+    /// an `Option` already).
+    pub fn cond_opt(mut self, c: Option<&'a Tensor>) -> Self {
+        self.cond = c;
+        self
+    }
+
+    /// Override the inference worker count for this call.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads_override = Some(n.max(1));
+        self
+    }
+}
+
+/// Options for [`Flow::sample`]: sample count, conditioning, latent
+/// temperature, the rng to draw from, and an optional worker override.
+/// Construct with [`SampleOpts::new`] and chain the setters.
+pub struct SampleOpts<'a> {
+    /// Number of samples (any `n >= 1`, decoupled from the canonical
+    /// batch).
+    pub n: usize,
+    pub cond: Option<&'a Tensor>,
+    /// Latent temperature: z ~ t * N(0, I). `t < 1` samples a sharpened,
+    /// higher-likelihood region (the standard reduced-temperature trick);
+    /// `t = 1.0` is exact model sampling.
+    pub temperature: f32,
+    pub rng: &'a mut Pcg64,
+    /// Replaces the flow's worker count for this call only (clamped >= 1).
+    pub threads_override: Option<usize>,
+}
+
+impl<'a> SampleOpts<'a> {
+    /// `n` samples at temperature 1.0, unconditioned.
+    pub fn new(n: usize, rng: &'a mut Pcg64) -> Self {
+        SampleOpts { n, cond: None, temperature: 1.0, rng,
+                     threads_override: None }
+    }
+
+    /// Attach a conditioning tensor.
+    pub fn cond(mut self, c: &'a Tensor) -> Self {
+        self.cond = Some(c);
+        self
+    }
+
+    /// Attach an optional conditioning tensor.
+    pub fn cond_opt(mut self, c: Option<&'a Tensor>) -> Self {
+        self.cond = c;
+        self
+    }
+
+    /// Set the latent temperature.
+    pub fn temperature(mut self, t: f32) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    /// Override the inference worker count for this call.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads_override = Some(n.max(1));
+        self
+    }
+}
+
 /// Result of one training step.
 pub struct StepResult {
     pub loss: f32,
@@ -263,35 +368,43 @@ impl Flow {
         Ok((latents, ld))
     }
 
-    /// Per-sample log-likelihood of the inputs under the flow:
-    /// log p(x) = sum_latents log N(z) + total logdet.
-    ///
-    /// Strict about the leading dim (the network's canonical batch); the
-    /// serving path uses [`Flow::log_density`], which accepts any batch.
+    /// Per-sample log density `log p(x) = sum_latents log N(z) + logdet`
+    /// under the options' batch policy. [`BatchMode::Strict`] (the
+    /// default) demands the network's canonical batch so shape bugs fail
+    /// loudly; [`BatchMode::Relaxed`] is the serving / OOD-scoring
+    /// workload and accepts any leading size (per-sample dims must still
+    /// match). Every layer program is batch-elementwise, so scoring a
+    /// concatenated relaxed batch equals concatenating per-item scores
+    /// bit-exactly (pinned in `tests/serve.rs`); relaxed batches larger
+    /// than [`Flow::infer_chunk`] chunk across the inference worker pool
+    /// when the flow carries more than one thread
+    /// ([`crate::api::EngineBuilder::threads`]), bit-identically.
+    pub fn log_density(
+        &self,
+        x: &Tensor,
+        params: &ParamStore,
+        opts: InferOpts,
+    ) -> Result<Vec<f32>> {
+        let relax = opts.batch == BatchMode::Relaxed;
+        match opts.threads_override {
+            Some(t) if t.max(1) != self.threads => self
+                .clone()
+                .with_threads(t)
+                .log_density_flex(x, opts.cond, params, relax),
+            _ => self.log_density_flex(x, opts.cond, params, relax),
+        }
+    }
+
+    /// Per-sample log-likelihood at the canonical batch size.
+    #[deprecated(note = "use `log_density(x, params, InferOpts::strict()\
+.cond_opt(cond))`")]
     pub fn log_likelihood(
         &self,
         x: &Tensor,
         cond: Option<&Tensor>,
         params: &ParamStore,
     ) -> Result<Vec<f32>> {
-        self.log_density_flex(x, cond, params, false)
-    }
-
-    /// Per-sample log density `log p(x) = sum_latents log N(z) + logdet`
-    /// for a batch of *any* leading size (the per-sample dims must match
-    /// the network). This is the serving / OOD-scoring workload: every
-    /// layer program is batch-elementwise, so scoring a concatenated batch
-    /// equals concatenating per-item scores bit-exactly (pinned in
-    /// `tests/serve.rs`). Batches larger than [`Flow::infer_chunk`] chunk
-    /// across the inference worker pool when the flow carries more than
-    /// one thread ([`crate::api::EngineBuilder::threads`]), bit-identically.
-    pub fn log_density(
-        &self,
-        x: &Tensor,
-        cond: Option<&Tensor>,
-        params: &ParamStore,
-    ) -> Result<Vec<f32>> {
-        self.log_density_flex(x, cond, params, true)
+        self.log_density(x, params, InferOpts::strict().cond_opt(cond))
     }
 
     fn log_density_flex(
@@ -617,30 +730,37 @@ impl Flow {
     // Sampling / inversion
     // ------------------------------------------------------------------
 
-    /// Draw one batch of samples at the network's canonical batch size:
-    /// z ~ N(0, I) at every latent site, then walk the inverse chain
-    /// (paper: "efficient sampling").
+    /// Draw samples from the model: z ~ t * N(0, I) at every latent site,
+    /// then walk the inverse chain (paper: "efficient sampling"). The
+    /// sample count, conditioning, latent temperature and rng all travel
+    /// in [`SampleOpts`]; `n` is decoupled from the canonical batch.
+    ///
+    /// All latents are drawn from the options' rng up front
+    /// (sequentially, so the stream is thread-count-independent); the
+    /// inverse walk then rides the threaded chunked path when the flow
+    /// has more than one worker thread and `n` exceeds
+    /// [`Flow::infer_chunk`] — bit-identical to the single-threaded draw
+    /// (pinned in `tests/perf.rs`). Temperature 1.0 multiplies every
+    /// latent by 1.0, so it is bit-identical to an untempered draw for
+    /// matching `n` and rng state.
     pub fn sample(
         &self,
         params: &ParamStore,
-        cond: Option<&Tensor>,
-        rng: &mut Pcg64,
+        opts: SampleOpts,
     ) -> Result<Tensor> {
-        self.sample_batch(params, self.batch(), cond, 1.0, rng)
+        let SampleOpts { n, cond, temperature, rng, threads_override } = opts;
+        let zs = self.sample_latents(n, temperature, rng)?;
+        let inv = InferOpts {
+            batch: BatchMode::Relaxed,
+            cond,
+            threads_override,
+        };
+        self.invert(&zs, params, inv)
     }
 
-    /// Draw `n` samples (any `n >= 1`, decoupled from the canonical batch)
-    /// with latent **temperature** `t`: z ~ t * N(0, I). `t < 1` samples a
-    /// sharpened, higher-likelihood region of the model (the standard
-    /// reduced-temperature trick); `t = 1.0` is exact model sampling and
-    /// multiplies every latent by 1.0, so it is bit-identical to the
-    /// canonical [`Flow::sample`] draw for matching `n` and rng state.
-    ///
-    /// All latents are drawn from `rng` up front (sequentially, so the
-    /// stream is thread-count-independent); the inverse walk then rides
-    /// the threaded chunked path when the flow has more than one worker
-    /// thread and `n` exceeds [`Flow::infer_chunk`] — bit-identical to
-    /// the single-threaded draw (pinned in `tests/perf.rs`).
+    /// Draw `n` samples at temperature `t`.
+    #[deprecated(note = "use `sample(params, SampleOpts::new(n, rng)\
+.temperature(t).cond_opt(cond))`")]
     pub fn sample_batch(
         &self,
         params: &ParamStore,
@@ -649,8 +769,10 @@ impl Flow {
         temperature: f32,
         rng: &mut Pcg64,
     ) -> Result<Tensor> {
-        let zs = self.sample_latents(n, temperature, rng)?;
-        self.invert_flex(&zs, cond, params, true)
+        self.sample(params,
+                    SampleOpts::new(n, rng)
+                        .temperature(temperature)
+                        .cond_opt(cond))
     }
 
     /// Draw the latent stack for `n` samples at temperature `t`, in the
@@ -683,25 +805,49 @@ impl Flow {
     }
 
     /// Map latents back to input space (inverse of [`Flow::forward`]'s
-    /// latents, in the same push order). Strict about the canonical batch
-    /// size; the sampling paths use the relaxed [`Flow::invert_flex`].
+    /// latents, in the same push order) under the options' batch policy.
+    /// [`BatchMode::Strict`] (the default) demands the canonical batch;
+    /// under [`BatchMode::Relaxed`] all latents (and the cond, if any)
+    /// must share one leading dim `n >= 1`, which may differ from the
+    /// canonical batch. Every layer program is batch-agnostic, so row `i`
+    /// of the result depends only on row `i` of each latent — which is
+    /// also what lets large relaxed batches chunk across the inference
+    /// worker pool ([`crate::api::EngineBuilder::threads`]) without
+    /// changing a single bit of the result.
     pub fn invert(
+        &self,
+        latents: &[Tensor],
+        params: &ParamStore,
+        opts: InferOpts,
+    ) -> Result<Tensor> {
+        let relax = opts.batch == BatchMode::Relaxed;
+        match opts.threads_override {
+            Some(t) if t.max(1) != self.threads => self
+                .clone()
+                .with_threads(t)
+                .invert_impl(latents, opts.cond, params, relax),
+            _ => self.invert_impl(latents, opts.cond, params, relax),
+        }
+    }
+
+    /// Relaxed-batch inversion.
+    #[deprecated(note = "use `invert(latents, params, InferOpts::relaxed()\
+.cond_opt(cond))` (or `InferOpts::strict()` for the old strict mode)")]
+    pub fn invert_flex(
         &self,
         latents: &[Tensor],
         cond: Option<&Tensor>,
         params: &ParamStore,
+        relax_batch: bool,
     ) -> Result<Tensor> {
-        self.invert_flex(latents, cond, params, false)
+        let batch = if relax_batch { BatchMode::Relaxed }
+                    else { BatchMode::Strict };
+        self.invert(latents, params,
+                    InferOpts { batch, cond, threads_override: None })
     }
 
-    /// [`Flow::invert`] with an optional relaxed batch check: all latents
-    /// (and the cond, if any) must share one leading dim `n >= 1`, which
-    /// may differ from the canonical batch size. Every layer program is
-    /// batch-agnostic, so row `i` of the result depends only on row `i` of
-    /// each latent — which is also what lets large relaxed batches chunk
-    /// across the inference worker pool ([`crate::api::EngineBuilder::threads`])
-    /// without changing a single bit of the result.
-    pub fn invert_flex(
+    /// The validated inversion walk behind [`Flow::invert`].
+    fn invert_impl(
         &self,
         latents: &[Tensor],
         cond: Option<&Tensor>,
@@ -748,7 +894,7 @@ impl Flow {
     }
 
     /// The single-pass inverse walk; inputs are pre-validated by
-    /// [`Flow::invert_flex`] (or are row-slices of validated inputs).
+    /// [`Flow::invert`] (or are row-slices of validated inputs).
     fn invert_rows(
         &self,
         latents: &[Tensor],
@@ -786,7 +932,7 @@ impl Flow {
     ) -> Result<f32> {
         let (latents, _) = self.forward(x, cond, params)?;
         let zs: Vec<Tensor> = latents.iter().map(|t| t.tensor().clone()).collect();
-        let x_rec = self.invert(&zs, cond, params)?;
+        let x_rec = self.invert(&zs, params, InferOpts::strict().cond_opt(cond))?;
         Ok(x.max_abs_diff(&x_rec))
     }
 }

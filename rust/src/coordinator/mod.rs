@@ -12,5 +12,6 @@ pub mod executor;
 pub mod memory;
 pub mod planner;
 
-pub use executor::{ActivationSchedule, CheckpointEveryK, ExecMode, StepResult};
+pub use executor::{ActivationSchedule, BatchMode, CheckpointEveryK, ExecMode,
+                   InferOpts, SampleOpts, StepResult};
 pub use memory::{MemClass, MemoryLedger, Tracked};

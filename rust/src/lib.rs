@@ -45,9 +45,9 @@
 //!   the data-parallel [`train::ParallelTrainer`] (`--threads N` on the
 //!   CLI), synthetic workloads, per-entry profiler, figure reproductions.
 //!   The same `--threads` pool drives the **threaded inference hot
-//!   path**: large [`api::Flow::sample_batch`] / [`api::Flow::log_density`]
-//!   / [`api::Flow::invert_flex`] batches chunk across forked handles,
-//!   bit-identically to the single-threaded walk.
+//!   path**: large relaxed-batch [`api::Flow::sample`] /
+//!   [`api::Flow::log_density`] / [`api::Flow::invert`] calls chunk
+//!   across forked handles, bit-identically to the single-threaded walk.
 //! * [`perf`] — the unified performance harness: the bench suites
 //!   (memory, throughput, serve latency, posterior end-to-end) as
 //!   library code, one `BENCH_<suite>.json` schema with an environment
@@ -56,7 +56,7 @@
 //! * [`serve`] — the batched inference-serving subsystem: a checkpoint
 //!   [`serve::Registry`] (LRU model cache), a micro-batching scheduler
 //!   that coalesces concurrent `sample`/`score`/`posterior` requests into
-//!   one batched pass (bit-identical to direct [`api::Flow::sample_batch`]
+//!   one batched pass (bit-identical to direct [`api::Flow::sample`]
 //!   / [`api::Flow::log_density`] calls), and JSON-lines TCP/stdio fronts
 //!   (`invertnet serve`, `invertnet score`).
 //! * [`telemetry`] — the observability spine: a lock-sharded metrics
@@ -138,7 +138,8 @@ pub mod tensor;
 pub mod train;
 pub mod util;
 
-pub use api::{Engine, Flow};
-pub use backend::{Backend, RefBackend};
+pub use api::{Engine, EngineConfig, Flow};
+pub use backend::{Backend, RefBackend, WeightDtype};
+pub use coordinator::executor::{BatchMode, InferOpts, SampleOpts};
 pub use coordinator::memory::{MemClass, MemoryLedger};
 pub use tensor::Tensor;

@@ -29,8 +29,10 @@
 //! ```
 //!
 //! All subcommands take `--backend ref|xla` (default `ref`, which needs no
-//! artifacts) and `--artifacts DIR`. See `invertnet` with no arguments for
-//! the full usage text.
+//! artifacts), `--artifacts DIR`, `--kernel-threads N` (intra-kernel
+//! GEMM/conv fan-out, bit-identical at any N) and `--weight-dtype
+//! f32|bf16|f16` (inference weight-storage precision; compute stays f32).
+//! See `invertnet` with no arguments for the full usage text.
 //!
 //! Exit codes: 0 = pass, 1 = check/runtime failure, 2 = usage error
 //! (see [`invertnet::app::exit_code`]).

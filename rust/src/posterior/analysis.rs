@@ -23,6 +23,7 @@
 use anyhow::{bail, Result};
 
 use crate::api::Flow;
+use crate::coordinator::SampleOpts;
 use crate::flow::ParamStore;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
@@ -57,8 +58,9 @@ pub fn posterior_samples(
     seed: u64,
 ) -> Result<Tensor> {
     let cond = tile_observation(y, n)?;
-    flow.sample_batch(params, n, Some(&cond), temperature,
-                      &mut Pcg64::new(seed))
+    flow.sample(params, SampleOpts::new(n, &mut Pcg64::new(seed))
+                            .temperature(temperature)
+                            .cond(&cond))
 }
 
 /// Pointwise posterior summary over a sample cloud: per-dimension mean

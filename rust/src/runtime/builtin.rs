@@ -435,6 +435,13 @@ pub fn builtin_manifest() -> Result<Manifest> {
     }
     // throughput / ablation nets
     glow_flat(&mut cat, "glow_bench32", 8, 32, 32, 3, 8, 32)?;
+    // large-image catalog nets (vectorized-kernel showcase): a genuinely
+    // deep 64x64 multiscale GLOW — 3 squeeze levels, 12 steps each, so
+    // stored-mode taping is ~2 orders of magnitude above the invertible
+    // walk (gated in the memory_vs_size suite) — and a deep HINT tree
+    // (recursive depth 4 over 64 dims: 15 coupling nodes per layer).
+    glow_multiscale(&mut cat, "glow64", 4, 64, 64, 3, 3, 12, 64)?;
+    hint_dense(&mut cat, "hint64deep", 64, 64, 4, 128, 4)?;
 
     Ok(Manifest {
         backend: "ref-builtin".to_string(),
@@ -536,6 +543,33 @@ mod tests {
         assert_eq!(specs[0].shape, vec![4, 64]);
         assert_eq!(specs[6].name, "rl_w1");
         assert_eq!(specs[6].shape, vec![2, 64]);
+    }
+
+    #[test]
+    fn glow64_is_deep_multiscale() {
+        let m = builtin_manifest().unwrap();
+        let net = m.network("glow64").unwrap();
+        assert_eq!(net.in_shape, vec![4, 64, 64, 3]);
+        // 3 squeeze levels -> 2 factor-outs + the final site
+        assert_eq!(net.latent_shapes,
+                   vec![vec![4, 32, 32, 6], vec![4, 16, 16, 12],
+                        vec![4, 8, 8, 48]]);
+        assert_eq!(net.layers.iter()
+                   .filter(|s| s.starts_with("split_zc")).count(), 2);
+        assert_eq!(net.layers.iter()
+                   .filter(|s| s.starts_with("glowcpl")).count(), 36);
+    }
+
+    #[test]
+    fn hint64deep_has_full_depth4_tree() {
+        // every node down to depth 4 stays >= HINT_MIN_D wide, so the
+        // recursion yields the complete 15-node binary tree
+        let nodes = hint_nodes(64, 4);
+        assert_eq!(nodes.len(), 15);
+        let m = builtin_manifest().unwrap();
+        let net = m.network("hint64deep").unwrap();
+        assert_eq!(net.in_shape, vec![64, 64]);
+        assert!(m.layers.contains_key("hint__64x64__hd128__dep4"));
     }
 
     #[test]

@@ -20,8 +20,8 @@
 //! (many small coalesced batches), while `--threads` (the engine's
 //! inference pool, inherited by every forked flow) chunks *within* one
 //! large pass — a single `posterior`/`sample` request for hundreds of
-//! rows fans its inverse across the pool via
-//! [`crate::Flow::invert_flex`]'s chunked path, bit-identically. Size
+//! rows fans its inverse across the pool via [`crate::Flow::invert`]'s
+//! relaxed-batch chunked path, bit-identically. Size
 //! them jointly: `workers * threads` is the worst-case concurrent
 //! backend parallelism.
 
@@ -33,6 +33,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::coordinator::InferOpts;
 use crate::telemetry::events::{self, Level};
 use crate::telemetry::{Counter, Gauge, Histogram, Sample};
 use crate::tensor::ops::{concat_rows, slice_rows};
@@ -579,8 +580,8 @@ fn run_batch(jobs: &[Job], rows: &[usize])
             let cond = batch_cond(jobs)?;
             let assembly_us = t_asm.elapsed().as_micros() as u64;
             let t_exec = Instant::now();
-            let x = flow.invert_flex(&cat_sites, cond.as_ref(),
-                                     &model.params, true)?;
+            let x = flow.invert(&cat_sites, &model.params,
+                                InferOpts::relaxed().cond_opt(cond.as_ref()))?;
             let mut out = Vec::with_capacity(jobs.len());
             let mut off = 0;
             for &n in rows {
@@ -599,7 +600,8 @@ fn run_batch(jobs: &[Job], rows: &[usize])
             let cond = batch_cond(jobs)?;
             let assembly_us = t_asm.elapsed().as_micros() as u64;
             let t_exec = Instant::now();
-            let scores = flow.log_density(&x, cond.as_ref(), &model.params)?;
+            let scores = flow.log_density(
+                &x, &model.params, InferOpts::relaxed().cond_opt(cond.as_ref()))?;
             let mut out = Vec::with_capacity(jobs.len());
             let mut off = 0;
             for &n in rows {
@@ -676,7 +678,8 @@ mod tests {
             let Work::Score { x, .. } = score_work(&m, 100 + i,
                                                    1 + (i % 3) as usize)
             else { unreachable!() };
-            let want = m.flow.log_density(&x, None, &m.params).unwrap();
+            let want = m.flow.log_density(&x, &m.params,
+                                          InferOpts::relaxed()).unwrap();
             assert_eq!(got.len(), want.len());
             for (a, b) in got.iter().zip(&want) {
                 assert_eq!(a.to_bits(), b.to_bits(),

@@ -28,7 +28,7 @@
 //!
 //! Micro-batching is **invisible**: every layer program is
 //! batch-elementwise, so a coalesced response is bit-identical to a direct
-//! [`crate::Flow::sample_batch`] / [`crate::Flow::log_density`] call
+//! [`crate::Flow::sample`] / [`crate::Flow::log_density`] call
 //! (pinned in `tests/serve.rs`). CLI entry points:
 //!
 //! ```text

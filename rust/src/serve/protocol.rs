@@ -66,7 +66,8 @@ pub const MAX_SAMPLES_PER_REQUEST: usize = 65_536;
 pub enum Request {
     /// Draw `n` samples at latent `temperature`, latents seeded from
     /// `seed` — bit-identical to
-    /// `Flow::sample_batch(&params, n, cond, temperature, &mut Pcg64::new(seed))`.
+    /// `Flow::sample(&params, SampleOpts::new(n, &mut Pcg64::new(seed))
+    ///                  .temperature(temperature).cond_opt(cond))`.
     Sample {
         model: Option<String>,
         n: usize,

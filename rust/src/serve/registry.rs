@@ -148,6 +148,9 @@ impl Registry {
         let mut params = flow.init_params(0)?;
         params.load(dir)
             .with_context(|| format!("loading checkpoint {dir:?}"))?;
+        // apply the engine's weight-storage dtype (--weight-dtype bf16/f16)
+        // once, at load: compute stays f32 over the rounded values
+        engine.load_weights(&mut params);
         Ok((flow, params))
     }
 

@@ -181,7 +181,8 @@ impl Server {
                 check_cond_request(&m, n, cond.as_ref())?;
                 // each request draws its own latents from its own seed, so
                 // the reply is bit-identical to a direct
-                // `sample_batch(&params, n, cond, T, &mut Pcg64::new(seed))`
+                // `sample(&params, SampleOpts::new(n, &mut Pcg64::new(seed))
+                //           .temperature(T).cond_opt(cond))`
                 // no matter what it batches with
                 let latents = m.flow.sample_latents(
                     n, temperature, &mut Pcg64::new(seed))?;

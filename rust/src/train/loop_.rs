@@ -9,7 +9,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::api::Flow;
-use crate::coordinator::{ActivationSchedule, ExecMode};
+use crate::coordinator::{ActivationSchedule, ExecMode, InferOpts};
 use crate::flow::ParamStore;
 use crate::tensor::Tensor;
 use crate::util::bench::fmt_bytes;
@@ -172,7 +172,8 @@ pub fn train(
                 || (cfg.eval_every > 0 && step % cfg.eval_every == 0);
             if due {
                 let _eval_span = crate::span!("train_eval");
-                let scores = flow.log_density(ex, ec.as_ref(), params)
+                let scores = flow.log_density(
+                        ex, params, InferOpts::relaxed().cond_opt(ec.as_ref()))
                     .with_context(|| format!("eval split at step {step}"))?;
                 let nll = -(scores.iter().map(|&v| v as f64).sum::<f64>()
                             / scores.len().max(1) as f64) as f32;

@@ -9,6 +9,7 @@ mod common;
 
 use invertnet::tensor::ops::slice_rows;
 use invertnet::util::rng::Pcg64;
+use invertnet::{InferOpts, SampleOpts};
 
 /// Every layer kind + split topology in the catalog, at test-runnable
 /// sizes (the fig-sweep nets repeat these kinds bigger).
@@ -67,11 +68,13 @@ fn log_density_is_bit_identical_after_reload() {
         let cond = cond_full.as_ref()
             .map(|c| slice_rows(c, 0, k).unwrap());
 
-        let before = flow.log_density(&x, cond.as_ref(), &params).unwrap();
+        let before = flow.log_density(
+            &x, &params, InferOpts::relaxed().cond_opt(cond.as_ref())).unwrap();
 
         let mut reloaded = flow.init_params(99).unwrap();
         reloaded.load(&dir).unwrap();
-        let after = flow.log_density(&x, cond.as_ref(), &reloaded).unwrap();
+        let after = flow.log_density(
+            &x, &reloaded, InferOpts::relaxed().cond_opt(cond.as_ref())).unwrap();
 
         assert_eq!(before.len(), after.len(), "{net}");
         for (a, b) in before.iter().zip(&after) {
@@ -81,12 +84,13 @@ fn log_density_is_bit_identical_after_reload() {
         }
 
         // sampling is pinned too: same latents, same weights, same bits
-        let s_before = flow.sample_batch(&params, 2, cond.as_ref()
-            .map(|c| slice_rows(c, 0, 2).unwrap()).as_ref(), 1.0,
-            &mut Pcg64::new(12)).unwrap();
-        let s_after = flow.sample_batch(&reloaded, 2, cond.as_ref()
-            .map(|c| slice_rows(c, 0, 2).unwrap()).as_ref(), 1.0,
-            &mut Pcg64::new(12)).unwrap();
+        let c2 = cond.as_ref().map(|c| slice_rows(c, 0, 2).unwrap());
+        let s_before = flow.sample(&params,
+            SampleOpts::new(2, &mut Pcg64::new(12))
+                .cond_opt(c2.as_ref())).unwrap();
+        let s_after = flow.sample(&reloaded,
+            SampleOpts::new(2, &mut Pcg64::new(12))
+                .cond_opt(c2.as_ref())).unwrap();
         assert_eq!(s_before, s_after, "{net}: sampling drifted after reload");
 
         std::fs::remove_dir_all(&dir).ok();

@@ -8,6 +8,7 @@ mod common;
 use common::{batch_for, flow};
 use invertnet::coordinator::ExecMode;
 use invertnet::util::rng::Pcg64;
+use invertnet::InferOpts;
 use invertnet::{MemoryLedger, Tensor};
 
 fn roundtrip(net: &str, tol: f32) {
@@ -61,7 +62,7 @@ fn sample_then_forward_recovers_latents() {
             data: rng.normal_vec(s.iter().product()),
         })
         .collect();
-    let x = flow.invert(&zs, None, &params).unwrap();
+    let x = flow.invert(&zs, &params, InferOpts::strict()).unwrap();
     let (latents, _) = flow.forward(&x, None, &params).unwrap();
     assert_eq!(latents.len(), zs.len());
     for (got, want) in latents.iter().zip(&zs) {
@@ -75,7 +76,7 @@ fn log_likelihood_finite_and_consistent() {
     let flow = flow("glow16");
     let params = flow.init_params(3).unwrap();
     let (x, _) = batch_for(&flow, 8);
-    let ll = flow.log_likelihood(&x, None, &params).unwrap();
+    let ll = flow.log_density(&x, &params, InferOpts::strict()).unwrap();
     assert_eq!(ll.len(), flow.batch());
     for v in &ll {
         assert!(v.is_finite(), "non-finite loglik {v}");

@@ -1,0 +1,223 @@
+//! Kernel-equivalence suite: the vectorized GEMM/conv/im2col kernels
+//! against their scalar references, from outside the crate — the CI
+//! `kernel-equivalence` job runs exactly this target. The python numpy
+//! mirror (`python/tests/test_vector_kernels.py`) pins the same
+//! contracts against an independent implementation.
+//!
+//! Contracts pinned here:
+//!  * packed 8-wide GEMM == naive triple loop within 1e-5, across shapes
+//!    straddling the 4-row block and 8-column panel boundaries;
+//!  * im2col lowering is bit-exact against direct indexing, and the
+//!    lowered conv (1x1 fast path and 3x3 general path) matches the
+//!    scalar scatter loop within 1e-5 — odd channel counts and
+//!    non-multiple-of-8 tails included;
+//!  * kernel-thread row splitting is bitwise invisible at any fixed
+//!    thread count (disjoint rows, serial per-cell accumulation);
+//!  * bf16/f16 storage round-trips obey their precision contracts
+//!    (relative error <= 2^-8 / 2^-11), end to end through
+//!    `Engine::load_weights`, and inference still runs on the rounded
+//!    weights.
+
+use invertnet::backend::math::{self, half, naive, par};
+use invertnet::backend::WeightDtype;
+use invertnet::util::rng::Pcg64;
+use invertnet::{Engine, InferOpts, Tensor};
+
+fn rand_t(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+    Tensor {
+        shape: shape.to_vec(),
+        data: rng.normal_vec(shape.iter().product()),
+    }
+}
+
+/// Shapes chosen to straddle every blocking boundary the packed kernel
+/// has: MR=4 row blocks, NR=8 column panels, k tails, degenerate dims.
+const GEMM_SHAPES: [(usize, usize, usize); 12] = [
+    (1, 1, 1),
+    (1, 1, 9),
+    (2, 3, 8),
+    (3, 5, 7),
+    (4, 8, 16),
+    (5, 3, 2),
+    (7, 66, 9),
+    (9, 13, 17),
+    (13, 7, 25),
+    (16, 32, 8),
+    (31, 17, 23),
+    (64, 108, 64),
+];
+
+#[test]
+fn gemm_matches_scalar_reference_across_tail_shapes() {
+    let mut rng = Pcg64::new(0xbead);
+    for (n, k, m) in GEMM_SHAPES {
+        let a = rand_t(&[n, k], &mut rng);
+        let b = rand_t(&[k, m], &mut rng);
+        let fast = math::matmul(&a, &b);
+        let want = naive::matmul(&a, &b);
+        let err = fast.max_abs_diff(&want);
+        assert!(err < 1e-5, "gemm ({n},{k},{m}): max abs err {err}");
+    }
+}
+
+#[test]
+fn gemm_transpose_variants_agree_with_explicit_transposes() {
+    let mut rng = Pcg64::new(0xfeed);
+    for (n, k, m) in [(5, 3, 7), (8, 16, 9), (13, 4, 25)] {
+        let a = rand_t(&[n, k], &mut rng);
+        let b = rand_t(&[n, m], &mut rng);
+        // aᵀ b via an explicitly transposed naive product
+        let mut at = Tensor::zeros(&[k, n]);
+        for i in 0..n {
+            for p in 0..k {
+                at.data[p * n + i] = a.data[i * k + p];
+            }
+        }
+        let want = naive::matmul(&at, &b);
+        let got = math::matmul_at(&a, &b);
+        assert!(got.max_abs_diff(&want) < 1e-5, "matmul_at ({n},{k},{m})");
+        // a bᵀ with b in the transposed layout
+        let c = rand_t(&[m, k], &mut rng);
+        let mut ct = Tensor::zeros(&[k, m]);
+        for i in 0..m {
+            for p in 0..k {
+                ct.data[p * m + i] = c.data[i * k + p];
+            }
+        }
+        let want = naive::matmul(&a, &ct);
+        let got = math::matmul_bt(&a, &c);
+        assert!(got.max_abs_diff(&want) < 1e-5, "matmul_bt ({n},{k},{m})");
+    }
+}
+
+#[test]
+fn im2col_is_bit_exact_and_conv_matches_scalar() {
+    let mut rng = Pcg64::new(0xc0de);
+    for (n, h, w, ci, co) in [
+        (1, 1, 1, 1, 1),
+        (2, 4, 5, 3, 4),
+        (1, 3, 3, 7, 9),
+        (2, 2, 6, 5, 8),
+        (1, 8, 8, 12, 64), // the glow64 coupling shape, scaled down
+        (3, 5, 7, 2, 13),
+    ] {
+        let x = rand_t(&[n, h, w, ci], &mut rng);
+        let cols = math::im2col_same(&x, 3, 3);
+        let want_cols = naive::im2col_same(&x, 3, 3);
+        assert_eq!(cols.shape, want_cols.shape);
+        assert_eq!(cols.data, want_cols.data, "im2col must be bit-exact");
+        let wt = rand_t(&[3, 3, ci, co], &mut rng);
+        let fast = math::conv2d_same(&x, &wt);
+        let want = naive::conv2d_same(&x, &wt);
+        let err = fast.max_abs_diff(&want);
+        assert!(err < 1e-5, "conv ({n},{h},{w},{ci},{co}): {err}");
+        // 1x1 fast path against the same scalar loop
+        let w1 = rand_t(&[1, 1, ci, co], &mut rng);
+        let fast1 = math::conv2d_same(&x, &w1);
+        let want1 = naive::conv2d_same(&x, &w1);
+        let err1 = fast1.max_abs_diff(&want1);
+        assert!(err1 < 1e-5, "1x1 conv ({n},{h},{w},{ci},{co}): {err1}");
+    }
+}
+
+#[test]
+fn fixed_thread_count_is_bitwise_deterministic() {
+    let mut rng = Pcg64::new(0xd117);
+    let a = rand_t(&[67, 33], &mut rng);
+    let b = rand_t(&[33, 29], &mut rng);
+    let x = rand_t(&[2, 9, 9, 5], &mut rng);
+    let w = rand_t(&[3, 3, 5, 11], &mut rng);
+    let serial = (math::matmul(&a, &b), math::conv2d_same(&x, &w));
+    for t in [1usize, 2, 3, 4, 7] {
+        // two runs at the same fixed count: bit-equal to each other AND
+        // to the serial walk (row splits never change accumulation order)
+        let r1 = par::with_kernel_threads(t, || {
+            (math::matmul(&a, &b), math::conv2d_same(&x, &w))
+        });
+        let r2 = par::with_kernel_threads(t, || {
+            (math::matmul(&a, &b), math::conv2d_same(&x, &w))
+        });
+        assert_eq!(r1.0.data, r2.0.data, "gemm not deterministic at t={t}");
+        assert_eq!(r1.1.data, r2.1.data, "conv not deterministic at t={t}");
+        assert_eq!(r1.0.data, serial.0.data, "gemm differs from serial at t={t}");
+        assert_eq!(r1.1.data, serial.1.data, "conv differs from serial at t={t}");
+    }
+}
+
+#[test]
+fn half_storage_roundtrip_obeys_precision_contracts() {
+    let mut rng = Pcg64::new(0x4a1f);
+    let vals = rng.normal_vec(4096);
+    for &v in &vals {
+        let b = half::bf16_to_f32(half::f32_to_bf16(v));
+        // bf16 keeps 8 significand bits: relative error <= 2^-8
+        assert!(
+            (b - v).abs() <= v.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE,
+            "bf16 {v} -> {b}"
+        );
+        let h = half::f16_to_f32(half::f32_to_f16(v));
+        // f16 keeps 11 significand bits over the normal range
+        assert!(
+            (h - v).abs() <= v.abs() * (1.0 / 2048.0) + 6.2e-5,
+            "f16 {v} -> {h}"
+        );
+    }
+    // idempotent: a rounded value is a fixed point of the round-trip
+    for &v in vals.iter().take(64) {
+        let b = half::bf16_to_f32(half::f32_to_bf16(v));
+        assert_eq!(b, half::bf16_to_f32(half::f32_to_bf16(b)));
+        let h = half::f16_to_f32(half::f32_to_f16(v));
+        assert_eq!(h, half::f16_to_f32(half::f32_to_f16(h)));
+    }
+}
+
+#[test]
+fn engine_weight_dtype_rounds_weights_and_inference_survives() {
+    let full = Engine::native().unwrap();
+    let flow = full.flow("realnvp2d").unwrap();
+    let params = flow.init_params(42).unwrap();
+
+    let engine = Engine::builder()
+        .weight_dtype(WeightDtype::Bf16)
+        .build()
+        .unwrap();
+    assert_eq!(engine.config().weight_dtype, WeightDtype::Bf16);
+    let mut rounded = params.clone();
+    engine.load_weights(&mut rounded);
+
+    let mut changed = 0usize;
+    for (a, b) in params.tensors.iter().flatten()
+        .zip(rounded.tensors.iter().flatten())
+    {
+        for (&x, &y) in a.data.iter().zip(&b.data) {
+            assert!(
+                (x - y).abs() <= x.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE,
+                "bf16 load moved {x} to {y}"
+            );
+            if x != y {
+                changed += 1;
+            }
+        }
+    }
+    assert!(changed > 0, "bf16 rounding should actually change weights");
+
+    // inference on the rounded store still runs and stays finite
+    let rflow = engine.flow("realnvp2d").unwrap();
+    let mut rng = Pcg64::new(7);
+    let x = rand_t(&[rflow.batch(), 2], &mut rng);
+    let lp = rflow
+        .log_density(&x, &rounded, InferOpts::strict())
+        .unwrap();
+    assert!(lp.iter().all(|v| v.is_finite()));
+
+    // f32 mode is a strict no-op
+    let noop = Engine::builder().weight_dtype(WeightDtype::F32)
+        .build().unwrap();
+    let mut same = params.clone();
+    noop.load_weights(&mut same);
+    for (a, b) in params.tensors.iter().flatten()
+        .zip(same.tensors.iter().flatten())
+    {
+        assert_eq!(a.data, b.data);
+    }
+}

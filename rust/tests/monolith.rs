@@ -11,13 +11,14 @@
 mod common;
 
 use common::{assert_close, batch_for, flow};
-use invertnet::coordinator::{CheckpointEveryK, ExecMode};
+use invertnet::coordinator::{CheckpointEveryK, ExecMode, InferOpts};
 
 /// NLL(x) = -mean_n(logp_n + logdet_n), same objective train_step reports.
 fn nll(flow: &invertnet::Flow, x: &invertnet::Tensor,
        cond: Option<&invertnet::Tensor>, params: &invertnet::flow::ParamStore)
        -> f64 {
-    let ll = flow.log_likelihood(x, cond, params).unwrap();
+    let ll = flow.log_density(
+        x, params, InferOpts::strict().cond_opt(cond)).unwrap();
     -(ll.iter().map(|v| *v as f64).sum::<f64>() / ll.len() as f64)
 }
 

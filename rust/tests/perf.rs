@@ -5,7 +5,7 @@
 use invertnet::coordinator::ExecMode;
 use invertnet::perf::{check_report, memory_vs_size, Baseline, Scale};
 use invertnet::util::rng::Pcg64;
-use invertnet::{Engine, MemoryLedger, Tensor};
+use invertnet::{Engine, InferOpts, MemoryLedger, SampleOpts, Tensor};
 
 /// One real training step of `net` under `mode`; returns
 /// (peak_sched_bytes, peak_total_bytes).
@@ -51,8 +51,9 @@ fn stored_mode_ooms_where_invertible_succeeds() {
 }
 
 /// Threaded inference is bit-identical to the single-threaded walk for a
-/// fixed chunk size, on both `sample_batch` (inverse) and `log_density`
-/// (forward), including a ragged final chunk and a multiscale net.
+/// fixed chunk size, on both relaxed-batch `sample` (inverse) and
+/// `log_density` (forward), including a ragged final chunk and a
+/// multiscale net.
 #[test]
 fn threaded_inference_is_bit_identical() {
     let e1 = Engine::builder().threads(1).build().unwrap();
@@ -67,11 +68,11 @@ fn threaded_inference_is_bit_identical() {
         // 3 full chunks + a ragged tail
         let n = f1.infer_chunk() * 3 + 3;
 
-        // sample_batch: same rng stream, chunked inverse
+        // sample: same rng stream, chunked inverse
         let mut r1 = Pcg64::new(123);
         let mut r4 = Pcg64::new(123);
-        let s1 = f1.sample_batch(&params, n, None, 1.0, &mut r1).unwrap();
-        let s4 = f4.sample_batch(&params4, n, None, 1.0, &mut r4).unwrap();
+        let s1 = f1.sample(&params, SampleOpts::new(n, &mut r1)).unwrap();
+        let s4 = f4.sample(&params4, SampleOpts::new(n, &mut r4)).unwrap();
         assert_eq!(s1.shape, s4.shape);
         for (a, b) in s1.data.iter().zip(&s4.data) {
             assert_eq!(a.to_bits(), b.to_bits(),
@@ -79,17 +80,17 @@ fn threaded_inference_is_bit_identical() {
         }
 
         // log_density: chunked forward over the samples just drawn
-        let d1 = f1.log_density(&s1, None, &params).unwrap();
-        let d4 = f4.log_density(&s1, None, &params4).unwrap();
+        let d1 = f1.log_density(&s1, &params, InferOpts::relaxed()).unwrap();
+        let d4 = f4.log_density(&s1, &params4, InferOpts::relaxed()).unwrap();
         assert_eq!(d1.len(), n);
         for (a, b) in d1.iter().zip(&d4) {
             assert_eq!(a.to_bits(), b.to_bits(),
                        "{net}: threaded log_density diverged");
         }
 
-        // with_threads on one handle reproduces the same bits too
-        let d4b = f1.clone().with_threads(4)
-            .log_density(&s1, None, &params).unwrap();
+        // the per-call threads override reproduces the same bits too
+        let d4b = f1.log_density(&s1, &params,
+                                 InferOpts::relaxed().threads(4)).unwrap();
         for (a, b) in d1.iter().zip(&d4b) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
@@ -112,13 +113,17 @@ fn threaded_conditional_inference_matches() {
     };
     let mut r1 = Pcg64::new(77);
     let mut r4 = Pcg64::new(77);
-    let s1 = f1.sample_batch(&params, n, Some(&cond), 0.8, &mut r1).unwrap();
-    let s4 = f4.sample_batch(&params4, n, Some(&cond), 0.8, &mut r4).unwrap();
+    let s1 = f1.sample(&params, SampleOpts::new(n, &mut r1)
+                           .temperature(0.8).cond(&cond)).unwrap();
+    let s4 = f4.sample(&params4, SampleOpts::new(n, &mut r4)
+                           .temperature(0.8).cond(&cond)).unwrap();
     for (a, b) in s1.data.iter().zip(&s4.data) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
-    let d1 = f1.log_density(&s1, Some(&cond), &params).unwrap();
-    let d4 = f4.log_density(&s1, Some(&cond), &params4).unwrap();
+    let d1 = f1.log_density(&s1, &params,
+                            InferOpts::relaxed().cond(&cond)).unwrap();
+    let d4 = f4.log_density(&s1, &params4,
+                            InferOpts::relaxed().cond(&cond)).unwrap();
     for (a, b) in d1.iter().zip(&d4) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
@@ -134,12 +139,14 @@ fn threaded_path_preserves_validation_errors() {
     let n = flow.infer_chunk() * 2 + 1;
     // wrong per-sample width
     let bad = Tensor::zeros(&[n, 5]);
-    let err = flow.log_density(&bad, None, &params).unwrap_err();
+    let err = flow.log_density(&bad, &params, InferOpts::relaxed())
+        .unwrap_err();
     assert!(format!("{err:#}").contains("shape"), "{err:#}");
     // cond on an unconditioned net
     let x = Tensor::zeros(&[n, 2]);
     let cond = Tensor::zeros(&[n, 2]);
-    let err = flow.log_density(&x, Some(&cond), &params).unwrap_err();
+    let err = flow.log_density(&x, &params, InferOpts::relaxed().cond(&cond))
+        .unwrap_err();
     assert!(format!("{err:#}").contains("no cond"), "{err:#}");
 }
 

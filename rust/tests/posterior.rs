@@ -22,6 +22,7 @@ use invertnet::posterior::{amortized_train, calibrate, posterior_samples,
 use invertnet::serve::{BatchConfig, Registry, Request, Response, Server};
 use invertnet::serve::registry::ServedModel;
 use invertnet::util::rng::Pcg64;
+use invertnet::SampleOpts;
 
 #[test]
 fn sbc_machinery_is_calibrated_for_the_exact_posterior_sampler() {
@@ -111,7 +112,7 @@ fn amortized_flow_recovers_the_closed_form_posterior() {
     let mut rng = Pcg64::new(777);
     let cal = calibrate(&sim, 128, 127, 0.9, 8, &mut rng, |y, l, r| {
         let cond = analysis::tile_observation(y, l)?;
-        flow.sample_batch(&params, l, Some(&cond), 1.0, r)
+        flow.sample(&params, SampleOpts::new(l, r).cond(&cond))
     })
     .unwrap();
     let crit = chi2_crit(7, 1e-4);

@@ -2,7 +2,7 @@
 //!
 //! The load-bearing contract: **micro-batching is invisible**. A response
 //! produced by a coalesced pass must be bit-identical to a direct
-//! `Flow::sample_batch` / `Flow::log_density` call with the same inputs —
+//! `Flow::sample` / `Flow::log_density` call with the same inputs —
 //! concurrency and batching may only change throughput, never bits.
 
 mod common;
@@ -16,7 +16,7 @@ use invertnet::api::Engine;
 use invertnet::serve::{BatchConfig, Registry, Request, Response, Server};
 use invertnet::tensor::ops::slice_rows;
 use invertnet::util::rng::Pcg64;
-use invertnet::Tensor;
+use invertnet::{InferOpts, SampleOpts, Tensor};
 
 const NET: &str = "realnvp2d";
 const PARAM_SEED: u64 = 3;
@@ -85,9 +85,9 @@ fn tcp_four_concurrent_clients_get_bit_identical_answers() {
                     let Response::Sample { x: got } =
                         Response::parse_line(line.trim()).unwrap()
                     else { panic!("client {client}: {line}") };
-                    let want = ref_flow.sample_batch(
-                        ref_params, n, None, temperature,
-                        &mut Pcg64::new(seed)).unwrap();
+                    let want = ref_flow.sample(ref_params,
+                        SampleOpts::new(n, &mut Pcg64::new(seed))
+                            .temperature(temperature)).unwrap();
                     assert_eq!(got.shape, want.shape);
                     for (a, b) in got.data.iter().zip(&want.data) {
                         assert_eq!(a.to_bits(), b.to_bits(),
@@ -105,8 +105,8 @@ fn tcp_four_concurrent_clients_get_bit_identical_answers() {
                     let Response::Score { log_density } =
                         Response::parse_line(line.trim()).unwrap()
                     else { panic!("client {client}: {line}") };
-                    let want =
-                        ref_flow.log_density(&x, None, ref_params).unwrap();
+                    let want = ref_flow.log_density(
+                        &x, ref_params, InferOpts::relaxed()).unwrap();
                     assert_eq!(log_density.len(), want.len());
                     for (a, b) in log_density.iter().zip(&want) {
                         assert_eq!(a.to_bits(), b.to_bits(),
@@ -195,12 +195,14 @@ fn log_density_finite_and_batching_exact_on_all_builtin_nets() {
             Tensor { shape, data: rng.normal_vec(k * inner) }
         });
 
-        let x = flow.sample_batch(&params, k, cond.as_ref(), 1.0, &mut rng)
-            .unwrap_or_else(|e| panic!("{net}: sample_batch: {e:#}"));
+        let x = flow.sample(&params, SampleOpts::new(k, &mut rng)
+                                .cond_opt(cond.as_ref()))
+            .unwrap_or_else(|e| panic!("{net}: sample: {e:#}"));
         assert_eq!(x.shape[0], k, "{net}");
         assert_eq!(x.shape[1..], flow.def.in_shape[1..], "{net}");
 
-        let batched = flow.log_density(&x, cond.as_ref(), &params)
+        let batched = flow.log_density(
+                &x, &params, InferOpts::relaxed().cond_opt(cond.as_ref()))
             .unwrap_or_else(|e| panic!("{net}: log_density: {e:#}"));
         assert_eq!(batched.len(), k, "{net}");
         assert!(batched.iter().all(|v| v.is_finite()),
@@ -209,7 +211,9 @@ fn log_density_finite_and_batching_exact_on_all_builtin_nets() {
         for i in 0..k {
             let xi = slice_rows(&x, i, 1).unwrap();
             let ci = cond.as_ref().map(|c| slice_rows(c, i, 1).unwrap());
-            let solo = flow.log_density(&xi, ci.as_ref(), &params).unwrap();
+            let solo = flow.log_density(
+                &xi, &params, InferOpts::relaxed().cond_opt(ci.as_ref()))
+                .unwrap();
             assert_eq!(solo.len(), 1);
             assert_eq!(solo[0].to_bits(), batched[i].to_bits(),
                        "{net} row {i}: solo {} != batched {}",
@@ -219,29 +223,72 @@ fn log_density_finite_and_batching_exact_on_all_builtin_nets() {
 }
 
 /// Temperature scales the latent draw: T=0 collapses to the mode path,
-/// and the T=1 draw matches the canonical `sample` bit-for-bit.
+/// and the defaulted `SampleOpts` (T=1) is an exact draw.
 #[test]
 fn sample_temperature_contract() {
     let flow = common::flow(NET);
     let params = flow.init_params(PARAM_SEED).unwrap();
 
-    let canon = flow.sample(&params, None, &mut Pcg64::new(8)).unwrap();
-    let via_batch = flow.sample_batch(&params, flow.batch(), None, 1.0,
-                                      &mut Pcg64::new(8)).unwrap();
-    assert_eq!(canon, via_batch, "T=1 canonical-batch draw must be exact");
+    let canon = flow.sample(&params,
+        SampleOpts::new(flow.batch(), &mut Pcg64::new(8))).unwrap();
+    let explicit = flow.sample(&params,
+        SampleOpts::new(flow.batch(), &mut Pcg64::new(8))
+            .temperature(1.0)).unwrap();
+    assert_eq!(canon, explicit, "T=1 must equal the defaulted draw");
 
     // T=0: all latents are zero -> every sample row is the same mode point
-    let x0 = flow.sample_batch(&params, 4, None, 0.0,
-                               &mut Pcg64::new(8)).unwrap();
+    let x0 = flow.sample(&params,
+        SampleOpts::new(4, &mut Pcg64::new(8)).temperature(0.0)).unwrap();
     let row0 = slice_rows(&x0, 0, 1).unwrap();
     for i in 1..4 {
         assert_eq!(slice_rows(&x0, i, 1).unwrap().data, row0.data,
                    "T=0 rows must be identical");
     }
-    assert!(flow.sample_batch(&params, 2, None, f32::NAN,
-                              &mut Pcg64::new(8)).is_err());
-    assert!(flow.sample_batch(&params, 0, None, 1.0,
-                              &mut Pcg64::new(8)).is_err());
+    assert!(flow.sample(&params,
+        SampleOpts::new(2, &mut Pcg64::new(8))
+            .temperature(f32::NAN)).is_err());
+    assert!(flow.sample(&params,
+        SampleOpts::new(0, &mut Pcg64::new(8))).is_err());
+}
+
+/// The `#[deprecated]` pre-unification names are thin wrappers: same
+/// bits as the option-struct entry points. This is the one place the old
+/// names are still exercised.
+#[test]
+#[allow(deprecated)]
+fn deprecated_wrappers_match_unified_api() {
+    let flow = common::flow(NET);
+    let params = flow.init_params(PARAM_SEED).unwrap();
+
+    let a = flow.sample_batch(&params, 5, None, 0.7,
+                              &mut Pcg64::new(4)).unwrap();
+    let b = flow.sample(&params, SampleOpts::new(5, &mut Pcg64::new(4))
+                            .temperature(0.7)).unwrap();
+    assert_eq!(a, b, "sample_batch wrapper drifted");
+
+    let old = flow.log_likelihood(&b, None, &params);
+    // 5 rows != canonical batch: the strict wrapper must reject...
+    assert!(old.is_err() == (flow.batch() != 5));
+    let ld_old: Vec<f32>; let ld_new: Vec<f32>;
+    if flow.batch() == 5 {
+        ld_old = old.unwrap();
+        ld_new = flow.log_density(&b, &params, InferOpts::strict()).unwrap();
+    } else {
+        // ...and agree with the new strict call on a canonical batch
+        let x = flow.sample(&params,
+            SampleOpts::new(flow.batch(), &mut Pcg64::new(4))).unwrap();
+        ld_old = flow.log_likelihood(&x, None, &params).unwrap();
+        ld_new = flow.log_density(&x, &params, InferOpts::strict()).unwrap();
+    }
+    for (u, v) in ld_old.iter().zip(&ld_new) {
+        assert_eq!(u.to_bits(), v.to_bits(), "log_likelihood wrapper drifted");
+    }
+
+    // invert_flex(relax=true) == invert with relaxed opts
+    let zs = flow.sample_latents(3, 1.0, &mut Pcg64::new(6)).unwrap();
+    let inv_old = flow.invert_flex(&zs, None, &params, true).unwrap();
+    let inv_new = flow.invert(&zs, &params, InferOpts::relaxed()).unwrap();
+    assert_eq!(inv_old, inv_new, "invert_flex wrapper drifted");
 }
 
 /// Bounded-queue backpressure under a burst: nothing is lost, nothing
@@ -264,9 +311,9 @@ fn burst_through_tiny_queue_loses_nothing() {
                         Request::Sample {
                             model: None, n, temperature, seed, cond: None,
                         }) else { panic!("sample failed") };
-                    let want = flow.sample_batch(
-                        params, n, None, temperature,
-                        &mut Pcg64::new(seed)).unwrap();
+                    let want = flow.sample(params,
+                        SampleOpts::new(n, &mut Pcg64::new(seed))
+                            .temperature(temperature)).unwrap();
                     assert_eq!(x, want, "client {client} round {round}");
                 }
             })
@@ -346,14 +393,15 @@ fn conditional_sample_and_score_through_the_server() {
         model: None, n, temperature: 1.0, seed: 77,
         cond: Some(cond.clone()),
     }) else { panic!("cond sample failed") };
-    let want = flow.sample_batch(&params, n, Some(&cond), 1.0,
-                                 &mut Pcg64::new(77)).unwrap();
+    let want = flow.sample(&params,
+        SampleOpts::new(n, &mut Pcg64::new(77)).cond(&cond)).unwrap();
     assert_eq!(x, want);
 
     let Response::Score { log_density } = server.handle(Request::Score {
         model: None, x: x.clone(), cond: Some(cond.clone()),
     }) else { panic!("cond score failed") };
-    let want = flow.log_density(&x, Some(&cond), &params).unwrap();
+    let want = flow.log_density(&x, &params,
+                                InferOpts::relaxed().cond(&cond)).unwrap();
     for (a, b) in log_density.iter().zip(&want) {
         assert_eq!(a.to_bits(), b.to_bits());
     }

@@ -18,7 +18,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use common::{batch_for, flow};
-use invertnet::coordinator::ExecMode;
+use invertnet::coordinator::{ExecMode, InferOpts};
 use invertnet::serve::{BatchConfig, Registry as ServeRegistry, Request,
                        Response, Server};
 use invertnet::telemetry::{self, bucket_of, Histogram, Registry, Sample};
@@ -120,7 +120,7 @@ fn numeric_pins_hold_with_telemetry_toggled() {
         .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
         .unwrap();
     let tflow = flow.clone().with_threads(2);
-    let ld_on = tflow.log_density(&x, None, &params).unwrap();
+    let ld_on = tflow.log_density(&x, &params, InferOpts::relaxed()).unwrap();
 
     telemetry::set_enabled(false);
     let solo_off = flow
@@ -129,7 +129,7 @@ fn numeric_pins_hold_with_telemetry_toggled() {
     let par_off = ParallelTrainer::new(2)
         .train_step(&flow, &x, None, &params, &ExecMode::Invertible)
         .unwrap();
-    let ld_off = tflow.log_density(&x, None, &params).unwrap();
+    let ld_off = tflow.log_density(&x, &params, InferOpts::relaxed()).unwrap();
     telemetry::set_enabled(true);
 
     for (on, off, what) in [(&solo_on, &solo_off, "solo"),
